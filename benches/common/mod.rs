@@ -1,0 +1,79 @@
+//! Shared bench prelude: scaled dataset definitions and run defaults used
+//! by every figure/table target. The scale-downs (documented per bench)
+//! keep each target under ~a minute on a laptop while preserving the
+//! corpus *shape* statistics (tokens/doc, Zipf marginal, W/D flavour) that
+//! the paper's qualitative results depend on. `POBP_BENCH_SCALE=full`
+//! grows the corpora ~10×.
+
+#![allow(dead_code)]
+
+use pobp::corpus::Csr;
+use pobp::engine::traits::LdaParams;
+use pobp::repro::{dataset, RunOpts};
+use pobp::sched::PowerParams;
+
+/// The three "web-scale" corpora of §4, scaled.
+pub const BIG3: [&str; 3] = ["nytimes", "wikipedia", "pubmed"];
+
+/// Scaled topic counts standing in for the paper's K ∈ {500, 1000, 2000}.
+pub const K_SWEEP: [usize; 3] = [25, 50, 100];
+
+pub fn full() -> bool {
+    std::env::var("POBP_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+/// Document-count divisor per corpus, tuned so each scaled corpus lands
+/// around 300–600 documents (3–10× more with POBP_BENCH_SCALE=full).
+pub fn scale_of(name: &str) -> usize {
+    let base = match name {
+        "enron" => 100,
+        "nytimes" => 1000,
+        "wikipedia" => 10_000,
+        "pubmed" => 20_000,
+        _ => 1,
+    };
+    if full() {
+        base / 10
+    } else {
+        base
+    }
+}
+
+pub fn corpus(name: &str, k: usize, seed: u64) -> Csr {
+    dataset(name, scale_of(name), k, seed)
+}
+
+/// Paper-default run options at bench scale: N = 256 simulated processors
+/// for the accuracy/comm figures, λ_W = 0.1, λ_K·K scaled as 50·K/2000
+/// of the paper's 2000-topic setting but never below 5.
+pub fn opts(n_workers: usize, k: usize) -> RunOpts {
+    RunOpts {
+        n_workers,
+        iters: if full() { 200 } else { 60 },
+        max_batch_iters: 400,
+        nnz_budget: 45_000,
+        // The paper's λ_K·K = 50 at K = 500–2000 keeps each word's full
+        // plausible topic set (λ_K as low as 0.025 works *because* K is
+        // large). At bench-scale K (25–100) the same reading needs
+        // λ_K ≈ 0.3; tighter selection visibly degrades accuracy — the
+        // Fig. 7B trade-off, measured in fig7_lambda_sweep.
+        power: PowerParams { lambda_w: 0.1, lambda_k_times_k: (k / 3).max(8) },
+        // fixed reference scale (K=50, W=2000) across every sweep point so
+        // K/dataset dependence stays visible — see NetModel docs
+        net: pobp::comm::NetModel::infiniband_for_scale(50, 2000),
+        ..Default::default()
+    }
+}
+
+pub fn params(k: usize) -> LdaParams {
+    LdaParams::paper(k)
+}
+
+/// Banner every bench prints so the output is self-describing.
+pub fn banner(fig: &str, what: &str, scale_note: &str) {
+    println!("== {fig}: {what}");
+    println!("   scale: {scale_note}");
+    println!(
+        "   (set POBP_BENCH_SCALE=full for ~10x larger corpora)\n"
+    );
+}

@@ -1,0 +1,57 @@
+//! Fig. 11 — total (simulated) training time of every algorithm as a
+//! function of K on the big corpora, 256 processors.
+//!
+//! Paper: POBP 5–100× faster than the others; PFGS/PSGS/YLDA comparable;
+//! PVB slowest. Simulated time = measured shard compute (barrier max) +
+//! modeled allreduce time.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pobp::metrics::{results_dir, sig, Table};
+use pobp::repro::{run_algo, Algo};
+
+fn main() {
+    common::banner("Fig 11", "training time vs K", "big-3 sims, K sweep, N=256");
+    let mut t = Table::new(
+        "fig11_training_time",
+        &["dataset", "k", "algo", "sim_secs", "compute_secs", "comm_secs", "speedup_vs_pobp"],
+    );
+    for name in common::BIG3 {
+        for &k in &common::K_SWEEP {
+            let corpus = common::corpus(name, k, 11);
+            let params = common::params(k);
+            let o = common::opts(256, k);
+            let mut rows: Vec<(Algo, f64, f64, f64)> = Vec::new();
+            for algo in Algo::paper_set() {
+                let r = run_algo(algo, &corpus, &params, &o);
+                rows.push((algo, r.sim_secs(), r.ledger.compute_secs, r.ledger.comm_secs));
+            }
+            let pobp = rows.iter().find(|(a, ..)| *a == Algo::Pobp).unwrap().1;
+            for (algo, sim, comp, comm) in &rows {
+                t.row(&[
+                    name.to_string(),
+                    k.to_string(),
+                    algo.name().to_string(),
+                    sig(*sim),
+                    sig(*comp),
+                    sig(*comm),
+                    format!("{:.1}x", sim / pobp.max(1e-12)),
+                ]);
+            }
+            println!(
+                "{name} K={k}: pobp {}s, others {}",
+                sig(pobp),
+                rows.iter()
+                    .filter(|(a, ..)| *a != Algo::Pobp)
+                    .map(|(a, s, ..)| format!("{}={}s", a.name(), sig(*s)))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+        }
+    }
+    println!();
+    println!("{}", t.render());
+    t.save(&results_dir()).unwrap();
+    println!("saved fig11_training_time.csv");
+}

@@ -1,0 +1,54 @@
+//! Fig. 12 — speedup vs number of processors on PUBMED.
+//!
+//! Paper setting: N ∈ {128, 256, 512, 1024}, K = 2000; baseline is the
+//! single-processor PSGS time estimated from the smallest-N run assuming
+//! perfect scaling (the paper uses "1/128 of the PSGS time on 128
+//! processors" the same way). Here: N ∈ {16, 32, 64, 128, 256} simulated,
+//! K = 100 on pubmed-sim.
+//!
+//! Expected shape: POBP's curve bends earliest (its optimal N* of Eq. 18
+//! is smallest because its compute shrinks with the power subsets) but
+//! sits highest; the GS family keeps climbing to larger N before
+//! flattening; PVB is lowest.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pobp::metrics::{results_dir, sig, Table};
+use pobp::repro::{run_algo, Algo, RunOpts};
+
+fn main() {
+    common::banner("Fig 12", "speedup vs N processors", "pubmed-sim, K=100, N in {16..256}");
+    let k = 100;
+    let corpus = common::corpus("pubmed", k, 12);
+    let params = common::params(k);
+    let ns = [16usize, 32, 64, 128, 256];
+
+    // baseline: PSGS on the smallest N, extrapolated to one processor
+    let base_opts = RunOpts { n_workers: ns[0], ..common::opts(ns[0], k) };
+    let base = run_algo(Algo::Psgs, &corpus, &params, &base_opts);
+    let t1_est = base.sim_secs() * ns[0] as f64;
+    println!(
+        "baseline: PSGS on N={} -> sim {}s, single-processor estimate {}s\n",
+        ns[0], sig(base.sim_secs()), sig(t1_est)
+    );
+
+    let mut t = Table::new("fig12_speedup", &["algo", "n", "sim_secs", "speedup"]);
+    for algo in Algo::paper_set() {
+        let mut prev_speedup = 0.0;
+        for &n in &ns {
+            let o = RunOpts { n_workers: n, ..common::opts(n, k) };
+            let r = run_algo(algo, &corpus, &params, &o);
+            let speedup = t1_est / r.sim_secs().max(1e-12);
+            t.row(&[algo.name().to_string(), n.to_string(), sig(r.sim_secs()), sig(speedup)]);
+            print!("{}@{n}: {:.1}  ", algo.name(), speedup);
+            prev_speedup = speedup;
+        }
+        let _ = prev_speedup;
+        println!();
+    }
+    println!();
+    println!("{}", t.render());
+    t.save(&results_dir()).unwrap();
+    println!("saved fig12_speedup.csv");
+}

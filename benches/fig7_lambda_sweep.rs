@@ -1,0 +1,64 @@
+//! Fig. 7 — predictive perplexity and training time as a function of the
+//! power ratios λ_W and λ_K·K on ENRON with 12 processors.
+//!
+//! Paper setting: ENRON, K = 500, λ_W ∈ {0.025..1}, λ_K·K ∈ {30..70, 500}.
+//! Here: enron-sim, K = 50, λ_K·K scaled to {3..7, 50} (same fractions of
+//! K). Expected shape: training time falls as either ratio falls;
+//! perplexity stays ≈flat until λ_W drops below ~0.1, then degrades.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pobp::corpus::split_tokens;
+use pobp::eval::perplexity::predictive_perplexity;
+use pobp::metrics::{results_dir, sig, Table};
+use pobp::repro::{run_algo, Algo, RunOpts};
+use pobp::sched::PowerParams;
+
+fn main() {
+    common::banner("Fig 7", "perplexity + time vs λ_W and λ_K·K", "enron-sim, K=50, N=12");
+    let k = 50;
+    let corpus = common::corpus("enron", k, 7);
+    let params = common::params(k);
+    let split = split_tokens(&corpus, 0.2, 7);
+
+    let run = |lambda_w: f64, lkk: usize| -> (f64, f64, f64) {
+        let o = RunOpts {
+            n_workers: 12,
+            power: PowerParams { lambda_w, lambda_k_times_k: lkk },
+            max_batch_iters: 40,
+            ..Default::default()
+        };
+        let r = run_algo(Algo::Pobp, &split.train, &params, &o);
+        let perp = predictive_perplexity(&r.model, &split, &params, 20, 7);
+        (perp, r.wall_secs, r.sim_secs())
+    };
+
+    // (A) vary λ_W with all topics
+    let mut ta = Table::new("fig7a_lambda_w", &["lambda_w", "perplexity", "wall_secs", "sim_secs"]);
+    for &lw in &[0.025, 0.05, 0.1, 0.2, 0.4, 1.0] {
+        let (p, wall, sim) = run(lw, k);
+        ta.row(&[lw.to_string(), sig(p), sig(wall), sig(sim)]);
+    }
+    println!("{}", ta.render());
+    ta.save(&results_dir()).unwrap();
+
+    // (B) vary λ_K·K with all words (paper's 30..70 out of 500 → 3..7 of 50)
+    let mut tb = Table::new("fig7b_lambda_k", &["lambda_k_times_k", "perplexity", "wall_secs", "sim_secs"]);
+    for &lkk in &[3usize, 4, 5, 6, 7, k] {
+        let (p, wall, sim) = run(1.0, lkk);
+        tb.row(&[lkk.to_string(), sig(p), sig(wall), sig(sim)]);
+    }
+    println!("{}", tb.render());
+    tb.save(&results_dir()).unwrap();
+
+    // (C) combinations around the paper's recommended {λ_W=0.1, λ_K·K=50/500}
+    let mut tc = Table::new("fig7c_combo", &["lambda_w", "lambda_k_times_k", "perplexity", "wall_secs", "sim_secs"]);
+    for &(lw, lkk) in &[(1.0, k), (0.2, 7), (0.1, 5), (0.1, 7), (0.05, 5)] {
+        let (p, wall, sim) = run(lw, lkk);
+        tc.row(&[lw.to_string(), lkk.to_string(), sig(p), sig(wall), sig(sim)]);
+    }
+    println!("{}", tc.render());
+    tc.save(&results_dir()).unwrap();
+    println!("saved fig7a/b/c csv files");
+}

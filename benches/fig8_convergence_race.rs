@@ -1,0 +1,55 @@
+//! Fig. 8 — predictive perplexity as a function of (simulated) training
+//! time for POBP / PFGS / PSGS / YLDA / PVB on the three big corpora with
+//! 256 processors.
+//!
+//! Paper setting: NYTIMES/PUBMED/WIKIPEDIA, K = 2000, N = 256.
+//! Here: the Table-3-scaled corpora, K = 100, N = 256 simulated workers.
+//! Expected shape: POBP reaches the lowest perplexity fastest (10–100×
+//! before the GS family, more before PVB); PVB is slowest and worst.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pobp::corpus::split_tokens;
+use pobp::metrics::{results_dir, sig, Table};
+use pobp::repro::{perplexity_curve, run_algo, Algo, RunOpts};
+
+fn main() {
+    common::banner("Fig 8", "perplexity vs training time race", "big-3 sims, K=100, N=256 (simulated)");
+    let k = 100;
+    let mut t = Table::new("fig8_convergence_race", &["dataset", "algo", "sim_secs", "perplexity"]);
+
+    for name in common::BIG3 {
+        let corpus = common::corpus(name, k, 8);
+        let params = common::params(k);
+        let split = split_tokens(&corpus, 0.2, 8);
+        println!(
+            "{name}: D={} W={} tokens={}",
+            corpus.docs(), corpus.w, corpus.tokens()
+        );
+        for algo in Algo::paper_set() {
+            let o = RunOpts {
+                n_workers: 256,
+                iters: if common::full() { 120 } else { 40 },
+                max_batch_iters: 30,
+                snapshot_every: match algo {
+                    Algo::Pobp => 4,
+                    _ => 4,
+                },
+                ..common::opts(256, k)
+            };
+            let r = run_algo(algo, &split.train, &params, &o);
+            let curve = perplexity_curve(&r, &split, &params, 8);
+            for (secs, perp) in &curve {
+                t.row(&[name.to_string(), algo.name().to_string(), sig(*secs), sig(*perp)]);
+            }
+            let last = curve.last().map(|&(_, p)| p).unwrap_or(f64::NAN);
+            println!(
+                "  {:10} final perplexity {:8}  sim time {:10}  (wall {:.1}s)",
+                algo.name(), sig(last), sig(r.sim_secs()), r.wall_secs
+            );
+        }
+    }
+    t.save(&results_dir()).unwrap();
+    println!("saved fig8_convergence_race.csv");
+}

@@ -1,0 +1,39 @@
+//! Fig. 9 + Table 4 input — final predictive perplexity of all algorithms
+//! on the three big corpora for the K sweep.
+//!
+//! Paper setting: K ∈ {500, 1000, 2000}, N = 256. Here: K ∈ {25, 50, 100}
+//! on the Table-3-scaled corpora. Expected shape: POBP lowest everywhere;
+//! GS family close together; PVB highest and worsening with K.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pobp::corpus::split_tokens;
+use pobp::eval::perplexity::predictive_perplexity;
+use pobp::metrics::{results_dir, sig, Table};
+use pobp::repro::{run_algo, Algo};
+
+fn main() {
+    common::banner("Fig 9", "final perplexity, all algos x K sweep", "big-3 sims, K in {25,50,100}, N=256");
+    let mut t = Table::new("fig9_accuracy", &["dataset", "k", "algo", "perplexity"]);
+    for name in common::BIG3 {
+        for &k in &common::K_SWEEP {
+            let corpus = common::corpus(name, k, 9);
+            let params = common::params(k);
+            let split = split_tokens(&corpus, 0.2, 9);
+            print!("{name} K={k}: ");
+            for algo in Algo::paper_set() {
+                let o = common::opts(256, k);
+                let r = run_algo(algo, &split.train, &params, &o);
+                let perp = predictive_perplexity(&r.model, &split, &params, 20, 9);
+                t.row(&[name.to_string(), k.to_string(), algo.name().to_string(), sig(perp)]);
+                print!("{}={} ", algo.name(), sig(perp));
+            }
+            println!();
+        }
+    }
+    println!();
+    println!("{}", t.render());
+    t.save(&results_dir()).unwrap();
+    println!("saved fig9_accuracy.csv (table4_gap consumes this)");
+}

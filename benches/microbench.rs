@@ -1,0 +1,114 @@
+//! Microbenchmarks of the L3 hot paths (criterion substitute): the sparse
+//! BP sweep, the Gibbs samplers, the power selection partial sort, and
+//! the allreduce. These are the §Perf numbers in EXPERIMENTS.md.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use pobp::engine::bp::{Selection, ShardBp};
+use pobp::engine::fgs::FastGs;
+use pobp::engine::gibbs::{GibbsShard, PlainGs};
+use pobp::engine::sgs::SparseGs;
+use pobp::metrics::sig;
+use pobp::sched::{select_power, PowerParams};
+use pobp::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, work_items: f64, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "{name:40} {:>12}/iter   {:>14} items/s",
+        format!("{:.3}ms", per * 1e3),
+        sig(work_items / per)
+    );
+}
+
+fn main() {
+    common::banner("microbench", "hot-path throughput", "enron-sim, K=50");
+    let k = 50;
+    let corpus = common::corpus("enron", k, 1);
+    let params = common::params(k);
+    println!(
+        "corpus: D={} W={} NNZ={} tokens={}\n",
+        corpus.docs(), corpus.w, corpus.nnz(), corpus.tokens()
+    );
+
+    // --- BP sweep (the POBP worker inner loop) ---
+    let mut rng = Rng::new(1);
+    let mut shard = ShardBp::init(corpus.clone(), k, &mut rng);
+    let sel = Selection::full(corpus.w);
+    let updates = corpus.nnz() as f64 * k as f64;
+    // frozen phi snapshot: timing measures the sweep itself, not the
+    // leader's phi rebuild (that cost is the allreduce bench below)
+    let phi = shard.dphi.clone();
+    let mut tot = vec![0f32; k];
+    for row in phi.chunks_exact(k) {
+        for (t, &v) in row.iter().enumerate() {
+            tot[t] += v;
+        }
+    }
+    bench("bp sweep (full, token-topic updates)", 10, updates, || {
+        shard.clear_selected_residuals(&sel);
+        shard.sweep(&phi, &tot, &sel, &params, true);
+    });
+
+    // power-subset sweep (same schedule the coordinator runs at t >= 2);
+    // work items = active entries x selected topics, the true flop count
+    let ps = select_power(&shard.r, corpus.w, k, &PowerParams::paper_default());
+    let sel_p = Selection::from_power(&ps, corpus.w);
+    let active_entries: usize = (0..corpus.w)
+        .filter(|&wi| sel_p.word_sel[wi])
+        .map(|wi| {
+            (0..corpus.docs())
+                .map(|d| usize::from(corpus.row(d).0.binary_search(&(wi as u32)).is_ok()))
+                .sum::<usize>()
+        })
+        .sum();
+    let sub_updates = (active_entries * sel_p.topics_of(ps.words[0] as usize).map(|t| t.len()).unwrap_or(k)) as f64;
+    bench("bp sweep (power subset, doc-order)", 10, sub_updates, || {
+        shard.clear_selected_residuals(&sel_p);
+        shard.sweep(&phi, &tot, &sel_p, &params, true);
+    });
+    bench("bp sweep (power subset, inverted idx)", 10, sub_updates, || {
+        shard.clear_selected_residuals(&sel_p);
+        shard.sweep_selected(&phi, &tot, &sel_p, &params, true);
+    });
+
+    // --- Gibbs samplers (tokens/s) ---
+    let tokens = corpus.tokens();
+    let mut gshard = GibbsShard::init(&corpus, k, &mut rng);
+    let mut plain = PlainGs::new(k);
+    let mut grng = Rng::new(2);
+    bench("gibbs sweep (plain GS)", 5, tokens, || {
+        gshard.sweep(&mut plain, &params, &mut grng);
+    });
+    let mut sparse = SparseGs::new(k);
+    bench("gibbs sweep (SparseLDA)", 5, tokens, || {
+        gshard.sweep(&mut sparse, &params, &mut grng);
+    });
+    let mut fast = FastGs::new(k);
+    bench("gibbs sweep (FastLDA)", 5, tokens, || {
+        gshard.sweep(&mut fast, &params, &mut grng);
+    });
+
+    // --- power selection (per coordinator iteration) ---
+    let r = shard.r.clone();
+    bench("power selection (partial sort W + topics)", 50, (corpus.w * k) as f64, || {
+        let _ = select_power(&r, corpus.w, k, &PowerParams::paper_default());
+    });
+
+    // --- leader-side allreduce of the full matrix over 8 partials ---
+    let partials: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; corpus.w * k]).collect();
+    bench("allreduce full K x W x 8 workers", 20, (corpus.w * k * 8) as f64, || {
+        let mut g = vec![0f32; corpus.w * k];
+        pobp::comm::reduce_sum_into(&mut g, &partials);
+        std::hint::black_box(&g);
+    });
+}

@@ -1,0 +1,79 @@
+//! Table 5 — per-processor memory on PUBMED at K = 2000 as a function of
+//! N, regenerated from the analytic byte accounting (util::mem) with the
+//! paper's real corpus statistics, plus a measured-RSS spot check of the
+//! POBP constant-memory claim at bench scale.
+//!
+//! Expected shape (paper's Table 5): the batch algorithms shrink ~1/N and
+//! fail (>2 GB/processor) for small N; POBP is constant in N.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pobp::metrics::{results_dir, Table};
+use pobp::repro::{run_algo, Algo, RunOpts};
+use pobp::synth::TABLE3;
+use pobp::util::mem::{rss_bytes, MemModel};
+
+fn mb(bytes: usize) -> String {
+    format!("{}", bytes / (1 << 20))
+}
+
+fn na_if_over(bytes: usize, budget: usize) -> String {
+    if bytes > budget {
+        "N/A".into()
+    } else {
+        mb(bytes)
+    }
+}
+
+fn main() {
+    common::banner("Table 5", "memory per processor vs N (PUBMED, K=2000)", "analytic at paper scale + measured RSS check");
+    let row = &TABLE3[3];
+    let k = 2000;
+    let budget = 2 * (1usize << 30); // the paper's 2 GB per processor
+    // POBP's mini-batch footprint: NNZ≈45k per batch, docs ≈ NNZ/(nnz per doc)
+    let docs_per_batch = 45_000 / (row.nnz as usize / row.d);
+
+    let mut t = Table::new("table5_memory", &["n", "pfgs_mb", "psgs_ylda_mb", "pvb_mb", "pobp_mb"]);
+    for &n in &[1024usize, 512, 256, 128, 64, 32] {
+        let batch = MemModel {
+            docs_resident: row.d / n,
+            nnz_resident: row.nnz as usize / n,
+            tokens_resident: row.tokens as usize / n,
+            k,
+            w: row.w,
+        };
+        let pobp = MemModel {
+            docs_resident: docs_per_batch / n.min(docs_per_batch).max(1),
+            nnz_resident: 45_000 / n.min(45_000),
+            tokens_resident: 0,
+            k,
+            w: row.w,
+        };
+        // POBP per-processor memory is dominated by the two global K×W
+        // matrices — constant in N (the shard part is negligible).
+        t.row(&[
+            n.to_string(),
+            na_if_over(batch.pgs_bytes(), budget),
+            na_if_over(batch.pgs_bytes() * 3 / 4, budget), // SGS stores sparse lists
+            na_if_over(batch.pvb_bytes(), budget),
+            mb(pobp.pobp_bytes()),
+        ]);
+    }
+    println!("{}", t.render());
+    t.save(&results_dir()).unwrap();
+
+    // measured spot check at bench scale: POBP RSS is flat in N
+    let k_small = 50;
+    let corpus = common::corpus("enron", k_small, 3);
+    let params = common::params(k_small);
+    println!("measured whole-process RSS during POBP (bench scale):");
+    for n in [2usize, 8, 32] {
+        let before = rss_bytes();
+        let o = RunOpts { n_workers: n, ..common::opts(n, k_small) };
+        let _ = run_algo(Algo::Pobp, &corpus, &params, &o);
+        let after = rss_bytes();
+        println!("  N={n:3}: rss {} -> {} MB", before / (1 << 20), after / (1 << 20));
+    }
+    println!("saved table5_memory.csv");
+}

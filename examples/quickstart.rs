@@ -1,0 +1,96 @@
+//! Quickstart — the full three-layer stack in one minute:
+//!
+//! 1. generate a small synthetic corpus (LDA + Zipf, §Substitutions),
+//! 2. train online BP where **every sweep executes the AOT-compiled XLA
+//!    artifact** (L2 JAX graph embedding the L1 Pallas kernel) through
+//!    PJRT from Rust — no Python at run time,
+//! 3. evaluate predictive perplexity (Eq. 20) and print topics,
+//! 4. re-train with the native engine and check both paths agree.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::PathBuf;
+
+use pobp::corpus::split_tokens;
+use pobp::engine::traits::LdaParams;
+use pobp::eval::perplexity::predictive_perplexity;
+use pobp::repro::{run_algo, Algo, RunOpts};
+use pobp::runtime::xla_engine::{fit_obp_xla, XlaObpConfig};
+use pobp::synth::{generate, SynthSpec};
+use pobp::util::timer::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        artifact_dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // 1. corpus (vocab must fit the compiled artifact: W <= 512, K = 50)
+    let spec = SynthSpec {
+        name: "quickstart".into(),
+        docs: 256,
+        vocab: 512,
+        topics: 10,
+        mean_doc_len: 60.0,
+        zipf_s: 1.0,
+        beta_gen: 0.05,
+        alpha_gen: 0.08,
+        seed: 7,
+    };
+    let corpus = generate(&spec).corpus;
+    println!(
+        "corpus: D={} W={} NNZ={} tokens={}",
+        corpus.docs(), corpus.w, corpus.nnz(), corpus.tokens()
+    );
+    let k = 50;
+    let params = LdaParams::paper(k);
+    let split = split_tokens(&corpus, 0.2, 7);
+
+    // 2. train through the XLA artifact (L3 -> L2 -> L1)
+    let r_xla = fit_obp_xla(
+        &split.train,
+        &params,
+        &artifact_dir,
+        &XlaObpConfig { max_iters: 25, ..Default::default() },
+    )?;
+    println!(
+        "\nXLA path: {} sweeps in {} (model mass {:.0})",
+        r_xla.history.len(),
+        fmt_secs(r_xla.wall_secs),
+        r_xla.model.mass()
+    );
+
+    // 3. evaluate + topics
+    let perp_xla = predictive_perplexity(&r_xla.model, &split, &params, 20, 7);
+    println!("predictive perplexity (Eq. 20): {perp_xla:.1} (uniform would be ~{})", corpus.w);
+    println!("\ntop words per topic (first 5 topics):");
+    for t in 0..5 {
+        let words: Vec<String> = r_xla
+            .model
+            .top_words(t, 8)
+            .into_iter()
+            .map(|(w, _)| format!("w{w:03}"))
+            .collect();
+        println!("  topic {t}: {}", words.join(" "));
+    }
+
+    // 4. native engine on the same data — same contract, must agree
+    let r_nat = run_algo(
+        Algo::Obp,
+        &split.train,
+        &params,
+        &RunOpts { max_batch_iters: 25, nnz_budget: usize::MAX, seed: 42, ..Default::default() },
+    );
+    let perp_nat = predictive_perplexity(&r_nat.model, &split, &params, 20, 7);
+    println!(
+        "\nnative path perplexity: {perp_nat:.1}  (XLA {perp_xla:.1}; same-contract check: {})",
+        if (perp_nat.ln() - perp_xla.ln()).abs() < 0.15 { "OK" } else { "DIVERGED" }
+    );
+    anyhow::ensure!(
+        (perp_nat.ln() - perp_xla.ln()).abs() < 0.15,
+        "XLA and native paths diverged"
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

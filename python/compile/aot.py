@@ -1,0 +1,108 @@
+"""AOT bridge: lower the Layer-2 POBP sweep to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Outputs, consumed by ``rust/src/runtime/artifacts.rs``:
+
+  artifacts/pobp_d{D}_w{W}_k{K}.hlo.txt    one module per compiled shape
+  artifacts/manifest.json                  shape -> file map + hyperparams
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--shapes d,w,k ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import make_sweep_fn
+
+# Default compiled shapes. D and W are the padded shard sizes the Rust
+# coordinator buckets mini-batch shards into; K is the topic count.
+# (block_d | d, block_w | w must hold — see bp_update_pallas.)
+DEFAULT_SHAPES = [
+    (32, 256, 16),   # test / CI shape
+    (64, 512, 50),   # quickstart: enron-sim scaled, paper's lambda_K*K=50
+    (64, 512, 100),  # K sweep point
+]
+DEFAULT_ALPHA_K = 2.0  # paper: alpha = 2/K
+DEFAULT_BETA = 0.01    # paper: beta = 0.01
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def block_sizes(d: int, w: int) -> tuple[int, int]:
+    """Largest default-ish blocks that divide the shard shape."""
+    bd = next(b for b in (32, 16, 8, 4, 2, 1) if d % b == 0)
+    bw = next(b for b in (128, 64, 32, 16, 8, 4, 2, 1) if w % b == 0)
+    return bd, bw
+
+
+def lower_shape(d: int, w: int, k: int, alpha: float, beta: float) -> str:
+    bd, bw = block_sizes(d, w)
+    fn, specs = make_sweep_fn(
+        d, w, k, alpha=alpha, beta=beta, block_d=bd, block_w=bw, use_pallas=True
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes", nargs="*", default=None,
+        help="shapes as d,w,k triples, e.g. 64,512,50",
+    )
+    ap.add_argument("--beta", type=float, default=DEFAULT_BETA)
+    args = ap.parse_args()
+
+    shapes = (
+        [tuple(int(v) for v in s.split(",")) for s in args.shapes]
+        if args.shapes
+        else DEFAULT_SHAPES
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "alpha_times_k": DEFAULT_ALPHA_K,
+                "beta": args.beta, "entries": []}
+    for d, w, k in shapes:
+        alpha = DEFAULT_ALPHA_K / k
+        name = f"pobp_d{d}_w{w}_k{k}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_shape(d, w, k, alpha, args.beta)
+        with open(path, "w") as f:
+            f.write(text)
+        bd, bw = block_sizes(d, w)
+        manifest["entries"].append({
+            "file": name, "d": d, "w": w, "k": k,
+            "alpha": alpha, "beta": args.beta,
+            "block_d": bd, "block_w": bw,
+            # arg order the rust runtime must feed:
+            "args": ["x[d,w]", "mu[d,w,k]", "phi_prev[w,k]",
+                      "word_mask[w]", "topic_mask[w,k]"],
+            "outputs": ["mu[d,w,k]", "theta[d,k]", "dphi[w,k]", "r_wk[w,k]"],
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernel: the POBP message update hot-spot.
+
+The kernel computes, for a (Dblk, Wblk, K) tile of the mini-batch shard,
+the minus-corrected BP message update of Eq. (1), the power-mask gating of
+Section 3.1, and the residual of Eq. (7):
+
+    c        = x * mu
+    score    = (theta - c + alpha) * (phi - c + beta) / (phi_tot - c + W*beta)
+    mu'      = mass-preserving masked update (see ref.py): selected entries
+               get score rescaled to the mass the selection previously held,
+               un-selected entries stay bitwise-frozen; frozen where x == 0
+    r        = x * |mu' - mu|
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the topic axis K is kept
+whole inside every block because the normalization reduces over it; D and W
+are tiled so one (Dblk, Wblk, K) message block plus its (Dblk, K) theta
+slice and (Wblk, K) phi slice fit VMEM. The kernel is element-wise over
+(d, w) with a K-reduction, so the natural layout keeps K innermost
+(contiguous lanes). On this image the kernel must run with
+``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls — so it lowers into plain HLO that the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-30
+
+
+def _bp_update_kernel(
+    x_ref,  # (Dblk, Wblk)
+    mu_ref,  # (Dblk, Wblk, K)
+    theta_ref,  # (Dblk, K)
+    phi_ref,  # (Wblk, K)
+    phi_tot_ref,  # (K,)
+    wmask_ref,  # (Wblk,)
+    tmask_ref,  # (Wblk, K)
+    mu_out_ref,  # (Dblk, Wblk, K)
+    r_out_ref,  # (Dblk, Wblk, K)
+    *,
+    alpha: float,
+    beta: float,
+    w_total: float,
+):
+    x = x_ref[...]
+    mu = mu_ref[...]
+    c = x[:, :, None] * mu  # own-message contribution
+
+    theta_m = jnp.maximum(theta_ref[...][:, None, :] - c, 0.0) + alpha
+    phi_m = jnp.maximum(phi_ref[...][None, :, :] - c, 0.0) + beta
+    denom = jnp.maximum(phi_tot_ref[...][None, None, :] - c, 0.0) + w_total * beta
+    scores = theta_m * phi_m / jnp.maximum(denom, EPS)
+
+    mask = (wmask_ref[...][:, None] * tmask_ref[...])[None, :, :] > 0
+    sel_mass_old = jnp.where(mask, mu, 0.0).sum(axis=-1, keepdims=True)
+    sel_mass_new = jnp.where(mask, scores, 0.0).sum(axis=-1, keepdims=True)
+    scale = sel_mass_old / jnp.maximum(sel_mass_new, EPS)
+    mu_new = jnp.where(mask, scores * scale, mu)
+
+    active = (x > 0)[:, :, None]
+    mu_new = jnp.where(active, mu_new, mu)
+
+    mu_out_ref[...] = mu_new
+    r_out_ref[...] = x[:, :, None] * jnp.abs(mu_new - mu)
+
+
+def bp_update_pallas(
+    x,
+    mu,
+    theta,
+    phi_wk,
+    phi_tot,
+    word_mask,
+    topic_mask,
+    *,
+    alpha: float,
+    beta: float,
+    w_total: float,
+    block_d: int = 32,
+    block_w: int = 128,
+    interpret: bool = True,
+):
+    """Tiled Pallas launch of the message-update kernel.
+
+    Shapes as in ``ref.py``. D and W must be divisible by the block sizes
+    (the Layer-2 model pads shards); K is kept whole per block.
+    Returns (mu_new, r), both (D, W, K).
+    """
+    d, w = x.shape
+    k = mu.shape[-1]
+    if d % block_d or w % block_w:
+        raise ValueError(f"shard ({d},{w}) not divisible by block ({block_d},{block_w})")
+    grid = (d // block_d, w // block_w)
+
+    kernel = functools.partial(
+        _bp_update_kernel, alpha=alpha, beta=beta, w_total=w_total
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, block_w), lambda i, j: (i, j)),  # x
+            pl.BlockSpec((block_d, block_w, k), lambda i, j: (i, j, 0)),  # mu
+            pl.BlockSpec((block_d, k), lambda i, j: (i, 0)),  # theta
+            pl.BlockSpec((block_w, k), lambda i, j: (j, 0)),  # phi
+            pl.BlockSpec((k,), lambda i, j: (0,)),  # phi_tot
+            pl.BlockSpec((block_w,), lambda i, j: (j,)),  # word_mask
+            pl.BlockSpec((block_w, k), lambda i, j: (j, 0)),  # topic_mask
+        ],
+        out_specs=[
+            pl.BlockSpec((block_d, block_w, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_d, block_w, k), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, w, k), mu.dtype),
+            jax.ShapeDtypeStruct((d, w, k), mu.dtype),
+        ],
+        interpret=interpret,
+    )(x, mu, theta, phi_wk, phi_tot, word_mask, topic_mask)
+
+
+def vmem_footprint_bytes(block_d: int, block_w: int, k: int, itemsize: int = 4) -> int:
+    """Estimated VMEM bytes held live by one kernel instance.
+
+    Inputs (x, mu, theta, phi, phi_tot, masks) + outputs (mu', r) + the c /
+    scores temporaries. Used by the perf pass to size blocks under the
+    ~16 MiB/core VMEM budget of a TPU.
+    """
+    per_block = (
+        block_d * block_w  # x
+        + 4 * block_d * block_w * k  # mu, mu', r, scores temp
+        + block_d * k  # theta
+        + 2 * block_w * k  # phi, topic_mask
+        + k  # phi_tot
+        + block_w  # word_mask
+    )
+    return per_block * itemsize

@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracle for the POBP message update (Layer 1 spec).
+
+This file defines the *mathematical contract* of the belief-propagation
+message update of Eq. (1) of the paper, together with the residuals of
+Eq. (7) and the masked ("power word / power topic") update gating of
+Section 3.1. The Pallas kernel in ``bp_update.py`` and the Rust native
+engine are both validated against these functions.
+
+Dense layout over a (padded) mini-batch shard:
+
+  x          (D, W)     word counts x_{w,d} (0 for padding / absent words)
+  mu         (D, W, K)  messages mu_{w,d}(k); rows with x>0 sum to 1 over K
+  theta      (D, K)     document sufficient statistics  = sum_w x * mu
+  phi_wk     (W, K)     GLOBAL topic-word sufficient statistics phi-hat,
+                        *including* the current mini-batch's contribution
+                        (i.e. phi_prev + dphi_local synchronized), laid out
+                        word-major so K is contiguous
+  phi_tot    (K,)       sum_w phi_wk
+  word_mask  (W,)       1.0 for power words selected this iteration
+  topic_mask (W, K)     1.0 for power topics of each power word
+
+The message update with "minus" own-contribution corrections:
+
+  c        = x[d,w] * mu[d,w,k]
+  score(k) = (theta[d,k] - c + alpha) * (phi[w,k] - c + beta)
+             / (phi_tot[k] - c + W_total*beta)
+  mu'      = normalize_k( mask ? score : mu )       (see note below)
+  r[d,w,k] = x[d,w] * |mu' - mu|
+
+Masking note: the paper updates only the messages of power (word, topic)
+pairs and leaves the rest untouched (Fig. 4 lines 15-20). Partially
+updating a normalized vector would break the simplex constraint, so the
+update is *mass-preserving within the selection*: the selected entries'
+new scores are rescaled to carry exactly the probability mass the selected
+entries held before,
+
+    mu'[sel] = score[sel] * (sum(mu[sel]) / sum(score[sel])),   mu'[!sel] = mu[!sel]
+
+which keeps sum_k mu' = sum_k mu (= 1), leaves un-selected messages
+bitwise-frozen (so subset-only synchronization of dphi/r is exact), and
+with the all-ones mask reduces to the classic normalize-over-K BP update.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-30
+
+
+def normalize_k(scores: jnp.ndarray) -> jnp.ndarray:
+    """Normalize the trailing (topic) axis to the simplex."""
+    return scores / jnp.maximum(scores.sum(axis=-1, keepdims=True), EPS)
+
+
+def bp_scores(x, mu, theta, phi_wk, phi_tot, alpha, beta, w_total):
+    """Un-normalized message scores of Eq. (1), minus-corrected.
+
+    Shapes: x (D,W), mu (D,W,K), theta (D,K), phi_wk (W,K), phi_tot (K,).
+    Returns (D,W,K).
+    """
+    c = x[:, :, None] * mu  # own contribution (D,W,K)
+    theta_m = jnp.maximum(theta[:, None, :] - c, 0.0) + alpha
+    phi_m = jnp.maximum(phi_wk[None, :, :] - c, 0.0) + beta
+    denom = jnp.maximum(phi_tot[None, None, :] - c, 0.0) + w_total * beta
+    return theta_m * phi_m / jnp.maximum(denom, EPS)
+
+
+def bp_update_ref(
+    x,
+    mu,
+    theta,
+    phi_wk,
+    phi_tot,
+    word_mask,
+    topic_mask,
+    alpha: float,
+    beta: float,
+    w_total: float,
+):
+    """Reference masked message update + residuals.
+
+    Returns (mu_new, r) with shapes ((D,W,K), (D,W,K)).
+    Entries with x == 0 keep their old message and contribute 0 residual.
+    """
+    scores = bp_scores(x, mu, theta, phi_wk, phi_tot, alpha, beta, w_total)
+    mask = (word_mask[:, None] * topic_mask)[None, :, :] > 0  # (1,W,K)
+    sel_mass_old = jnp.where(mask, mu, 0.0).sum(axis=-1, keepdims=True)
+    sel_mass_new = jnp.where(mask, scores, 0.0).sum(axis=-1, keepdims=True)
+    scale = sel_mass_old / jnp.maximum(sel_mass_new, EPS)
+    mu_new = jnp.where(mask, scores * scale, mu)
+    active = (x > 0)[:, :, None]
+    mu_new = jnp.where(active, mu_new, mu)
+    r = x[:, :, None] * jnp.abs(mu_new - mu)
+    return mu_new, r
+
+
+def sweep_ref(
+    x,
+    mu,
+    phi_prev_wk,
+    word_mask,
+    topic_mask,
+    alpha: float,
+    beta: float,
+    w_total: float,
+):
+    """One full POBP iteration over a shard (the Layer-2 contract).
+
+    Recomputes local sufficient statistics from (x, mu), applies the message
+    update, and returns everything the Rust coordinator needs:
+
+      mu_new    (D,W,K)
+      theta_new (D,K)   = sum_w x * mu_new
+      dphi_new  (W,K)   = sum_d x * mu_new   (the local gradient to allreduce)
+      r_wk      (W,K)   = sum_d x * |mu'-mu| (the residual matrix, Eq. 8)
+    """
+    theta = jnp.einsum("dw,dwk->dk", x, mu)
+    dphi = jnp.einsum("dw,dwk->wk", x, mu)
+    phi_wk = phi_prev_wk + dphi
+    phi_tot = phi_wk.sum(axis=0)
+    mu_new, r = bp_update_ref(
+        x, mu, theta, phi_wk, phi_tot, word_mask, topic_mask, alpha, beta, w_total
+    )
+    theta_new = jnp.einsum("dw,dwk->dk", x, mu_new)
+    dphi_new = jnp.einsum("dw,dwk->wk", x, mu_new)
+    r_wk = r.sum(axis=0)
+    return mu_new, theta_new, dphi_new, r_wk

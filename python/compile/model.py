@@ -1,0 +1,120 @@
+"""Layer-2 JAX model: one POBP iteration over a dense mini-batch shard.
+
+This is the computation each (simulated) processor runs between two
+synchronization points of the paper's MPA (Fig. 4 lines 15-20):
+
+  inputs  : x (D,W), mu (D,W,K), phi_prev (W,K)  [global phi-hat from the
+            previous mini-batches, Eq. 3 / 11], word/topic power masks
+  outputs : mu' (D,W,K), theta' (D,K), dphi' (W,K)  [the local gradient the
+            coordinator allreduces via Eq. 15], r_wk (W,K)  [the residual
+            matrix allreduced via Eq. 9 and used for power selection]
+
+The message update itself is the Layer-1 Pallas kernel; the surrounding
+reductions (theta, dphi, residual row-sums) are left to XLA, which fuses
+them with the kernel output. ``aot.py`` lowers ``pobp_sweep`` once per
+compiled shape and the Rust runtime executes the HLO on its hot path —
+Python never runs at serve time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bp_update import bp_update_pallas
+from .kernels import ref
+
+
+def pobp_sweep(
+    x,
+    mu,
+    phi_prev_wk,
+    word_mask,
+    topic_mask,
+    *,
+    alpha: float,
+    beta: float,
+    w_total: float,
+    block_d: int = 32,
+    block_w: int = 128,
+    use_pallas: bool = True,
+):
+    """One POBP iteration over a shard. Returns (mu', theta', dphi', r_wk).
+
+    ``phi_prev_wk`` is the accumulated global topic-word sufficient
+    statistics EXCLUDING the current mini-batch (Eq. 11's phi^{m-1}); the
+    current batch's own contribution is recomputed from ``mu`` so that the
+    minus-corrections of Eq. (1) see a self-consistent phi-hat.
+    """
+    theta = jnp.einsum("dw,dwk->dk", x, mu)
+    dphi = jnp.einsum("dw,dwk->wk", x, mu)
+    phi_wk = phi_prev_wk + dphi
+    phi_tot = phi_wk.sum(axis=0)
+
+    if use_pallas:
+        mu_new, r = bp_update_pallas(
+            x, mu, theta, phi_wk, phi_tot, word_mask, topic_mask,
+            alpha=alpha, beta=beta, w_total=w_total,
+            block_d=block_d, block_w=block_w,
+        )
+    else:
+        mu_new, r = ref.bp_update_ref(
+            x, mu, theta, phi_wk, phi_tot, word_mask, topic_mask,
+            alpha, beta, w_total,
+        )
+
+    theta_new = jnp.einsum("dw,dwk->dk", x, mu_new)
+    dphi_new = jnp.einsum("dw,dwk->wk", x, mu_new)
+    r_wk = r.sum(axis=0)
+    return mu_new, theta_new, dphi_new, r_wk
+
+
+def init_messages(x, key, k: int):
+    """Random-initialized normalized messages (Fig. 4 line 3).
+
+    Deterministic given the PRNG key; zero rows (padding) get uniform
+    messages so downstream normalizations stay finite.
+    """
+    d, w = x.shape
+    raw = jax.random.uniform(key, (d, w, k), minval=0.1, maxval=1.0)
+    return raw / raw.sum(axis=-1, keepdims=True)
+
+
+def make_sweep_fn(
+    d: int,
+    w: int,
+    k: int,
+    *,
+    alpha: float,
+    beta: float,
+    w_total: float | None = None,
+    block_d: int = 32,
+    block_w: int = 128,
+    use_pallas: bool = True,
+):
+    """A jit-able sweep specialized to a compiled shape (for AOT export).
+
+    Returns ``fn(x, mu, phi_prev, word_mask, topic_mask)`` and its example
+    ShapeDtypeStructs, in the exact argument order the Rust runtime uses.
+    """
+    w_total = float(w if w_total is None else w_total)
+
+    @functools.wraps(pobp_sweep)
+    def fn(x, mu, phi_prev_wk, word_mask, topic_mask):
+        return pobp_sweep(
+            x, mu, phi_prev_wk, word_mask, topic_mask,
+            alpha=alpha, beta=beta, w_total=w_total,
+            block_d=block_d, block_w=block_w, use_pallas=use_pallas,
+        )
+
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((d, w), f32),      # x
+        jax.ShapeDtypeStruct((d, w, k), f32),   # mu
+        jax.ShapeDtypeStruct((w, k), f32),      # phi_prev
+        jax.ShapeDtypeStruct((w,), f32),        # word_mask
+        jax.ShapeDtypeStruct((w, k), f32),      # topic_mask
+    )
+    return fn, specs

@@ -1,0 +1,51 @@
+"""Export golden vectors from the pure-jnp oracle for the Rust engine.
+
+Writes python/tests/golden_sweep.json: a tiny deterministic sweep case
+(inputs + expected outputs) that rust/tests/golden.rs replays through the
+native sparse engine. This pins the cross-language contract without
+needing artifacts or a Python runtime on the Rust side.
+
+Usage: python -m tests.export_golden   (from python/)
+"""
+
+import json
+import os
+
+import numpy as np
+
+from compile.kernels import ref
+
+D, W, K = 4, 6, 3
+ALPHA, BETA = 2.0 / K, 0.01
+
+
+def main() -> None:
+    rng = np.random.default_rng(1234)
+    x = rng.integers(0, 4, size=(D, W)).astype(np.float32)
+    mu = rng.random((D, W, K)).astype(np.float32) + 0.1
+    mu /= mu.sum(-1, keepdims=True)
+    phi_prev = (rng.random((W, K)) * 5.0).astype(np.float32)
+    word_mask = np.ones(W, np.float32)
+    topic_mask = np.ones((W, K), np.float32)
+
+    mu2, theta2, dphi2, r_wk = ref.sweep_ref(
+        x, mu, phi_prev, word_mask, topic_mask, ALPHA, BETA, float(W)
+    )
+    out = {
+        "d": D, "w": W, "k": K, "alpha": ALPHA, "beta": BETA,
+        "x": np.asarray(x).ravel().tolist(),
+        "mu": np.asarray(mu).ravel().tolist(),
+        "phi_prev": np.asarray(phi_prev).ravel().tolist(),
+        "mu_out": np.asarray(mu2).ravel().tolist(),
+        "theta_out": np.asarray(theta2).ravel().tolist(),
+        "dphi_out": np.asarray(dphi2).ravel().tolist(),
+        "r_wk_out": np.asarray(r_wk).ravel().tolist(),
+    }
+    path = os.path.join(os.path.dirname(__file__), "golden_sweep.json")
+    with open(path, "w") as f:
+        json.dump(out, f)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""L2 semantics: the full POBP sweep (kernel + reductions) and its
+invariants — sufficient-statistics mass conservation, SGD phi accumulation
+(Eq. 11), masked-update gating, and multi-iteration convergence of the
+residual (Fig. 5's co-trend at toy scale).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import pobp_sweep, init_messages, make_sweep_fn
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+D, W, K = 8, 16, 4
+ALPHA, BETA = 2.0 / K, 0.01
+
+
+def toy_shard(seed=0, d=D, w=W):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 4, size=(d, w)).astype(np.float32)
+    return jnp.asarray(x)
+
+
+def ones_masks(w=W, k=K):
+    return jnp.ones((w,)), jnp.ones((w, k))
+
+
+def test_sweep_matches_ref_sweep():
+    x = toy_shard()
+    mu = init_messages(x, jax.random.PRNGKey(0), K)
+    phi_prev = jnp.zeros((W, K))
+    wm, tm = ones_masks()
+    got = pobp_sweep(x, mu, phi_prev, wm, tm,
+                     alpha=ALPHA, beta=BETA, w_total=float(W),
+                     block_d=4, block_w=8)
+    want = ref.sweep_ref(x, mu, phi_prev, wm, tm, ALPHA, BETA, float(W))
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(g, w_, rtol=1e-5, atol=1e-6)
+
+
+def test_mass_conservation():
+    """sum(theta') = sum(dphi') = total token count of the shard."""
+    x = toy_shard(3)
+    mu = init_messages(x, jax.random.PRNGKey(1), K)
+    wm, tm = ones_masks()
+    _, theta, dphi, _ = pobp_sweep(
+        x, mu, jnp.zeros((W, K)), wm, tm,
+        alpha=ALPHA, beta=BETA, w_total=float(W), block_d=4, block_w=8)
+    tokens = float(x.sum())
+    np.testing.assert_allclose(float(theta.sum()), tokens, rtol=1e-5)
+    np.testing.assert_allclose(float(dphi.sum()), tokens, rtol=1e-5)
+
+
+def test_residual_decreases_over_iterations():
+    """Fig. 5: average residual trends down as messages converge."""
+    x = toy_shard(5)
+    mu = init_messages(x, jax.random.PRNGKey(2), K)
+    wm, tm = ones_masks()
+    phi_prev = jnp.zeros((W, K))
+    residuals = []
+    for _ in range(20):
+        mu, _, _, r_wk = pobp_sweep(
+            x, mu, phi_prev, wm, tm,
+            alpha=ALPHA, beta=BETA, w_total=float(W), block_d=4, block_w=8)
+        residuals.append(float(r_wk.sum()) / float(x.sum()))
+    assert residuals[-1] < residuals[0] * 0.2
+    assert residuals[-1] < 0.1  # paper's convergence threshold (line 26)
+
+
+def test_phi_accumulation_sgd():
+    """Eq. 11: phi^m = phi^{m-1} + dphi^m accumulates across mini-batches
+    and the next batch's update sees it via phi_prev."""
+    x1, x2 = toy_shard(7), toy_shard(8)
+    wm, tm = ones_masks()
+    phi = jnp.zeros((W, K))
+    for x in (x1, x2):
+        mu = init_messages(x, jax.random.PRNGKey(3), K)
+        for _ in range(5):
+            mu, _, dphi, _ = pobp_sweep(
+                x, mu, phi, wm, tm,
+                alpha=ALPHA, beta=BETA, w_total=float(W), block_d=4, block_w=8)
+        phi = phi + dphi
+    np.testing.assert_allclose(
+        float(phi.sum()), float(x1.sum() + x2.sum()), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), frac=st.sampled_from([0.25, 0.5]))
+def test_masked_sweep_only_moves_selected_words(seed, frac):
+    """Un-selected words' messages must be bitwise-frozen (Section 3.1)."""
+    x = toy_shard(seed)
+    mu = init_messages(x, jax.random.PRNGKey(seed), K)
+    rng = np.random.default_rng(seed)
+    wm = jnp.asarray((rng.random(W) < frac).astype(np.float32))
+    tm = jnp.ones((W, K))
+    mu_new, _, _, r_wk = pobp_sweep(
+        x, mu, jnp.zeros((W, K)), wm, tm,
+        alpha=ALPHA, beta=BETA, w_total=float(W), block_d=4, block_w=8)
+    frozen = np.asarray(wm) == 0
+    # frozen words are re-normalized (simplex repair), so allow float noise
+    np.testing.assert_allclose(
+        np.asarray(mu_new)[:, frozen, :], np.asarray(mu)[:, frozen, :],
+        atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r_wk)[frozen, :], 0.0, atol=1e-5)
+
+
+def test_make_sweep_fn_specs_roundtrip():
+    fn, specs = make_sweep_fn(8, 16, 4, alpha=ALPHA, beta=BETA,
+                              block_d=4, block_w=8)
+    assert [tuple(s.shape) for s in specs] == [
+        (8, 16), (8, 16, 4), (16, 4), (16,), (16, 4)]
+    args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+    args[0] = toy_shard(1, 8, 16)
+    args[1] = init_messages(args[0], jax.random.PRNGKey(0), 4)
+    args[3] = jnp.ones(16)
+    args[4] = jnp.ones((16, 4))
+    out = jax.jit(fn)(*args)
+    assert [tuple(o.shape) for o in out] == [
+        (8, 16, 4), (8, 4), (16, 4), (16, 4)]

@@ -1,0 +1,105 @@
+"""Property tests of the pure-jnp oracle itself — the invariants every
+other layer (Pallas kernel, Rust native engine, AOT artifact) inherits.
+
+hypothesis sweeps shapes, sparsity and mask density; the properties are
+the paper's structural facts: message simplex preservation, sufficient-
+statistics mass conservation (Eqs. 2-3), bitwise freezing of un-selected
+messages (the subset-sync exactness of §3.1), and residual/update
+consistency (Eq. 7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def case(seed, d, w, k, mask_frac):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 4, size=(d, w)).astype(np.float32)
+    mu = rng.random((d, w, k)).astype(np.float32) + 0.05
+    mu /= mu.sum(-1, keepdims=True)
+    phi_prev = (rng.random((w, k)) * 3.0).astype(np.float32)
+    wm = (rng.random(w) < mask_frac).astype(np.float32)
+    tm = (rng.random((w, k)) < mask_frac).astype(np.float32)
+    return x, mu, phi_prev, wm, tm
+
+
+PARAMS = dict(max_examples=20, deadline=None)
+SHAPES = st.tuples(
+    st.integers(0, 2**16),          # seed
+    st.sampled_from([2, 5]),        # d
+    st.sampled_from([6, 11]),       # w
+    st.sampled_from([3, 7]),        # k
+    st.sampled_from([1.0, 0.5]),    # mask fraction
+)
+
+
+@settings(**PARAMS)
+@given(SHAPES)
+def test_mass_conservation(shape):
+    seed, d, w, k, mf = shape
+    x, mu, phi_prev, wm, tm = case(seed, d, w, k, mf)
+    _, theta, dphi, _ = ref.sweep_ref(x, mu, phi_prev, wm, tm, 2.0 / k, 0.01, float(w))
+    tokens = float(x.sum())
+    assert abs(float(theta.sum()) - tokens) < 1e-3 * max(tokens, 1.0)
+    assert abs(float(dphi.sum()) - tokens) < 1e-3 * max(tokens, 1.0)
+
+
+@settings(**PARAMS)
+@given(SHAPES)
+def test_simplex_preserved(shape):
+    seed, d, w, k, mf = shape
+    x, mu, phi_prev, wm, tm = case(seed, d, w, k, mf)
+    mu2, _, _, _ = ref.sweep_ref(x, mu, phi_prev, wm, tm, 2.0 / k, 0.01, float(w))
+    sums = np.asarray(mu2.sum(-1))
+    np.testing.assert_allclose(sums, 1.0, atol=2e-5)
+
+
+@settings(**PARAMS)
+@given(SHAPES)
+def test_unselected_messages_bitwise_frozen(shape):
+    seed, d, w, k, _ = shape
+    x, mu, phi_prev, wm, tm = case(seed, d, w, k, 0.4)
+    mu2, _, _, r_wk = ref.sweep_ref(x, mu, phi_prev, wm, tm, 2.0 / k, 0.01, float(w))
+    sel = (np.asarray(wm)[:, None] * np.asarray(tm)) > 0
+    frozen = ~sel
+    # un-selected (word, topic) message entries are *bitwise* unchanged
+    mu_np, mu2_np = np.asarray(mu), np.asarray(mu2)
+    for wi in range(w):
+        for t in range(k):
+            if frozen[wi, t]:
+                np.testing.assert_array_equal(mu2_np[:, wi, t], mu_np[:, wi, t])
+    # and contribute exactly zero residual
+    assert float(np.asarray(r_wk)[frozen].sum()) == 0.0
+
+
+@settings(**PARAMS)
+@given(SHAPES)
+def test_residual_matches_message_movement(shape):
+    seed, d, w, k, mf = shape
+    x, mu, phi_prev, wm, tm = case(seed, d, w, k, mf)
+    mu2, _, _, r_wk = ref.sweep_ref(x, mu, phi_prev, wm, tm, 2.0 / k, 0.01, float(w))
+    # Eq. 7/8: r_w(k) = sum_d x |mu' - mu|
+    expect = np.einsum("dw,dwk->wk", np.asarray(x), np.abs(np.asarray(mu2) - np.asarray(mu)))
+    np.testing.assert_allclose(np.asarray(r_wk), expect, rtol=1e-4, atol=1e-6)
+
+
+@settings(**PARAMS)
+@given(st.integers(0, 2**16))
+def test_fixed_point_has_zero_residual(seed):
+    """If messages stop moving, residuals vanish (the convergence claim
+    behind Fig. 5): iterate to near-convergence and check r ≈ 0 relative
+    to the start."""
+    d, w, k = 4, 8, 3
+    x, mu, phi_prev, wm, tm = case(seed, d, w, k, 1.0)
+    r0 = None
+    for i in range(60):
+        mu, _, _, r = ref.sweep_ref(x, mu, phi_prev, wm, tm, 2.0 / k, 0.01, float(w))
+        if i == 0:
+            r0 = float(r.sum())
+    r_last = float(r.sum())
+    assert r_last < max(r0, 1e-9), f"residual did not decay: {r0} -> {r_last}"

@@ -1,0 +1,152 @@
+//! Minimal argument parser (offline substitute for `clap`).
+//!
+//! Grammar: `pobp <subcommand> [positional...] [--flag value | --switch]`.
+//! Flags may appear in any order; unknown flags are collected so the
+//! subcommands can reject them with a helpful message. A token following
+//! `--name` that does not start with `--` is taken as that flag's value,
+//! so positionals must precede switches (or use `--flag=value`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (without the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut args = Args { subcommand, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.borrow_mut().push(name.to_string());
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    /// Required flag.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.borrow_mut().push(name.to_string());
+        let v = self
+            .flags
+            .get(name)
+            .with_context(|| format!("missing required --{name}"))?;
+        v.parse().map_err(|e| anyhow::anyhow!("--{name} {v}: {e}"))
+    }
+
+    /// String flag with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean switch (`--verbose`).
+    pub fn switch(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error on any flag that no `get`/`require`/`switch` call touched.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !seen.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        for s in &self.switches {
+            if !seen.contains(s) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = parse("train file.txt --k 50 --dataset=enron --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get::<usize>("k", 0).unwrap(), 50);
+        assert_eq!(a.get_str("dataset", "x"), "enron");
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("train --k 10");
+        assert_eq!(a.get::<usize>("workers", 4).unwrap(), 4);
+        assert!(a.require::<usize>("missing").is_err());
+        assert!(a.get::<usize>("k", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("train --k notanumber");
+        assert!(a.get::<usize>("k", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse("train --k 10 --bogus 3");
+        let _ = a.get::<usize>("k", 0);
+        assert!(a.reject_unknown().is_err());
+        let b = parse("train --k 10");
+        let _ = b.get::<usize>("k", 0);
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn switch_followed_by_flag() {
+        let a = parse("x --fast --k 3");
+        assert!(a.switch("fast"));
+        assert_eq!(a.get::<usize>("k", 0).unwrap(), 3);
+    }
+}

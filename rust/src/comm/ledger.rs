@@ -1,0 +1,139 @@
+//! Communication/computation ledger: the measurement substrate behind
+//! Figs. 10–12 and the scalability analysis of §3.2.2.
+//!
+//! Every synchronization the coordinator performs is recorded with its
+//! exact per-processor payload bytes; simulated communication time comes
+//! from the [`NetModel`], simulated computation time is the max of the
+//! measured per-worker shard times (the barrier semantics of Fig. 1).
+
+use crate::comm::net::NetModel;
+
+/// One synchronization event.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncEvent {
+    /// mini-batch index m (0 for batch algorithms)
+    pub batch: usize,
+    /// iteration t within the batch
+    pub iter: usize,
+    /// payload bytes each processor contributes (the sub-matrix size)
+    pub payload_bytes: usize,
+    /// processors participating
+    pub n: usize,
+    /// simulated seconds for this allreduce
+    pub comm_secs: f64,
+}
+
+/// Accumulates the simulated cost decomposition of a training run.
+#[derive(Clone, Debug)]
+pub struct Ledger {
+    pub net: NetModel,
+    pub events: Vec<SyncEvent>,
+    /// simulated compute seconds (sum over iterations of max-over-workers)
+    pub compute_secs: f64,
+    /// total wire bytes moved (all links)
+    pub wire_bytes: u64,
+    /// total simulated communication seconds
+    pub comm_secs: f64,
+}
+
+impl Ledger {
+    pub fn new(net: NetModel) -> Ledger {
+        Ledger {
+            net,
+            events: Vec::new(),
+            compute_secs: 0.0,
+            wire_bytes: 0,
+            comm_secs: 0.0,
+        }
+    }
+
+    /// Record an allreduce of `payload_bytes` per processor across `n`.
+    /// Returns the simulated seconds charged.
+    pub fn record_sync(
+        &mut self,
+        batch: usize,
+        iter: usize,
+        payload_bytes: usize,
+        n: usize,
+    ) -> f64 {
+        let comm_secs = self.net.allreduce_secs(payload_bytes, n);
+        self.wire_bytes += self.net.allreduce_wire_bytes(payload_bytes, n) as u64;
+        self.comm_secs += comm_secs;
+        self.events.push(SyncEvent { batch, iter, payload_bytes, n, comm_secs });
+        comm_secs
+    }
+
+    /// Record one iteration's computation: barrier semantics charge the
+    /// slowest worker's measured seconds.
+    pub fn record_compute(&mut self, per_worker_secs: &[f64]) -> f64 {
+        let secs = per_worker_secs.iter().cloned().fold(0.0, f64::max);
+        self.compute_secs += secs;
+        secs
+    }
+
+    /// Total simulated elapsed seconds (compute + comm, serialized as in
+    /// the synchronous MPA of Fig. 1).
+    pub fn total_secs(&self) -> f64 {
+        self.compute_secs + self.comm_secs
+    }
+
+    /// Number of synchronizations performed.
+    pub fn sync_count(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Payload bytes summed over events (per-processor view; the paper's
+    /// Eq. 5/6 quantity divided by N).
+    pub fn payload_bytes_total(&self) -> u64 {
+        self.events.iter().map(|e| e.payload_bytes as u64).sum()
+    }
+
+    pub fn merge(&mut self, other: &Ledger) {
+        self.events.extend_from_slice(&other.events);
+        self.compute_secs += other.compute_secs;
+        self.wire_bytes += other.wire_bytes;
+        self.comm_secs += other.comm_secs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut l = Ledger::new(NetModel::infiniband_20gbps());
+        let t1 = l.record_sync(0, 1, 1 << 20, 8);
+        let t2 = l.record_sync(0, 2, 1 << 10, 8);
+        assert!(t1 > t2);
+        assert_eq!(l.sync_count(), 2);
+        assert!((l.comm_secs - (t1 + t2)).abs() < 1e-15);
+        assert_eq!(l.payload_bytes_total(), (1 << 20) + (1 << 10));
+        assert_eq!(
+            l.wire_bytes,
+            (2 * ((1u64 << 20) + (1 << 10)) * 7) as u64
+        );
+    }
+
+    #[test]
+    fn compute_is_max_over_workers() {
+        let mut l = Ledger::new(NetModel::infiniband_20gbps());
+        let secs = l.record_compute(&[0.1, 0.5, 0.2]);
+        assert_eq!(secs, 0.5);
+        assert_eq!(l.compute_secs, 0.5);
+        assert_eq!(l.total_secs(), 0.5);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Ledger::new(NetModel::infiniband_20gbps());
+        a.record_sync(0, 1, 100, 4);
+        let mut b = Ledger::new(NetModel::infiniband_20gbps());
+        b.record_sync(1, 1, 200, 4);
+        b.record_compute(&[0.3]);
+        a.merge(&b);
+        assert_eq!(a.sync_count(), 2);
+        assert_eq!(a.payload_bytes_total(), 300);
+        assert_eq!(a.compute_secs, 0.3);
+    }
+}

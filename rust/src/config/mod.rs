@@ -1,0 +1,199 @@
+//! Experiment configuration files: a small INI-style format
+//! (`key = value`, `#` comments, one `[section]` per concern) so runs are
+//! reproducible from checked-in files rather than long command lines.
+//!
+//! ```text
+//! [corpus]
+//! dataset = pubmed        # Table-3 preset or "tiny"
+//! scale   = 20000
+//! seed    = 42
+//!
+//! [model]
+//! k = 100
+//!
+//! [run]
+//! algo      = pobp
+//! workers   = 256
+//! iters     = 60
+//! lambda_w  = 0.1
+//! lambda_kk = 12
+//! ```
+//!
+//! Every key has the `RunOpts`/`LdaParams` default, so configs only state
+//! what they change.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::NetModel;
+use crate::engine::traits::LdaParams;
+use crate::repro::{Algo, RunOpts};
+use crate::sched::PowerParams;
+
+/// Parsed `[section] key = value` file.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut cf = ConfigFile::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", ln + 1))?;
+                section = name.trim().to_string();
+                cf.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                if section.is_empty() {
+                    bail!("line {}: key before any [section]", ln + 1);
+                }
+                cf.sections
+                    .get_mut(&section)
+                    .unwrap()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                bail!("line {}: expected 'key = value', got '{line}'", ln + 1);
+            }
+        }
+        Ok(cf)
+    }
+
+    pub fn load(path: &Path) -> Result<ConfigFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text).with_context(|| path.display().to_string())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    fn typed<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("[{section}] {key} = {v}: {e}")),
+        }
+    }
+}
+
+/// Everything an experiment run needs, resolved from a config file.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub dataset: String,
+    pub scale: usize,
+    pub seed: u64,
+    pub params: LdaParams,
+    pub algo: Algo,
+    pub opts: RunOpts,
+}
+
+impl Experiment {
+    /// Resolve a config file against the library defaults.
+    pub fn from_config(cf: &ConfigFile) -> Result<Experiment> {
+        let dataset = cf.get("corpus", "dataset").unwrap_or("enron").to_string();
+        let scale = cf.typed("corpus", "scale", 400usize)?;
+        let seed = cf.typed("corpus", "seed", 42u64)?;
+        let k = cf.typed("model", "k", 50usize)?;
+        let mut params = LdaParams::paper(k);
+        params.alpha = cf.typed("model", "alpha", params.alpha)?;
+        params.beta = cf.typed("model", "beta", params.beta)?;
+
+        let algo_name = cf.get("run", "algo").unwrap_or("pobp");
+        let algo = Algo::parse(algo_name)
+            .with_context(|| format!("[run] algo = {algo_name}: unknown algorithm"))?;
+        let defaults = RunOpts::default();
+        let opts = RunOpts {
+            n_workers: cf.typed("run", "workers", defaults.n_workers)?,
+            max_threads: cf.typed("run", "threads", defaults.max_threads)?,
+            iters: cf.typed("run", "iters", defaults.iters)?,
+            max_batch_iters: cf.typed("run", "batch_iters", defaults.max_batch_iters)?,
+            nnz_budget: cf.typed("run", "nnz_budget", defaults.nnz_budget)?,
+            power: PowerParams {
+                lambda_w: cf.typed("run", "lambda_w", 0.1)?,
+                lambda_k_times_k: cf.typed("run", "lambda_kk", 50usize)?,
+            },
+            net: match cf.get("run", "network").unwrap_or("infiniband") {
+                "infiniband" => NetModel::infiniband_20gbps(),
+                "gige" => NetModel::gige(),
+                "scaled" => NetModel::infiniband_for_scale(k, 2000),
+                other => bail!("[run] network = {other}: infiniband|gige|scaled"),
+            },
+            seed,
+            snapshot_every: cf.typed("run", "snapshot_every", 0usize)?,
+        };
+        Ok(Experiment { dataset, scale, seed, params, algo, opts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# demo config
+[corpus]
+dataset = pubmed
+scale = 20000        # divisor of Table-3 D
+
+[model]
+k = 100
+
+[run]
+algo = psgs
+workers = 32
+network = gige
+";
+
+    #[test]
+    fn parses_and_resolves() {
+        let cf = ConfigFile::parse(SAMPLE).unwrap();
+        let e = Experiment::from_config(&cf).unwrap();
+        assert_eq!(e.dataset, "pubmed");
+        assert_eq!(e.scale, 20000);
+        assert_eq!(e.params.k, 100);
+        assert!((e.params.alpha - 0.02).abs() < 1e-6); // 2/K default
+        assert_eq!(e.algo, Algo::Psgs);
+        assert_eq!(e.opts.n_workers, 32);
+        assert!(e.opts.net.bandwidth_bps < 1e9); // gige
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let cf = ConfigFile::parse("[corpus]\ndataset = tiny\n").unwrap();
+        let e = Experiment::from_config(&cf).unwrap();
+        assert_eq!(e.algo, Algo::Pobp);
+        assert_eq!(e.opts.n_workers, RunOpts::default().n_workers);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ConfigFile::parse("key = 1\n").is_err()); // before section
+        assert!(ConfigFile::parse("[run\nalgo = pobp\n").is_err());
+        assert!(ConfigFile::parse("[run]\njust a line\n").is_err());
+        let cf = ConfigFile::parse("[run]\nalgo = nope\n").unwrap();
+        assert!(Experiment::from_config(&cf).is_err());
+        let cf = ConfigFile::parse("[run]\nworkers = many\n").unwrap();
+        assert!(Experiment::from_config(&cf).is_err());
+    }
+
+    #[test]
+    fn comments_and_whitespace_tolerated() {
+        let cf = ConfigFile::parse("  [model]  \n  k = 25  # topics\n\n").unwrap();
+        assert_eq!(cf.get("model", "k"), Some("25"));
+    }
+}

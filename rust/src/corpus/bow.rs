@@ -1,0 +1,176 @@
+//! UCI bag-of-words format reader/writer.
+//!
+//! The paper's four corpora (ENRON, NYTIMES, PUBMED from the UCI ML
+//! repository, plus WIKIPEDIA) ship in this format:
+//!
+//! ```text
+//! D
+//! W
+//! NNZ
+//! docId wordId count      (both ids 1-based)
+//! ...
+//! ```
+//!
+//! An optional companion `vocab.<name>.txt` lists one word per line. The
+//! loader is tolerant of blank lines and `#` comments so the bundled
+//! sample corpora can be annotated.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::corpus::csr::Csr;
+use crate::corpus::vocab::Vocab;
+
+/// Load a UCI bag-of-words file into CSR form.
+pub fn read_uci(path: &Path) -> Result<Csr> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read_uci_from(BufReader::new(file))
+}
+
+/// Load from any reader (exposed for tests).
+pub fn read_uci_from(reader: impl BufRead) -> Result<Csr> {
+    let mut lines = reader.lines().enumerate().filter_map(|(ln, l)| {
+        let l = match l {
+            Ok(l) => l,
+            Err(e) => return Some(Err((ln, e))),
+        };
+        let t = l.trim().to_string();
+        if t.is_empty() || t.starts_with('#') {
+            None
+        } else {
+            Some(Ok((ln, t)))
+        }
+    });
+
+    let mut next_header = |name: &str| -> Result<usize> {
+        match lines.next() {
+            Some(Ok((ln, t))) => t
+                .parse::<usize>()
+                .with_context(|| format!("line {}: bad {name} header '{t}'", ln + 1)),
+            Some(Err((ln, e))) => bail!("line {}: {e}", ln + 1),
+            None => bail!("missing {name} header"),
+        }
+    };
+    let d = next_header("D")?;
+    let w = next_header("W")?;
+    let nnz = next_header("NNZ")?;
+
+    let mut docs: Vec<Vec<(u32, f32)>> = vec![Vec::new(); d];
+    let mut seen = 0usize;
+    for item in lines {
+        let (ln, t) = match item {
+            Ok(v) => v,
+            Err((ln, e)) => bail!("line {}: {e}", ln + 1),
+        };
+        let mut it = t.split_whitespace();
+        let (Some(ds), Some(ws), Some(cs)) = (it.next(), it.next(), it.next())
+        else {
+            bail!("line {}: expected 'doc word count', got '{t}'", ln + 1);
+        };
+        let doc: usize = ds.parse().with_context(|| format!("line {}", ln + 1))?;
+        let word: usize = ws.parse().with_context(|| format!("line {}", ln + 1))?;
+        let count: f32 = cs.parse().with_context(|| format!("line {}", ln + 1))?;
+        if doc == 0 || doc > d {
+            bail!("line {}: doc id {doc} out of 1..={d}", ln + 1);
+        }
+        if word == 0 || word > w {
+            bail!("line {}: word id {word} out of 1..={w}", ln + 1);
+        }
+        docs[doc - 1].push((word as u32 - 1, count));
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("NNZ header says {nnz} but found {seen} entries");
+    }
+    Ok(Csr::from_docs(w, &docs))
+}
+
+/// Write CSR to UCI bag-of-words format.
+pub fn write_uci(corpus: &Csr, mut out: impl Write) -> Result<()> {
+    writeln!(out, "{}", corpus.docs())?;
+    writeln!(out, "{}", corpus.w)?;
+    writeln!(out, "{}", corpus.nnz())?;
+    for doc in 0..corpus.docs() {
+        let (ws, vs) = corpus.row(doc);
+        for (&wid, &c) in ws.iter().zip(vs) {
+            writeln!(out, "{} {} {}", doc + 1, wid + 1, c as u64)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write corpus + vocab to `<dir>/docword.<name>.txt` and
+/// `<dir>/vocab.<name>.txt` (the UCI layout).
+pub fn write_uci_pair(dir: &Path, name: &str, corpus: &Csr, vocab: &Vocab) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let dw = std::fs::File::create(dir.join(format!("docword.{name}.txt")))?;
+    write_uci(corpus, std::io::BufWriter::new(dw))?;
+    let mut vf = std::fs::File::create(dir.join(format!("vocab.{name}.txt")))?;
+    for i in 0..vocab.len() {
+        writeln!(vf, "{}", vocab.word(i))?;
+    }
+    Ok(())
+}
+
+/// Read a one-word-per-line vocabulary file.
+pub fn read_vocab(path: &Path) -> Result<Vocab> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    Ok(Vocab::new(text.lines().map(|l| l.trim().to_string()).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SAMPLE: &str = "# tiny corpus\n3\n4\n5\n1 1 2\n1 3 1\n2 2 4\n3 2 1\n3 4 2\n";
+
+    #[test]
+    fn parse_roundtrip() {
+        let c = read_uci_from(Cursor::new(SAMPLE)).unwrap();
+        assert_eq!((c.docs(), c.w, c.nnz()), (3, 4, 5));
+        assert_eq!(c.row(0).0, &[0, 2]);
+        assert_eq!(c.tokens(), 10.0);
+
+        let mut buf = Vec::new();
+        write_uci(&c, &mut buf).unwrap();
+        let c2 = read_uci_from(Cursor::new(buf)).unwrap();
+        assert_eq!(c2.row_ptr, c.row_ptr);
+        assert_eq!(c2.col, c.col);
+        assert_eq!(c2.val, c.val);
+    }
+
+    #[test]
+    fn rejects_bad_nnz() {
+        let bad = "1\n2\n99\n1 1 1\n";
+        assert!(read_uci_from(Cursor::new(bad)).unwrap_err().to_string().contains("NNZ"));
+    }
+
+    #[test]
+    fn rejects_out_of_range_ids() {
+        let bad = "1\n2\n1\n1 3 1\n";
+        assert!(read_uci_from(Cursor::new(bad)).is_err());
+        let bad = "1\n2\n1\n2 1 1\n";
+        assert!(read_uci_from(Cursor::new(bad)).is_err());
+        let bad = "1\n2\n1\n0 1 1\n";
+        assert!(read_uci_from(Cursor::new(bad)).is_err());
+    }
+
+    #[test]
+    fn file_pair_roundtrip() {
+        let dir = std::env::temp_dir().join("pobp_bow_test");
+        let c = read_uci_from(Cursor::new(SAMPLE)).unwrap();
+        let v = Vocab::synthetic(4);
+        write_uci_pair(&dir, "tiny", &c, &v).unwrap();
+        let c2 = read_uci(&dir.join("docword.tiny.txt")).unwrap();
+        assert_eq!(c2.nnz(), c.nnz());
+        let v2 = read_vocab(&dir.join("vocab.tiny.txt")).unwrap();
+        assert_eq!(v2.len(), 4);
+        assert_eq!(v2.word(1), "w0001");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,182 @@
+//! Document–word matrix in CSR form (documents = rows).
+//!
+//! The paper's x_{W×D} is extremely sparse (NNZ ≈ η·W·D with η ≪ 1,
+//! §3.2.2); every engine in this crate iterates the non-zeros through this
+//! structure. Counts are `f32` (the BP/VB family treats them as reals; the
+//! Gibbs family reads them back as integers).
+
+/// Sparse doc–word count matrix, rows = documents.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    /// number of vocabulary words (columns)
+    pub w: usize,
+    /// row offsets, len = docs + 1
+    pub row_ptr: Vec<u32>,
+    /// word ids, len = nnz
+    pub col: Vec<u32>,
+    /// counts, len = nnz
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from per-document (word, count) lists. Entries with zero or
+    /// negative count are dropped; duplicate words within a doc are merged.
+    pub fn from_docs(w: usize, docs: &[Vec<(u32, f32)>]) -> Csr {
+        let mut row_ptr = Vec::with_capacity(docs.len() + 1);
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        row_ptr.push(0u32);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for doc in docs {
+            scratch.clear();
+            scratch.extend(doc.iter().copied().filter(|&(wid, c)| {
+                assert!((wid as usize) < w, "word id {wid} out of range {w}");
+                c > 0.0
+            }));
+            scratch.sort_unstable_by_key(|&(wid, _)| wid);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (wid, mut c) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == wid {
+                    c += scratch[j].1;
+                    j += 1;
+                }
+                col.push(wid);
+                val.push(c);
+                i = j;
+            }
+            row_ptr.push(col.len() as u32);
+        }
+        Csr { w, row_ptr, col, val }
+    }
+
+    #[inline]
+    pub fn docs(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Total token count (sum of all values).
+    pub fn tokens(&self) -> f64 {
+        self.val.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Sparsity η = NNZ / (W · D) of Table 2's complexity analysis.
+    pub fn eta(&self) -> f64 {
+        if self.docs() == 0 || self.w == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.w as f64 * self.docs() as f64)
+    }
+
+    /// (word ids, counts) of document `d`.
+    #[inline]
+    pub fn row(&self, d: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[d] as usize;
+        let hi = self.row_ptr[d + 1] as usize;
+        (&self.col[lo..hi], &self.val[lo..hi])
+    }
+
+    /// Half-open nnz index range of document `d`.
+    #[inline]
+    pub fn row_range(&self, d: usize) -> std::ops::Range<usize> {
+        self.row_ptr[d] as usize..self.row_ptr[d + 1] as usize
+    }
+
+    /// A new CSR holding documents `[lo, hi)` (columns unchanged).
+    pub fn slice_docs(&self, lo: usize, hi: usize) -> Csr {
+        assert!(lo <= hi && hi <= self.docs());
+        let base = self.row_ptr[lo];
+        let row_ptr = self.row_ptr[lo..=hi].iter().map(|&p| p - base).collect();
+        let span = self.row_ptr[lo] as usize..self.row_ptr[hi] as usize;
+        Csr {
+            w: self.w,
+            row_ptr,
+            col: self.col[span.clone()].to_vec(),
+            val: self.val[span].to_vec(),
+        }
+    }
+
+    /// Per-word document frequency (number of docs containing each word).
+    pub fn doc_freq(&self) -> Vec<u32> {
+        let mut df = vec![0u32; self.w];
+        for &wid in &self.col {
+            df[wid as usize] += 1;
+        }
+        df
+    }
+
+    /// Per-word token counts.
+    pub fn word_tokens(&self) -> Vec<f64> {
+        let mut wt = vec![0f64; self.w];
+        for (&wid, &c) in self.col.iter().zip(&self.val) {
+            wt[wid as usize] += c as f64;
+        }
+        wt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_docs(
+            5,
+            &[
+                vec![(0, 2.0), (3, 1.0)],
+                vec![],
+                vec![(1, 4.0), (1, 1.0), (4, 3.0), (2, 0.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn shape_and_counts() {
+        let m = sample();
+        assert_eq!(m.docs(), 3);
+        assert_eq!(m.nnz(), 4); // dup merged, zero dropped
+        assert_eq!(m.tokens(), 11.0); // 2 + 1 + (4+1) + 3
+        assert!((m.eta() - 4.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_sorted_and_merged() {
+        let m = sample();
+        let (w, v) = m.row(2);
+        assert_eq!(w, &[1, 4]);
+        assert_eq!(v, &[5.0, 3.0]);
+        assert_eq!(m.row(1).0.len(), 0);
+    }
+
+    #[test]
+    fn slice_preserves_rows() {
+        let m = sample();
+        let s = m.slice_docs(1, 3);
+        assert_eq!(s.docs(), 2);
+        assert_eq!(s.row(1).0, m.row(2).0);
+        assert_eq!(s.row(1).1, m.row(2).1);
+        assert_eq!(s.nnz(), 2);
+        let empty = m.slice_docs(1, 1);
+        assert_eq!(empty.docs(), 0);
+        assert_eq!(empty.nnz(), 0);
+    }
+
+    #[test]
+    fn doc_freq_and_word_tokens() {
+        let m = sample();
+        assert_eq!(m.doc_freq(), vec![1, 1, 0, 1, 1]);
+        assert_eq!(m.word_tokens(), vec![2.0, 5.0, 0.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_word_id() {
+        Csr::from_docs(2, &[vec![(2, 1.0)]]);
+    }
+}

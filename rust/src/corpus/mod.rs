@@ -1,0 +1,14 @@
+//! Corpus substrate: sparse doc–word storage, UCI bag-of-words I/O,
+//! vocabulary truncation, train/heldout splitting, and mini-batch
+//! streaming — everything between raw data and the inference engines.
+
+pub mod bow;
+pub mod csr;
+pub mod split;
+pub mod stream;
+pub mod vocab;
+
+pub use csr::Csr;
+pub use split::{split_tokens, Split};
+pub use stream::{shard_ranges, MiniBatch, MiniBatchStream};
+pub use vocab::Vocab;

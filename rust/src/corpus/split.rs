@@ -1,0 +1,122 @@
+//! 80/20 per-document token split for predictive perplexity (Eq. 20).
+//!
+//! Following the paper (§4): "we randomly partition each document into 80%
+//! and 20% subsets"; θ is folded in on the 80% side with φ fixed, and
+//! perplexity is computed on the 20% side. The split is at token
+//! granularity, deterministic given the seed.
+
+use crate::corpus::csr::Csr;
+use crate::util::rng::Rng;
+
+/// A train/heldout pair over the same vocabulary and document set.
+pub struct Split {
+    pub train: Csr,
+    pub heldout: Csr,
+}
+
+/// Split each document's tokens into train (`1 - heldout_frac`) and
+/// heldout (`heldout_frac`) parts. Counts are integral: each of the
+/// `x_{w,d}` tokens is assigned independently, so expectations match the
+/// fraction while tiny documents still land somewhere sensible. Documents
+/// with a single token keep it on the train side.
+pub fn split_tokens(corpus: &Csr, heldout_frac: f64, seed: u64) -> Split {
+    assert!((0.0..1.0).contains(&heldout_frac));
+    let mut rng = Rng::new(seed);
+    let mut train_docs = Vec::with_capacity(corpus.docs());
+    let mut held_docs = Vec::with_capacity(corpus.docs());
+    for d in 0..corpus.docs() {
+        let (ws, vs) = corpus.row(d);
+        let doc_tokens: f64 = vs.iter().map(|&v| v as f64).sum();
+        let mut tr = Vec::with_capacity(ws.len());
+        let mut he = Vec::new();
+        for (&wid, &c) in ws.iter().zip(vs) {
+            let c = c.round() as u32;
+            let mut h = 0u32;
+            for _ in 0..c {
+                if rng.f64() < heldout_frac {
+                    h += 1;
+                }
+            }
+            // keep at least one token in train for one-token docs
+            if doc_tokens <= 1.0 {
+                h = 0;
+            }
+            if c > h {
+                tr.push((wid, (c - h) as f32));
+            }
+            if h > 0 {
+                he.push((wid, h as f32));
+            }
+        }
+        train_docs.push(tr);
+        held_docs.push(he);
+    }
+    Split {
+        train: Csr::from_docs(corpus.w, &train_docs),
+        heldout: Csr::from_docs(corpus.w, &held_docs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn random_corpus(rng: &mut Rng) -> Csr {
+        let d = rng.range(1, 20);
+        let w = rng.range(2, 30);
+        let docs: Vec<Vec<(u32, f32)>> = (0..d)
+            .map(|_| {
+                (0..rng.below(w))
+                    .map(|_| (rng.below(w) as u32, rng.range(1, 6) as f32))
+                    .collect()
+            })
+            .collect();
+        Csr::from_docs(w, &docs)
+    }
+
+    #[test]
+    fn token_mass_is_conserved() {
+        check("split conserves tokens", 50, |rng| {
+            let c = random_corpus(rng);
+            let s = split_tokens(&c, 0.2, rng.next_u64());
+            assert_eq!(
+                (s.train.tokens() + s.heldout.tokens()) as u64,
+                c.tokens() as u64
+            );
+            assert_eq!(s.train.docs(), c.docs());
+            assert_eq!(s.heldout.docs(), c.docs());
+        });
+    }
+
+    #[test]
+    fn fraction_approximately_respected() {
+        let mut rng = Rng::new(1);
+        let docs: Vec<Vec<(u32, f32)>> =
+            (0..200).map(|_| vec![(rng.below(50) as u32, 20.0)]).collect();
+        let c = Csr::from_docs(50, &docs);
+        let s = split_tokens(&c, 0.2, 7);
+        let frac = s.heldout.tokens() / c.tokens();
+        assert!((frac - 0.2).abs() < 0.03, "got {frac}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(2);
+        let c = random_corpus(&mut rng);
+        let a = split_tokens(&c, 0.2, 42);
+        let b = split_tokens(&c, 0.2, 42);
+        assert_eq!(a.train.val, b.train.val);
+        assert_eq!(a.heldout.col, b.heldout.col);
+    }
+
+    #[test]
+    fn single_token_doc_stays_in_train() {
+        let c = Csr::from_docs(3, &[vec![(1, 1.0)]]);
+        for seed in 0..20 {
+            let s = split_tokens(&c, 0.9, seed);
+            assert_eq!(s.train.tokens(), 1.0);
+            assert_eq!(s.heldout.tokens(), 0.0);
+        }
+    }
+}

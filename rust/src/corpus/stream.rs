@@ -1,0 +1,168 @@
+//! Mini-batch streaming (§2.1): the online algorithms treat the corpus as
+//! a stream of M mini-batches sized by a *non-zero-entry budget* — the
+//! paper fixes NNZ ≈ 45,000 per mini-batch so each fits a 2 GB processor.
+//!
+//! A mini-batch is a contiguous document range (documents arrive in stream
+//! order); `MiniBatchStream` yields `Csr` slices plus their provenance so
+//! the coordinator can shard them over workers.
+
+use crate::corpus::csr::Csr;
+
+/// One mini-batch: a doc-range slice of the source corpus.
+pub struct MiniBatch {
+    /// index of this batch (0-based; the paper's m)
+    pub index: usize,
+    /// [lo, hi) document range in the source corpus
+    pub doc_range: std::ops::Range<usize>,
+    pub data: Csr,
+}
+
+/// Streams a corpus as mini-batches with at most `nnz_budget` non-zeros
+/// each (always at least one document per batch).
+pub struct MiniBatchStream<'a> {
+    corpus: &'a Csr,
+    nnz_budget: usize,
+    next_doc: usize,
+    next_index: usize,
+}
+
+impl<'a> MiniBatchStream<'a> {
+    pub fn new(corpus: &'a Csr, nnz_budget: usize) -> Self {
+        assert!(nnz_budget > 0, "nnz budget must be positive");
+        MiniBatchStream { corpus, nnz_budget, next_doc: 0, next_index: 0 }
+    }
+
+    /// Number of batches this stream will yield (without consuming it).
+    pub fn count(corpus: &Csr, nnz_budget: usize) -> usize {
+        MiniBatchStream::new(corpus, nnz_budget).map(|_| 1).sum()
+    }
+}
+
+impl<'a> Iterator for MiniBatchStream<'a> {
+    type Item = MiniBatch;
+
+    fn next(&mut self) -> Option<MiniBatch> {
+        let d = self.corpus.docs();
+        if self.next_doc >= d {
+            return None;
+        }
+        let lo = self.next_doc;
+        let base = self.corpus.row_ptr[lo] as usize;
+        let mut hi = lo;
+        while hi < d {
+            let nnz_through = self.corpus.row_ptr[hi + 1] as usize - base;
+            if nnz_through > self.nnz_budget && hi > lo {
+                break;
+            }
+            hi += 1;
+            if nnz_through > self.nnz_budget {
+                break; // single huge doc: take it alone
+            }
+        }
+        self.next_doc = hi;
+        let index = self.next_index;
+        self.next_index += 1;
+        Some(MiniBatch {
+            index,
+            doc_range: lo..hi,
+            data: self.corpus.slice_docs(lo, hi),
+        })
+    }
+}
+
+/// Even contiguous sharding of `docs` documents over `n` workers:
+/// returns the `[lo, hi)` ranges (some possibly empty when docs < n).
+pub fn shard_ranges(docs: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(n > 0);
+    let base = docs / n;
+    let extra = docs % n;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn corpus(rng: &mut Rng, d: usize, w: usize) -> Csr {
+        let docs: Vec<Vec<(u32, f32)>> = (0..d)
+            .map(|_| {
+                (0..rng.range(1, 8))
+                    .map(|_| (rng.below(w) as u32, 1.0))
+                    .collect()
+            })
+            .collect();
+        Csr::from_docs(w, &docs)
+    }
+
+    #[test]
+    fn batches_cover_corpus_in_order() {
+        check("stream covers corpus", 30, |rng| {
+            let d = rng.range(1, 60);
+            let c = corpus(rng, d, 20);
+            let budget = rng.range(1, 30);
+            let mut next = 0;
+            let mut nnz = 0;
+            for (i, mb) in MiniBatchStream::new(&c, budget).enumerate() {
+                assert_eq!(mb.index, i);
+                assert_eq!(mb.doc_range.start, next);
+                assert!(mb.doc_range.end > mb.doc_range.start);
+                next = mb.doc_range.end;
+                nnz += mb.data.nnz();
+            }
+            assert_eq!(next, c.docs());
+            assert_eq!(nnz, c.nnz());
+        });
+    }
+
+    #[test]
+    fn respects_budget_except_single_doc() {
+        check("stream respects budget", 30, |rng| {
+            let d = rng.range(1, 60);
+            let c = corpus(rng, d, 20);
+            let budget = rng.range(2, 25);
+            for mb in MiniBatchStream::new(&c, budget) {
+                if mb.doc_range.len() > 1 {
+                    assert!(mb.data.nnz() <= budget);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn count_matches_iteration() {
+        let mut rng = Rng::new(11);
+        let c = corpus(&mut rng, 40, 20);
+        assert_eq!(
+            MiniBatchStream::count(&c, 10),
+            MiniBatchStream::new(&c, 10).count()
+        );
+    }
+
+    #[test]
+    fn shards_are_even_partition() {
+        check("shards partition", 50, |rng| {
+            let docs = rng.below(100);
+            let n = rng.range(1, 12);
+            let rs = shard_ranges(docs, n);
+            assert_eq!(rs.len(), n);
+            assert_eq!(rs[0].start, 0);
+            assert_eq!(rs[n - 1].end, docs);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            let (min, max) = rs
+                .iter()
+                .fold((usize::MAX, 0), |(a, b), r| (a.min(r.len()), b.max(r.len())));
+            assert!(max - min <= 1, "imbalanced shards");
+        });
+    }
+}

@@ -1,0 +1,150 @@
+//! Vocabulary: id ↔ string mapping and frequency-based truncation.
+//!
+//! The paper (§4, following Hoffman et al.) truncates each corpus to a
+//! fixed vocabulary of the most frequent words — e.g. PUBMED from 141,043
+//! to 6,902 words — while keeping >40% of tokens. `truncate_by_tokens`
+//! reproduces that preprocessing step.
+
+use crate::corpus::csr::Csr;
+
+/// Word id ↔ string table.
+#[derive(Clone, Debug, Default)]
+pub struct Vocab {
+    words: Vec<String>,
+}
+
+impl Vocab {
+    pub fn new(words: Vec<String>) -> Vocab {
+        Vocab { words }
+    }
+
+    /// Synthetic vocabulary "w0000", "w0001", ...
+    pub fn synthetic(n: usize) -> Vocab {
+        Vocab {
+            words: (0..n).map(|i| format!("w{i:04}")).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn word(&self, id: usize) -> &str {
+        &self.words[id]
+    }
+}
+
+/// Result of a vocabulary truncation: the remapped corpus, the kept
+/// vocabulary, and the token-retention ratio (paper: >40% for PUBMED).
+pub struct Truncation {
+    pub corpus: Csr,
+    pub vocab: Vocab,
+    pub kept_words: usize,
+    pub token_retention: f64,
+    /// old word id -> new id (u32::MAX = dropped)
+    pub remap: Vec<u32>,
+}
+
+/// Keep the `keep` most frequent words (by token count), remap ids densely
+/// and drop all other entries — the paper's fixed-truncated-vocabulary
+/// preprocessing (§4).
+pub fn truncate_by_tokens(corpus: &Csr, vocab: &Vocab, keep: usize) -> Truncation {
+    let wt = corpus.word_tokens();
+    let keep = keep.min(corpus.w);
+    let order = crate::util::partial_sort::top_k_desc(
+        &wt.iter().map(|&t| t as f32).collect::<Vec<_>>(),
+        keep,
+    );
+    let mut remap = vec![u32::MAX; corpus.w];
+    let mut words = Vec::with_capacity(keep);
+    for (new_id, &old_id) in order.iter().enumerate() {
+        remap[old_id as usize] = new_id as u32;
+        words.push(if vocab.is_empty() {
+            format!("w{old_id:04}")
+        } else {
+            vocab.word(old_id as usize).to_string()
+        });
+    }
+
+    let total_tokens = corpus.tokens();
+    let mut docs: Vec<Vec<(u32, f32)>> = Vec::with_capacity(corpus.docs());
+    let mut kept_tokens = 0f64;
+    for d in 0..corpus.docs() {
+        let (ws, vs) = corpus.row(d);
+        let mut row = Vec::with_capacity(ws.len());
+        for (&wid, &c) in ws.iter().zip(vs) {
+            let nid = remap[wid as usize];
+            if nid != u32::MAX {
+                row.push((nid, c));
+                kept_tokens += c as f64;
+            }
+        }
+        docs.push(row);
+    }
+    Truncation {
+        corpus: Csr::from_docs(keep, &docs),
+        vocab: Vocab::new(words),
+        kept_words: keep,
+        token_retention: if total_tokens > 0.0 {
+            kept_tokens / total_tokens
+        } else {
+            0.0
+        },
+        remap,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Csr {
+        // word 1 is heavy (9 tokens), word 0 medium (3), words 2,3 light
+        Csr::from_docs(
+            4,
+            &[
+                vec![(0, 1.0), (1, 4.0)],
+                vec![(1, 5.0), (2, 1.0)],
+                vec![(0, 2.0), (3, 1.0)],
+                vec![(3, 1.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn keeps_most_frequent() {
+        let t = truncate_by_tokens(&corpus(), &Vocab::default(), 2);
+        assert_eq!(t.kept_words, 2);
+        assert_eq!(t.corpus.w, 2);
+        // word 1 -> id 0, word 0 -> id 1
+        assert_eq!(t.remap[1], 0);
+        assert_eq!(t.remap[0], 1);
+        assert_eq!(t.remap[2], u32::MAX);
+        // retention = (9 + 3) / 15
+        assert!((t.token_retention - 12.0 / 15.0).abs() < 1e-12);
+        assert_eq!(t.corpus.tokens(), 12.0);
+        // doc 3 had only dropped words -> empty row survives as a doc
+        assert_eq!(t.corpus.docs(), 4);
+        assert_eq!(t.corpus.row(3).0.len(), 0);
+    }
+
+    #[test]
+    fn truncate_noop_when_keep_exceeds_w() {
+        let c = corpus();
+        let t = truncate_by_tokens(&c, &Vocab::default(), 100);
+        assert_eq!(t.kept_words, 4);
+        assert_eq!(t.corpus.tokens(), c.tokens());
+        assert!((t.token_retention - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthetic_vocab_names() {
+        let v = Vocab::synthetic(3);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.word(2), "w0002");
+    }
+}

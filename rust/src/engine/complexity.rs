@@ -1,0 +1,156 @@
+//! Analytic cost model — the paper's Table 2 and §3.2.2 scalability
+//! analysis as a library API, so benches, tests and capacity planning all
+//! use one implementation of the formulas:
+//!
+//! ```text
+//!            computation              memory/processor             communication
+//! POBP       η·λK·λW·K·W·D·T/N        K(ηWD + D)/(MN) + 2KW        λK·λW·K·W·M·N·T
+//! OBP        η·λK·λW·K·W·D·T          K(ηWD + D)/M + 2KW           —
+//! PGS        η′·K·W·D·T′/N            (KD + η′WD)/N + KW           N·K·W·T′
+//! ```
+//!
+//! plus Eq. 16/17: overall(N) = A/N + B·N is minimized at N* = √(A/B).
+
+/// Workload description (corpus + run parameters).
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub docs: f64,
+    pub vocab: f64,
+    pub k: f64,
+    /// sparsity η = NNZ/(W·D)
+    pub eta: f64,
+    /// token density η′ = tokens/(W·D)
+    pub eta_tokens: f64,
+    /// online iterations per mini-batch (T)
+    pub t_online: f64,
+    /// batch iterations (T′)
+    pub t_batch: f64,
+    pub lambda_w: f64,
+    pub lambda_k: f64,
+    pub n: f64,
+    /// mini-batches M (per-processor NNZ budget semantics: §4)
+    pub m: f64,
+}
+
+impl Workload {
+    /// The paper's PUBMED setting at K topics and N processors.
+    pub fn pubmed_paper(k: f64, n: f64) -> Workload {
+        let (d, w) = (8_200_000f64, 6_902f64);
+        let nnz = 222_399_377f64;
+        let tokens = 737_869_083f64;
+        Workload {
+            docs: d,
+            vocab: w,
+            k,
+            eta: nnz / (w * d),
+            eta_tokens: tokens / (w * d),
+            t_online: 200.0,
+            t_batch: 500.0,
+            lambda_w: 0.1,
+            lambda_k: 50.0 / k,
+            n,
+            m: (nnz / (45_000.0 * n)).ceil(),
+        }
+    }
+
+    /// POBP computation cost (element updates).
+    pub fn pobp_compute(&self) -> f64 {
+        self.eta * self.lambda_k * self.lambda_w * self.k * self.vocab * self.docs
+            * self.t_online
+            / self.n
+    }
+
+    /// POBP per-processor memory (matrix elements).
+    pub fn pobp_memory(&self) -> f64 {
+        self.k * (self.eta * self.vocab * self.docs + self.docs) / (self.m * self.n)
+            + 2.0 * self.k * self.vocab
+    }
+
+    /// POBP total communication (elements over the whole run, Eq. 6).
+    pub fn pobp_comm(&self) -> f64 {
+        self.lambda_k * self.lambda_w * self.k * self.vocab * self.m * self.n * self.t_online
+    }
+
+    /// PGS computation cost.
+    pub fn pgs_compute(&self) -> f64 {
+        self.eta_tokens * self.k * self.vocab * self.docs * self.t_batch / self.n
+    }
+
+    /// PGS per-processor memory.
+    pub fn pgs_memory(&self) -> f64 {
+        (self.k * self.docs + self.eta_tokens * self.vocab * self.docs) / self.n
+            + self.k * self.vocab
+    }
+
+    /// PGS total communication (elements, Eq. 5 with T′).
+    pub fn pgs_comm(&self) -> f64 {
+        self.n * self.k * self.vocab * self.t_batch
+    }
+
+    /// Eq. 17: the N minimizing A/N + B·N for compute A and per-N comm B.
+    pub fn optimal_n(compute_total: f64, comm_per_n: f64) -> f64 {
+        (compute_total / comm_per_n.max(1e-300)).sqrt()
+    }
+
+    /// Eq. 16 at the optimum: 2√(A·B).
+    pub fn minimal_cost(compute_total: f64, comm_per_n: f64) -> f64 {
+        2.0 * (compute_total * comm_per_n).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pubmed_m_matches_paper() {
+        // the paper: "the number of mini-batches on ... PUBMED ... is 19"
+        let w = Workload::pubmed_paper(2000.0, 256.0);
+        assert_eq!(w.m, 20.0); // ceil(222.4M / (45k*256)) — paper rounds to 19
+        assert!((w.m - 19.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn comm_ratio_is_orders_of_magnitude() {
+        let w = Workload::pubmed_paper(2000.0, 256.0);
+        let ratio = w.pobp_comm() / w.pgs_comm();
+        assert!(
+            ratio < 0.05,
+            "POBP/PGS comm ratio {ratio} should be in the paper's 5-20% band or below"
+        );
+        assert!(ratio > 1e-4);
+    }
+
+    #[test]
+    fn pobp_memory_constant_in_n_approximately() {
+        // dominated by the 2KW global matrices
+        let a = Workload::pubmed_paper(2000.0, 128.0).pobp_memory();
+        let b = Workload::pubmed_paper(2000.0, 1024.0).pobp_memory();
+        assert!((a - b).abs() / a < 0.1, "{a} vs {b}");
+    }
+
+    #[test]
+    fn pgs_memory_shrinks_with_n() {
+        let a = Workload::pubmed_paper(2000.0, 128.0).pgs_memory();
+        let b = Workload::pubmed_paper(2000.0, 1024.0).pgs_memory();
+        assert!(b < a / 2.0);
+    }
+
+    #[test]
+    fn eq17_optimum_minimizes_eq16() {
+        let (a, b) = (1e12, 3e4);
+        let n_star = Workload::optimal_n(a, b);
+        let cost = |n: f64| a / n + b * n;
+        assert!(cost(n_star) <= cost(n_star * 2.0));
+        assert!(cost(n_star) <= cost(n_star / 2.0));
+        assert!((cost(n_star) - Workload::minimal_cost(a, b)).abs() / cost(n_star) < 1e-12);
+    }
+
+    #[test]
+    fn insensitive_to_k_at_fixed_lambda_kk() {
+        // §3.2.2: with λ_K = 50/K, POBP's comm is insensitive to K
+        let c1 = Workload::pubmed_paper(500.0, 256.0).pobp_comm();
+        let c2 = Workload::pubmed_paper(2000.0, 256.0).pobp_comm();
+        assert!((c1 - c2).abs() / c1 < 0.05, "{c1} vs {c2}");
+    }
+}

@@ -1,0 +1,302 @@
+//! Collapsed Gibbs sampling substrate (Griffiths & Steyvers 2004) and the
+//! shared machinery for its fast variants (FGS, SGS) and their parallel
+//! forms (PGS = AD-LDA, Newman et al. 2009).
+//!
+//! State per (simulated) processor: one topic label per token, the local
+//! document–topic counts n_dk, and a private copy of the global
+//! topic–word counts n_wk / n_k — the AD-LDA memory layout the paper's
+//! Table 2 charges PGS with. The conditional for token (d, w) is
+//!
+//! ```text
+//! p(z = k | rest) ∝ (n_dk + α) (n_wk + β) / (n_k + Wβ)
+//! ```
+//!
+//! with the token's own count removed. Variant samplers ([`Sampler`])
+//! differ only in *how* they draw from this discrete distribution; the
+//! count bookkeeping is shared, so every variant targets the identical
+//! posterior and the speed comparison is like-for-like (the paper's
+//! Figs. 8/11).
+
+use crate::corpus::Csr;
+use crate::engine::traits::LdaParams;
+use crate::util::rng::Rng;
+
+/// Token-level Gibbs state for one shard.
+pub struct GibbsShard {
+    pub k: usize,
+    pub w: usize,
+    /// one entry per token
+    pub doc_of: Vec<u32>,
+    pub word_of: Vec<u32>,
+    pub z: Vec<u32>,
+    /// local docs × K
+    pub ndk: Vec<u32>,
+    /// private copy of global W × K (word-major)
+    pub nwk: Vec<u32>,
+    /// private copy of global per-topic totals
+    pub nk: Vec<u32>,
+    /// snapshot of nwk at the last synchronization (for delta computation)
+    pub nwk_snap: Vec<u32>,
+}
+
+impl GibbsShard {
+    /// Expand a document shard into tokens with random topic assignments.
+    pub fn init(data: &Csr, k: usize, rng: &mut Rng) -> GibbsShard {
+        let w = data.w;
+        let mut doc_of = Vec::new();
+        let mut word_of = Vec::new();
+        for d in 0..data.docs() {
+            let (ws, vs) = data.row(d);
+            for (&wi, &c) in ws.iter().zip(vs) {
+                for _ in 0..c.round() as usize {
+                    doc_of.push(d as u32);
+                    word_of.push(wi);
+                }
+            }
+        }
+        let n_tokens = doc_of.len();
+        let mut s = GibbsShard {
+            k,
+            w,
+            doc_of,
+            word_of,
+            z: vec![0; n_tokens],
+            ndk: vec![0; data.docs() * k],
+            nwk: vec![0; w * k],
+            nk: vec![0; k],
+            nwk_snap: vec![0; w * k],
+        };
+        for i in 0..n_tokens {
+            let t = rng.below(k) as u32;
+            s.z[i] = t;
+            s.inc(s.doc_of[i] as usize, s.word_of[i] as usize, t as usize);
+        }
+        s
+    }
+
+    #[inline]
+    fn inc(&mut self, d: usize, w: usize, t: usize) {
+        self.ndk[d * self.k + t] += 1;
+        self.nwk[w * self.k + t] += 1;
+        self.nk[t] += 1;
+    }
+
+    #[inline]
+    fn dec(&mut self, d: usize, w: usize, t: usize) {
+        self.ndk[d * self.k + t] -= 1;
+        self.nwk[w * self.k + t] -= 1;
+        self.nk[t] -= 1;
+    }
+
+    /// Overwrite the private global tables with the synchronized ones and
+    /// snapshot them (start of an iteration in AD-LDA).
+    pub fn install_global(&mut self, nwk: &[u32], nk: &[u32]) {
+        self.nwk.copy_from_slice(nwk);
+        self.nk.copy_from_slice(nk);
+        self.nwk_snap.copy_from_slice(nwk);
+    }
+
+    /// One full sweep over the shard's tokens with the given sampler.
+    pub fn sweep<S: Sampler + ?Sized>(
+        &mut self,
+        sampler: &mut S,
+        p: &LdaParams,
+        rng: &mut Rng,
+    ) {
+        sampler.begin_iteration(self, p);
+        let n = self.z.len();
+        let mut cur_doc = u32::MAX;
+        for i in 0..n {
+            let (d, w) = (self.doc_of[i] as usize, self.word_of[i] as usize);
+            if self.doc_of[i] != cur_doc {
+                cur_doc = self.doc_of[i];
+                sampler.begin_doc(self, p, d);
+            }
+            let old = self.z[i] as usize;
+            self.dec(d, w, old);
+            sampler.token_removed(self, p, d, w, old);
+            let new = sampler.sample(self, p, d, w, rng) as usize;
+            debug_assert!(new < self.k);
+            self.inc(d, w, new);
+            sampler.token_added(self, p, d, w, new);
+            self.z[i] = new as u32;
+        }
+    }
+}
+
+/// A strategy for drawing from the collapsed conditional. All variants
+/// must sample the *same* distribution; they differ in work per draw.
+pub trait Sampler: Send {
+    fn begin_iteration(&mut self, shard: &GibbsShard, p: &LdaParams);
+    fn begin_doc(&mut self, shard: &GibbsShard, p: &LdaParams, d: usize);
+    /// called after the current token's count was removed
+    fn token_removed(&mut self, _s: &GibbsShard, _p: &LdaParams, _d: usize, _w: usize, _t: usize) {}
+    /// called after the new topic's count was added
+    fn token_added(&mut self, _s: &GibbsShard, _p: &LdaParams, _d: usize, _w: usize, _t: usize) {}
+    fn sample(&mut self, shard: &GibbsShard, p: &LdaParams, d: usize, w: usize, rng: &mut Rng) -> u32;
+    /// relative bytes-per-element this variant synchronizes (the paper:
+    /// GS-family ships integer counts, VB ships floats at ~2×)
+    fn name(&self) -> &'static str;
+}
+
+/// Plain collapsed Gibbs: full O(K) scan per token.
+pub struct PlainGs {
+    probs: Vec<f64>,
+}
+
+impl PlainGs {
+    pub fn new(k: usize) -> PlainGs {
+        PlainGs { probs: vec![0.0; k] }
+    }
+}
+
+impl Sampler for PlainGs {
+    fn begin_iteration(&mut self, _s: &GibbsShard, _p: &LdaParams) {}
+    fn begin_doc(&mut self, _s: &GibbsShard, _p: &LdaParams, _d: usize) {}
+
+    fn sample(&mut self, s: &GibbsShard, p: &LdaParams, d: usize, w: usize, rng: &mut Rng) -> u32 {
+        let k = s.k;
+        let wbeta = s.w as f64 * p.beta as f64;
+        let (alpha, beta) = (p.alpha as f64, p.beta as f64);
+        let mut total = 0f64;
+        for t in 0..k {
+            let pr = (s.ndk[d * k + t] as f64 + alpha)
+                * (s.nwk[w * k + t] as f64 + beta)
+                / (s.nk[t] as f64 + wbeta);
+            self.probs[t] = pr;
+            total += pr;
+        }
+        let mut u = rng.f64() * total;
+        for (t, &pr) in self.probs.iter().enumerate() {
+            u -= pr;
+            if u <= 0.0 {
+                return t as u32;
+            }
+        }
+        (k - 1) as u32
+    }
+
+    fn name(&self) -> &'static str {
+        "gs"
+    }
+}
+
+/// Exact conditional probabilities for a (d, w) context — shared by the
+/// correctness tests of every sampler variant.
+pub fn exact_conditional(s: &GibbsShard, p: &LdaParams, d: usize, w: usize) -> Vec<f64> {
+    let k = s.k;
+    let wbeta = s.w as f64 * p.beta as f64;
+    let mut probs: Vec<f64> = (0..k)
+        .map(|t| {
+            (s.ndk[d * k + t] as f64 + p.alpha as f64)
+                * (s.nwk[w * k + t] as f64 + p.beta as f64)
+                / (s.nk[t] as f64 + wbeta)
+        })
+        .collect();
+    let z: f64 = probs.iter().sum();
+    probs.iter_mut().for_each(|x| *x /= z);
+    probs
+}
+
+#[cfg(test)]
+pub mod test_util {
+    use super::*;
+    use crate::synth::{generate, SynthSpec};
+
+    /// A small burned-in shard for sampler distribution tests.
+    pub fn burned_in_shard(seed: u64, k: usize) -> (GibbsShard, LdaParams, Rng) {
+        let sc = generate(&SynthSpec::tiny(seed));
+        let p = LdaParams::paper(k);
+        let mut rng = Rng::new(seed);
+        let mut s = GibbsShard::init(&sc.corpus, k, &mut rng);
+        let mut gs = PlainGs::new(k);
+        for _ in 0..3 {
+            s.sweep(&mut gs, &p, &mut rng);
+        }
+        (s, p, rng)
+    }
+
+    /// Empirical frequencies of `sampler` on a fixed (d, w) context vs the
+    /// exact conditional; returns max absolute deviation.
+    pub fn sampler_deviation<S: Sampler>(
+        s: &mut GibbsShard,
+        sampler: &mut S,
+        p: &LdaParams,
+        rng: &mut Rng,
+        draws: usize,
+    ) -> f64 {
+        let (d, w) = (0usize, s.word_of[0] as usize);
+        // remove one token's worth of context like the sweep does
+        let old = s.z[0] as usize;
+        s.dec(d, w, old);
+        let exact = exact_conditional(s, p, d, w);
+        sampler.begin_iteration(s, p);
+        sampler.begin_doc(s, p, d);
+        sampler.token_removed(s, p, d, w, old);
+        let mut counts = vec![0usize; s.k];
+        for _ in 0..draws {
+            counts[sampler.sample(s, p, d, w, rng) as usize] += 1;
+        }
+        s.inc(d, w, old);
+        exact
+            .iter()
+            .zip(&counts)
+            .map(|(&e, &c)| (e - c as f64 / draws as f64).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use test_util::*;
+
+    #[test]
+    fn counts_are_consistent_after_sweeps() {
+        let (s, _, _) = burned_in_shard(1, 8);
+        let tokens = s.z.len() as u32;
+        assert_eq!(s.ndk.iter().sum::<u32>(), tokens);
+        assert_eq!(s.nwk.iter().sum::<u32>(), tokens);
+        assert_eq!(s.nk.iter().sum::<u32>(), tokens);
+        // per-topic totals agree between tables
+        for t in 0..s.k {
+            let from_nwk: u32 = (0..s.w).map(|w| s.nwk[w * s.k + t]).sum();
+            assert_eq!(from_nwk, s.nk[t]);
+        }
+    }
+
+    #[test]
+    fn plain_gs_matches_exact_conditional() {
+        let (mut s, p, mut rng) = burned_in_shard(2, 8);
+        let mut gs = PlainGs::new(8);
+        let dev = sampler_deviation(&mut s, &mut gs, &p, &mut rng, 40_000);
+        assert!(dev < 0.02, "deviation {dev}");
+    }
+
+    #[test]
+    fn gibbs_finds_structure_in_separable_corpus() {
+        // two disjoint word blocks -> after sweeps, topics should separate
+        let docs: Vec<Vec<(u32, f32)>> = (0..40)
+            .map(|i| {
+                let base = if i % 2 == 0 { 0u32 } else { 4 };
+                (0..4).map(|j| (base + j, 3.0)).collect()
+            })
+            .collect();
+        let c = Csr::from_docs(8, &docs);
+        let p = LdaParams::paper(2);
+        let mut rng = Rng::new(3);
+        let mut s = GibbsShard::init(&c, 2, &mut rng);
+        let mut gs = PlainGs::new(2);
+        for _ in 0..30 {
+            s.sweep(&mut gs, &p, &mut rng);
+        }
+        // purity: each word block should be dominated by one topic
+        let block_topic = |lo: usize| -> f64 {
+            let t0: u32 = (lo..lo + 4).map(|w| s.nwk[w * 2]).sum();
+            let t1: u32 = (lo..lo + 4).map(|w| s.nwk[w * 2 + 1]).sum();
+            t0.max(t1) as f64 / (t0 + t1).max(1) as f64
+        };
+        assert!(block_topic(0) > 0.9, "block 0 purity {}", block_topic(0));
+        assert!(block_topic(4) > 0.9, "block 1 purity {}", block_topic(4));
+    }
+}

@@ -1,0 +1,17 @@
+//! Inference engines: the native POBP worker plus every baseline the
+//! paper compares against (collapsed/fast/sparse Gibbs, Yahoo-LDA-style
+//! async Gibbs, variational Bayes), each runnable under the same simulated
+//! MPA so the paper's figures can be regenerated like-for-like.
+
+pub mod abp;
+pub mod bp;
+pub mod complexity;
+pub mod fgs;
+pub mod gibbs;
+pub mod mca;
+pub mod mpa;
+pub mod sgs;
+pub mod traits;
+pub mod vb;
+
+pub use traits::{IterStat, LdaParams, Model, TrainResult};

@@ -1,0 +1,243 @@
+//! Shared model/parameter/result types for every inference engine.
+
+use crate::comm::Ledger;
+
+/// LDA hyperparameters (the paper fixes α = 2/K, β = 0.01, §4).
+#[derive(Clone, Copy, Debug)]
+pub struct LdaParams {
+    pub k: usize,
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl LdaParams {
+    /// Paper defaults for a given K.
+    pub fn paper(k: usize) -> LdaParams {
+        LdaParams { k, alpha: 2.0 / k as f32, beta: 0.01 }
+    }
+}
+
+/// The learned model: global topic–word sufficient statistics φ̂,
+/// stored **word-major** (`phi_wk[w * k + t]`) so the per-word topic
+/// vectors the hot loops touch are contiguous.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub k: usize,
+    pub w: usize,
+    pub phi_wk: Vec<f32>,
+}
+
+impl Model {
+    pub fn zeros(w: usize, k: usize) -> Model {
+        Model { k, w, phi_wk: vec![0.0; w * k] }
+    }
+
+    /// Per-topic totals φ̂_Σ(k) = Σ_w φ̂_w(k).
+    pub fn phi_tot(&self) -> Vec<f32> {
+        let mut tot = vec![0f32; self.k];
+        for wi in 0..self.w {
+            for (t, slot) in tot.iter_mut().enumerate() {
+                *slot += self.phi_wk[wi * self.k + t];
+            }
+        }
+        tot
+    }
+
+    /// Smoothed topic-word probability p(w | t) = (φ̂ + β)/(φ̂_Σ + Wβ).
+    pub fn word_prob(&self, wi: usize, t: usize, beta: f32, phi_tot: &[f32]) -> f64 {
+        (self.phi_wk[wi * self.k + t] as f64 + beta as f64)
+            / (phi_tot[t] as f64 + self.w as f64 * beta as f64)
+    }
+
+    /// Top `n` words of topic `t` by φ̂ (for qualitative inspection).
+    pub fn top_words(&self, t: usize, n: usize) -> Vec<(u32, f32)> {
+        let col: Vec<f32> = (0..self.w).map(|wi| self.phi_wk[wi * self.k + t]).collect();
+        crate::util::partial_sort::top_k_desc(&col, n)
+            .into_iter()
+            .map(|wi| (wi, col[wi as usize]))
+            .collect()
+    }
+
+    /// Total accumulated mass (≈ tokens seen; conservation invariant).
+    pub fn mass(&self) -> f64 {
+        self.phi_wk.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Save as a small binary file: magic, W, K (u64 LE), then the φ̂
+    /// matrix as f32 LE.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"POBPMDL1")?;
+        f.write_all(&(self.w as u64).to_le_bytes())?;
+        f.write_all(&(self.k as u64).to_le_bytes())?;
+        for &v in &self.phi_wk {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Shannon entropy (nats) of topic `t`'s smoothed word distribution —
+    /// low entropy = focused topic; K·ln(W) total = uniform garbage.
+    pub fn topic_entropy(&self, t: usize, beta: f32) -> f64 {
+        let phi_tot = self.phi_tot();
+        let mut h = 0f64;
+        for wi in 0..self.w {
+            let p = self.word_prob(wi, t, beta, &phi_tot);
+            if p > 0.0 {
+                h -= p * p.ln();
+            }
+        }
+        h
+    }
+
+    /// Effective topics per word: exp(entropy) of each word's topic
+    /// distribution, averaged over words with mass. The empirical basis
+    /// of the paper's "each word may not be allocated to many topics"
+    /// (§4.1) — the justification for a fixed λ_K·K.
+    pub fn mean_effective_topics_per_word(&self) -> f64 {
+        let mut total = 0f64;
+        let mut count = 0usize;
+        for wi in 0..self.w {
+            let row = &self.phi_wk[wi * self.k..(wi + 1) * self.k];
+            let mass: f64 = row.iter().map(|&v| v as f64).sum();
+            if mass <= 0.0 {
+                continue;
+            }
+            let mut h = 0f64;
+            for &v in row {
+                let p = v as f64 / mass;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+            }
+            total += h.exp();
+            count += 1;
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total / count as f64
+        }
+    }
+
+    /// Load a model written by [`Model::save`].
+    pub fn load(path: &std::path::Path) -> std::io::Result<Model> {
+        use std::io::Read;
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"POBPMDL1" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "not a POBP model file",
+            ));
+        }
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let w = u64::from_le_bytes(u64buf) as usize;
+        f.read_exact(&mut u64buf)?;
+        let k = u64::from_le_bytes(u64buf) as usize;
+        let mut data = vec![0u8; w * k * 4];
+        f.read_exact(&mut data)?;
+        let phi_wk = data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Model { k, w, phi_wk })
+    }
+}
+
+/// One recorded iteration (or mini-batch iteration) of training.
+#[derive(Clone, Copy, Debug)]
+pub struct IterStat {
+    /// mini-batch index m (0 for batch algorithms)
+    pub batch: usize,
+    /// iteration t within the batch / epoch for batch algorithms
+    pub iter: usize,
+    /// mean residual per token (BP family) or NaN (GS/VB families)
+    pub residual_per_token: f64,
+    /// (word, topic) pairs synchronized this iteration
+    pub synced_pairs: usize,
+    /// simulated elapsed seconds so far (compute max + comm)
+    pub sim_elapsed: f64,
+    /// real wall-clock seconds so far
+    pub wall_elapsed: f64,
+}
+
+/// The outcome of a training run.
+pub struct TrainResult {
+    pub model: Model,
+    pub history: Vec<IterStat>,
+    pub ledger: Ledger,
+    /// real wall-clock seconds of the whole fit
+    pub wall_secs: f64,
+    /// periodic model snapshots (simulated seconds, model) for
+    /// perplexity-vs-time curves (Fig. 8); empty unless requested
+    pub snapshots: Vec<(f64, Model)>,
+}
+
+impl TrainResult {
+    /// Simulated training seconds (the Fig. 8/11 time axis).
+    pub fn sim_secs(&self) -> f64 {
+        self.ledger.total_secs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+
+    #[test]
+    fn paper_params() {
+        let p = LdaParams::paper(2000);
+        assert!((p.alpha - 0.001).abs() < 1e-9);
+        assert_eq!(p.beta, 0.01);
+    }
+
+    #[test]
+    fn model_totals_and_probs() {
+        let mut m = Model::zeros(3, 2);
+        // word-major: w0=[1,2], w1=[3,4], w2=[0,0]
+        m.phi_wk = vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0];
+        assert_eq!(m.phi_tot(), vec![4.0, 6.0]);
+        assert_eq!(m.mass(), 10.0);
+        let tot = m.phi_tot();
+        let p: f64 = (0..3).map(|w| m.word_prob(w, 0, 0.01, &tot)).sum();
+        assert!((p - 1.0).abs() < 1e-6); // smoothed probs normalize
+        assert_eq!(m.top_words(1, 2), vec![(1, 4.0), (0, 2.0)]);
+    }
+
+    #[test]
+    fn entropy_diagnostics() {
+        let mut m = Model::zeros(4, 2);
+        // topic 0: all mass on word 0; topic 1: spread evenly
+        m.phi_wk[0] = 100.0;
+        for wi in 0..4 {
+            m.phi_wk[wi * 2 + 1] = 25.0;
+        }
+        let h0 = m.topic_entropy(0, 0.01);
+        let h1 = m.topic_entropy(1, 0.01);
+        assert!(h0 < h1, "focused topic must have lower entropy: {h0} vs {h1}");
+        assert!(h1 <= (4f64).ln() + 1e-6);
+        // word 0 uses both topics (but mostly topic 0); words 1-3 one topic
+        let eff = m.mean_effective_topics_per_word();
+        assert!((1.0..=2.0).contains(&eff), "eff topics {eff}");
+    }
+
+    #[test]
+    fn train_result_sim_time() {
+        let mut ledger = Ledger::new(NetModel::infiniband_20gbps());
+        ledger.record_compute(&[0.25]);
+        ledger.record_sync(0, 1, 1 << 20, 4);
+        let r = TrainResult {
+            model: Model::zeros(1, 1),
+            history: vec![],
+            ledger,
+            wall_secs: 0.0,
+            snapshots: vec![],
+        };
+        assert!(r.sim_secs() > 0.25);
+    }
+}

@@ -1,0 +1,117 @@
+//! UMass topic coherence (Mimno et al. 2011) — a qualitative complement
+//! to perplexity used by the examples to sanity-check learned topics.
+//!
+//! ```text
+//! C(t) = Σ_{i<j} log ( (D(w_i, w_j) + 1) / D(w_j) )
+//! ```
+//!
+//! over the top-n words of topic t, where D(w) is the document frequency
+//! and D(w_i, w_j) the co-document frequency. Higher (closer to 0) is
+//! better.
+
+use std::collections::HashMap;
+
+use crate::corpus::Csr;
+use crate::engine::traits::Model;
+
+/// Document frequency and pairwise co-document frequency for a word set.
+fn co_doc_freq(corpus: &Csr, words: &[u32]) -> (HashMap<u32, u32>, HashMap<(u32, u32), u32>) {
+    let set: std::collections::HashSet<u32> = words.iter().copied().collect();
+    let mut df: HashMap<u32, u32> = HashMap::new();
+    let mut co: HashMap<(u32, u32), u32> = HashMap::new();
+    let mut present: Vec<u32> = Vec::new();
+    for d in 0..corpus.docs() {
+        present.clear();
+        let (ws, _) = corpus.row(d);
+        for &w in ws {
+            if set.contains(&w) {
+                present.push(w);
+            }
+        }
+        for (i, &a) in present.iter().enumerate() {
+            *df.entry(a).or_insert(0) += 1;
+            for &b in &present[i + 1..] {
+                let key = if a < b { (a, b) } else { (b, a) };
+                *co.entry(key).or_insert(0) += 1;
+            }
+        }
+    }
+    (df, co)
+}
+
+/// UMass coherence of topic `t` using its `top_n` words.
+pub fn umass_coherence(model: &Model, corpus: &Csr, t: usize, top_n: usize) -> f64 {
+    let top: Vec<u32> = model.top_words(t, top_n).into_iter().map(|(w, _)| w).collect();
+    let (df, co) = co_doc_freq(corpus, &top);
+    let mut c = 0f64;
+    for i in 1..top.len() {
+        for j in 0..i {
+            let (a, b) = (top[i], top[j]);
+            let key = if a < b { (a, b) } else { (b, a) };
+            let co_ab = *co.get(&key).unwrap_or(&0) as f64;
+            let d_b = *df.get(&b).unwrap_or(&0) as f64;
+            if d_b > 0.0 {
+                c += ((co_ab + 1.0) / d_b).ln();
+            }
+        }
+    }
+    c
+}
+
+/// Mean coherence over all topics.
+pub fn mean_coherence(model: &Model, corpus: &Csr, top_n: usize) -> f64 {
+    (0..model.k)
+        .map(|t| umass_coherence(model, corpus, t, top_n))
+        .sum::<f64>()
+        / model.k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two perfectly separated word communities: coherent topics must
+    /// score higher than a topic mixing the communities.
+    #[test]
+    fn separated_communities_score_higher() {
+        // words 0-2 always co-occur; words 3-5 always co-occur; never mix
+        let docs: Vec<Vec<(u32, f32)>> = (0..20)
+            .map(|i| {
+                if i % 2 == 0 {
+                    vec![(0, 1.0), (1, 1.0), (2, 1.0)]
+                } else {
+                    vec![(3, 1.0), (4, 1.0), (5, 1.0)]
+                }
+            })
+            .collect();
+        let corpus = Csr::from_docs(6, &docs);
+        let mut good = Model::zeros(6, 2);
+        // topic 0 = {0,1,2}, topic 1 = {3,4,5}
+        for w in 0..3 {
+            good.phi_wk[w * 2] = 10.0;
+        }
+        for w in 3..6 {
+            good.phi_wk[w * 2 + 1] = 10.0;
+        }
+        let mut bad = Model::zeros(6, 2);
+        // topic 0 = {0,3,1}: mixes communities
+        bad.phi_wk[0] = 10.0;
+        bad.phi_wk[3 * 2] = 9.0;
+        bad.phi_wk[2] = 8.0;
+        bad.phi_wk[1 * 2 + 1] = 10.0;
+        bad.phi_wk[4 * 2 + 1] = 9.0;
+        bad.phi_wk[5 * 2 + 1] = 8.0;
+
+        let cg = umass_coherence(&good, &corpus, 0, 3);
+        let cb = umass_coherence(&bad, &corpus, 0, 3);
+        assert!(cg > cb, "coherent {cg} should beat mixed {cb}");
+    }
+
+    #[test]
+    fn mean_over_topics_is_finite() {
+        let corpus = Csr::from_docs(3, &[vec![(0, 1.0), (1, 2.0)], vec![(2, 1.0)]]);
+        let mut m = Model::zeros(3, 2);
+        m.phi_wk = vec![1.0, 0.5, 2.0, 0.1, 0.0, 3.0];
+        assert!(mean_coherence(&m, &corpus, 2).is_finite());
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation: predictive perplexity (Eq. 20), perplexity gap (Eq. 21)
+//! and topic-quality diagnostics.
+
+pub mod coherence;
+pub mod perplexity;
+
+pub use perplexity::{gap_percent, predictive_perplexity};

@@ -1,0 +1,220 @@
+//! Predictive perplexity (Eq. 20) — the paper's accuracy metric.
+//!
+//! Protocol (§4): each document is split 80/20 at token level. With the
+//! trained φ̂ *fixed*, θ is estimated on the 80% side by iterating the BP
+//! fold-in update from the same random initialization; perplexity is then
+//! computed on the 20% side:
+//!
+//! ```text
+//! P = exp( − Σ_{w,d} x20 · log Σ_k θ_d(k) φ_w(k)  /  Σ_{w,d} x20 )
+//! ```
+//!
+//! Lower is better.
+
+use crate::corpus::{Csr, Split};
+use crate::engine::traits::{LdaParams, Model};
+use crate::util::rng::Rng;
+
+/// Fold in θ for `docs` with φ̂ frozen: per-token EM (the BP update of
+/// Eq. 1 without the φ minus-correction, since held-out tokens are not
+/// part of φ̂). Returns θ̂, docs × K.
+pub fn fold_in_theta(
+    model: &Model,
+    docs: &Csr,
+    params: &LdaParams,
+    iters: usize,
+    seed: u64,
+) -> Vec<f32> {
+    assert_eq!(model.w, docs.w, "vocab mismatch");
+    let k = model.k;
+    let phi_tot = model.phi_tot();
+    let wbeta = model.w as f32 * params.beta;
+    // Pre-normalized topic-word probabilities, word-major.
+    let mut phi_prob = vec![0f32; model.w * k];
+    for wi in 0..model.w {
+        for t in 0..k {
+            phi_prob[wi * k + t] = (model.phi_wk[wi * k + t] + params.beta)
+                / (phi_tot[t] + wbeta);
+        }
+    }
+
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; docs.docs() * k];
+    let mut mu = vec![0f32; docs.nnz() * k];
+    // random init (same protocol as training, Fig. 4 line 3)
+    for row in mu.chunks_exact_mut(k) {
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = rng.f32() + 0.1;
+            sum += *v;
+        }
+        row.iter_mut().for_each(|v| *v /= sum);
+    }
+    for d in 0..docs.docs() {
+        for idx in docs.row_range(d) {
+            let x = docs.val[idx];
+            for t in 0..k {
+                theta[d * k + t] += x * mu[idx * k + t];
+            }
+        }
+    }
+
+    let mut scores = vec![0f32; k];
+    for _ in 0..iters {
+        for d in 0..docs.docs() {
+            for idx in docs.row_range(d) {
+                let wi = docs.col[idx] as usize;
+                let x = docs.val[idx];
+                let mu_row = &mut mu[idx * k..(idx + 1) * k];
+                let th = &mut theta[d * k..(d + 1) * k];
+                let ph = &phi_prob[wi * k..(wi + 1) * k];
+                let mut sum = 0f32;
+                for t in 0..k {
+                    let c = x * mu_row[t];
+                    let s = ((th[t] - c).max(0.0) + params.alpha) * ph[t];
+                    scores[t] = s;
+                    sum += s;
+                }
+                if sum <= 0.0 {
+                    continue;
+                }
+                let inv = 1.0 / sum;
+                for t in 0..k {
+                    let new = scores[t] * inv;
+                    th[t] += x * (new - mu_row[t]);
+                    mu_row[t] = new;
+                }
+            }
+        }
+    }
+    theta
+}
+
+/// Perplexity of `heldout` under (θ̂, φ̂) with Dirichlet smoothing (Eq. 20).
+pub fn perplexity(
+    model: &Model,
+    theta: &[f32],
+    heldout: &Csr,
+    params: &LdaParams,
+) -> f64 {
+    let k = model.k;
+    let phi_tot = model.phi_tot();
+    let wbeta = model.w as f64 * params.beta as f64;
+    let kalpha = k as f64 * params.alpha as f64;
+    let mut ll = 0f64;
+    let mut tokens = 0f64;
+    for d in 0..heldout.docs() {
+        let th = &theta[d * k..(d + 1) * k];
+        let th_sum: f64 = th.iter().map(|&v| v as f64).sum();
+        for idx in heldout.row_range(d) {
+            let wi = heldout.col[idx] as usize;
+            let x = heldout.val[idx] as f64;
+            let mut p = 0f64;
+            for t in 0..k {
+                let theta_p = (th[t] as f64 + params.alpha as f64)
+                    / (th_sum + kalpha);
+                let phi_p = (model.phi_wk[wi * k + t] as f64
+                    + params.beta as f64)
+                    / (phi_tot[t] as f64 + wbeta);
+                p += theta_p * phi_p;
+            }
+            ll += x * p.max(1e-300).ln();
+            tokens += x;
+        }
+    }
+    if tokens == 0.0 {
+        return f64::NAN;
+    }
+    (-ll / tokens).exp()
+}
+
+/// The full Eq. 20 protocol on a pre-computed split.
+pub fn predictive_perplexity(
+    model: &Model,
+    split: &Split,
+    params: &LdaParams,
+    fold_iters: usize,
+    seed: u64,
+) -> f64 {
+    let theta = fold_in_theta(model, &split.train, params, fold_iters, seed);
+    perplexity(model, &theta, &split.heldout, params)
+}
+
+/// Perplexity of the training data itself (fold-in on the same docs);
+/// a cheap train-quality signal used by unit tests.
+pub fn heldin_perplexity(model: &Model, corpus: &Csr, params: &LdaParams) -> f64 {
+    let theta = fold_in_theta(model, corpus, params, 20, 7);
+    perplexity(model, &theta, corpus, params)
+}
+
+/// Perplexity gap of Eq. 21: (P_base − P_ours) / P_base × 100%.
+pub fn gap_percent(p_base: f64, p_ours: f64) -> f64 {
+    (p_base - p_ours) / p_base * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::split_tokens;
+    use crate::synth::{generate, SynthSpec};
+
+    fn toy_model() -> (Model, Csr, LdaParams) {
+        let sc = generate(&SynthSpec::tiny(3));
+        let params = LdaParams::paper(8);
+        let cfg = crate::coordinator::PobpConfig {
+            n_workers: 1,
+            nnz_budget: usize::MAX,
+            max_iters: 25,
+            ..Default::default()
+        };
+        let r = crate::coordinator::fit(&sc.corpus, &params, &cfg);
+        (r.model, sc.corpus, params)
+    }
+
+    #[test]
+    fn trained_model_beats_uniform() {
+        let (model, corpus, params) = toy_model();
+        let split = split_tokens(&corpus, 0.2, 1);
+        let p_trained = predictive_perplexity(&model, &split, &params, 20, 2);
+        let uniform = Model::zeros(model.w, model.k);
+        let p_uniform = predictive_perplexity(&uniform, &split, &params, 20, 2);
+        assert!(p_trained.is_finite() && p_trained > 1.0);
+        assert!(
+            p_trained < p_uniform * 0.9,
+            "trained {p_trained} vs uniform {p_uniform}"
+        );
+        // uniform model perplexity ≈ W (every word equally likely)
+        assert!((p_uniform - model.w as f64).abs() < model.w as f64 * 0.2);
+    }
+
+    #[test]
+    fn more_fold_iters_do_not_hurt() {
+        let (model, corpus, params) = toy_model();
+        let split = split_tokens(&corpus, 0.2, 5);
+        let p5 = predictive_perplexity(&model, &split, &params, 5, 3);
+        let p40 = predictive_perplexity(&model, &split, &params, 40, 3);
+        assert!(p40 < p5 * 1.05, "fold-in diverged: {p5} -> {p40}");
+    }
+
+    #[test]
+    fn gap_formula() {
+        assert!((gap_percent(200.0, 150.0) - 25.0).abs() < 1e-12);
+        assert!(gap_percent(100.0, 120.0) < 0.0);
+    }
+
+    #[test]
+    fn theta_mass_tracks_tokens() {
+        let (model, corpus, params) = toy_model();
+        let theta = fold_in_theta(&model, &corpus, &params, 10, 4);
+        let sum: f64 = theta.iter().map(|&v| v as f64).sum();
+        assert!((sum - corpus.tokens()).abs() < corpus.tokens() * 1e-3);
+    }
+
+    #[test]
+    fn empty_heldout_is_nan() {
+        let (model, _, params) = toy_model();
+        let empty = Csr::from_docs(model.w, &[vec![]]);
+        let theta = vec![0f32; model.k];
+        assert!(perplexity(&model, &theta, &empty, &params).is_nan());
+    }
+}

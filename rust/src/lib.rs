@@ -1,0 +1,34 @@
+//! # POBP — communication-efficient parallel online belief propagation
+//!
+//! A full-system reproduction of *"Towards Big Topic Modeling"* (Yan,
+//! Zeng, Liu & Gao, 2013): latent Dirichlet allocation at scale on a
+//! multi-processor architecture that synchronizes only residual-selected
+//! *power words* and *power topics*.
+//!
+//! Three layers (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: mini-batch streaming, N-worker
+//!   MPA, power-subset allreduce, convergence control, metrics, CLI.
+//! * **L2 (python/compile/model.py)** — the per-shard POBP sweep in JAX,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed here via PJRT.
+//! * **L1 (python/compile/kernels/bp_update.py)** — the Pallas message
+//!   update kernel inside the L2 graph.
+//!
+//! The crate also implements every baseline the paper compares against
+//! (PGS/PFGS/PSGS/YLDA/PVB and single-processor BP/OBP) plus the corpus,
+//! cluster and evaluation substrates, so all tables and figures of the
+//! paper can be regenerated with `cargo bench`.
+
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod engine;
+pub mod eval;
+pub mod metrics;
+pub mod repro;
+pub mod runtime;
+pub mod sched;
+pub mod storage;
+pub mod synth;
+pub mod util;

@@ -1,0 +1,255 @@
+//! `pobp` — the leader binary.
+//!
+//! ```text
+//! pobp train      --dataset enron --scale 400 --algo pobp --k 50
+//!                 [--workers N] [--iters T] [--lambda-w 0.1]
+//!                 [--lambda-kk 50] [--nnz-budget 45000] [--seed S]
+//!                 [--engine native|xla] [--save model.bin] [--topics 5]
+//! pobp gen-data   --dataset pubmed --scale 2000 --out data/
+//! pobp topics     --model model.bin [--top 10]
+//! pobp perplexity --model model.bin --dataset enron --scale 400 --k 50
+//! pobp info       # artifact + environment report
+//! ```
+//!
+//! The `repro` bench harness lives under `benches/` (one target per paper
+//! table/figure; run `cargo bench`).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use pobp::cli::Args;
+use pobp::corpus::{bow, Vocab};
+use pobp::engine::traits::{LdaParams, Model};
+use pobp::metrics::sig;
+use pobp::repro::{dataset, eval_model, run_algo, Algo, RunOpts};
+use pobp::sched::PowerParams;
+use pobp::util::timer::fmt_secs;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "run" => cmd_run(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "topics" => cmd_topics(&args),
+        "perplexity" => cmd_perplexity(&args),
+        "info" => cmd_info(),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `pobp help`)"),
+    }
+}
+
+const HELP: &str = "\
+pobp — communication-efficient parallel online belief propagation for LDA
+  (reproduction of Yan, Zeng, Liu & Gao, 'Towards Big Topic Modeling', 2013)
+
+subcommands:
+  train       train a model on a (synthetic Table-3) dataset
+  run         train from a config file (see configs/*.conf)
+  gen-data    write a synthetic corpus in UCI bag-of-words format
+  topics      print top words per topic of a saved model
+  perplexity  evaluate a saved model (Eq. 20 protocol)
+  info        artifact + environment report
+run `cargo bench` for the per-figure/table reproduction harness.
+";
+
+fn corpus_args(args: &Args) -> Result<(pobp::corpus::Csr, usize)> {
+    let name = args.get_str("dataset", "enron");
+    let scale = args.get::<usize>("scale", 400)?;
+    let k = args.get::<usize>("k", 50)?;
+    let seed = args.get::<u64>("seed", 42)?;
+    Ok((dataset(&name, scale, k, seed), k))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (corpus, k) = corpus_args(args)?;
+    let algo = Algo::parse(&args.get_str("algo", "pobp"))
+        .context("unknown --algo (pobp|pobp-full|obp|bp|pgs|pfgs|psgs|ylda|pvb)")?;
+    let params = LdaParams::paper(k);
+    let opts = RunOpts {
+        n_workers: args.get("workers", 4)?,
+        iters: args.get("iters", 100)?,
+        max_batch_iters: args.get("batch-iters", 50)?,
+        nnz_budget: args.get("nnz-budget", 45_000)?,
+        power: PowerParams {
+            lambda_w: args.get("lambda-w", 0.1)?,
+            lambda_k_times_k: args.get("lambda-kk", 50)?,
+        },
+        seed: args.get("seed", 42)?,
+        ..Default::default()
+    };
+    let engine = args.get_str("engine", "native");
+    let save: String = args.get_str("save", "");
+    let show_topics = args.get::<usize>("topics", 0)?;
+    args.reject_unknown()?;
+
+    println!(
+        "corpus: D={} W={} NNZ={} tokens={}",
+        corpus.docs(),
+        corpus.w,
+        corpus.nnz(),
+        corpus.tokens()
+    );
+    let result = match engine.as_str() {
+        "native" => run_algo(algo, &corpus, &params, &opts),
+        "xla" => {
+            if algo != Algo::Obp && algo != Algo::Pobp {
+                bail!("--engine xla supports the BP-family algorithms only");
+            }
+            let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            pobp::runtime::xla_engine::fit_obp_xla(
+                &corpus,
+                &params,
+                &dir,
+                &pobp::runtime::xla_engine::XlaObpConfig {
+                    max_iters: opts.max_batch_iters,
+                    power: opts.power,
+                    seed: opts.seed,
+                    ..Default::default()
+                },
+            )?
+        }
+        other => bail!("unknown --engine {other} (native|xla)"),
+    };
+
+    println!(
+        "{} [{}]: wall {}, simulated {} (compute {} + comm {}), syncs {}, wire {} MB",
+        algo.name(),
+        engine,
+        fmt_secs(result.wall_secs),
+        fmt_secs(result.sim_secs()),
+        fmt_secs(result.ledger.compute_secs),
+        fmt_secs(result.ledger.comm_secs),
+        result.ledger.sync_count(),
+        result.ledger.wire_bytes / 1_000_000,
+    );
+    let perp = eval_model(&result.model, &corpus, &params, opts.seed);
+    println!("predictive perplexity (Eq. 20): {}", sig(perp));
+
+    if show_topics > 0 {
+        print_topics(&result.model, show_topics, 8);
+    }
+    if !save.is_empty() {
+        result.model.save(&PathBuf::from(&save))?;
+        println!("model saved to {save}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let path: String = if args.positional.is_empty() {
+        args.require("config")?
+    } else {
+        args.positional[0].clone()
+    };
+    let save: String = args.get_str("save", "");
+    args.reject_unknown()?;
+    let cf = pobp::config::ConfigFile::load(&PathBuf::from(&path))?;
+    let exp = pobp::config::Experiment::from_config(&cf)?;
+    println!(
+        "experiment: dataset={} scale={} K={} algo={} N={}",
+        exp.dataset, exp.scale, exp.params.k, exp.algo.name(), exp.opts.n_workers
+    );
+    let corpus = dataset(&exp.dataset, exp.scale, exp.params.k, exp.seed);
+    println!(
+        "corpus: D={} W={} NNZ={} tokens={}",
+        corpus.docs(), corpus.w, corpus.nnz(), corpus.tokens()
+    );
+    let result = run_algo(exp.algo, &corpus, &exp.params, &exp.opts);
+    println!(
+        "{}: wall {}, simulated {} (comm {}), syncs {}",
+        exp.algo.name(),
+        fmt_secs(result.wall_secs),
+        fmt_secs(result.sim_secs()),
+        fmt_secs(result.ledger.comm_secs),
+        result.ledger.sync_count(),
+    );
+    println!(
+        "predictive perplexity (Eq. 20): {}",
+        sig(eval_model(&result.model, &corpus, &exp.params, exp.seed))
+    );
+    if !save.is_empty() {
+        result.model.save(&PathBuf::from(&save))?;
+        println!("model saved to {save}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let name = args.get_str("dataset", "enron");
+    let scale = args.get::<usize>("scale", 400)?;
+    let seed = args.get::<u64>("seed", 42)?;
+    let out = PathBuf::from(args.get_str("out", "data"));
+    args.reject_unknown()?;
+    let corpus = dataset(&name, scale, 50, seed);
+    let vocab = Vocab::synthetic(corpus.w);
+    bow::write_uci_pair(&out, &format!("{name}-sim"), &corpus, &vocab)?;
+    println!(
+        "wrote {}/docword.{name}-sim.txt (D={} W={} NNZ={})",
+        out.display(),
+        corpus.docs(),
+        corpus.w,
+        corpus.nnz()
+    );
+    Ok(())
+}
+
+fn cmd_topics(args: &Args) -> Result<()> {
+    let model_path: String = args.require("model")?;
+    let top = args.get::<usize>("top", 10)?;
+    args.reject_unknown()?;
+    let model = Model::load(&PathBuf::from(&model_path))?;
+    print_topics(&model, model.k, top);
+    Ok(())
+}
+
+fn print_topics(model: &Model, n_topics: usize, top: usize) {
+    for t in 0..n_topics.min(model.k) {
+        let words: Vec<String> = model
+            .top_words(t, top)
+            .into_iter()
+            .map(|(w, v)| format!("w{w:04}({v:.0})"))
+            .collect();
+        println!("topic {t:>3}: {}", words.join(" "));
+    }
+}
+
+fn cmd_perplexity(args: &Args) -> Result<()> {
+    let model_path: String = args.require("model")?;
+    let (corpus, k) = corpus_args(args)?;
+    args.reject_unknown()?;
+    let model = Model::load(&PathBuf::from(&model_path))?;
+    anyhow::ensure!(model.k == k && model.w == corpus.w, "model/corpus shape mismatch");
+    let params = LdaParams::paper(k);
+    println!("perplexity: {}", sig(eval_model(&model, &corpus, &params, 42)));
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("pobp {} — three-layer rust+jax+pallas build", env!("CARGO_PKG_VERSION"));
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match pobp::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir.display());
+            for e in &m.entries {
+                println!(
+                    "  d={} w={} k={} blocks=({}, {})  {}",
+                    e.d, e.w, e.k, e.block_d, e.block_w,
+                    e.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+            let client = xla::PjRtClient::cpu()?;
+            println!("pjrt: platform={} devices={}", client.platform_name(), client.device_count());
+        }
+        Err(e) => println!("artifacts not built ({e}); run `make artifacts`"),
+    }
+    println!(
+        "cores: {}",
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    );
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Run records and result writers: every bench/experiment writes CSV rows
+//! under `results/` (plus a JSON sidecar with the full configuration) so
+//! figures can be regenerated and diffed against the paper.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A CSV table under construction.
+pub struct Table {
+    pub name: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: &str, header: &[&str]) -> Table {
+        Table {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Push a row of displayable values.
+    pub fn push<T: std::fmt::Display>(&mut self, cells: &[T]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write `results/<name>.csv`; returns the path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(path)
+    }
+
+    /// Render as an aligned text table (for bench stdout).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write a JSON sidecar describing a run configuration.
+pub fn save_sidecar(dir: &Path, name: &str, config: Json) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, config.to_string())?;
+    Ok(path)
+}
+
+/// Default results directory (repo-root/results).
+pub fn results_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}
+
+/// Format a float with a sensible number of digits for tables.
+pub fn sig(v: f64) -> String {
+    if !v.is_finite() {
+        return "nan".into();
+    }
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if a >= 100.0 {
+        format!("{v:.1}")
+    } else if a >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_and_render() {
+        let mut t = Table::new("demo", &["algo", "perplexity"]);
+        t.push(&["pobp".to_string(), "123.4".to_string()]);
+        t.push(&["pvb".to_string(), "456.7".to_string()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "algo,perplexity\npobp,123.4\npvb,456.7\n");
+        let rendered = t.render();
+        assert!(rendered.contains("pobp"));
+        assert!(rendered.lines().count() == 4);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("pobp_metrics_test");
+        let mut t = Table::new("x", &["a"]);
+        t.push(&[1.5]);
+        let p = t.save(&dir).unwrap();
+        assert!(p.exists());
+        let sc = save_sidecar(&dir, "x", Json::obj(vec![("k", Json::from(5usize))])).unwrap();
+        assert!(sc.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sig_formats() {
+        assert_eq!(sig(1234.5678), "1234.6");
+        assert_eq!(sig(12.3456), "12.346");
+        assert_eq!(sig(0.00123), "1.230e-3");
+        assert_eq!(sig(f64::NAN), "nan");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(&[1]);
+    }
+}

@@ -1,0 +1,255 @@
+//! The experiment harness: dataset presets, a uniform algorithm runner,
+//! and perplexity-curve helpers shared by the CLI, the examples and every
+//! `benches/` target. One function per concept so each bench file maps
+//! 1:1 onto a paper table/figure (DESIGN.md §5).
+
+use crate::comm::NetModel;
+use crate::coordinator::{fit as fit_pobp, PobpConfig};
+use crate::corpus::{split_tokens, Csr, Split};
+use crate::engine::mpa::{fit_gibbs, GsVariant, MpaConfig};
+use crate::engine::traits::{LdaParams, Model, TrainResult};
+use crate::engine::vb::fit_vb;
+use crate::eval::perplexity::predictive_perplexity;
+use crate::sched::PowerParams;
+use crate::synth::{generate, SynthSpec, TABLE3};
+
+/// Every algorithm the paper evaluates (Figs. 8–12, Tables 4–5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// the paper's system
+    Pobp,
+    /// parallel OBP without power selection (ablation)
+    PobpFull,
+    /// single-processor online BP
+    Obp,
+    /// single-processor batch BP
+    BatchBp,
+    Pgs,
+    Pfgs,
+    Psgs,
+    Ylda,
+    Pvb,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Pobp => "pobp",
+            Algo::PobpFull => "pobp-full",
+            Algo::Obp => "obp",
+            Algo::BatchBp => "bp",
+            Algo::Pgs => "pgs",
+            Algo::Pfgs => "pfgs",
+            Algo::Psgs => "psgs",
+            Algo::Ylda => "ylda",
+            Algo::Pvb => "pvb",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        Some(match s {
+            "pobp" => Algo::Pobp,
+            "pobp-full" => Algo::PobpFull,
+            "obp" => Algo::Obp,
+            "bp" => Algo::BatchBp,
+            "pgs" => Algo::Pgs,
+            "pfgs" => Algo::Pfgs,
+            "psgs" => Algo::Psgs,
+            "ylda" => Algo::Ylda,
+            "pvb" => Algo::Pvb,
+            _ => return None,
+        })
+    }
+
+    /// The comparison set of the paper's Figs. 8–11.
+    pub fn paper_set() -> [Algo; 5] {
+        [Algo::Pobp, Algo::Pfgs, Algo::Psgs, Algo::Ylda, Algo::Pvb]
+    }
+}
+
+/// Uniform knobs for one experiment run.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub n_workers: usize,
+    pub max_threads: usize,
+    /// batch iterations for the batch algorithms (paper: 500)
+    pub iters: usize,
+    /// per-mini-batch iteration cap for the online algorithms
+    pub max_batch_iters: usize,
+    pub nnz_budget: usize,
+    pub power: PowerParams,
+    pub net: NetModel,
+    pub seed: u64,
+    pub snapshot_every: usize,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            n_workers: 4,
+            max_threads: 0,
+            iters: 100,
+            // power-subset iterations are ~λ_W·λ_K cheap, so the BP family
+            // gets a deep budget (the paper's T ≈ 200); the residual
+            // threshold stops full-selection runs much earlier
+            max_batch_iters: 200,
+            nnz_budget: 45_000,
+            power: PowerParams::paper_default(),
+            net: NetModel::infiniband_20gbps(),
+            seed: 42,
+            snapshot_every: 0,
+        }
+    }
+}
+
+/// Run `algo` on `corpus` under the shared options.
+pub fn run_algo(algo: Algo, corpus: &Csr, params: &LdaParams, o: &RunOpts) -> TrainResult {
+    // clamp the per-word power-topic count to K
+    let power = PowerParams {
+        lambda_w: o.power.lambda_w,
+        lambda_k_times_k: o.power.lambda_k_times_k.min(params.k),
+    };
+    match algo {
+        Algo::Pobp | Algo::PobpFull | Algo::Obp | Algo::BatchBp => {
+            let cfg = PobpConfig {
+                n_workers: match algo {
+                    Algo::Obp | Algo::BatchBp => 1,
+                    _ => o.n_workers,
+                },
+                max_threads: o.max_threads,
+                nnz_budget: if algo == Algo::BatchBp { usize::MAX } else { o.nnz_budget },
+                power: match algo {
+                    Algo::Pobp => power,
+                    _ => PowerParams::full(),
+                },
+                max_iters: o.max_batch_iters,
+                min_iters: 5,
+                converge_thresh: 0.1,
+                converge_rel: 0.01,
+                net: o.net,
+                seed: o.seed,
+                snapshot_every: o.snapshot_every,
+            };
+            fit_pobp(corpus, params, &cfg)
+        }
+        Algo::Pgs | Algo::Pfgs | Algo::Psgs | Algo::Ylda => {
+            let cfg = MpaConfig {
+                n_workers: o.n_workers,
+                max_threads: o.max_threads,
+                iters: o.iters,
+                net: o.net,
+                seed: o.seed,
+                snapshot_every: o.snapshot_every,
+            };
+            let variant = match algo {
+                Algo::Pgs => GsVariant::Plain,
+                Algo::Pfgs => GsVariant::Fast,
+                Algo::Psgs => GsVariant::Sparse,
+                _ => GsVariant::Ylda,
+            };
+            fit_gibbs(corpus, params, &cfg, variant)
+        }
+        Algo::Pvb => {
+            let cfg = MpaConfig {
+                n_workers: o.n_workers,
+                max_threads: o.max_threads,
+                // VB iterations are ~INNER_ITERS× heavier; match the GS
+                // budget in sweeps, the paper runs all batch algorithms
+                // the same 500 iterations
+                iters: o.iters,
+                net: o.net,
+                seed: o.seed,
+                snapshot_every: o.snapshot_every,
+            };
+            fit_vb(corpus, params, &cfg)
+        }
+    }
+}
+
+/// The paper's corpora, scaled (DESIGN.md §Substitutions). `scale` divides
+/// the document count; vocabulary is capped at 2000.
+pub fn dataset(name: &str, scale: usize, topics: usize, seed: u64) -> Csr {
+    if name == "tiny" {
+        return generate(&SynthSpec::tiny(seed)).corpus;
+    }
+    let row = TABLE3
+        .iter()
+        .find(|r| r.name.eq_ignore_ascii_case(name.trim_end_matches("-sim")))
+        .unwrap_or_else(|| panic!("unknown dataset {name}"));
+    generate(&SynthSpec::from_table(row, scale, topics, seed)).corpus
+}
+
+/// 80/20 split + predictive perplexity of a trained model (Eq. 20).
+pub fn eval_model(model: &Model, corpus: &Csr, params: &LdaParams, seed: u64) -> f64 {
+    let split = split_tokens(corpus, 0.2, seed);
+    predictive_perplexity(model, &split, params, 20, seed)
+}
+
+/// Perplexity at every snapshot → (sim_secs, perplexity) series (Fig. 8).
+pub fn perplexity_curve(
+    result: &TrainResult,
+    split: &Split,
+    params: &LdaParams,
+    seed: u64,
+) -> Vec<(f64, f64)> {
+    result
+        .snapshots
+        .iter()
+        .map(|(t, m)| (*t, predictive_perplexity(m, split, params, 20, seed)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_algos_run_on_tiny() {
+        let c = dataset("tiny", 1, 8, 3);
+        let params = LdaParams::paper(8);
+        let o = RunOpts {
+            n_workers: 2,
+            iters: 5,
+            max_batch_iters: 8,
+            nnz_budget: 1000,
+            ..Default::default()
+        };
+        for algo in [
+            Algo::Pobp, Algo::PobpFull, Algo::Obp, Algo::BatchBp,
+            Algo::Pgs, Algo::Pfgs, Algo::Psgs, Algo::Ylda, Algo::Pvb,
+        ] {
+            let r = run_algo(algo, &c, &params, &o);
+            assert!(
+                (r.model.mass() - c.tokens()).abs() < c.tokens() * 1e-3,
+                "{} mass {} vs {}",
+                algo.name(),
+                r.model.mass(),
+                c.tokens()
+            );
+        }
+    }
+
+    #[test]
+    fn dataset_presets_resolve() {
+        let c = dataset("enron", 400, 8, 1);
+        assert!(c.docs() >= 50);
+        assert!(c.w <= 2000);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dataset")]
+    fn unknown_dataset_panics() {
+        dataset("nope", 1, 8, 1);
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in [
+            Algo::Pobp, Algo::PobpFull, Algo::Obp, Algo::BatchBp,
+            Algo::Pgs, Algo::Pfgs, Algo::Psgs, Algo::Ylda, Algo::Pvb,
+        ] {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algo::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,134 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` lowers the Layer-2 POBP sweep once per compiled shape
+//! and writes `artifacts/manifest.json`; this module parses it and picks
+//! the artifact a shard fits into (shards are padded up to the compiled
+//! (D, W) — K must match exactly since it changes the model).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled sweep shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub file: PathBuf,
+    pub d: usize,
+    pub w: usize,
+    pub k: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub block_d: usize,
+    pub block_w: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        if v.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        let mut entries = Vec::new();
+        for e in v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .context("manifest missing entries")?
+        {
+            let get = |k: &str| -> Result<usize> {
+                e.get(k).and_then(|x| x.as_usize()).with_context(|| format!("entry missing {k}"))
+            };
+            let getf = |k: &str| -> Result<f64> {
+                e.get(k).and_then(|x| x.as_f64()).with_context(|| format!("entry missing {k}"))
+            };
+            entries.push(ArtifactEntry {
+                file: dir.join(
+                    e.get("file").and_then(|f| f.as_str()).context("entry missing file")?,
+                ),
+                d: get("d")?,
+                w: get("w")?,
+                k: get("k")?,
+                alpha: getf("alpha")?,
+                beta: getf("beta")?,
+                block_d: get("block_d")?,
+                block_w: get("block_w")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Smallest compiled shape that fits a (docs, vocab) shard for topic
+    /// count `k`.
+    pub fn fit(&self, docs: usize, vocab: usize, k: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.k == k && e.d >= docs && e.w >= vocab)
+            .min_by_key(|e| e.d * e.w)
+    }
+
+    /// Exact-K entries (any padding), largest first — used to report what
+    /// is available when `fit` fails.
+    pub fn for_k(&self, k: usize) -> Vec<&ArtifactEntry> {
+        self.entries.iter().filter(|e| e.k == k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "alpha_times_k": 2.0, "beta": 0.01,
+      "entries": [
+        {"file": "a.hlo.txt", "d": 32, "w": 256, "k": 16,
+         "alpha": 0.125, "beta": 0.01, "block_d": 32, "block_w": 128},
+        {"file": "b.hlo.txt", "d": 64, "w": 512, "k": 50,
+         "alpha": 0.04, "beta": 0.01, "block_d": 32, "block_w": 128}
+      ]}"#;
+
+    #[test]
+    fn parses_and_fits() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.fit(20, 200, 16).unwrap();
+        assert_eq!(e.d, 32);
+        assert!(m.fit(100, 200, 16).is_none(), "too many docs must not fit");
+        assert!(m.fit(10, 10, 99).is_none(), "unknown K must not fit");
+        assert_eq!(m.for_k(50).len(), 1);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Manifest::parse(Path::new("."), r#"{"format":"proto","entries":[]}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), "not json").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // integration: if `make artifacts` has run, the real manifest
+        // must parse and contain the quickstart shape
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.fit(64, 512, 50).is_some());
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime: PJRT loading/execution of the AOT artifacts (L2+L1) from the
+//! Rust hot path. `artifacts` parses the manifest, `pjrt` wraps the xla
+//! crate, `xla_engine` drives online BP through the compiled sweep.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod xla_engine;
+
+pub use artifacts::Manifest;
+pub use pjrt::{SweepArgs, SweepExecutable, SweepOut};

@@ -1,0 +1,162 @@
+//! PJRT execution of the AOT-compiled Layer-2 sweep.
+//!
+//! Wraps the `xla` crate: load HLO **text** (`HloModuleProto::from_text_file`
+//! — the id-safe interchange format, see python/compile/aot.py), compile on
+//! the CPU PJRT client once, then execute from the L3 hot path with plain
+//! `f32` buffers. Python is never involved at run time.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifacts::ArtifactEntry;
+
+/// A compiled POBP sweep executable for one (D, W, K) shape.
+pub struct SweepExecutable {
+    pub entry: ArtifactEntry,
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Inputs of one sweep call, shapes per the artifact entry:
+/// x (D,W), mu (D,W,K), phi_prev (W,K), word_mask (W), topic_mask (W,K).
+pub struct SweepArgs<'a> {
+    pub x: &'a [f32],
+    pub mu: &'a [f32],
+    pub phi_prev: &'a [f32],
+    pub word_mask: &'a [f32],
+    pub topic_mask: &'a [f32],
+}
+
+/// Outputs of one sweep call: mu' (D,W,K), theta' (D,K), dphi' (W,K),
+/// r_wk (W,K).
+pub struct SweepOut {
+    pub mu: Vec<f32>,
+    pub theta: Vec<f32>,
+    pub dphi: Vec<f32>,
+    pub r_wk: Vec<f32>,
+}
+
+impl SweepExecutable {
+    /// Load + compile the artifact (expensive; do once per shape).
+    pub fn load(entry: &ArtifactEntry) -> Result<SweepExecutable> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("parse {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile sweep HLO")?;
+        Ok(SweepExecutable { entry: entry.clone(), client, exe })
+    }
+
+    /// Convenience: load the best-fitting artifact from a directory.
+    pub fn load_fitting(dir: &Path, docs: usize, vocab: usize, k: usize) -> Result<SweepExecutable> {
+        let manifest = crate::runtime::artifacts::Manifest::load(dir)?;
+        let entry = manifest.fit(docs, vocab, k).with_context(|| {
+            format!(
+                "no artifact fits shard d={docs} w={vocab} k={k}; available: {:?}",
+                manifest.entries.iter().map(|e| (e.d, e.w, e.k)).collect::<Vec<_>>()
+            )
+        })?;
+        Self::load(entry)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one sweep. Buffers must match the compiled shape exactly
+    /// (callers pad — see [`crate::runtime::xla_engine`]).
+    pub fn run(&self, args: &SweepArgs<'_>) -> Result<SweepOut> {
+        let (d, w, k) = (
+            self.entry.d as i64,
+            self.entry.w as i64,
+            self.entry.k as i64,
+        );
+        anyhow::ensure!(args.x.len() == (d * w) as usize, "x shape");
+        anyhow::ensure!(args.mu.len() == (d * w * k) as usize, "mu shape");
+        anyhow::ensure!(args.phi_prev.len() == (w * k) as usize, "phi shape");
+        anyhow::ensure!(args.word_mask.len() == w as usize, "word_mask shape");
+        anyhow::ensure!(args.topic_mask.len() == (w * k) as usize, "topic_mask shape");
+
+        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(dims)?)
+        };
+        let inputs = [
+            lit(args.x, &[d, w])?,
+            lit(args.mu, &[d, w, k])?,
+            lit(args.phi_prev, &[w, k])?,
+            lit(args.word_mask, &[w])?,
+            lit(args.topic_mask, &[w, k])?,
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 4, "expected 4 outputs, got {}", outs.len());
+        Ok(SweepOut {
+            mu: outs[0].to_vec::<f32>()?,
+            theta: outs[1].to_vec::<f32>()?,
+            dphi: outs[2].to_vec::<f32>()?,
+            r_wk: outs[3].to_vec::<f32>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// End-to-end smoke: load the CI-shape artifact and run one sweep.
+    /// Skipped (not failed) when artifacts have not been built.
+    #[test]
+    fn executes_ci_artifact() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.fit(32, 256, 16).expect("ci shape present");
+        let exe = SweepExecutable::load(e).unwrap();
+        let (d, w, k) = (e.d, e.w, e.k);
+
+        // uniform messages over 1-count x on the first 8 words
+        let mut x = vec![0f32; d * w];
+        for dd in 0..d {
+            for ww in 0..8 {
+                x[dd * w + ww] = 1.0;
+            }
+        }
+        let mu = vec![1.0 / k as f32; d * w * k];
+        let phi_prev = vec![0f32; w * k];
+        let ones_w = vec![1f32; w];
+        let ones_wk = vec![1f32; w * k];
+        let out = exe
+            .run(&SweepArgs {
+                x: &x,
+                mu: &mu,
+                phi_prev: &phi_prev,
+                word_mask: &ones_w,
+                topic_mask: &ones_wk,
+            })
+            .unwrap();
+
+        // mass conservation: theta and dphi sum to token count
+        let tokens: f32 = x.iter().sum();
+        let th: f32 = out.theta.iter().sum();
+        let dp: f32 = out.dphi.iter().sum();
+        assert!((th - tokens).abs() < tokens * 1e-4, "theta {th} vs {tokens}");
+        assert!((dp - tokens).abs() < tokens * 1e-4, "dphi {dp} vs {tokens}");
+        // messages on active entries stay normalized
+        for dd in 0..d {
+            let row = &out.mu[(dd * w) * k..(dd * w + 1) * k];
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+}

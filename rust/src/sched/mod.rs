@@ -1,0 +1,6 @@
+//! Dynamic scheduling: residual-driven power word/topic selection — the
+//! communication-efficient heart of the paper (§3.1).
+
+pub mod power;
+
+pub use power::{select_power, PowerParams, PowerSet};

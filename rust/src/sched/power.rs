@@ -1,0 +1,191 @@
+//! Two-step power word / power topic selection (§3.1, Figs. 2–3).
+//!
+//! Given the synchronized residual matrix r_w(k) (row-major `(W, K)`) and
+//! its word marginal r_w, select:
+//!
+//!   1. the `λ_W·W` words with largest total residual (*power words*),
+//!   2. for each power word, the `λ_K·K` topics with largest residual
+//!      (*power topics*),
+//!
+//! both with a partial sort (util::partial_sort). The selection is the
+//! synchronization *and* computation schedule for the next iteration: only
+//! the selected (word, topic) pairs are updated and allreduced.
+
+use crate::util::partial_sort::{top_k_desc, top_k_desc_strided};
+
+/// A power selection: the dynamic schedule for one iteration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PowerSet {
+    /// selected word ids, residual-descending
+    pub words: Vec<u32>,
+    /// topics per selected word: `topics[i]` belongs to `words[i]`,
+    /// each residual-descending
+    pub topics: Vec<Vec<u32>>,
+}
+
+impl PowerSet {
+    /// Number of (word, topic) pairs selected — the per-processor payload
+    /// element count of Eq. (6).
+    pub fn pairs(&self) -> usize {
+        self.topics.iter().map(|t| t.len()).sum()
+    }
+
+    /// Flat row-major indices (w·K + k) of the selected pairs, in
+    /// selection order. `k_total` is K.
+    pub fn flat_indices(&self, k_total: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.pairs());
+        for (wi, &w) in self.words.iter().enumerate() {
+            for &k in &self.topics[wi] {
+                out.push(w * k_total as u32 + k);
+            }
+        }
+        out
+    }
+
+    /// Bytes per processor to synchronize one f32 matrix restricted to
+    /// this selection (the paper syncs both φ̂ and r, so callers double it).
+    pub fn payload_bytes(&self) -> usize {
+        4 * self.pairs()
+    }
+
+    /// Selection of *everything* (t = 1 full sync, Fig. 4 line 9).
+    pub fn full(w: usize, k: usize) -> PowerSet {
+        PowerSet {
+            words: (0..w as u32).collect(),
+            topics: (0..w).map(|_| (0..k as u32).collect()).collect(),
+        }
+    }
+}
+
+/// Ratios λ_W, λ_K of §3.1. `lambda_k_times_k` follows the paper's
+/// practical parameterization: "each word may not be allocated to many
+/// topics, and thus λ_K·K is often a fixed value" (§4.1, default 50).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerParams {
+    pub lambda_w: f64,
+    /// absolute number of power topics per power word (λ_K·K)
+    pub lambda_k_times_k: usize,
+}
+
+impl PowerParams {
+    /// The paper's recommended setting: λ_W = 0.1, λ_K·K = 50 (§4.1).
+    pub fn paper_default() -> PowerParams {
+        PowerParams { lambda_w: 0.1, lambda_k_times_k: 50 }
+    }
+
+    /// Disable selection: scan everything (reduces POBP to plain parallel
+    /// OBP; used by ablations).
+    pub fn full() -> PowerParams {
+        PowerParams { lambda_w: 1.0, lambda_k_times_k: usize::MAX }
+    }
+
+    pub fn words_of(&self, w: usize) -> usize {
+        ((self.lambda_w * w as f64).ceil() as usize).clamp(1, w)
+    }
+
+    pub fn topics_of(&self, k: usize) -> usize {
+        self.lambda_k_times_k.clamp(1, k)
+    }
+}
+
+/// Two-step selection from the synchronized residual matrix
+/// (`r_wk`: row-major `(W, K)`).
+pub fn select_power(r_wk: &[f32], w: usize, k: usize, params: &PowerParams) -> PowerSet {
+    debug_assert_eq!(r_wk.len(), w * k);
+    // Step 1: word marginals r_w = sum_k r_w(k)  (Eq. 10)
+    let r_w: Vec<f32> = (0..w)
+        .map(|wi| r_wk[wi * k..(wi + 1) * k].iter().sum())
+        .collect();
+    let words = top_k_desc(&r_w, params.words_of(w));
+    // Step 2: per selected word, top topics (Eq. 9 sorted along K)
+    let kk = params.topics_of(k);
+    let topics = words
+        .iter()
+        .map(|&wi| top_k_desc_strided(r_wk, wi as usize * k, 1, k, kk))
+        .collect();
+    PowerSet { words, topics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    /// The paper's Fig. 2 worked example: K = 4, W = 6, λ_K = λ_W = 0.5.
+    #[test]
+    fn fig2_worked_example_shape() {
+        let (w, k) = (6, 4);
+        let mut rng = Rng::new(0);
+        let r: Vec<f32> = (0..w * k).map(|_| rng.f32()).collect();
+        let params = PowerParams { lambda_w: 0.5, lambda_k_times_k: 2 };
+        let ps = select_power(&r, w, k, &params);
+        assert_eq!(ps.words.len(), 3); // 0.5 * 6
+        assert!(ps.topics.iter().all(|t| t.len() == 2)); // 0.5 * 4
+        assert_eq!(ps.pairs(), 6);
+        assert_eq!(ps.payload_bytes(), 24);
+    }
+
+    #[test]
+    fn selects_highest_residual_words_and_topics() {
+        let (w, k) = (4, 3);
+        let mut r = vec![0f32; w * k];
+        // word 2 is hot, topics 2 > 0 > 1 within it; word 0 mildly warm
+        r[2 * k + 2] = 10.0;
+        r[2 * k] = 5.0;
+        r[1] = 1.0;
+        let ps = select_power(&r, w, k, &PowerParams { lambda_w: 0.5, lambda_k_times_k: 2 });
+        assert_eq!(ps.words, vec![2, 0]);
+        assert_eq!(ps.topics[0], vec![2, 0]);
+        assert_eq!(ps.topics[1], vec![1, 0]);
+    }
+
+    #[test]
+    fn full_selection_covers_matrix() {
+        let ps = PowerSet::full(5, 3);
+        assert_eq!(ps.pairs(), 15);
+        let flat = ps.flat_indices(3);
+        assert_eq!(flat.len(), 15);
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..15u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn flat_indices_row_major() {
+        let ps = PowerSet { words: vec![3, 1], topics: vec![vec![0, 2], vec![1]] };
+        assert_eq!(ps.flat_indices(4), vec![12, 14, 5]);
+    }
+
+    #[test]
+    fn paper_default_params() {
+        let p = PowerParams::paper_default();
+        assert_eq!(p.words_of(7000), 700);
+        assert_eq!(p.topics_of(2000), 50);
+        assert_eq!(p.topics_of(30), 30); // clamped to K
+        assert_eq!(PowerParams::full().words_of(7000), 7000);
+    }
+
+    #[test]
+    fn dynamic_scheduling_eventually_selects_everything() {
+        // Fig. 3 invariant: as residuals of selected elements decay, every
+        // element is eventually selected ("no information gets lost").
+        check("power selection coverage", 20, |rng| {
+            let (w, k) = (12, 6);
+            let mut r: Vec<f32> = (0..w * k).map(|_| rng.f32() + 0.01).collect();
+            let params = PowerParams { lambda_w: 0.25, lambda_k_times_k: 2 };
+            let mut seen = vec![false; w * k];
+            for _ in 0..200 {
+                let ps = select_power(&r, w, k, &params);
+                for &ix in &ps.flat_indices(k) {
+                    seen[ix as usize] = true;
+                    r[ix as usize] *= 0.2; // message passing shrinks residual
+                }
+                if seen.iter().all(|&s| s) {
+                    return;
+                }
+            }
+            panic!("some elements never selected");
+        });
+    }
+}

@@ -1,0 +1,279 @@
+//! Disk-backed topic–word matrix (§2.1, §4.5): "we may also store the
+//! entire matrix in hard disk and load the partial matrix in memory for
+//! computation" — the memory extension that lets OBP/POBP handle K·W far
+//! beyond RAM.
+//!
+//! `PhiStore` is a row-banked f32 matrix: rows (words) are grouped into
+//! fixed-size bands; bands are materialized in memory on access, spilled
+//! to a backing file under LRU pressure, and written back when dirty.
+//! The POBP access pattern is ideal for it: one iteration touches only
+//! the power words' rows, so the working set is λ_W·W bands.
+
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Rows per band. Bands are the spill granularity.
+const BAND_ROWS: usize = 64;
+
+struct Band {
+    /// first row of the band
+    base: usize,
+    data: Vec<f32>,
+    dirty: bool,
+}
+
+/// A W×K f32 matrix with at most `max_resident` bands in memory; the
+/// rest live in a backing file.
+pub struct PhiStore {
+    pub w: usize,
+    pub k: usize,
+    path: PathBuf,
+    file: File,
+    /// band index -> resident slot (usize::MAX = on disk)
+    slot_of: Vec<usize>,
+    resident: Vec<Band>,
+    lru: VecDeque<usize>, // band indices, most-recent at back
+    max_resident: usize,
+    /// spill/load counters (observability + tests)
+    pub loads: u64,
+    pub spills: u64,
+}
+
+impl PhiStore {
+    /// Create a zeroed store backed by `path`. `max_resident_bytes`
+    /// bounds the in-memory footprint (min one band).
+    pub fn create(path: &Path, w: usize, k: usize, max_resident_bytes: usize) -> Result<PhiStore> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        file.set_len((w * k * 4) as u64)?;
+        let bands = w.div_ceil(BAND_ROWS);
+        let band_bytes = BAND_ROWS * k * 4;
+        let max_resident = (max_resident_bytes / band_bytes).max(1);
+        Ok(PhiStore {
+            w,
+            k,
+            path: path.to_path_buf(),
+            file,
+            slot_of: vec![usize::MAX; bands],
+            resident: Vec::new(),
+            lru: VecDeque::new(),
+            max_resident,
+            loads: 0,
+            spills: 0,
+        })
+    }
+
+    pub fn backing_path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn resident_bands(&self) -> usize {
+        self.resident.len()
+    }
+
+    fn band_rows(&self, band: usize) -> (usize, usize) {
+        let lo = band * BAND_ROWS;
+        (lo, (lo + BAND_ROWS).min(self.w))
+    }
+
+    fn ensure_resident(&mut self, band: usize) -> Result<usize> {
+        if self.slot_of[band] != usize::MAX {
+            // refresh LRU position
+            if let Some(pos) = self.lru.iter().position(|&b| b == band) {
+                self.lru.remove(pos);
+            }
+            self.lru.push_back(band);
+            return Ok(self.slot_of[band]);
+        }
+        // evict if at capacity
+        while self.resident.len() >= self.max_resident {
+            let victim = self.lru.pop_front().expect("lru empty at capacity");
+            let slot = self.slot_of[victim];
+            if self.resident[slot].dirty {
+                self.write_band(victim, slot)?;
+                self.spills += 1;
+            }
+            // move the last resident band into the victim's slot
+            let last = self.resident.len() - 1;
+            self.resident.swap(slot, last);
+            let moved = self.resident[slot].base / BAND_ROWS;
+            if slot != last {
+                self.slot_of[moved] = slot;
+            }
+            self.resident.pop();
+            self.slot_of[victim] = usize::MAX;
+        }
+        // load
+        let (lo, hi) = self.band_rows(band);
+        let mut data = vec![0f32; (hi - lo) * self.k];
+        self.file.seek(SeekFrom::Start((lo * self.k * 4) as u64))?;
+        let mut buf = vec![0u8; data.len() * 4];
+        self.file.read_exact(&mut buf)?;
+        for (v, b) in data.iter_mut().zip(buf.chunks_exact(4)) {
+            *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+        self.loads += 1;
+        let slot = self.resident.len();
+        self.resident.push(Band { base: lo, data, dirty: false });
+        self.slot_of[band] = slot;
+        self.lru.push_back(band);
+        Ok(slot)
+    }
+
+    fn write_band(&mut self, band: usize, slot: usize) -> Result<()> {
+        let (lo, _) = self.band_rows(band);
+        let data = &self.resident[slot].data;
+        let mut buf = Vec::with_capacity(data.len() * 4);
+        for &v in data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.file.seek(SeekFrom::Start((lo * self.k * 4) as u64))?;
+        self.file.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Read row `w` into `out` (len K).
+    pub fn read_row(&mut self, w: usize, out: &mut [f32]) -> Result<()> {
+        assert!(w < self.w && out.len() == self.k);
+        let band = w / BAND_ROWS;
+        let slot = self.ensure_resident(band)?;
+        let b = &self.resident[slot];
+        let off = (w - b.base) * self.k;
+        out.copy_from_slice(&b.data[off..off + self.k]);
+        Ok(())
+    }
+
+    /// Add `delta` (len K) into row `w` — the Δφ̂ accumulation of Eq. 11.
+    pub fn add_row(&mut self, w: usize, delta: &[f32]) -> Result<()> {
+        assert!(w < self.w && delta.len() == self.k);
+        let band = w / BAND_ROWS;
+        let slot = self.ensure_resident(band)?;
+        let b = &mut self.resident[slot];
+        let off = (w - b.base) * self.k;
+        for (x, &d) in b.data[off..off + self.k].iter_mut().zip(delta) {
+            *x += d;
+        }
+        b.dirty = true;
+        Ok(())
+    }
+
+    /// Flush all dirty bands to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        for i in 0..self.resident.len() {
+            if self.resident[i].dirty {
+                let band = self.resident[i].base / BAND_ROWS;
+                self.write_band(band, i)?;
+                self.resident[i].dirty = false;
+            }
+        }
+        self.file.flush()?;
+        Ok(())
+    }
+
+    /// Materialize the full matrix (for evaluation / export).
+    pub fn to_dense(&mut self) -> Result<Vec<f32>> {
+        self.flush()?;
+        let mut out = vec![0u8; self.w * self.k * 4];
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.read_exact(&mut out)?;
+        Ok(out
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pobp_phistore_{name}.bin"))
+    }
+
+    #[test]
+    fn roundtrip_within_memory() {
+        let path = tmp("mem");
+        let mut s = PhiStore::create(&path, 100, 8, usize::MAX).unwrap();
+        s.add_row(3, &[1.0; 8]).unwrap();
+        s.add_row(3, &[0.5; 8]).unwrap();
+        let mut row = [0f32; 8];
+        s.read_row(3, &mut row).unwrap();
+        assert_eq!(row, [1.5; 8]);
+        s.read_row(99, &mut row).unwrap();
+        assert_eq!(row, [0.0; 8]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spills_and_reloads_under_pressure() {
+        let path = tmp("spill");
+        // capacity: exactly one band resident
+        let k = 4;
+        let one_band = BAND_ROWS * k * 4;
+        let mut s = PhiStore::create(&path, BAND_ROWS * 4, k, one_band).unwrap();
+        // touch all four bands with distinct values
+        for band in 0..4 {
+            let w = band * BAND_ROWS + 1;
+            s.add_row(w, &[band as f32 + 1.0; 4]).unwrap();
+        }
+        assert!(s.spills >= 3, "expected spills, got {}", s.spills);
+        assert_eq!(s.resident_bands(), 1);
+        // read everything back correctly through reloads
+        let mut row = [0f32; 4];
+        for band in 0..4 {
+            let w = band * BAND_ROWS + 1;
+            s.read_row(w, &mut row).unwrap();
+            assert_eq!(row, [band as f32 + 1.0; 4], "band {band}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dense_export_matches_random_updates() {
+        let path = tmp("dense");
+        let (w, k) = (200usize, 6usize);
+        let mut s = PhiStore::create(&path, w, k, 2 * BAND_ROWS * k * 4).unwrap();
+        let mut shadow = vec![0f32; w * k];
+        let mut rng = Rng::new(8);
+        for _ in 0..500 {
+            let wi = rng.below(w);
+            let delta: Vec<f32> = (0..k).map(|_| rng.f32()).collect();
+            s.add_row(wi, &delta).unwrap();
+            for (t, &d) in delta.iter().enumerate() {
+                shadow[wi * k + t] += d;
+            }
+        }
+        let dense = s.to_dense().unwrap();
+        for (i, (&a, &b)) in dense.iter().zip(&shadow).enumerate() {
+            assert!((a - b).abs() < 1e-5, "mismatch at {i}: {a} vs {b}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flush_persists_across_reopen() {
+        let path = tmp("reopen");
+        {
+            let mut s = PhiStore::create(&path, 80, 4, usize::MAX).unwrap();
+            s.add_row(70, &[7.0; 4]).unwrap();
+            s.flush().unwrap();
+        }
+        // re-open the raw file and check bytes directly
+        let bytes = std::fs::read(&path).unwrap();
+        let off = 70 * 4 * 4;
+        let v = f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
+        assert_eq!(v, 7.0);
+        std::fs::remove_file(&path).ok();
+    }
+}

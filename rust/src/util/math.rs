@@ -1,0 +1,90 @@
+//! Special functions and small numeric helpers used by the VB engine and
+//! the evaluation code.
+
+/// Digamma (psi) function, Bernardo's algorithm AS 103.
+/// Accurate to ~1e-12 for x > 0; used by variational Bayes (Blei 2003).
+pub fn digamma(mut x: f64) -> f64 {
+    debug_assert!(x > 0.0, "digamma domain: x > 0, got {x}");
+    let mut result = 0.0;
+    // recurrence to push x high enough that the 4-term asymptotic series
+    // is accurate to ~1e-12
+    while x < 10.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    result += x.ln() - 0.5 * inv
+        - inv2
+            * (1.0 / 12.0
+                - inv2
+                    * (1.0 / 120.0
+                        - inv2 * (1.0 / 252.0 - inv2 * (1.0 / 240.0))));
+    result
+}
+
+/// log-sum-exp over a slice (stable).
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// In-place L1 normalization of a non-negative f32 slice; returns the sum.
+/// A zero vector becomes uniform.
+pub fn normalize_l1(xs: &mut [f32]) -> f32 {
+    let sum: f32 = xs.iter().sum();
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for x in xs.iter_mut() {
+            *x *= inv;
+        }
+    } else if !xs.is_empty() {
+        let u = 1.0 / xs.len() as f32;
+        xs.fill(u);
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digamma_known_values() {
+        // psi(1) = -gamma (Euler–Mascheroni)
+        assert!((digamma(1.0) + 0.5772156649015329).abs() < 1e-10);
+        // psi(0.5) = -gamma - 2 ln 2
+        assert!((digamma(0.5) + 1.9635100260214235).abs() < 1e-10);
+        // recurrence psi(x+1) = psi(x) + 1/x
+        for &x in &[0.1, 1.7, 42.0] {
+            assert!((digamma(x + 1.0) - digamma(x) - 1.0 / x).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lse_matches_naive() {
+        let xs = [0.1, -2.0, 3.5];
+        let naive: f64 = xs.iter().map(|x: &f64| x.exp()).sum::<f64>().ln();
+        assert!((log_sum_exp(&xs) - naive).abs() < 1e-12);
+        assert_eq!(log_sum_exp(&[]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn lse_stable_at_large_magnitudes() {
+        let xs = [1000.0, 1000.0];
+        assert!((log_sum_exp(&xs) - (1000.0 + 2f64.ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalize_l1_cases() {
+        let mut xs = [2.0f32, 6.0];
+        assert_eq!(normalize_l1(&mut xs), 8.0);
+        assert_eq!(xs, [0.25, 0.75]);
+        let mut zs = [0.0f32, 0.0, 0.0, 0.0];
+        normalize_l1(&mut zs);
+        assert_eq!(zs, [0.25; 4]);
+    }
+}

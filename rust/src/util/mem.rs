@@ -1,0 +1,109 @@
+//! Memory accounting: process RSS (Linux) + analytic per-processor model
+//! bytes (Table 5 of the paper).
+//!
+//! The paper reports the memory each *processor* would use on the cluster.
+//! We run N logical workers in one process, so Table 5 is regenerated from
+//! the same analytic accounting the paper's Table 2 derives — exact byte
+//! counts of the matrices each algorithm keeps resident — while `rss_bytes`
+//! provides the real, whole-process sanity check.
+
+use std::fs;
+
+/// Current resident set size of this process in bytes (0 if unavailable).
+pub fn rss_bytes() -> usize {
+    let Ok(status) = fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: usize = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Analytic per-processor resident bytes for each algorithm family
+/// (Table 2's memory column, instantiated).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemModel {
+    /// number of documents resident at once (whole corpus / N for batch,
+    /// mini-batch shard for online)
+    pub docs_resident: usize,
+    /// non-zero (doc, word) pairs resident at once
+    pub nnz_resident: usize,
+    /// tokens resident at once (Gibbs stores one topic label per token)
+    pub tokens_resident: usize,
+    pub k: usize,
+    pub w: usize,
+}
+
+impl MemModel {
+    /// POBP / OBP: per-nnz messages (K f32) + theta (D_m/N x K f32) +
+    /// global phi + residual matrix (both K x W f32) + x (nnz * 8 bytes).
+    pub fn pobp_bytes(&self) -> usize {
+        4 * self.nnz_resident * self.k          // mu
+            + 4 * self.docs_resident * self.k   // theta
+            + 2 * 4 * self.k * self.w           // phi + r
+            + 8 * self.nnz_resident // CSR (word id + count)
+    }
+
+    /// Parallel GS family: token topic labels (u32) + ndk (D/N x K u32) +
+    /// global nwk (K x W u32) + nk + tokens (doc,word) u32 pairs.
+    pub fn pgs_bytes(&self) -> usize {
+        4 * self.tokens_resident                // z labels
+            + 4 * self.docs_resident * self.k   // ndk
+            + 4 * self.k * self.w               // nwk
+            + 4 * self.k                        // nk
+            + 8 * self.tokens_resident // token stream
+    }
+
+    /// Parallel VB: gamma (D/N x K f32) + lambda (K x W f32) + expElogbeta
+    /// (K x W f32) + x (nnz * 8).
+    pub fn pvb_bytes(&self) -> usize {
+        4 * self.docs_resident * self.k
+            + 2 * 4 * self.k * self.w
+            + 8 * self.nnz_resident
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(rss_bytes() > 0);
+    }
+
+    #[test]
+    fn pobp_memory_constant_in_n() {
+        // Table 5's headline: POBP resident bytes do not depend on N
+        // because the shard size is fixed by the mini-batch, not by D/N.
+        let mk = |_n: usize| MemModel {
+            docs_resident: 1000, // mini-batch docs
+            nnz_resident: 45_000,
+            tokens_resident: 0,
+            k: 200,
+            w: 5000,
+        };
+        assert_eq!(mk(128).pobp_bytes(), mk(1024).pobp_bytes());
+    }
+
+    #[test]
+    fn pgs_memory_shrinks_with_n() {
+        let mk = |n: usize| MemModel {
+            docs_resident: 8_200_000 / n,
+            nnz_resident: 0,
+            tokens_resident: 737_869_083 / n,
+            k: 200,
+            w: 5000,
+        };
+        assert!(mk(1024).pgs_bytes() < mk(128).pgs_bytes());
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared substrates: RNG, JSON, partial sort, timing, memory accounting,
+//! special functions, and a property-test driver. These replace crates
+//! (`rand`, `serde_json`, `criterion`, `proptest`) that are unavailable in
+//! the offline build environment — see DESIGN.md §Substitutions.
+
+pub mod json;
+pub mod math;
+pub mod mem;
+pub mod partial_sort;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,120 @@
+//! Partial-sort / top-k selection (Fig. 4 lines 12–13, 27–28).
+//!
+//! The paper selects power words and power topics with a *partial sort*
+//! because the full order of the tail is irrelevant. `top_k_desc` is
+//! `O(n + k log k)`: a quickselect partition (`select_nth_unstable_by`)
+//! followed by sorting only the head. This is the coordinator's hot
+//! selection primitive, called once per (mini-batch, iteration).
+
+/// Indices of the `k` largest values of `vals`, sorted descending by value.
+/// Ties broken by lower index for determinism. `k` is clamped to `len`.
+pub fn top_k_desc(vals: &[f32], k: usize) -> Vec<u32> {
+    let n = vals.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let cmp = |&a: &u32, &b: &u32| {
+        let (va, vb) = (vals[a as usize], vals[b as usize]);
+        vb.partial_cmp(&va)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    };
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
+    idx
+}
+
+/// Like [`top_k_desc`] but over a strided slice: selects among
+/// `vals[offset + i*stride]` for `i in 0..count`. Used for per-word topic
+/// selection on the row-major `(W, K)` residual matrix without copying.
+pub fn top_k_desc_strided(
+    vals: &[f32],
+    offset: usize,
+    stride: usize,
+    count: usize,
+    k: usize,
+) -> Vec<u32> {
+    let k = k.min(count);
+    if k == 0 {
+        return Vec::new();
+    }
+    let get = |i: u32| vals[offset + i as usize * stride];
+    let mut idx: Vec<u32> = (0..count as u32).collect();
+    let cmp = |&a: &u32, &b: &u32| {
+        get(b)
+            .partial_cmp(&get(a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    };
+    if k < count {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_largest() {
+        let v = [3.0f32, 9.0, 1.0, 7.0, 5.0];
+        assert_eq!(top_k_desc(&v, 3), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn k_clamped_and_zero() {
+        let v = [1.0f32, 2.0];
+        assert_eq!(top_k_desc(&v, 10), vec![1, 0]);
+        assert!(top_k_desc(&v, 0).is_empty());
+        assert!(top_k_desc(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_index() {
+        let v = [5.0f32, 5.0, 5.0, 5.0];
+        assert_eq!(top_k_desc(&v, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn matches_full_sort_on_random_input() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..50 {
+            let n = rng.range(1, 200);
+            let v: Vec<f32> = (0..n).map(|_| rng.f32() * 100.0).collect();
+            let k = rng.below(n + 1);
+            let got = top_k_desc(&v, k);
+            let mut want: Vec<u32> = (0..n as u32).collect();
+            want.sort_by(|&a, &b| {
+                v[b as usize]
+                    .partial_cmp(&v[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            want.truncate(k);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn strided_matches_dense_row() {
+        // (W=3, K=4) row-major; select topics of word 1
+        let m = [
+            0.0f32, 1.0, 2.0, 3.0, // w0
+            9.0, 2.0, 7.0, 4.0, // w1
+            5.0, 5.0, 5.0, 5.0, // w2
+        ];
+        let got = top_k_desc_strided(&m, 4, 1, 4, 2);
+        assert_eq!(got, vec![0, 2]); // 9.0 at k=0, 7.0 at k=2
+        // column select: values of topic 2 across words -> [2,7,5]
+        let got = top_k_desc_strided(&m, 2, 4, 3, 2);
+        assert_eq!(got, vec![1, 2]);
+    }
+}

@@ -1,0 +1,67 @@
+//! Tiny property-test driver (offline substitute for `proptest`).
+//!
+//! Runs a predicate over many seeded random cases; on failure it reports
+//! the failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use pobp::util::prop::check;
+//! check("sum is commutative", 200, |rng| {
+//!     let (a, b) = (rng.f64(), rng.f64());
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+//!
+//! There is no shrinking; cases are kept small by construction instead.
+
+use crate::util::rng::Rng;
+
+/// Base seed; override with `POBP_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("POBP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `cases` seeded cases of `f`. Panics (with the failing seed) if any
+/// case panics.
+pub fn check(name: &str, cases: u64, f: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at seed {seed} \
+                 (replay: POBP_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("below stays in range", 100, |rng| {
+            let n = rng.range(1, 50);
+            assert!(rng.below(n) < n);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 3, |_| panic!("boom"));
+    }
+}

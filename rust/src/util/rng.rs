@@ -1,0 +1,249 @@
+//! Deterministic pseudo-random generation (offline substitute for `rand`).
+//!
+//! xoshiro256** seeded via splitmix64. Everything in the repo that needs
+//! randomness (synthetic corpora, message init, Gibbs sampling, property
+//! tests) goes through this type so runs are reproducible from a single
+//! `u64` seed.
+
+/// xoshiro256** PRNG (Blackman & Vigna). Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent stream (for per-worker / per-doc RNGs).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift; bias negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn discrete(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; boosts shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            return g * self.f64().max(1e-300).powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let xn = self.normal();
+            let v = 1.0 + c * xn;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * xn.powi(4)
+                || u.ln() < 0.5 * xn * xn + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) sample of dimension `dim`.
+    pub fn dirichlet_sym(&mut self, alpha: f64, dim: usize) -> Vec<f64> {
+        let mut xs: Vec<f64> = (0..dim).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = xs.iter().sum::<f64>().max(1e-300);
+        for x in &mut xs {
+            *x /= sum;
+        }
+        xs
+    }
+
+    /// Poisson(lambda) via inversion (small lambda) or normal approx.
+    pub fn poisson(&mut self, lambda: f64) -> usize {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0usize;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            (lambda + lambda.sqrt() * self.normal()).round().max(0.0) as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(3);
+        for &a in &[0.05, 0.5, 5.0] {
+            let d = r.dirichlet_sym(a, 16);
+            assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(4);
+        for &shape in &[0.3, 1.0, 4.5] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(1.0),
+                "shape {shape} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::new(5);
+        for &lam in &[3.0, 80.0] {
+            let n = 5_000;
+            let mean: f64 =
+                (0..n).map(|_| r.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!((mean - lam).abs() < 0.1 * lam, "lam {lam} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn discrete_prefers_heavy_weight() {
+        let mut r = Rng::new(6);
+        let w = [0.05, 0.05, 0.9];
+        let hits = (0..5_000).filter(|_| r.discrete(&w) == 2).count();
+        assert!(hits > 4_000);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(7);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

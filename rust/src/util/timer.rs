@@ -1,0 +1,83 @@
+//! Wall-clock timing helpers shared by the engines, the bench harness and
+//! the metrics layer.
+
+use std::time::Instant;
+
+/// A simple stopwatch accumulating named segments.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn total_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap` (or construction).
+    pub fn lap_secs(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Human format for seconds: "123ms", "4.56s", "2m03s".
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1.0 {
+        format!("{:.0}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{}m{:02.0}s", (s / 60.0) as u64, s % 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value_and_duration() {
+        let (v, dt) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut sw = Stopwatch::new();
+        let a = sw.lap_secs();
+        let b = sw.lap_secs();
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(sw.total_secs() >= a);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_secs(0.1234), "123ms");
+        assert_eq!(fmt_secs(4.561), "4.56s");
+        assert_eq!(fmt_secs(123.0), "2m03s");
+    }
+}

@@ -1,0 +1,109 @@
+//! Golden-vector test: the native Rust sweep must reproduce the pure-jnp
+//! oracle (`python/compile/kernels/ref.py`) on a pinned case exported by
+//! `python -m tests.export_golden`. This pins the cross-language contract
+//! without needing Python or artifacts at `cargo test` time.
+
+use std::path::PathBuf;
+
+use pobp::corpus::Csr;
+use pobp::engine::bp::{Selection, ShardBp};
+use pobp::engine::traits::LdaParams;
+use pobp::util::json::Json;
+use pobp::util::rng::Rng;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("python/tests/golden_sweep.json")
+}
+
+fn floats(j: &Json, key: &str) -> Vec<f32> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("golden missing {key}"))
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+#[test]
+fn native_sweep_matches_python_oracle() {
+    let text = std::fs::read_to_string(golden_path())
+        .expect("golden_sweep.json (python -m tests.export_golden)");
+    let g = Json::parse(&text).unwrap();
+    let d = g.get("d").unwrap().as_usize().unwrap();
+    let w = g.get("w").unwrap().as_usize().unwrap();
+    let k = g.get("k").unwrap().as_usize().unwrap();
+    let params = LdaParams {
+        k,
+        alpha: g.get("alpha").unwrap().as_f64().unwrap() as f32,
+        beta: g.get("beta").unwrap().as_f64().unwrap() as f32,
+    };
+    let x = floats(&g, "x");
+    let mu_in = floats(&g, "mu");
+    let phi_prev = floats(&g, "phi_prev");
+    let want_mu = floats(&g, "mu_out");
+    let want_theta = floats(&g, "theta_out");
+    let want_dphi = floats(&g, "dphi_out");
+    let want_r = floats(&g, "r_wk_out");
+
+    // build the sparse shard from the dense golden inputs
+    let docs: Vec<Vec<(u32, f32)>> = (0..d)
+        .map(|dd| {
+            (0..w)
+                .filter(|&ww| x[dd * w + ww] > 0.0)
+                .map(|ww| (ww as u32, x[dd * w + ww]))
+                .collect()
+        })
+        .collect();
+    let data = Csr::from_docs(w, &docs);
+    let mut rng = Rng::new(0);
+    let mut shard = ShardBp::init(data, k, &mut rng);
+    // overwrite the random messages with the golden ones (active entries)
+    for dd in 0..shard.data.docs() {
+        for idx in shard.data.row_range(dd) {
+            let wi = shard.data.col[idx] as usize;
+            shard.mu[idx * k..(idx + 1) * k]
+                .copy_from_slice(&mu_in[(dd * w + wi) * k..(dd * w + wi + 1) * k]);
+        }
+    }
+    shard.recompute_stats();
+
+    // N=1 global phi = phi_prev + own gradient (same as ref.sweep_ref)
+    let mut phi = phi_prev.clone();
+    for (p, &gr) in phi.iter_mut().zip(&shard.dphi) {
+        *p += gr;
+    }
+    let mut phi_tot = vec![0f32; k];
+    for row in phi.chunks_exact(k) {
+        for (t, &v) in row.iter().enumerate() {
+            phi_tot[t] += v;
+        }
+    }
+    let sel = Selection::full(w);
+    shard.clear_selected_residuals(&sel);
+    shard.sweep(&phi, &phi_tot, &sel, &params, true);
+
+    let tol = 5e-4f32;
+    // messages on active entries
+    for dd in 0..d {
+        for idx in shard.data.row_range(dd) {
+            let wi = shard.data.col[idx] as usize;
+            for t in 0..k {
+                let got = shard.mu[idx * k + t];
+                let want = want_mu[(dd * w + wi) * k + t];
+                assert!(
+                    (got - want).abs() <= tol * want.abs().max(1.0),
+                    "mu[{dd},{wi},{t}] {got} vs {want}"
+                );
+            }
+        }
+    }
+    for (i, (&got, &want)) in shard.theta.iter().zip(&want_theta).enumerate() {
+        assert!((got - want).abs() <= tol * want.abs().max(1.0), "theta[{i}] {got} vs {want}");
+    }
+    for (i, (&got, &want)) in shard.dphi.iter().zip(&want_dphi).enumerate() {
+        assert!((got - want).abs() <= tol * want.abs().max(1.0), "dphi[{i}] {got} vs {want}");
+    }
+    for (i, (&got, &want)) in shard.r.iter().zip(&want_r).enumerate() {
+        assert!((got - want).abs() <= 1e-3 * want.abs().max(1.0), "r[{i}] {got} vs {want}");
+    }
+}

@@ -1,0 +1,210 @@
+//! System-level integration tests: whole-pipeline invariants that cross
+//! module boundaries (corpus I/O → engines → evaluation → ledger), plus
+//! failure-injection cases.
+
+use pobp::comm::NetModel;
+use pobp::coordinator::{fit, PobpConfig};
+use pobp::corpus::{bow, split_tokens, Csr, MiniBatchStream};
+use pobp::engine::traits::{LdaParams, Model};
+use pobp::eval::perplexity::{heldin_perplexity, predictive_perplexity};
+use pobp::repro::{dataset, run_algo, Algo, RunOpts};
+use pobp::sched::PowerParams;
+use pobp::util::prop::check;
+
+fn tiny() -> Csr {
+    dataset("tiny", 1, 8, 99)
+}
+
+/// Corpus → disk → corpus → train → eval, end to end.
+#[test]
+fn disk_roundtrip_then_train() {
+    let c = tiny();
+    let dir = std::env::temp_dir().join("pobp_system_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("docword.tiny.txt");
+    let f = std::fs::File::create(&path).unwrap();
+    bow::write_uci(&c, std::io::BufWriter::new(f)).unwrap();
+    let c2 = bow::read_uci(&path).unwrap();
+    assert_eq!(c2.nnz(), c.nnz());
+
+    let params = LdaParams::paper(8);
+    let r = fit(&c2, &params, &PobpConfig { n_workers: 2, ..Default::default() });
+    let p = heldin_perplexity(&r.model, &c2, &params);
+    assert!(p < c.w as f64 * 0.5, "model did not learn: {p}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Model save/load roundtrip preserves evaluation exactly.
+#[test]
+fn model_serialization_roundtrip() {
+    let c = tiny();
+    let params = LdaParams::paper(8);
+    let r = run_algo(Algo::Psgs, &c, &params, &RunOpts { iters: 10, ..Default::default() });
+    let path = std::env::temp_dir().join("pobp_model_roundtrip.bin");
+    r.model.save(&path).unwrap();
+    let loaded = Model::load(&path).unwrap();
+    assert_eq!(loaded.phi_wk, r.model.phi_wk);
+    assert_eq!((loaded.w, loaded.k), (r.model.w, r.model.k));
+    std::fs::remove_file(&path).ok();
+}
+
+/// Corrupt model files are rejected, not mis-read.
+#[test]
+fn corrupt_model_rejected() {
+    let path = std::env::temp_dir().join("pobp_corrupt.bin");
+    std::fs::write(&path, b"definitely not a model").unwrap();
+    assert!(Model::load(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+/// The ledger's cost decomposition is conserved across reruns and scales
+/// sanely with N (communication grows with N at fixed payload).
+#[test]
+fn ledger_cost_decomposition_sane() {
+    let c = dataset("enron", 400, 16, 7);
+    let params = LdaParams::paper(16);
+    let small = run_algo(Algo::Pgs, &c, &params, &RunOpts { n_workers: 2, iters: 5, ..Default::default() });
+    let large = run_algo(Algo::Pgs, &c, &params, &RunOpts { n_workers: 32, iters: 5, ..Default::default() });
+    assert!(large.ledger.comm_secs > small.ledger.comm_secs);
+    assert_eq!(small.ledger.sync_count(), large.ledger.sync_count());
+    // same per-processor payload, more processors => more wire bytes
+    assert!(large.ledger.wire_bytes > small.ledger.wire_bytes);
+}
+
+/// POBP with degenerate corpora must not panic or lose mass (failure
+/// injection: pathological shard shapes, empty workers, empty corpus).
+#[test]
+fn degenerate_corpora_survive() {
+    let params = LdaParams::paper(4);
+    // single doc, more workers than docs
+    let c = Csr::from_docs(10, &[vec![(0, 3.0), (9, 1.0)]]);
+    let r = fit(&c, &params, &PobpConfig { n_workers: 8, ..Default::default() });
+    assert!((r.model.mass() - 4.0).abs() < 1e-3);
+    // corpus with empty documents interleaved
+    let c = Csr::from_docs(5, &[vec![], vec![(1, 2.0)], vec![], vec![(4, 1.0)], vec![]]);
+    let r = fit(&c, &params, &PobpConfig { n_workers: 3, ..Default::default() });
+    assert!((r.model.mass() - 3.0).abs() < 1e-3);
+    // empty corpus
+    let c = Csr::from_docs(5, &[]);
+    let r = fit(&c, &params, &PobpConfig { n_workers: 2, ..Default::default() });
+    assert_eq!(r.model.mass(), 0.0);
+}
+
+/// Mini-batch streaming composes with training: any batch budget gives
+/// the same token mass.
+#[test]
+fn minibatch_count_does_not_change_mass() {
+    let c = tiny();
+    let params = LdaParams::paper(8);
+    for budget in [200usize, 1000, usize::MAX] {
+        let m = MiniBatchStream::count(&c, budget);
+        let r = fit(&c, &params, &PobpConfig {
+            n_workers: 2,
+            nnz_budget: budget,
+            ..Default::default()
+        });
+        assert!(
+            (r.model.mass() - c.tokens()).abs() < c.tokens() * 1e-3,
+            "budget {budget} ({m} batches)"
+        );
+    }
+}
+
+/// Determinism: identical seeds → identical models (across the whole
+/// pipeline, including the threaded cluster).
+#[test]
+fn full_run_deterministic() {
+    let c = tiny();
+    let params = LdaParams::paper(8);
+    let cfg = PobpConfig { n_workers: 4, ..Default::default() };
+    let a = fit(&c, &params, &cfg);
+    let b = fit(&c, &params, &cfg);
+    assert_eq!(a.model.phi_wk, b.model.phi_wk);
+    assert_eq!(a.history.len(), b.history.len());
+}
+
+/// Property: across random corpora, POBP's synchronized payload is never
+/// larger than the full-matrix payload, and both conserve token mass.
+#[test]
+fn prop_payload_bounded_by_full() {
+    check("payload bounded", 10, |rng| {
+        let d = rng.range(10, 40);
+        let w = rng.range(20, 60);
+        let docs: Vec<Vec<(u32, f32)>> = (0..d)
+            .map(|_| {
+                (0..rng.range(2, 10))
+                    .map(|_| (rng.below(w) as u32, rng.range(1, 4) as f32))
+                    .collect()
+            })
+            .collect();
+        let c = Csr::from_docs(w, &docs);
+        let params = LdaParams::paper(6);
+        let base = PobpConfig {
+            n_workers: 2,
+            max_iters: 8,
+            converge_thresh: 0.0,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let full = fit(&c, &params, &PobpConfig { power: PowerParams::full(), ..base.clone() });
+        let pow = fit(&c, &params, &PobpConfig {
+            power: PowerParams { lambda_w: 0.3, lambda_k_times_k: 3 },
+            ..base
+        });
+        assert!(pow.ledger.payload_bytes_total() <= full.ledger.payload_bytes_total());
+        assert!((pow.model.mass() - c.tokens()).abs() < c.tokens() * 1e-3);
+    });
+}
+
+/// The network model's monotonicity carries through whole runs: a slower
+/// network makes the *simulated* time larger, never the model different.
+#[test]
+fn network_speed_affects_time_not_result() {
+    let c = tiny();
+    let params = LdaParams::paper(8);
+    let mk = |net| PobpConfig { n_workers: 4, net, ..Default::default() };
+    let fast = fit(&c, &params, &mk(NetModel::infiniband_20gbps()));
+    let slow = fit(&c, &params, &mk(NetModel::gige()));
+    assert_eq!(fast.model.phi_wk, slow.model.phi_wk);
+    assert!(slow.ledger.comm_secs > fast.ledger.comm_secs);
+}
+
+/// A model trained on one topic structure evaluates better on its own
+/// corpus than on a differently-seeded one (generalization direction).
+#[test]
+fn eval_prefers_matching_corpus() {
+    let params = LdaParams::paper(8);
+    let a = dataset("tiny", 1, 8, 5);
+    let b = {
+        let mut spec = pobp::synth::SynthSpec::tiny(1234);
+        spec.docs = 120;
+        pobp::synth::generate(&spec).corpus
+    };
+    let r = fit(&a, &params, &PobpConfig { n_workers: 2, ..Default::default() });
+    let split_a = split_tokens(&a, 0.2, 1);
+    let split_b = split_tokens(&b, 0.2, 1);
+    let p_own = predictive_perplexity(&r.model, &split_a, &params, 15, 2);
+    let p_other = predictive_perplexity(&r.model, &split_b, &params, 15, 2);
+    assert!(p_own < p_other, "own {p_own} vs other {p_other}");
+}
+
+/// Gibbs, BP and VB families agree on the quality scale: perplexities on
+/// the same split are within a factor of 2 (catches protocol or scaling
+/// bugs in any one engine).
+#[test]
+fn engines_agree_on_quality_scale() {
+    let c = dataset("tiny", 1, 8, 31);
+    let params = LdaParams::paper(8);
+    let split = split_tokens(&c, 0.2, 31);
+    let o = RunOpts { n_workers: 2, iters: 40, ..Default::default() };
+    let mut perps = Vec::new();
+    for algo in [Algo::Pobp, Algo::Psgs, Algo::Pvb] {
+        let r = run_algo(algo, &split.train, &params, &o);
+        let p = predictive_perplexity(&r.model, &split, &params, 15, 31);
+        perps.push((algo.name(), p));
+    }
+    let min = perps.iter().map(|&(_, p)| p).fold(f64::INFINITY, f64::min);
+    for (name, p) in &perps {
+        assert!(*p < 2.0 * min, "{name} perplexity {p} off-scale vs {min}");
+    }
+}
