@@ -7,6 +7,7 @@ mod common;
 
 use std::time::Instant;
 
+use pobp::comm::{reduce_chunked, reduce_sum_into, Cluster};
 use pobp::engine::bp::{Selection, ShardBp};
 use pobp::engine::fgs::FastGs;
 use pobp::engine::gibbs::{GibbsShard, PlainGs};
@@ -104,11 +105,41 @@ fn main() {
         let _ = select_power(&r, corpus.w, k, &PowerParams::paper_default());
     });
 
-    // --- leader-side allreduce of the full matrix over 8 partials ---
-    let partials: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; corpus.w * k]).collect();
-    bench("allreduce full K x W x 8 workers", 20, (corpus.w * k * 8) as f64, || {
-        let mut g = vec![0f32; corpus.w * k];
-        pobp::comm::reduce_sum_into(&mut g, &partials);
+    // --- leader-side allreduce, before/after: the pre-refactor serial
+    //     leader loop vs the chunked parallel reduction on the cluster
+    //     thread pool (comm::allreduce). Same bitwise result; the
+    //     parallel path buys leader wall-clock on multi-core hosts. ---
+    let nw = 8;
+    let cluster = Cluster::new(nw, 0);
+    let partials: Vec<Vec<f32>> = (0..nw).map(|i| vec![i as f32; corpus.w * k]).collect();
+    let parts: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
+    let mut g = vec![0f32; corpus.w * k];
+    let dense_items = (corpus.w * k * nw) as f64;
+    bench("allreduce dense serial (old leader loop)", 20, dense_items, || {
+        g.fill(0.0);
+        reduce_sum_into(&mut g, &partials);
         std::hint::black_box(&g);
+    });
+    bench("allreduce dense parallel (chunked)", 20, dense_items, || {
+        reduce_chunked(&cluster, None, &parts, &mut g);
+        std::hint::black_box(&g);
+    });
+
+    // subset variant at the paper's power-selection density: both sides
+    // reduce the same packed plan-order buffers, so the comparison
+    // isolates the chunked reduction itself
+    let idx = select_power(&r, corpus.w, k, &PowerParams::paper_default()).flat_indices(k);
+    let sub_partials: Vec<Vec<f32>> = (0..nw).map(|i| vec![i as f32; idx.len()]).collect();
+    let sub_parts: Vec<&[f32]> = sub_partials.iter().map(|p| p.as_slice()).collect();
+    let mut red = vec![0f32; idx.len()];
+    let sub_items = (idx.len() * nw) as f64;
+    bench("allreduce subset serial (packed)", 200, sub_items, || {
+        red.fill(0.0);
+        reduce_sum_into(&mut red, &sub_partials);
+        std::hint::black_box(&red);
+    });
+    bench("allreduce subset parallel (chunked)", 200, sub_items, || {
+        reduce_chunked(&cluster, None, &sub_parts, &mut red);
+        std::hint::black_box(&red);
     });
 }

@@ -1,0 +1,511 @@
+//! The parallel sparse allreduce subsystem — the leader-side realization
+//! of the paper's synchronization step (Fig. 4 lines 9–10 / 23–24,
+//! Eqs. 6, 9, 15).
+//!
+//! # Gather-buffer layout
+//!
+//! Every worker contributes two flat `f32` buffers per synchronization —
+//! one for Δφ̂ and one for r — sharing a single index order, the *plan
+//! order*:
+//!
+//! * **Dense plan** (t = 1 full sync): plan order is row-major `w·K + k`
+//!   over the whole `W × K` matrix. Workers export nothing; the
+//!   reduction borrows their Δφ̂ / r matrices in place (a real deployment
+//!   would ship the matrix verbatim, so there is no packing step to
+//!   model).
+//! * **Subset plan** (power iterations): plan order is
+//!   `PowerSet::flat_indices` order — selection order, words by
+//!   descending residual. Each worker packs its own [`GatherBuf`]
+//!   ([`ReduceSource::export_selected`]) in parallel on the cluster.
+//!
+//! The reduction itself runs *in parallel over contiguous index chunks*
+//! on the [`Cluster`] thread pool. Because every output element's
+//! accumulation chain (seed, then worker 0, worker 1, …) is independent
+//! of the chunking, the result is **bitwise identical** to the serial
+//! leader loop it replaced — [`serial_reference_step`] keeps that loop
+//! verbatim as the oracle the equivalence tests compare against.
+//!
+//! The scatter back into the replicated [`GlobalState`] accumulates the
+//! φ̂ topic totals and the residual total in **f64**: the pre-refactor
+//! coordinator updated them incrementally in f32, which drifts over the
+//! hundreds of small power-subset scatters a long run performs.
+//!
+//! Simulated communication *time* is unchanged by any of this — it comes
+//! from the byte-exact ledger and the network model's per-segment
+//! (reduce-scatter + allgather) accounting; parallelizing the reduction
+//! buys leader wall-clock, which `benches/microbench.rs` measures.
+
+use std::sync::Mutex;
+
+use crate::comm::Cluster;
+
+/// One worker's contribution to a sparse allreduce: Δφ̂ and r values at
+/// the plan's flat indices, in plan order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GatherBuf {
+    pub dphi: Vec<f32>,
+    pub r: Vec<f32>,
+}
+
+/// A worker-local source of partial matrices for the allreduce.
+/// Implemented by `engine::bp::ShardBp`; test doubles implement only
+/// [`ReduceSource::dense_parts`].
+pub trait ReduceSource {
+    /// Borrow the dense per-worker partials (Δφ̂, r), both `W·K` long,
+    /// row-major.
+    fn dense_parts(&self) -> (&[f32], &[f32]);
+
+    /// Pack the partials at `indices` (flat `w·K + k`, plan order) into a
+    /// fresh gather buffer — the worker side of the sparse allreduce.
+    fn export_selected(&self, indices: &[u32]) -> GatherBuf {
+        let (dphi, r) = self.dense_parts();
+        GatherBuf {
+            dphi: indices.iter().map(|&i| dphi[i as usize]).collect(),
+            r: indices.iter().map(|&i| r[i as usize]).collect(),
+        }
+    }
+}
+
+/// Which (word, topic) pairs a synchronization reduces.
+#[derive(Clone, Copy, Debug)]
+pub enum ReducePlan<'a> {
+    /// every pair of the `W × K` matrices, row-major
+    Dense { len: usize },
+    /// the pairs at these flat indices, in this (plan) order
+    Subset { indices: &'a [u32] },
+}
+
+impl ReducePlan<'_> {
+    /// Number of (word, topic) pairs reduced — the per-processor payload
+    /// element count of Eq. (6).
+    pub fn pairs(&self) -> usize {
+        match self {
+            ReducePlan::Dense { len } => *len,
+            ReducePlan::Subset { indices } => indices.len(),
+        }
+    }
+}
+
+/// The replicated state every processor holds after an allreduce:
+/// effective φ̂ (= φ̂_acc + Σ_n Δφ̂_n on synchronized pairs), the
+/// synchronized residual matrix, and their running totals.
+///
+/// The totals are f64-backed: dense syncs recompute them from scratch,
+/// subset syncs accumulate exact f32→f64 deltas, so the drift of the old
+/// incremental-f32 bookkeeping is gone (see `totals_drift`). The sweep
+/// kernels consume the f32 render via [`GlobalState::phi_tot`].
+#[derive(Clone, Debug)]
+pub struct GlobalState {
+    pub phi_eff: Vec<f32>,
+    pub r_global: Vec<f32>,
+    phi_tot64: Vec<f64>,
+    phi_tot32: Vec<f32>,
+    r_total: f64,
+    k: usize,
+}
+
+impl GlobalState {
+    /// Fresh per-batch state: φ_eff = φ̂_acc, no residuals yet.
+    pub fn new(phi_acc: &[f32], k: usize) -> GlobalState {
+        let mut s = GlobalState {
+            phi_eff: phi_acc.to_vec(),
+            r_global: vec![0.0; phi_acc.len()],
+            phi_tot64: vec![0.0; k],
+            phi_tot32: vec![0.0; k],
+            r_total: 0.0,
+            k,
+        };
+        s.recompute_totals();
+        s
+    }
+
+    /// Topic totals φ̂_Σ(k) as the f32 view the sweep kernels read.
+    pub fn phi_tot(&self) -> &[f32] {
+        &self.phi_tot32
+    }
+
+    /// Total synchronized residual Σ r (line 26's convergence quantity).
+    pub fn r_total(&self) -> f64 {
+        self.r_total
+    }
+
+    /// Rebuild both totals from the matrices, in f64.
+    pub fn recompute_totals(&mut self) {
+        self.phi_tot64.fill(0.0);
+        for row in self.phi_eff.chunks_exact(self.k) {
+            for (t, &v) in row.iter().enumerate() {
+                self.phi_tot64[t] += v as f64;
+            }
+        }
+        self.r_total = self.r_global.iter().map(|&v| v as f64).sum();
+        self.render_tot32();
+    }
+
+    fn render_tot32(&mut self) {
+        for (o, &v) in self.phi_tot32.iter_mut().zip(&self.phi_tot64) {
+            *o = v as f32;
+        }
+    }
+
+    /// Drift diagnostics: (max |running − recomputed| over topic totals,
+    /// |running − recomputed| residual total). Bounded by f64 rounding —
+    /// the long-run drift test pins it near zero.
+    pub fn totals_drift(&self) -> (f64, f64) {
+        let mut fresh = vec![0f64; self.k];
+        for row in self.phi_eff.chunks_exact(self.k) {
+            for (t, &v) in row.iter().enumerate() {
+                fresh[t] += v as f64;
+            }
+        }
+        let phi_drift = fresh
+            .iter()
+            .zip(&self.phi_tot64)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        let r_fresh: f64 = self.r_global.iter().map(|&v| v as f64).sum();
+        (phi_drift, (r_fresh - self.r_total).abs())
+    }
+
+    /// Apply reduced plan-order sub-vectors at `indices`: the scatter
+    /// half of a subset allreduce. Matches the pre-refactor per-element
+    /// arithmetic on `phi_eff`/`r_global` bitwise; totals move by exact
+    /// f32→f64 deltas.
+    fn scatter_subset(
+        &mut self,
+        indices: &[u32],
+        phi_acc: &[f32],
+        red_dphi: &[f32],
+        red_r: &[f32],
+    ) {
+        let k = self.k;
+        for ((&ix, &d), &r) in indices.iter().zip(red_dphi).zip(red_r) {
+            let i = ix as usize;
+            let new_phi = phi_acc[i] + d;
+            self.phi_tot64[i % k] += new_phi as f64 - self.phi_eff[i] as f64;
+            self.phi_eff[i] = new_phi;
+            self.r_total += r as f64 - self.r_global[i] as f64;
+            self.r_global[i] = r;
+        }
+        self.render_tot32();
+    }
+}
+
+/// Chunk-parallel element-wise sum on the cluster's OS threads:
+/// `out[i] = seed[i] + Σ_n parts[n][i]` (seed = 0 when `None`). Each
+/// element's accumulation chain is the same left fold the serial loop
+/// performs, so the result is bitwise independent of the chunking.
+pub fn reduce_chunked(
+    cluster: &Cluster,
+    seed: Option<&[f32]>,
+    parts: &[&[f32]],
+    out: &mut [f32],
+) {
+    debug_assert!(parts.iter().all(|p| p.len() == out.len()));
+    if let Some(s) = seed {
+        debug_assert_eq!(s.len(), out.len());
+    }
+    cluster.run_on_chunks(out, |start, chunk| {
+        match seed {
+            Some(s) => chunk.copy_from_slice(&s[start..start + chunk.len()]),
+            None => chunk.fill(0.0),
+        }
+        for p in parts {
+            for (o, &v) in chunk.iter_mut().zip(&p[start..start + chunk.len()]) {
+                *o += v;
+            }
+        }
+    });
+}
+
+/// One full synchronization: gather worker partials per `plan`, reduce
+/// them in parallel over index chunks, scatter into `state`. Returns the
+/// number of (word, topic) pairs reduced; the caller charges
+/// `2 · 4 · pairs` payload bytes (φ̂ and r) to the ledger.
+///
+/// Equivalent — bitwise, on `phi_eff`/`r_global` — to
+/// [`serial_reference_step`] on the same inputs.
+pub fn allreduce_step<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+) -> usize {
+    assert_eq!(
+        workers.len(),
+        cluster.workers(),
+        "one shard per logical worker"
+    );
+    match plan {
+        ReducePlan::Dense { len } => {
+            debug_assert_eq!(*len, state.phi_eff.len());
+            let guards: Vec<_> = workers.iter().map(|m| m.lock().unwrap()).collect();
+            let dphi_parts: Vec<&[f32]> =
+                guards.iter().map(|g| g.dense_parts().0).collect();
+            let r_parts: Vec<&[f32]> =
+                guards.iter().map(|g| g.dense_parts().1).collect();
+            reduce_chunked(cluster, Some(phi_acc), &dphi_parts, &mut state.phi_eff);
+            reduce_chunked(cluster, None, &r_parts, &mut state.r_global);
+            drop(guards);
+            state.recompute_totals();
+            *len
+        }
+        ReducePlan::Subset { indices } => {
+            // parallel gather: each worker packs its own plan-order buffer
+            let (bufs, _) =
+                cluster.run(|n| workers[n].lock().unwrap().export_selected(indices));
+            let m = indices.len();
+            let mut red_dphi = vec![0f32; m];
+            let mut red_r = vec![0f32; m];
+            let dphi_parts: Vec<&[f32]> = bufs.iter().map(|b| b.dphi.as_slice()).collect();
+            let r_parts: Vec<&[f32]> = bufs.iter().map(|b| b.r.as_slice()).collect();
+            reduce_chunked(cluster, None, &dphi_parts, &mut red_dphi);
+            reduce_chunked(cluster, None, &r_parts, &mut red_r);
+            state.scatter_subset(indices, phi_acc, &red_dphi, &red_r);
+            m
+        }
+    }
+}
+
+/// The pre-refactor serial leader reduction, kept verbatim (modulo
+/// naming) as the oracle for the equivalence tests: single-threaded,
+/// f32 incremental totals and all.
+#[derive(Clone, Debug)]
+pub struct SerialState {
+    pub phi_eff: Vec<f32>,
+    pub r_global: Vec<f32>,
+    pub phi_tot: Vec<f32>,
+    pub r_total: f64,
+}
+
+impl SerialState {
+    pub fn new(phi_acc: &[f32], k: usize) -> SerialState {
+        let mut phi_tot = vec![0f32; k];
+        for row in phi_acc.chunks_exact(k) {
+            for (t, &v) in row.iter().enumerate() {
+                phi_tot[t] += v;
+            }
+        }
+        SerialState {
+            phi_eff: phi_acc.to_vec(),
+            r_global: vec![0.0; phi_acc.len()],
+            phi_tot,
+            r_total: 0.0,
+        }
+    }
+}
+
+/// Serial reference synchronization — the old coordinator leader loop.
+pub fn serial_reference_step<S: ReduceSource + Send>(
+    plan: &ReducePlan,
+    k: usize,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    st: &mut SerialState,
+) {
+    let guards: Vec<_> = workers.iter().map(|m| m.lock().unwrap()).collect();
+    match plan {
+        ReducePlan::Dense { .. } => {
+            st.phi_eff.copy_from_slice(phi_acc);
+            st.r_global.fill(0.0);
+            for g in &guards {
+                let (dphi, r) = g.dense_parts();
+                for i in 0..st.phi_eff.len() {
+                    st.phi_eff[i] += dphi[i];
+                    st.r_global[i] += r[i];
+                }
+            }
+            st.phi_tot.fill(0.0);
+            for row in st.phi_eff.chunks_exact(k) {
+                for (t, &v) in row.iter().enumerate() {
+                    st.phi_tot[t] += v;
+                }
+            }
+            st.r_total = st.r_global.iter().map(|&v| v as f64).sum();
+        }
+        ReducePlan::Subset { indices } => {
+            for &ix in *indices {
+                let i = ix as usize;
+                let mut dphi_sum = 0f32;
+                let mut r_sum = 0f32;
+                for g in &guards {
+                    let (dphi, r) = g.dense_parts();
+                    dphi_sum += dphi[i];
+                    r_sum += r[i];
+                }
+                let new_phi = phi_acc[i] + dphi_sum;
+                st.phi_tot[i % k] += new_phi - st.phi_eff[i];
+                st.phi_eff[i] = new_phi;
+                st.r_total += r_sum as f64 - st.r_global[i] as f64;
+                st.r_global[i] = r_sum;
+            }
+        }
+    }
+}
+
+/// Element-wise serial sum of worker partial vectors into `global` — the
+/// single-threaded baseline the microbench compares [`reduce_chunked`]
+/// against (absorbed from `comm::cluster`).
+pub fn reduce_sum_into(global: &mut [f32], partials: &[Vec<f32>]) {
+    for p in partials {
+        debug_assert_eq!(p.len(), global.len());
+        for (g, &v) in global.iter_mut().zip(p) {
+            *g += v;
+        }
+    }
+}
+
+/// Sparse serial variant: sums plan-order sub-vectors into `global` at
+/// the listed flat indices (the power-subset synchronization of §3.1).
+/// Indices must be in-bounds; `partials[n][slot]` pairs with
+/// `indices[slot]`.
+pub fn reduce_sum_subset_into(
+    global: &mut [f32],
+    indices: &[u32],
+    partials: &[Vec<f32>],
+) {
+    for (slot, &ix) in indices.iter().enumerate() {
+        let mut acc = 0f32;
+        for p in partials {
+            acc += p[slot];
+        }
+        global[ix as usize] += acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Cluster;
+    use crate::util::rng::Rng;
+
+    struct VecSource {
+        dphi: Vec<f32>,
+        r: Vec<f32>,
+    }
+
+    impl ReduceSource for VecSource {
+        fn dense_parts(&self) -> (&[f32], &[f32]) {
+            (&self.dphi, &self.r)
+        }
+    }
+
+    fn random_workers(n: usize, len: usize, rng: &mut Rng) -> Vec<Mutex<VecSource>> {
+        (0..n)
+            .map(|_| {
+                Mutex::new(VecSource {
+                    dphi: (0..len).map(|_| rng.f32() * 2.0 - 0.5).collect(),
+                    r: (0..len).map(|_| rng.f32()).collect(),
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reduce_sum_matches_sequential() {
+        let partials = vec![vec![1.0f32, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
+        let mut g = vec![0.5f32, 0.5, 0.5];
+        reduce_sum_into(&mut g, &partials);
+        assert_eq!(g, vec![11.5, 22.5, 33.5]);
+    }
+
+    #[test]
+    fn reduce_subset_touches_only_indices() {
+        // global has 6 slots; sync only flat indices [1, 4]
+        let mut g = vec![0f32; 6];
+        let partials = vec![vec![5.0f32, 7.0], vec![1.0, 2.0]];
+        reduce_sum_subset_into(&mut g, &[1, 4], &partials);
+        assert_eq!(g, vec![0.0, 6.0, 0.0, 0.0, 9.0, 0.0]);
+    }
+
+    #[test]
+    fn chunked_reduce_bitwise_equals_serial() {
+        let mut rng = Rng::new(3);
+        // len chosen to force multiple chunks on any multi-core host
+        let len = (1 << 13) * 5 + 331;
+        let partials: Vec<Vec<f32>> =
+            (0..7).map(|_| (0..len).map(|_| rng.f32() * 3.0 - 1.0).collect()).collect();
+        let parts: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
+        let seed: Vec<f32> = (0..len).map(|_| rng.f32()).collect();
+
+        let mut serial = seed.clone();
+        reduce_sum_into(&mut serial, &partials);
+
+        let cluster = Cluster::new(8, 0);
+        let mut par = vec![0f32; len];
+        reduce_chunked(&cluster, Some(&seed), &parts, &mut par);
+        assert_eq!(par, serial);
+
+        // seedless variant
+        let mut serial0 = vec![0f32; len];
+        reduce_sum_into(&mut serial0, &partials);
+        reduce_chunked(&cluster, None, &parts, &mut par);
+        assert_eq!(par, serial0);
+    }
+
+    #[test]
+    fn dense_step_matches_serial_reference() {
+        let (w, k) = (40, 8);
+        let mut rng = Rng::new(5);
+        let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32() * 4.0).collect();
+        let workers = random_workers(3, w * k, &mut rng);
+        let cluster = Cluster::new(3, 0);
+
+        let mut par = GlobalState::new(&phi_acc, k);
+        let mut ser = SerialState::new(&phi_acc, k);
+        let plan = ReducePlan::Dense { len: w * k };
+        let pairs = allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut par);
+        serial_reference_step(&plan, k, &phi_acc, &workers, &mut ser);
+        assert_eq!(pairs, w * k);
+        assert_eq!(par.phi_eff, ser.phi_eff);
+        assert_eq!(par.r_global, ser.r_global);
+    }
+
+    #[test]
+    fn subset_step_matches_serial_reference() {
+        let (w, k) = (50, 6);
+        let mut rng = Rng::new(6);
+        let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32() * 4.0).collect();
+        let workers = random_workers(4, w * k, &mut rng);
+        let cluster = Cluster::new(4, 0);
+
+        let mut par = GlobalState::new(&phi_acc, k);
+        let mut ser = SerialState::new(&phi_acc, k);
+        for round in 0..5 {
+            // a fresh random subset each round, deliberately unsorted
+            let mut indices: Vec<u32> =
+                (0..(w * k) as u32).filter(|_| rng.f32() < 0.2).collect();
+            rng.shuffle(&mut indices);
+            if indices.is_empty() {
+                indices.push(rng.below(w * k) as u32);
+            }
+            let plan = ReducePlan::Subset { indices: &indices };
+            let pairs = allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut par);
+            serial_reference_step(&plan, k, &phi_acc, &workers, &mut ser);
+            assert_eq!(pairs, indices.len());
+            assert_eq!(par.phi_eff, ser.phi_eff, "round {round}");
+            assert_eq!(par.r_global, ser.r_global, "round {round}");
+            // mutate worker partials between rounds
+            for m in &workers {
+                let mut g = m.lock().unwrap();
+                for v in g.dphi.iter_mut() {
+                    *v += rng.f32() - 0.5;
+                }
+                for v in g.r.iter_mut() {
+                    *v = rng.f32();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn export_selected_default_packs_plan_order() {
+        let src = VecSource {
+            dphi: vec![10.0, 11.0, 12.0, 13.0],
+            r: vec![0.1, 0.2, 0.3, 0.4],
+        };
+        let buf = src.export_selected(&[3, 0, 2]);
+        assert_eq!(buf.dphi, vec![13.0, 10.0, 12.0]);
+        assert_eq!(buf.r, vec![0.4, 0.1, 0.3]);
+    }
+}

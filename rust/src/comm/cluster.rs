@@ -16,6 +16,11 @@ use std::time::Instant;
 pub struct Cluster {
     n: usize,
     threads: usize,
+    /// OS-thread budget for leader-side data-parallel helpers
+    /// ([`Cluster::run_on_chunks`]): the machine/`max_threads` cap, *not*
+    /// limited by the logical worker count — an N = 2 simulation on a
+    /// 16-core host still reduces on 16 threads.
+    pool_threads: usize,
 }
 
 impl Cluster {
@@ -27,7 +32,7 @@ impl Cluster {
             .map(|c| c.get())
             .unwrap_or(1);
         let cap = if max_threads == 0 { cores } else { max_threads.min(cores) };
-        Cluster { n, threads: cap.min(n) }
+        Cluster { n, threads: cap.min(n), pool_threads: cap }
     }
 
     pub fn workers(&self) -> usize {
@@ -100,32 +105,38 @@ impl Cluster {
     }
 }
 
-/// Element-wise sum of worker partial vectors into `global` — the leader
-/// side of the synchronous allreduce of Eq. (4)/(15): the result every
-/// processor holds afterwards.
-pub fn reduce_sum_into(global: &mut [f32], partials: &[Vec<f32>]) {
-    for p in partials {
-        debug_assert_eq!(p.len(), global.len());
-        for (g, &v) in global.iter_mut().zip(p) {
-            *g += v;
-        }
-    }
-}
+/// Minimum elements per parallel chunk in [`Cluster::run_on_chunks`]:
+/// below this the scoped-thread spawn overhead exceeds the work, so the
+/// call degenerates to a serial pass.
+const MIN_PAR_CHUNK: usize = 1 << 13;
 
-/// Sparse variant: sums only the listed flat indices (the power-subset
-/// synchronization of §3.1). Indices must be in-bounds.
-pub fn reduce_sum_subset_into(
-    global: &mut [f32],
-    indices: &[u32],
-    partials: &[Vec<f32>],
-) {
-    for (slot, &ix) in indices.iter().enumerate() {
-        let mut acc = 0f32;
-        for p in partials {
-            acc += p[slot];
+impl Cluster {
+    /// Split `data` into chunks (up to the full OS-thread budget — the
+    /// leader's reduction is not bound by the logical worker count) and
+    /// run `f(chunk_start, chunk)` concurrently on scoped OS threads —
+    /// the data-parallel primitive behind the chunked allreduce
+    /// reduction (comm::allreduce).
+    ///
+    /// Chunk boundaries depend on the machine's core count, so `f` must
+    /// be element-local (each output element computed from that element's
+    /// inputs only) for results to be machine-independent.
+    pub fn run_on_chunks<F>(&self, data: &mut [f32], f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let len = data.len();
+        let nchunks = self.pool_threads.min(len.div_ceil(MIN_PAR_CHUNK)).max(1);
+        if nchunks <= 1 {
+            f(0, data);
+            return;
         }
-        global[ix as usize] += acc;
-        let _ = slot;
+        let chunk_len = len.div_ceil(nchunks);
+        std::thread::scope(|scope| {
+            for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                let fref = &f;
+                scope.spawn(move || fref(ci * chunk_len, chunk));
+            }
+        });
     }
 }
 
@@ -154,20 +165,20 @@ mod tests {
     }
 
     #[test]
-    fn reduce_sum_matches_sequential() {
-        let partials = vec![vec![1.0f32, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
-        let mut g = vec![0.5f32, 0.5, 0.5];
-        reduce_sum_into(&mut g, &partials);
-        assert_eq!(g, vec![11.5, 22.5, 33.5]);
-    }
-
-    #[test]
-    fn reduce_subset_touches_only_indices() {
-        // global has 6 slots; sync only flat indices [1, 4]
-        let mut g = vec![0f32; 6];
-        let partials = vec![vec![5.0f32, 7.0], vec![1.0, 2.0]];
-        reduce_sum_subset_into(&mut g, &[1, 4], &partials);
-        assert_eq!(g, vec![0.0, 6.0, 0.0, 0.0, 9.0, 0.0]);
+    fn chunked_run_covers_every_element_exactly_once() {
+        // sizes straddling the MIN_PAR_CHUNK threshold, plus empty input
+        for &(n, len) in &[(1usize, 10usize), (4, 100_000), (8, (1 << 13) * 3 + 17), (2, 0)] {
+            let c = Cluster::new(n, 0);
+            let mut data = vec![0f32; len];
+            c.run_on_chunks(&mut data, |start, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v += (start + j) as f32;
+                }
+            });
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as f32, "n={n} len={len} slot {i}");
+            }
+        }
     }
 
     #[test]

@@ -19,8 +19,12 @@ pub struct SyncEvent {
     pub payload_bytes: usize,
     /// processors participating
     pub n: usize,
-    /// simulated seconds for this allreduce
+    /// simulated seconds for this allreduce (= reduce-scatter + allgather)
     pub comm_secs: f64,
+    /// reduce-scatter segment of `comm_secs` (Rabenseifner first half)
+    pub reduce_scatter_secs: f64,
+    /// allgather segment of `comm_secs` (Rabenseifner second half)
+    pub allgather_secs: f64,
 }
 
 /// Accumulates the simulated cost decomposition of a training run.
@@ -47,7 +51,8 @@ impl Ledger {
         }
     }
 
-    /// Record an allreduce of `payload_bytes` per processor across `n`.
+    /// Record an allreduce of `payload_bytes` per processor across `n`,
+    /// attributing time to the reduce-scatter and allgather segments.
     /// Returns the simulated seconds charged.
     pub fn record_sync(
         &mut self,
@@ -56,10 +61,20 @@ impl Ledger {
         payload_bytes: usize,
         n: usize,
     ) -> f64 {
-        let comm_secs = self.net.allreduce_secs(payload_bytes, n);
+        let reduce_scatter_secs = self.net.reduce_scatter_secs(payload_bytes, n);
+        let allgather_secs = self.net.allgather_secs(payload_bytes, n);
+        let comm_secs = reduce_scatter_secs + allgather_secs;
         self.wire_bytes += self.net.allreduce_wire_bytes(payload_bytes, n) as u64;
         self.comm_secs += comm_secs;
-        self.events.push(SyncEvent { batch, iter, payload_bytes, n, comm_secs });
+        self.events.push(SyncEvent {
+            batch,
+            iter,
+            payload_bytes,
+            n,
+            comm_secs,
+            reduce_scatter_secs,
+            allgather_secs,
+        });
         comm_secs
     }
 
@@ -80,6 +95,16 @@ impl Ledger {
     /// Number of synchronizations performed.
     pub fn sync_count(&self) -> usize {
         self.events.len()
+    }
+
+    /// Seconds spent in the reduce-scatter segments of all allreduces.
+    pub fn reduce_scatter_secs_total(&self) -> f64 {
+        self.events.iter().map(|e| e.reduce_scatter_secs).sum()
+    }
+
+    /// Seconds spent in the allgather segments of all allreduces.
+    pub fn allgather_secs_total(&self) -> f64 {
+        self.events.iter().map(|e| e.allgather_secs).sum()
     }
 
     /// Payload bytes summed over events (per-processor view; the paper's
@@ -113,6 +138,21 @@ mod tests {
             l.wire_bytes,
             (2 * ((1u64 << 20) + (1 << 10)) * 7) as u64
         );
+    }
+
+    #[test]
+    fn per_segment_attribution_covers_comm_time() {
+        let mut l = Ledger::new(NetModel::infiniband_20gbps());
+        l.record_sync(0, 1, 1 << 16, 8);
+        l.record_sync(0, 2, 1 << 12, 8);
+        let rs = l.reduce_scatter_secs_total();
+        let ag = l.allgather_secs_total();
+        assert!(rs > 0.0 && ag > 0.0);
+        assert!((rs + ag - l.comm_secs).abs() < 1e-15);
+        for e in &l.events {
+            let gap = (e.reduce_scatter_secs + e.allgather_secs - e.comm_secs).abs();
+            assert!(gap < 1e-18);
+        }
     }
 
     #[test]

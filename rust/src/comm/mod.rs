@@ -1,13 +1,18 @@
 //! Multi-processor architecture substrate: the simulated cluster, the
-//! network cost model, and the communication ledger. See DESIGN.md
-//! §Substitutions for why simulation preserves the paper's measured
-//! quantities (bytes moved and sync counts are exact; time follows the
-//! published link parameters).
+//! parallel sparse allreduce, the network cost model, and the
+//! communication ledger. See DESIGN.md §Substitutions for why simulation
+//! preserves the paper's measured quantities (bytes moved and sync counts
+//! are exact; time follows the published link parameters).
 
+pub mod allreduce;
 pub mod cluster;
 pub mod ledger;
 pub mod net;
 
-pub use cluster::{reduce_sum_into, reduce_sum_subset_into, Cluster};
+pub use allreduce::{
+    allreduce_step, reduce_chunked, reduce_sum_into, reduce_sum_subset_into, GatherBuf,
+    GlobalState, ReducePlan, ReduceSource,
+};
+pub use cluster::Cluster;
 pub use ledger::{Ledger, SyncEvent};
 pub use net::NetModel;

@@ -62,20 +62,35 @@ impl NetModel {
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 
-    /// Allreduce of a `bytes`-sized payload across `n` processors,
-    /// Rabenseifner's reduce-scatter + allgather (what MPI uses for
-    /// anything non-tiny): 2·log2(n) latency steps and 2·bytes·(n−1)/n
-    /// per-processor wire traffic. The log-N latency term matters: the
-    /// paper's POBP performs many *small* synchronizations, which a
-    /// 2(n−1)-step ring model would penalize unrealistically at n = 256+.
-    /// For n = 1 the cost is zero.
-    pub fn allreduce_secs(&self, bytes: usize, n: usize) -> f64 {
+    /// Reduce-scatter half of the Rabenseifner allreduce: `log2(n)`
+    /// halving steps, each processor ending with one reduced 1/n-slice,
+    /// for `log2(n)` latency charges plus `bytes·(n−1)/n` through the
+    /// link. For n = 1 the cost is zero.
+    pub fn reduce_scatter_secs(&self, bytes: usize, n: usize) -> f64 {
         if n <= 1 {
             return 0.0;
         }
-        let steps = 2.0 * (n as f64).log2().ceil();
-        steps * self.latency_s
-            + 2.0 * bytes as f64 * (n as f64 - 1.0) / n as f64 / self.bandwidth_bps
+        (n as f64).log2().ceil() * self.latency_s
+            + bytes as f64 * (n as f64 - 1.0) / n as f64 / self.bandwidth_bps
+    }
+
+    /// Allgather half of the Rabenseifner allreduce — doubling steps that
+    /// redistribute the reduced slices, cost-symmetric to the
+    /// reduce-scatter.
+    pub fn allgather_secs(&self, bytes: usize, n: usize) -> f64 {
+        self.reduce_scatter_secs(bytes, n)
+    }
+
+    /// Allreduce of a `bytes`-sized payload across `n` processors,
+    /// Rabenseifner's reduce-scatter + allgather (what MPI uses for
+    /// anything non-tiny): 2·log2(n) latency steps and 2·bytes·(n−1)/n
+    /// per-processor wire traffic, the sum of the two segment costs
+    /// above. The log-N latency term matters: the paper's POBP performs
+    /// many *small* synchronizations, which a 2(n−1)-step ring model
+    /// would penalize unrealistically at n = 256+. For n = 1 the cost is
+    /// zero.
+    pub fn allreduce_secs(&self, bytes: usize, n: usize) -> f64 {
+        self.reduce_scatter_secs(bytes, n) + self.allgather_secs(bytes, n)
     }
 
     /// Total wire bytes an `n`-processor allreduce of `bytes` moves
@@ -124,6 +139,19 @@ mod tests {
         // 2·log2(1024) = 20 latency steps dominate a 64-byte payload
         let lat = 20.0 * 2e-6;
         assert!(t >= lat && t < lat * 1.5, "t = {t}");
+    }
+
+    #[test]
+    fn segments_sum_to_allreduce() {
+        let m = NetModel::infiniband_20gbps();
+        for &(bytes, n) in &[(64usize, 4usize), (1 << 20, 16), (1 << 10, 256)] {
+            let rs = m.reduce_scatter_secs(bytes, n);
+            let ag = m.allgather_secs(bytes, n);
+            assert!(rs > 0.0 && ag > 0.0);
+            assert!((rs + ag - m.allreduce_secs(bytes, n)).abs() < 1e-18);
+        }
+        assert_eq!(m.reduce_scatter_secs(1 << 20, 1), 0.0);
+        assert_eq!(m.allgather_secs(1 << 20, 1), 0.0);
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 use std::sync::Mutex;
 
+use crate::comm::allreduce::{allreduce_step, reduce_chunked, GlobalState, ReducePlan};
 use crate::comm::{Cluster, Ledger, NetModel};
 use crate::corpus::{shard_ranges, Csr, MiniBatchStream};
 use crate::engine::bp::{Selection, ShardBp};
@@ -122,6 +123,10 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
 
     // Global accumulated sufficient statistics φ̂ (Eq. 11's phi^{m}).
     let mut phi_acc = vec![0f32; w * k];
+    // Snapshot cadence counts *iteration* syncs only: the end-of-batch
+    // fold also bumps `ledger.sync_count()`, which would skip/shift
+    // snapshots whose multiple lands on a fold.
+    let mut iter_syncs = 0usize;
 
     let global_budget = cfg.nnz_budget.saturating_mul(cfg.n_workers);
     for mb in MiniBatchStream::new(corpus, global_budget) {
@@ -144,25 +149,23 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
             .collect();
 
         // Working global state for this batch: φ̂ = phi_acc + Σ_n Δφ̂_n,
-        // plus the synchronized residual matrix and its running total.
-        let mut phi_eff = phi_acc.clone();
-        let mut phi_tot = vec![0f32; k];
-        for row in phi_eff.chunks_exact(k) {
-            for (t, &v) in row.iter().enumerate() {
-                phi_tot[t] += v;
-            }
-        }
-        let mut r_global = vec![0f32; w * k];
-        let mut r_total = 0f64;
+        // plus the synchronized residual matrix — totals f64-backed
+        // against incremental drift (comm::allreduce::GlobalState).
+        let mut state = GlobalState::new(&phi_acc, k);
         let mut selection = Selection::full(w);
-        let mut power: Option<PowerSet> = None; // None = full sync
+        // None = full sync; the full schedule stays implicit — there is
+        // deliberately no way to materialize an all-pairs PowerSet
+        // (O(W·K) heap at PUBMED scale).
+        let mut power: Option<PowerSet> = None;
         let mut prev_resid = f64::INFINITY;
         let mut first_resid = f64::INFINITY;
+        let mut iters_run = 0;
 
         for t in 1..=cfg.max_iters {
+            iters_run = t;
             // --- parallel sweep (lines 6-8 / 15-20) ---
-            let phi_ref = &phi_eff;
-            let tot_ref = &phi_tot;
+            let phi_ref: &[f32] = &state.phi_eff;
+            let tot_ref: &[f32] = state.phi_tot();
             let sel_ref = &selection;
             let (_, secs) = cluster.run(|n| {
                 let mut shard = shards[n].lock().unwrap();
@@ -171,61 +174,28 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
             });
             ledger.record_compute(&secs);
 
-            // --- synchronize Δφ̂ and r on the selected pairs
-            //     (lines 9-10 / 23-24, Eqs. 9 & 15) ---
-            let guards: Vec<_> =
-                shards.iter().map(|s| s.lock().unwrap()).collect();
-            let pairs: usize;
-            match &power {
-                None => {
-                    pairs = w * k;
-                    // full sync: φ_eff = phi_acc + Σ_n dphi_n ; r = Σ_n r_n
-                    phi_eff.copy_from_slice(&phi_acc);
-                    r_global.fill(0.0);
-                    for g in &guards {
-                        for i in 0..w * k {
-                            phi_eff[i] += g.dphi[i];
-                            r_global[i] += g.r[i];
-                        }
-                    }
-                    phi_tot.fill(0.0);
-                    for row in phi_eff.chunks_exact(k) {
-                        for (tt, &v) in row.iter().enumerate() {
-                            phi_tot[tt] += v;
-                        }
-                    }
-                    r_total = r_global.iter().map(|&v| v as f64).sum();
-                }
+            // --- synchronize Δφ̂ and r on the scheduled pairs (lines
+            //     9-10 / 23-24, Eqs. 9 & 15): one allreduce call for
+            //     both the full and the power schedule ---
+            let flat;
+            let plan = match &power {
+                None => ReducePlan::Dense { len: w * k },
                 Some(ps) => {
-                    pairs = ps.pairs();
-                    for (wi_pos, &wi) in ps.words.iter().enumerate() {
-                        for &tt in &ps.topics[wi_pos] {
-                            let i = wi as usize * k + tt as usize;
-                            let mut dphi_sum = 0f32;
-                            let mut r_sum = 0f32;
-                            for g in guards.iter() {
-                                dphi_sum += g.dphi[i];
-                                r_sum += g.r[i];
-                            }
-                            let new_phi = phi_acc[i] + dphi_sum;
-                            phi_tot[tt as usize] += new_phi - phi_eff[i];
-                            phi_eff[i] = new_phi;
-                            r_total += r_sum as f64 - r_global[i] as f64;
-                            r_global[i] = r_sum;
-                        }
-                    }
+                    flat = ps.flat_indices(k);
+                    ReducePlan::Subset { indices: &flat }
                 }
-            }
-            drop(guards);
+            };
+            let pairs = allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut state);
             // two f32 matrices (φ̂ and r) restricted to the selection
             let payload = 2 * 4 * pairs;
             ledger.record_sync(mb.index, t, payload, cfg.n_workers);
 
-            let resid_per_token = r_total / tokens;
-            if cfg.snapshot_every > 0 && ledger.sync_count() % cfg.snapshot_every == 0 {
+            iter_syncs += 1;
+            let resid_per_token = state.r_total() / tokens;
+            if cfg.snapshot_every > 0 && iter_syncs % cfg.snapshot_every == 0 {
                 snapshots.push((
                     ledger.total_secs(),
-                    Model { k, w, phi_wk: phi_eff.clone() },
+                    Model { k, w, phi_wk: state.phi_eff.clone() },
                 ));
             }
             history.push(IterStat {
@@ -255,10 +225,8 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
 
             // --- dynamic power selection for the next iteration
             //     (lines 12-13 / 27-28) ---
-            if cfg.power.lambda_w < 1.0
-                || cfg.power.lambda_k_times_k < k
-            {
-                let ps = select_power(&r_global, w, k, &cfg.power);
+            if cfg.power.lambda_w < 1.0 || cfg.power.lambda_k_times_k < k {
+                let ps = select_power(&state.r_global, w, k, &cfg.power);
                 selection = Selection::from_power(&ps, w);
                 power = Some(ps);
             }
@@ -267,17 +235,19 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
         // --- fold the batch gradient into the global model (Eq. 11) ---
         // phi_eff already equals phi_acc + Σ_n Δφ̂_n on every pair that was
         // last synchronized; un-synced pairs differ only by worker-local
-        // updates not yet communicated — charge one final full sync
-        // (the paper frees the batch keeping the global matrix, line 30).
-        let guards: Vec<_> = shards.iter().map(|s| s.lock().unwrap()).collect();
-        phi_eff.copy_from_slice(&phi_acc);
-        for g in &guards {
-            for i in 0..w * k {
-                phi_eff[i] += g.dphi[i];
-            }
+        // updates not yet communicated, so the fold ships one final full
+        // φ̂ matrix (the paper frees the batch keeping the global matrix,
+        // line 30) — and charges it: one sync per batch on top of the
+        // per-iteration ones, so sync_count = Σ_batches (iters + 1).
+        {
+            let guards: Vec<_> = shards.iter().map(|s| s.lock().unwrap()).collect();
+            let dphi_parts: Vec<&[f32]> =
+                guards.iter().map(|g| g.dphi.as_slice()).collect();
+            reduce_chunked(&cluster, Some(&phi_acc), &dphi_parts, &mut state.phi_eff);
+            drop(guards);
+            phi_acc.copy_from_slice(&state.phi_eff);
+            ledger.record_sync(mb.index, iters_run + 1, 4 * w * k, cfg.n_workers);
         }
-        drop(guards);
-        phi_acc.copy_from_slice(&phi_eff);
         let _ = wall.lap_secs();
     }
 
@@ -383,6 +353,42 @@ mod tests {
             powered.ledger.payload_bytes_total(),
             full.ledger.payload_bytes_total()
         );
+    }
+
+    #[test]
+    fn ledger_charges_final_fold_sync() {
+        // converge_thresh 0 pins every batch to exactly max_iters
+        // iteration syncs; the end-of-batch fold must add one more.
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        let max_iters = 7;
+        let cfg = PobpConfig {
+            n_workers: 2,
+            nnz_budget: 600,
+            max_iters,
+            converge_thresh: 0.0,
+            ..Default::default()
+        };
+        let r = fit(&c, &params, &cfg);
+        let batches = r.history.iter().map(|s| s.batch).max().unwrap() + 1;
+        assert!(batches >= 2, "want a multi-batch run, got {batches}");
+        assert_eq!(
+            r.ledger.sync_count(),
+            batches * (max_iters + 1),
+            "every batch must charge its iterations plus one final fold"
+        );
+        // the fold ships one full W×K φ̂ matrix, recorded past the last
+        // iteration index
+        let folds = r
+            .ledger
+            .events
+            .iter()
+            .filter(|e| e.iter == max_iters + 1)
+            .collect::<Vec<_>>();
+        assert_eq!(folds.len(), batches);
+        for e in &folds {
+            assert_eq!(e.payload_bytes, 4 * c.w * 8);
+        }
     }
 
     #[test]

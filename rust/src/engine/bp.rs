@@ -13,6 +13,7 @@
 //! messages stay bitwise-frozen, so Δφ̂ and r change only on selected
 //! pairs and subset-only synchronization is exact.
 
+use crate::comm::allreduce::ReduceSource;
 use crate::corpus::Csr;
 use crate::engine::traits::LdaParams;
 use crate::sched::PowerSet;
@@ -449,6 +450,17 @@ impl ShardBp {
     }
 }
 
+/// Gives `ShardBp` the worker side of the sparse allreduce: the trait's
+/// `export_selected` default packs Δφ̂ and r at the plan's flat indices
+/// (`w·K + k`, plan order) into a
+/// [`GatherBuf`](crate::comm::allreduce::GatherBuf), per worker, in
+/// parallel on the cluster (comm::allreduce).
+impl ReduceSource for ShardBp {
+    fn dense_parts(&self) -> (&[f32], &[f32]) {
+        (&self.dphi, &self.r)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -587,6 +599,31 @@ mod tests {
         s.clear_selected_residuals(&sel);
         s.sweep(&phi, &tot, &sel, &p, false);
         assert_eq!(s.dphi, dphi_before);
+    }
+
+    #[test]
+    fn export_selected_follows_plan_order() {
+        let (mut s, p) = small_shard(6);
+        let w = s.data.w;
+        let sel = Selection::full(w);
+        let (phi, tot) = phi_of(&s);
+        s.clear_selected_residuals(&sel);
+        s.sweep(&phi, &tot, &sel, &p, true);
+
+        let ps = select_power(
+            &s.r,
+            w,
+            s.k,
+            &PowerParams { lambda_w: 0.2, lambda_k_times_k: 3 },
+        );
+        let flat = ps.flat_indices(s.k);
+        let buf = s.export_selected(&flat);
+        assert_eq!(buf.dphi.len(), flat.len());
+        assert_eq!(buf.r.len(), flat.len());
+        for (slot, &ix) in flat.iter().enumerate() {
+            assert_eq!(buf.dphi[slot], s.dphi[ix as usize]);
+            assert_eq!(buf.r[slot], s.r[ix as usize]);
+        }
     }
 
     #[test]

@@ -100,18 +100,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             if algo != Algo::Obp && algo != Algo::Pobp {
                 bail!("--engine xla supports the BP-family algorithms only");
             }
-            let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-            pobp::runtime::xla_engine::fit_obp_xla(
-                &corpus,
-                &params,
-                &dir,
-                &pobp::runtime::xla_engine::XlaObpConfig {
-                    max_iters: opts.max_batch_iters,
-                    power: opts.power,
-                    seed: opts.seed,
-                    ..Default::default()
-                },
-            )?
+            run_xla(&corpus, &params, &opts)?
         }
         other => bail!("unknown --engine {other} (native|xla)"),
     };
@@ -138,6 +127,37 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("model saved to {save}");
     }
     Ok(())
+}
+
+/// PJRT-backed training, available only in `--features xla` builds (the
+/// xla crate needs the XLA C++ runtime; see Cargo.toml).
+#[cfg(feature = "xla")]
+fn run_xla(
+    corpus: &pobp::corpus::Csr,
+    params: &LdaParams,
+    opts: &RunOpts,
+) -> Result<pobp::engine::traits::TrainResult> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    pobp::runtime::xla_engine::fit_obp_xla(
+        corpus,
+        params,
+        &dir,
+        &pobp::runtime::xla_engine::XlaObpConfig {
+            max_iters: opts.max_batch_iters,
+            power: opts.power,
+            seed: opts.seed,
+            ..Default::default()
+        },
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_xla(
+    _corpus: &pobp::corpus::Csr,
+    _params: &LdaParams,
+    _opts: &RunOpts,
+) -> Result<pobp::engine::traits::TrainResult> {
+    bail!("--engine xla requires a build with `--features xla` (see Cargo.toml)")
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -242,8 +262,17 @@ fn cmd_info() -> Result<()> {
                     e.file.file_name().unwrap().to_string_lossy()
                 );
             }
-            let client = xla::PjRtClient::cpu()?;
-            println!("pjrt: platform={} devices={}", client.platform_name(), client.device_count());
+            #[cfg(feature = "xla")]
+            {
+                let client = xla::PjRtClient::cpu()?;
+                println!(
+                    "pjrt: platform={} devices={}",
+                    client.platform_name(),
+                    client.device_count()
+                );
+            }
+            #[cfg(not(feature = "xla"))]
+            println!("pjrt: disabled (build with --features xla)");
         }
         Err(e) => println!("artifacts not built ({e}); run `make artifacts`"),
     }

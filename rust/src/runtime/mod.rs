@@ -3,8 +3,11 @@
 //! crate, `xla_engine` drives online BP through the compiled sweep.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod pjrt;
+#[cfg(feature = "xla")]
 pub mod xla_engine;
 
 pub use artifacts::Manifest;
+#[cfg(feature = "xla")]
 pub use pjrt::{SweepArgs, SweepExecutable, SweepOut};

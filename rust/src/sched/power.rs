@@ -48,13 +48,12 @@ impl PowerSet {
         4 * self.pairs()
     }
 
-    /// Selection of *everything* (t = 1 full sync, Fig. 4 line 9).
-    pub fn full(w: usize, k: usize) -> PowerSet {
-        PowerSet {
-            words: (0..w as u32).collect(),
-            topics: (0..w).map(|_| (0..k as u32).collect()).collect(),
-        }
-    }
+    // NOTE: there is deliberately no `PowerSet::full(w, k)` constructor.
+    // It used to materialize `W` separate `Vec<u32>` of length `K` — an
+    // O(W·K) heap bill for "everything" (PUBMED scale: W ≈ 141k ×
+    // K = 2000 ≈ 3·10⁸ u32s). The full schedule is implicit: the
+    // coordinator's `Option<PowerSet>` is `None`, and the allreduce runs
+    // a dense plan (`comm::allreduce::ReducePlan::Dense`).
 }
 
 /// Ratios λ_W, λ_K of §3.1. `lambda_k_times_k` follows the paper's
@@ -141,14 +140,10 @@ mod tests {
     }
 
     #[test]
-    fn full_selection_covers_matrix() {
-        let ps = PowerSet::full(5, 3);
-        assert_eq!(ps.pairs(), 15);
-        let flat = ps.flat_indices(3);
-        assert_eq!(flat.len(), 15);
-        let mut sorted = flat.clone();
-        sorted.sort_unstable();
-        assert_eq!(sorted, (0..15u32).collect::<Vec<_>>());
+    fn pairs_and_payload_follow_selection() {
+        let ps = PowerSet { words: vec![2, 0], topics: vec![vec![1, 3], vec![0]] };
+        assert_eq!(ps.pairs(), 3);
+        assert_eq!(ps.payload_bytes(), 12);
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Equivalence and drift tests for the parallel sparse allreduce
+//! (comm::allreduce): a seeded multi-iteration run through the chunked
+//! parallel reduction must match the pre-refactor serial leader loop
+//! bitwise on `phi_eff`/`r_global`, for full and power schedules and for
+//! N ∈ {1, 2, 4}; and the f64-backed totals must not drift from a
+//! from-scratch recompute over hundreds of sparse scatters.
+
+use std::sync::Mutex;
+
+use pobp::comm::allreduce::{
+    allreduce_step, serial_reference_step, GlobalState, ReducePlan, ReduceSource,
+    SerialState,
+};
+use pobp::comm::Cluster;
+use pobp::corpus::shard_ranges;
+use pobp::engine::bp::{Selection, ShardBp};
+use pobp::engine::traits::LdaParams;
+use pobp::sched::{select_power, PowerParams};
+use pobp::synth::{generate, SynthSpec};
+use pobp::util::rng::Rng;
+
+/// Run `iters` sweep+sync rounds on a seeded corpus, applying the
+/// parallel and the serial reduction to the same worker state each
+/// round, and assert bitwise equality of the replicated matrices.
+fn equiv_case(n: usize, power: Option<PowerParams>, seed: u64) {
+    let corpus = generate(&SynthSpec::tiny(seed)).corpus;
+    let k = 8;
+    let w = corpus.w;
+    let params = LdaParams::paper(k);
+    let cluster = Cluster::new(n, 0);
+    let mut rng = Rng::new(seed);
+
+    let ranges = shard_ranges(corpus.docs(), n);
+    let shards: Vec<Mutex<ShardBp>> = ranges
+        .iter()
+        .enumerate()
+        .map(|(i, rg)| {
+            let mut wrng = rng.split(i as u64);
+            Mutex::new(ShardBp::init(corpus.slice_docs(rg.start, rg.end), k, &mut wrng))
+        })
+        .collect();
+
+    // non-trivial accumulated model so the φ̂_acc seeding path is covered
+    let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32() * 0.1).collect();
+    let mut par = GlobalState::new(&phi_acc, k);
+    let mut ser = SerialState::new(&phi_acc, k);
+    let mut selection = Selection::full(w);
+    let mut flat: Option<Vec<u32>> = None;
+
+    for t in 0..8 {
+        // sweep every shard against the parallel path's state
+        let phi = par.phi_eff.clone();
+        let tot = par.phi_tot().to_vec();
+        for s in &shards {
+            let mut g = s.lock().unwrap();
+            g.clear_selected_residuals(&selection);
+            g.sweep(&phi, &tot, &selection, &params, true);
+        }
+
+        let plan = match &flat {
+            None => ReducePlan::Dense { len: w * k },
+            Some(ix) => ReducePlan::Subset { indices: ix },
+        };
+        let pairs = allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut par);
+        serial_reference_step(&plan, k, &phi_acc, &shards, &mut ser);
+        assert!(pairs > 0);
+        assert_eq!(par.phi_eff, ser.phi_eff, "phi_eff diverged at t={t}, n={n}");
+        assert_eq!(par.r_global, ser.r_global, "r diverged at t={t}, n={n}");
+
+        if let Some(pp) = &power {
+            let ps = select_power(&par.r_global, w, k, pp);
+            flat = Some(ps.flat_indices(k));
+            selection = Selection::from_power(&ps, w);
+        }
+    }
+}
+
+#[test]
+fn parallel_matches_serial_full_n1() {
+    equiv_case(1, None, 11);
+}
+
+#[test]
+fn parallel_matches_serial_full_n2() {
+    equiv_case(2, None, 12);
+}
+
+#[test]
+fn parallel_matches_serial_full_n4() {
+    equiv_case(4, None, 13);
+}
+
+#[test]
+fn parallel_matches_serial_power_n1() {
+    equiv_case(1, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 21);
+}
+
+#[test]
+fn parallel_matches_serial_power_n2() {
+    equiv_case(2, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 22);
+}
+
+#[test]
+fn parallel_matches_serial_power_n4() {
+    equiv_case(4, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 23);
+}
+
+struct VecSource {
+    dphi: Vec<f32>,
+    r: Vec<f32>,
+}
+
+impl ReduceSource for VecSource {
+    fn dense_parts(&self) -> (&[f32], &[f32]) {
+        (&self.dphi, &self.r)
+    }
+}
+
+/// Long-run drift: hundreds of sparse scatters with mutating partials.
+/// The f64-backed running totals must stay within f64-rounding distance
+/// of a from-scratch recompute — the old f32 incremental bookkeeping
+/// drifted orders of magnitude more over the same schedule.
+#[test]
+fn subset_totals_do_not_drift_over_long_runs() {
+    let (w, k) = (300, 16);
+    let mut rng = Rng::new(7);
+    let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32() * 10.0).collect();
+    let cluster = Cluster::new(3, 0);
+    let workers: Vec<Mutex<VecSource>> = (0..3)
+        .map(|_| {
+            Mutex::new(VecSource {
+                dphi: (0..w * k).map(|_| rng.f32() * 5.0).collect(),
+                r: (0..w * k).map(|_| rng.f32()).collect(),
+            })
+        })
+        .collect();
+
+    let mut st = GlobalState::new(&phi_acc, k);
+    for round in 0..400 {
+        for m in &workers {
+            let mut g = m.lock().unwrap();
+            for v in g.dphi.iter_mut() {
+                *v += rng.f32() - 0.5;
+            }
+            for v in g.r.iter_mut() {
+                *v = rng.f32();
+            }
+        }
+        let mut indices: Vec<u32> =
+            (0..(w * k) as u32).filter(|_| rng.f32() < 0.05).collect();
+        if indices.is_empty() {
+            indices.push(rng.below(w * k) as u32);
+        }
+        let plan = ReducePlan::Subset { indices: &indices };
+        allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut st);
+
+        let (phi_drift, r_drift) = st.totals_drift();
+        assert!(
+            phi_drift < 1e-4,
+            "phi_tot drifted {phi_drift} at round {round}"
+        );
+        assert!(r_drift < 1e-4, "r_total drifted {r_drift} at round {round}");
+    }
+}

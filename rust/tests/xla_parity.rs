@@ -5,6 +5,7 @@
 //!
 //! Requires `make artifacts`; tests skip (with a notice) when the
 //! artifacts are absent so `cargo test` stays runnable from a clean tree.
+//! The whole target is gated on the `xla` feature (see Cargo.toml).
 
 use std::path::PathBuf;
 
