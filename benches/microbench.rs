@@ -1,6 +1,9 @@
 //! Microbenchmarks of the L3 hot paths (criterion substitute): the sparse
-//! BP sweep, the Gibbs samplers, the power selection partial sort, and
-//! the allreduce. These are the §Perf numbers in EXPERIMENTS.md.
+//! BP sweep (serial reference vs fused vs doc-parallel), the Gibbs
+//! samplers, the power selection partial sort, and the allreduce. These
+//! are the §Perf numbers in EXPERIMENTS.md; alongside the human table the
+//! run emits `BENCH_microbench.json` (name → items/s) so the perf
+//! trajectory is machine-trackable across PRs.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -14,9 +17,16 @@ use pobp::engine::gibbs::{GibbsShard, PlainGs};
 use pobp::engine::sgs::SparseGs;
 use pobp::metrics::sig;
 use pobp::sched::{select_power, PowerParams};
+use pobp::util::json::Json;
 use pobp::util::rng::Rng;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, work_items: f64, mut f: F) {
+fn bench<F: FnMut()>(
+    recs: &mut Vec<(String, f64)>,
+    name: &str,
+    iters: usize,
+    work_items: f64,
+    mut f: F,
+) {
     // warmup
     f();
     let t0 = Instant::now();
@@ -24,11 +34,13 @@ fn bench<F: FnMut()>(name: &str, iters: usize, work_items: f64, mut f: F) {
         f();
     }
     let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let ips = work_items / per;
     println!(
-        "{name:40} {:>12}/iter   {:>14} items/s",
+        "{name:42} {:>12}/iter   {:>14} items/s",
         format!("{:.3}ms", per * 1e3),
-        sig(work_items / per)
+        sig(ips)
     );
+    recs.push((name.to_string(), ips));
 }
 
 fn main() {
@@ -40,8 +52,13 @@ fn main() {
         "corpus: D={} W={} NNZ={} tokens={}\n",
         corpus.docs(), corpus.w, corpus.nnz(), corpus.tokens()
     );
+    let mut recs: Vec<(String, f64)> = Vec::new();
 
-    // --- BP sweep (the POBP worker inner loop) ---
+    // --- BP sweep (the POBP worker inner loop): the pre-fusion serial
+    //     kernel (kept as the equivalence oracle), the fused serial
+    //     kernel, and the doc-parallel engine on the full OS-thread
+    //     pool (the N = 1 coordinator configuration) ---
+    let pool = Cluster::new(1, 0);
     let mut rng = Rng::new(1);
     let mut shard = ShardBp::init(corpus.clone(), k, &mut rng);
     let sel = Selection::full(corpus.w);
@@ -55,31 +72,50 @@ fn main() {
             tot[t] += v;
         }
     }
-    bench("bp sweep (full, token-topic updates)", 10, updates, || {
+    bench(&mut recs, "bp sweep (full, serial reference)", 10, updates, || {
+        shard.clear_selected_residuals(&sel);
+        shard.sweep_reference(&phi, &tot, &sel, &params, true);
+    });
+    bench(&mut recs, "bp sweep (full, fused serial)", 10, updates, || {
         shard.clear_selected_residuals(&sel);
         shard.sweep(&phi, &tot, &sel, &params, true);
     });
+    bench(&mut recs, "bp sweep (full, doc-parallel)", 10, updates, || {
+        shard.sweep_parallel(&pool, 0, &phi, &tot, &sel, &params, true);
+    });
 
     // power-subset sweep (same schedule the coordinator runs at t >= 2);
-    // work items = active entries x selected topics, the true flop count
+    // work items = Σ_selected-words entries(w) × topics(w) — the true
+    // per-pair update count, from the shard's inverted index instead of
+    // the old O(W·D·log nnz) binary-search scan (which also multiplied
+    // every word by the *first* selected word's topic count)
     let ps = select_power(&shard.r, corpus.w, k, &PowerParams::paper_default());
     let sel_p = Selection::from_power(&ps, corpus.w);
     let active_entries: usize = (0..corpus.w)
         .filter(|&wi| sel_p.word_sel[wi])
+        .map(|wi| shard.word_entries(wi))
+        .sum();
+    let sub_updates: f64 = (0..corpus.w)
+        .filter(|&wi| sel_p.word_sel[wi])
         .map(|wi| {
-            (0..corpus.docs())
-                .map(|d| usize::from(corpus.row(d).0.binary_search(&(wi as u32)).is_ok()))
-                .sum::<usize>()
+            let topics = sel_p.topics_of(wi).map(|t| t.len()).unwrap_or(k);
+            (shard.word_entries(wi) * topics) as f64
         })
         .sum();
-    let sub_updates = (active_entries * sel_p.topics_of(ps.words[0] as usize).map(|t| t.len()).unwrap_or(k)) as f64;
-    bench("bp sweep (power subset, doc-order)", 10, sub_updates, || {
+    println!(
+        "power subset: {} active entries, {} pair updates",
+        active_entries, sub_updates
+    );
+    bench(&mut recs, "bp sweep (power subset, doc-order)", 10, sub_updates, || {
         shard.clear_selected_residuals(&sel_p);
         shard.sweep(&phi, &tot, &sel_p, &params, true);
     });
-    bench("bp sweep (power subset, inverted idx)", 10, sub_updates, || {
+    bench(&mut recs, "bp sweep (power subset, inverted idx)", 10, sub_updates, || {
         shard.clear_selected_residuals(&sel_p);
         shard.sweep_selected(&phi, &tot, &sel_p, &params, true);
+    });
+    bench(&mut recs, "bp sweep (power subset, doc-parallel)", 10, sub_updates, || {
+        shard.sweep_parallel(&pool, 0, &phi, &tot, &sel_p, &params, true);
     });
 
     // --- Gibbs samplers (tokens/s) ---
@@ -87,21 +123,21 @@ fn main() {
     let mut gshard = GibbsShard::init(&corpus, k, &mut rng);
     let mut plain = PlainGs::new(k);
     let mut grng = Rng::new(2);
-    bench("gibbs sweep (plain GS)", 5, tokens, || {
+    bench(&mut recs, "gibbs sweep (plain GS)", 5, tokens, || {
         gshard.sweep(&mut plain, &params, &mut grng);
     });
     let mut sparse = SparseGs::new(k);
-    bench("gibbs sweep (SparseLDA)", 5, tokens, || {
+    bench(&mut recs, "gibbs sweep (SparseLDA)", 5, tokens, || {
         gshard.sweep(&mut sparse, &params, &mut grng);
     });
     let mut fast = FastGs::new(k);
-    bench("gibbs sweep (FastLDA)", 5, tokens, || {
+    bench(&mut recs, "gibbs sweep (FastLDA)", 5, tokens, || {
         gshard.sweep(&mut fast, &params, &mut grng);
     });
 
     // --- power selection (per coordinator iteration) ---
     let r = shard.r.clone();
-    bench("power selection (partial sort W + topics)", 50, (corpus.w * k) as f64, || {
+    bench(&mut recs, "power selection (partial sort W + topics)", 50, (corpus.w * k) as f64, || {
         let _ = select_power(&r, corpus.w, k, &PowerParams::paper_default());
     });
 
@@ -115,12 +151,12 @@ fn main() {
     let parts: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
     let mut g = vec![0f32; corpus.w * k];
     let dense_items = (corpus.w * k * nw) as f64;
-    bench("allreduce dense serial (old leader loop)", 20, dense_items, || {
+    bench(&mut recs, "allreduce dense serial (old leader loop)", 20, dense_items, || {
         g.fill(0.0);
         reduce_sum_into(&mut g, &partials);
         std::hint::black_box(&g);
     });
-    bench("allreduce dense parallel (chunked)", 20, dense_items, || {
+    bench(&mut recs, "allreduce dense parallel (chunked)", 20, dense_items, || {
         reduce_chunked(&cluster, None, &parts, &mut g);
         std::hint::black_box(&g);
     });
@@ -133,13 +169,42 @@ fn main() {
     let sub_parts: Vec<&[f32]> = sub_partials.iter().map(|p| p.as_slice()).collect();
     let mut red = vec![0f32; idx.len()];
     let sub_items = (idx.len() * nw) as f64;
-    bench("allreduce subset serial (packed)", 200, sub_items, || {
+    bench(&mut recs, "allreduce subset serial (packed)", 200, sub_items, || {
         red.fill(0.0);
         reduce_sum_into(&mut red, &sub_partials);
         std::hint::black_box(&red);
     });
-    bench("allreduce subset parallel (chunked)", 200, sub_items, || {
+    bench(&mut recs, "allreduce subset parallel (chunked)", 200, sub_items, || {
         reduce_chunked(&cluster, None, &sub_parts, &mut red);
         std::hint::black_box(&red);
     });
+
+    // --- machine-readable record for the cross-PR perf trajectory ---
+    let find = |recs: &[(String, f64)], name: &str| {
+        recs.iter().find(|(n, _)| n == name).map(|&(_, v)| v).unwrap_or(0.0)
+    };
+    let serial = find(&recs, "bp sweep (full, serial reference)");
+    let par = find(&recs, "bp sweep (full, doc-parallel)");
+    let speedup = if serial > 0.0 { par / serial } else { 0.0 };
+    let results = Json::Obj(
+        recs.into_iter().map(|(n, v)| (n, Json::Num(v))).collect(),
+    );
+    // same outer schema as tools/sweep_mirror.c (the no-rustc fallback
+    // generator), so cross-PR tooling reads one shape
+    let report = Json::obj(vec![
+        ("bench", Json::from("microbench")),
+        ("generator", Json::from("benches/microbench.rs")),
+        ("host", Json::obj(vec![("threads", Json::from(pool.pool_threads()))])),
+        ("corpus", Json::obj(vec![
+            ("docs", Json::from(corpus.docs())),
+            ("w", Json::from(corpus.w)),
+            ("nnz", Json::from(corpus.nnz())),
+            ("k", Json::from(k)),
+        ])),
+        ("full_sweep_speedup_vs_serial", Json::from(speedup)),
+        ("items_per_sec", results),
+    ]);
+    std::fs::write("BENCH_microbench.json", format!("{report}\n")).ok();
+    println!("\nfull-sweep speedup vs serial reference: {speedup:.2}x");
+    println!("wrote BENCH_microbench.json");
 }

@@ -9,6 +9,7 @@
 //! stays meaningful for N up to the paper's 1024.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// A pool of `n` logical workers.
@@ -41,6 +42,21 @@ impl Cluster {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The OS-thread budget of the leader-side pool (machine cores capped
+    /// by `max_threads`), independent of the logical worker count.
+    pub fn pool_threads(&self) -> usize {
+        self.pool_threads
+    }
+
+    /// Even split of the OS-thread pool across the logical workers a
+    /// bulk-synchronous [`Cluster::run`] executes concurrently (≥ 1): the
+    /// per-shard doc-block budget the coordinator hands to
+    /// `ShardBp::sweep_parallel`, so an N = 1 OBP run gets the whole
+    /// machine while an N = cores run stays one thread per worker.
+    pub fn doc_threads_per_worker(&self) -> usize {
+        (self.pool_threads / self.threads.max(1)).max(1)
     }
 
     /// Run `f(worker_id)` for every logical worker; returns the results
@@ -138,6 +154,76 @@ impl Cluster {
             }
         });
     }
+
+    /// Doc-block sibling of [`Cluster::run_on_chunks`]: run
+    /// `f(i, &mut blocks[i])` for every pre-built block task concurrently
+    /// on up to `budget` OS threads (0 = the full pool budget; values
+    /// above the pool are honored so tests can pin thread counts), with
+    /// work-stealing over the block list. Returns each block's measured
+    /// seconds, block order.
+    ///
+    /// Unlike `run_on_chunks`, the *caller* fixes the block boundaries
+    /// (the sweep engine derives them from NNZ counts), so `f` may carry
+    /// per-block mutable state and results stay machine-independent as
+    /// long as blocks are mutually independent.
+    pub fn run_on_doc_blocks<T, F>(
+        &self,
+        budget: usize,
+        blocks: &mut [T],
+        f: F,
+    ) -> Vec<f64>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = blocks.len();
+        let cap = if budget == 0 { self.pool_threads } else { budget };
+        let threads = cap.min(n).max(1);
+        let mut secs = vec![0f64; n];
+        if threads <= 1 {
+            for (i, (b, s)) in blocks.iter_mut().zip(secs.iter_mut()).enumerate() {
+                let t0 = Instant::now();
+                f(i, b);
+                *s = t0.elapsed().as_secs_f64();
+            }
+            return secs;
+        }
+        // per-block mutexes hand out the disjoint &mut views to whichever
+        // thread claims the block on the shared counter; each lock is
+        // uncontended (every index is claimed exactly once)
+        let cells: Vec<Mutex<&mut T>> = blocks.iter_mut().map(Mutex::new).collect();
+        let counter = AtomicUsize::new(0);
+        let fref = &f;
+        let cells_ref = &cells;
+        let counter_ref = &counter;
+        let mut collected: Vec<Vec<(usize, f64)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = counter_ref.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let mut guard = cells_ref[i].lock().unwrap();
+                            let t0 = Instant::now();
+                            fref(i, &mut **guard);
+                            local.push((i, t0.elapsed().as_secs_f64()));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for chunk in collected.drain(..) {
+            for (i, s) in chunk {
+                secs[i] = s;
+            }
+        }
+        secs
+    }
 }
 
 #[cfg(test)]
@@ -179,6 +265,29 @@ mod tests {
                 assert_eq!(v, i as f32, "n={n} len={len} slot {i}");
             }
         }
+    }
+
+    #[test]
+    fn doc_blocks_run_each_task_exactly_once_any_budget() {
+        for &budget in &[0usize, 1, 2, 8] {
+            let c = Cluster::new(1, 0);
+            let mut tasks: Vec<(usize, usize)> = (0..13).map(|i| (i, 0usize)).collect();
+            let secs = c.run_on_doc_blocks(budget, &mut tasks, |i, t| {
+                assert_eq!(t.0, i);
+                t.1 += 1;
+            });
+            assert_eq!(secs.len(), 13);
+            assert!(secs.iter().all(|&s| s >= 0.0));
+            assert!(tasks.iter().all(|t| t.1 == 1), "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn thread_budget_splits_pool_across_workers() {
+        let c = Cluster::new(1, 4);
+        assert_eq!(c.doc_threads_per_worker(), c.pool_threads());
+        let c = Cluster::new(64, 2);
+        assert_eq!(c.doc_threads_per_worker(), 1);
     }
 
     #[test]

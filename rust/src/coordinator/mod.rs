@@ -163,15 +163,29 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
 
         for t in 1..=cfg.max_iters {
             iters_run = t;
-            // --- parallel sweep (lines 6-8 / 15-20) ---
+            // --- doc-parallel sweep (lines 6-8 / 15-20): each worker
+            //     fans its shard's fixed NNZ-derived doc blocks over its
+            //     share of the OS-thread pool, so an N = 1 (OBP) run
+            //     saturates the whole machine instead of one core.
+            //     Residual clearing is folded into the sweep's merge. ---
+            let budget = cluster.doc_threads_per_worker();
             let phi_ref: &[f32] = &state.phi_eff;
             let tot_ref: &[f32] = state.phi_tot();
             let sel_ref = &selection;
-            let (_, secs) = cluster.run(|n| {
+            let (reports, _wall) = cluster.run(|n| {
                 let mut shard = shards[n].lock().unwrap();
-                shard.clear_selected_residuals(sel_ref);
-                shard.sweep(phi_ref, tot_ref, sel_ref, params, true)
+                shard.sweep_parallel(
+                    &cluster, budget, phi_ref, tot_ref, sel_ref, params, true,
+                )
             });
+            // per-worker compute from the per-block timings: the worker's
+            // own critical path on its thread budget, robust to the pool
+            // contention the raw closure wall clock would over-count when
+            // logical workers are multiplexed over fewer cores
+            let secs: Vec<f64> = reports
+                .iter()
+                .map(|(_, timing)| timing.critical_path_secs(budget))
+                .collect();
             ledger.record_compute(&secs);
 
             // --- synchronize Δφ̂ and r on the scheduled pairs (lines

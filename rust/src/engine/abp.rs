@@ -11,6 +11,7 @@
 //! This engine is single-processor batch (the paper's usage); POBP embeds
 //! the same word/topic scheduling in its MPA coordinator.
 
+use crate::comm::Cluster;
 use crate::corpus::Csr;
 use crate::engine::bp::{Selection, ShardBp};
 use crate::engine::traits::{IterStat, LdaParams, Model, TrainResult};
@@ -32,6 +33,12 @@ pub struct AbpConfig {
     pub converge_thresh: f64,
     pub converge_rel: f64,
     pub seed: u64,
+    /// OS threads for the whole-corpus t = 1 sweep (0 = all cores): ABP
+    /// is single-processor, but its full sweep still fans the fixed doc
+    /// blocks over idle cores (`ShardBp::sweep_parallel`, which also
+    /// hands back the per-doc residuals the scheduler needs). Scheduled
+    /// t ≥ 2 sweeps are residual-ordered and stay serial.
+    pub threads: usize,
 }
 
 impl Default for AbpConfig {
@@ -44,6 +51,7 @@ impl Default for AbpConfig {
             converge_thresh: 0.1,
             converge_rel: 0.01,
             seed: 42,
+            threads: 0,
         }
     }
 }
@@ -56,6 +64,7 @@ pub fn fit_abp(corpus: &Csr, params: &LdaParams, cfg: &AbpConfig) -> TrainResult
     let mut rng = Rng::new(cfg.seed);
     let mut shard = ShardBp::init(corpus.clone(), k, &mut rng);
     let docs = corpus.docs();
+    let pool = Cluster::new(1, cfg.threads);
     let mut ledger = crate::comm::Ledger::new(crate::comm::NetModel::infiniband_20gbps());
     let mut history = Vec::new();
 
@@ -84,10 +93,20 @@ pub fn fit_abp(corpus: &Csr, params: &LdaParams, cfg: &AbpConfig) -> TrainResult
         }
 
         let t0 = std::time::Instant::now();
-        shard.clear_selected_residuals(&selection);
-        for &d in &scheduled {
-            let rd = shard.sweep_doc(d as usize, &phi, &phi_tot, &selection, params, true);
-            r_doc[d as usize] = rd as f32;
+        if t == 1 {
+            // whole-corpus sweep: doc-parallel over the fixed blocks; the
+            // per-doc residuals come back from the same pass (residual
+            // clearing is folded into the sweep's merge)
+            shard.sweep_parallel(&pool, 0, &phi, &phi_tot, &selection, params, true);
+            for (rd, &v) in r_doc.iter_mut().zip(shard.doc_residuals()) {
+                *rd = v as f32;
+            }
+        } else {
+            shard.clear_selected_residuals(&selection);
+            let rds = shard.sweep_docs(&scheduled, &phi, &phi_tot, &selection, params, true);
+            for (&d, &rd) in scheduled.iter().zip(&rds) {
+                r_doc[d as usize] = rd as f32;
+            }
         }
         ledger.record_compute(&[t0.elapsed().as_secs_f64()]);
 

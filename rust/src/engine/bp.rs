@@ -12,8 +12,41 @@
 //! `python/compile/kernels/ref.py` for the shared contract): un-selected
 //! messages stay bitwise-frozen, so Δφ̂ and r change only on selected
 //! pairs and subset-only synchronization is exact.
+//!
+//! # Doc-parallel sweep engine
+//!
+//! The sweep is Jacobi: every entry update reads the frozen global φ̂ and
+//! the θ̂ snapshot of its *own* document only, so documents are
+//! independent except for the accumulate-only Δφ̂/r word rows. That makes
+//! the shard sweep doc-parallel: [`ShardBp::sweep_parallel`] partitions
+//! the documents into fixed blocks (boundaries derived from NNZ counts at
+//! init — *not* from the core count, so block structure is
+//! machine-independent), sweeps blocks concurrently on the [`Cluster`]
+//! thread pool ([`Cluster::run_on_doc_blocks`]), and routes each block's
+//! Δφ̂/r contributions into per-block scratch accumulators (one compact
+//! row per distinct word in the block). A deterministic merge then folds
+//! the scratch rows into the shard matrices **in ascending block order
+//! per word row**, so the floating-point accumulation order is a pure
+//! function of the data: results are bitwise reproducible on any machine
+//! at any thread count. μ, θ̂ and the per-document f64 residuals are
+//! bitwise identical to the serial sweep (documents own their rows; the
+//! residual total sums the per-doc partials in doc order); Δφ̂/r differ
+//! from the serial path only in summation association, bounded by the
+//! equivalence tests (`rust/tests/sweep_equiv.rs`) against the verbatim
+//! pre-fusion kernel kept as [`ShardBp::sweep_reference`] — the same
+//! oracle pattern the allreduce refactor used (`serial_reference_step`).
+//!
+//! The per-entry kernel itself ([`fused_update`]) is fused and
+//! SIMD-friendly: the score, mass and delta phases run as separate
+//! contiguous lane loops (pulling the mass reductions out of the score
+//! loop lets the divide vectorize), α/β/Wβ are hoisted per sweep into
+//! [`SweepCtx`], and the subset path reads packed per-word φ̂/φ̂_Σ gathers
+//! built once per sweep instead of strided per-entry gathers.
+
+use std::time::Instant;
 
 use crate::comm::allreduce::ReduceSource;
+use crate::comm::Cluster;
 use crate::corpus::Csr;
 use crate::engine::traits::LdaParams;
 use crate::sched::PowerSet;
@@ -76,6 +109,307 @@ impl Selection {
     }
 }
 
+/// Doc-block partition targets for the parallel sweep: blocks are cut
+/// when their NNZ count reaches `max(shard_nnz / DOC_BLOCK_MAX,
+/// DOC_BLOCK_MIN_NNZ)`. Both constants are data-only (no core counts), so
+/// the block structure — and therefore the merged floating-point order —
+/// is identical on every machine.
+const DOC_BLOCK_MAX: usize = 32;
+const DOC_BLOCK_MIN_NNZ: usize = 1024;
+
+/// Per-phase timing of one [`ShardBp::sweep_parallel`] call.
+#[derive(Clone, Debug, Default)]
+pub struct SweepTiming {
+    /// measured seconds of each doc block, block order
+    pub block_secs: Vec<f64>,
+    /// measured seconds of the deterministic scratch merge
+    pub merge_secs: f64,
+}
+
+impl SweepTiming {
+    /// Critical-path estimate of the sweep on `budget` dedicated threads:
+    /// the LPT lower bound `max(longest block, total / budget)` plus the
+    /// merge. The coordinator charges this instead of its own wall clock,
+    /// which over-counts queueing when several logical workers contend
+    /// for the same OS-thread pool.
+    pub fn critical_path_secs(&self, budget: usize) -> f64 {
+        let total: f64 = self.block_secs.iter().sum();
+        let longest = self.block_secs.iter().cloned().fold(0.0, f64::max);
+        longest.max(total / budget.max(1) as f64) + self.merge_secs
+    }
+}
+
+/// Per-sweep frozen context shared by every document: the global φ̂ and
+/// its topic totals, the selection, hoisted α/β/Wβ, and — for subset
+/// sweeps — the packed per-word φ̂/φ̂_Σ gathers at each selected word's
+/// topic list (`Selection::topic_off` layout), built once per sweep so
+/// the kernel's subset lanes read contiguous memory.
+struct SweepCtx<'a> {
+    k: usize,
+    phi_wk: &'a [f32],
+    phi_tot: &'a [f32],
+    sel: &'a Selection,
+    packed_phi: Vec<f32>,
+    packed_tot: Vec<f32>,
+    alpha: f32,
+    beta: f32,
+    wbeta: f32,
+    update_phi: bool,
+}
+
+impl<'a> SweepCtx<'a> {
+    fn new(
+        w: usize,
+        k: usize,
+        phi_wk: &'a [f32],
+        phi_tot: &'a [f32],
+        sel: &'a Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> SweepCtx<'a> {
+        debug_assert_eq!(phi_wk.len(), w * k);
+        let (mut packed_phi, mut packed_tot) = (Vec::new(), Vec::new());
+        if !sel.full {
+            let pairs = sel.topic_ids.len();
+            packed_phi = Vec::with_capacity(pairs);
+            packed_tot = Vec::with_capacity(pairs);
+            for wi in 0..w {
+                let lo = sel.topic_off[wi] as usize;
+                let hi = sel.topic_off[wi + 1] as usize;
+                for &t in &sel.topic_ids[lo..hi] {
+                    packed_phi.push(phi_wk[wi * k + t as usize]);
+                    packed_tot.push(phi_tot[t as usize]);
+                }
+            }
+        }
+        SweepCtx {
+            k,
+            phi_wk,
+            phi_tot,
+            sel,
+            packed_phi,
+            packed_tot,
+            alpha: p.alpha,
+            beta: p.beta,
+            wbeta: w as f32 * p.beta,
+            update_phi,
+        }
+    }
+}
+
+/// Per-traversal lane scratch: score lanes plus the packed μ/θ̂ gathers
+/// of the subset path. One per serial sweep, one per doc block.
+struct LaneBuf {
+    scores: Vec<f32>,
+    gmu: Vec<f32>,
+    gth: Vec<f32>,
+}
+
+impl LaneBuf {
+    fn new(k: usize) -> LaneBuf {
+        LaneBuf { scores: vec![0.0; k], gmu: vec![0.0; k], gth: vec![0.0; k] }
+    }
+}
+
+/// The fused Eq. 1/7 kernel for one non-zero entry (d, w), operating on
+/// caller-provided rows so the serial, inverted and doc-parallel paths
+/// all share it. Per-entry arithmetic is bit-for-bit the reference
+/// kernel's ([`ShardBp::sweep_doc_reference`]): every accumulator sees
+/// the same operations in the same order, only the loop *structure*
+/// changed (mass reductions pulled out of the elementwise lane loops so
+/// the divides and deltas vectorize).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fused_update(
+    ctx: &SweepCtx<'_>,
+    wi: usize,
+    x: f32,
+    mu: &mut [f32],
+    th_old: &[f32],
+    th: &mut [f32],
+    dphi_row: Option<&mut [f32]>,
+    r_row: &mut [f32],
+    lanes: &mut LaneBuf,
+) -> f64 {
+    let k = ctx.k;
+    let (alpha, beta, wbeta) = (ctx.alpha, ctx.beta, ctx.wbeta);
+    match ctx.sel.topics_of(wi) {
+        None => {
+            let mu = &mut mu[..k];
+            let th = &mut th[..k];
+            let th_old = &th_old[..k];
+            let phi_row = &ctx.phi_wk[wi * k..(wi + 1) * k];
+            let phi_tot = &ctx.phi_tot[..k];
+            let scores = &mut lanes.scores[..k];
+            // score phase: pure elementwise lanes (vectorizable)
+            for ((((s, &m), &to), &ph), &pt) in scores
+                .iter_mut()
+                .zip(mu.iter())
+                .zip(th_old)
+                .zip(phi_row)
+                .zip(phi_tot)
+            {
+                let c = x * m;
+                let th_m = (to - c).max(0.0) + alpha;
+                let ph_m = (ph - c).max(0.0) + beta;
+                let den = (pt - c).max(0.0) + wbeta;
+                *s = th_m * ph_m / den.max(1e-30);
+            }
+            let mass_new: f32 = scores.iter().sum();
+            let mass_old: f32 = mu.iter().sum();
+            if mass_new <= 0.0 || mass_old <= 0.0 {
+                return 0.0; // nothing to redistribute
+            }
+            let scale = mass_old / mass_new;
+            // delta phase: the rr values land back in the score lanes so
+            // the residual reduction stays out of the SIMD loop
+            if let Some(dp) = dphi_row {
+                let dp = &mut dp[..k];
+                for ((((s, m), t_), d_), r_) in scores
+                    .iter_mut()
+                    .zip(mu.iter_mut())
+                    .zip(th.iter_mut())
+                    .zip(dp.iter_mut())
+                    .zip(r_row.iter_mut())
+                {
+                    let new = *s * scale;
+                    let dm = new - *m;
+                    *m = new;
+                    *t_ += x * dm;
+                    *d_ += x * dm;
+                    let rr = x * dm.abs();
+                    *r_ += rr;
+                    *s = rr;
+                }
+            } else {
+                for (((s, m), t_), r_) in scores
+                    .iter_mut()
+                    .zip(mu.iter_mut())
+                    .zip(th.iter_mut())
+                    .zip(r_row.iter_mut())
+                {
+                    let new = *s * scale;
+                    let dm = new - *m;
+                    *m = new;
+                    *t_ += x * dm;
+                    let rr = x * dm.abs();
+                    *r_ += rr;
+                    *s = rr;
+                }
+            }
+            let rsum: f32 = scores.iter().sum();
+            rsum as f64
+        }
+        Some(ts) => {
+            let m_lanes = ts.len();
+            if m_lanes == 0 {
+                return 0.0;
+            }
+            let o0 = ctx.sel.topic_off[wi] as usize;
+            let o1 = ctx.sel.topic_off[wi + 1] as usize;
+            let pph = &ctx.packed_phi[o0..o1];
+            let ptot = &ctx.packed_tot[o0..o1];
+            let gmu = &mut lanes.gmu[..m_lanes];
+            let gth = &mut lanes.gth[..m_lanes];
+            for ((g, h), &t) in gmu.iter_mut().zip(gth.iter_mut()).zip(ts) {
+                let t = t as usize;
+                *g = mu[t];
+                *h = th_old[t];
+            }
+            let scores = &mut lanes.scores[..m_lanes];
+            for ((((s, &gm), &gt), &ph), &pt) in scores
+                .iter_mut()
+                .zip(gmu.iter())
+                .zip(gth.iter())
+                .zip(pph)
+                .zip(ptot)
+            {
+                let c = x * gm;
+                let th_m = (gt - c).max(0.0) + alpha;
+                let ph_m = (ph - c).max(0.0) + beta;
+                let den = (pt - c).max(0.0) + wbeta;
+                *s = th_m * ph_m / den.max(1e-30);
+            }
+            let mass_new: f32 = scores.iter().sum();
+            let mass_old: f32 = gmu.iter().sum();
+            if mass_new <= 0.0 || mass_old <= 0.0 {
+                return 0.0;
+            }
+            let scale = mass_old / mass_new;
+            let mut resid_sum = 0f64;
+            if let Some(dp) = dphi_row {
+                for ((&s, &gm), &t) in scores.iter().zip(gmu.iter()).zip(ts) {
+                    let t = t as usize;
+                    let new = s * scale;
+                    let dm = new - gm;
+                    mu[t] = new;
+                    th[t] += x * dm;
+                    dp[t] += x * dm;
+                    let rr = x * dm.abs();
+                    r_row[t] += rr;
+                    resid_sum += rr as f64;
+                }
+            } else {
+                for ((&s, &gm), &t) in scores.iter().zip(gmu.iter()).zip(ts) {
+                    let t = t as usize;
+                    let new = s * scale;
+                    let dm = new - gm;
+                    mu[t] = new;
+                    th[t] += x * dm;
+                    let rr = x * dm.abs();
+                    r_row[t] += rr;
+                    resid_sum += rr as f64;
+                }
+            }
+            resid_sum
+        }
+    }
+}
+
+/// Sweep one document against a prepared [`SweepCtx`]: snapshot its θ̂
+/// row (Jacobi), then run the fused kernel over its selected entries.
+/// Free function over explicit matrices so the serial and doc-parallel
+/// paths share it.
+#[allow(clippy::too_many_arguments)]
+fn sweep_doc_ctx(
+    data: &Csr,
+    ctx: &SweepCtx<'_>,
+    d: usize,
+    mu: &mut [f32],
+    theta: &mut [f32],
+    theta_old: &mut [f32],
+    dphi: &mut [f32],
+    r: &mut [f32],
+    lanes: &mut LaneBuf,
+) -> f64 {
+    let k = ctx.k;
+    theta_old[d * k..(d + 1) * k].copy_from_slice(&theta[d * k..(d + 1) * k]);
+    let mut resid = 0f64;
+    for idx in data.row_range(d) {
+        let wi = data.col[idx] as usize;
+        if !ctx.sel.word_sel[wi] {
+            continue;
+        }
+        let dphi_row = if ctx.update_phi {
+            Some(&mut dphi[wi * k..(wi + 1) * k])
+        } else {
+            None
+        };
+        resid += fused_update(
+            ctx,
+            wi,
+            data.val[idx],
+            &mut mu[idx * k..(idx + 1) * k],
+            &theta_old[d * k..(d + 1) * k],
+            &mut theta[d * k..(d + 1) * k],
+            dphi_row,
+            &mut r[wi * k..(wi + 1) * k],
+            lanes,
+        );
+    }
+    resid
+}
+
 /// Per-worker BP state over a document shard.
 pub struct ShardBp {
     pub k: usize,
@@ -88,7 +422,7 @@ pub struct ShardBp {
     pub dphi: Vec<f32>,
     /// fresh residuals of the last sweep, W × K word-major
     pub r: Vec<f32>,
-    /// scratch score buffer (K)
+    /// scratch score buffer (K) of the reference kernel
     scratch: Vec<f32>,
     /// θ̂ snapshot read during a sweep (Jacobi semantics, see `sweep`)
     theta_old: Vec<f32>,
@@ -99,6 +433,30 @@ pub struct ShardBp {
     by_word_idx: Vec<u32>,
     /// document of each non-zero entry (for the inverted traversal)
     nnz_doc: Vec<u32>,
+    // --- doc-parallel sweep engine (layout fixed at init; module doc) ---
+    /// doc-block boundaries (docs of block b: off[b]..off[b+1]); derived
+    /// from NNZ counts only, so machine-independent
+    block_doc_off: Vec<u32>,
+    /// per-block scratch-row offsets (block b owns scratch rows
+    /// off[b]..off[b+1]; one row per distinct word in the block)
+    block_row_off: Vec<u32>,
+    /// word of each scratch row (len = Σ_b distinct words of block b)
+    row_word: Vec<u32>,
+    /// block-local scratch row of each non-zero entry
+    nnz_row: Vec<u32>,
+    /// scratch rows of word w: merge_rows[merge_ptr[w]..merge_ptr[w+1]],
+    /// ascending == block order — the deterministic merge order
+    merge_ptr: Vec<u32>,
+    merge_rows: Vec<u32>,
+    /// merge-task word-range boundaries (≈ one range per block, balanced
+    /// by scratch-row count), fixed at init
+    merge_bounds: Vec<u32>,
+    /// per-block Δφ̂ / r accumulators (scratch-row-major, S × K), sized on
+    /// the first parallel sweep
+    scratch_dphi: Vec<f32>,
+    scratch_r: Vec<f32>,
+    /// per-doc residuals of the last whole-shard parallel sweep
+    resid_doc: Vec<f64>,
 }
 
 impl ShardBp {
@@ -137,6 +495,80 @@ impl ShardBp {
             }
         }
 
+        // --- doc-block partition for the parallel sweep: cut blocks on
+        //     cumulative NNZ so block structure is machine-independent ---
+        let target = (nnz.div_ceil(DOC_BLOCK_MAX)).max(DOC_BLOCK_MIN_NNZ);
+        let mut block_doc_off = vec![0u32];
+        let mut acc = 0usize;
+        for d in 0..docs {
+            acc += data.row_range(d).len();
+            if acc >= target && d + 1 < docs {
+                block_doc_off.push((d + 1) as u32);
+                acc = 0;
+            }
+        }
+        if docs > 0 {
+            block_doc_off.push(docs as u32);
+        }
+        let nblocks = block_doc_off.len() - 1;
+
+        // per-block distinct-word tables: one scratch row per (block,
+        // word) pair, plus the per-entry local row for O(1) routing
+        let mut block_row_off = vec![0u32; nblocks + 1];
+        let mut row_word: Vec<u32> = Vec::new();
+        let mut nnz_row = vec![0u32; nnz];
+        let mut stamp = vec![u32::MAX; w];
+        let mut local_of = vec![0u32; w];
+        for b in 0..nblocks {
+            let d0 = block_doc_off[b] as usize;
+            let d1 = block_doc_off[b + 1] as usize;
+            let mut count = 0u32;
+            for d in d0..d1 {
+                for idx in data.row_range(d) {
+                    let wi = data.col[idx] as usize;
+                    if stamp[wi] != b as u32 {
+                        stamp[wi] = b as u32;
+                        local_of[wi] = count;
+                        row_word.push(wi as u32);
+                        count += 1;
+                    }
+                    nnz_row[idx] = local_of[wi];
+                }
+            }
+            block_row_off[b + 1] = block_row_off[b] + count;
+        }
+        // merge plan: scratch rows of each word, ascending (= block order)
+        let mut merge_ptr = vec![0u32; w + 1];
+        for &wi in &row_word {
+            merge_ptr[wi as usize + 1] += 1;
+        }
+        for i in 0..w {
+            merge_ptr[i + 1] += merge_ptr[i];
+        }
+        let mut cur = merge_ptr.clone();
+        let mut merge_rows = vec![0u32; row_word.len()];
+        for (srow, &wi) in row_word.iter().enumerate() {
+            merge_rows[cur[wi as usize] as usize] = srow as u32;
+            cur[wi as usize] += 1;
+        }
+        // merge-task word ranges, balanced by scratch-row count (fixed at
+        // init like the blocks — the partition never changes, so the
+        // per-sweep merge pays no O(W) setup)
+        let srows_total = *block_row_off.last().unwrap() as usize;
+        let mut merge_bounds = vec![0u32];
+        if nblocks > 0 && w > 0 {
+            let per = srows_total.div_ceil(nblocks).max(1);
+            let mut racc = 0usize;
+            for wi in 0..w {
+                racc += (merge_ptr[wi + 1] - merge_ptr[wi]) as usize;
+                if racc >= per && wi + 1 < w {
+                    merge_bounds.push((wi + 1) as u32);
+                    racc = 0;
+                }
+            }
+            merge_bounds.push(w as u32);
+        }
+
         let mut s = ShardBp {
             k,
             data,
@@ -149,6 +581,16 @@ impl ShardBp {
             by_word_ptr,
             by_word_idx,
             nnz_doc,
+            block_doc_off,
+            block_row_off,
+            row_word,
+            nnz_row,
+            merge_ptr,
+            merge_rows,
+            merge_bounds,
+            scratch_dphi: Vec::new(),
+            scratch_r: Vec::new(),
+            resid_doc: vec![0.0; docs],
         };
         s.recompute_stats();
         s
@@ -178,6 +620,8 @@ impl ShardBp {
 
     /// Zero the fresh-residual entries of the selected pairs (before a
     /// sweep) so `r` holds exactly this iteration's Eq. (8) values there.
+    /// [`ShardBp::sweep_parallel`] folds this into its merge — do not
+    /// pre-clear on that path (it is harmless, just redundant).
     pub fn clear_selected_residuals(&mut self, sel: &Selection) {
         if sel.full {
             self.r.fill(0.0);
@@ -199,15 +643,16 @@ impl ShardBp {
         }
     }
 
-    /// One message-passing sweep over the shard (Fig. 4 lines 6–8 /
-    /// 15–20), reading the frozen global φ̂ (`phi_wk`, word-major) and its
-    /// topic totals. Returns the summed residual of the sweep.
+    /// One serial message-passing sweep over the shard (Fig. 4 lines
+    /// 6–8 / 15–20), reading the frozen global φ̂ (`phi_wk`, word-major)
+    /// and its topic totals. Returns the summed residual of the sweep.
     ///
     /// The sweep is **Jacobi** (synchronous): every message update reads
     /// the θ̂ of the *previous* iteration, matching the AOT-compiled L2
     /// dense graph bit-for-bit in structure (see rust/tests/golden.rs and
     /// rust/tests/xla_parity.rs) and the per-iteration synchronization
-    /// semantics of the paper's Fig. 4.
+    /// semantics of the paper's Fig. 4. Runs the fused kernel; results
+    /// are bitwise identical to [`ShardBp::sweep_reference`].
     ///
     /// `update_phi = false` freezes Δφ̂ (used for θ fold-in at evaluation
     /// time, where the heldout documents must not move the model).
@@ -225,11 +670,296 @@ impl ShardBp {
         // of the NNZ, so the skip savings are small while the inverted
         // walk loses θ̂ locality. Doc-order + bitmap skip is the winner;
         // the inverted path is kept for tail-heavy selections and tests.
+        let ctx =
+            SweepCtx::new(self.data.w, self.k, phi_wk, phi_tot, sel, p, update_phi);
+        let mut lanes = LaneBuf::new(self.k);
+        let data = &self.data;
         let mut resid_sum = 0f64;
-        for d in 0..self.data.docs() {
-            resid_sum += self.sweep_doc(d, phi_wk, phi_tot, sel, p, update_phi);
+        for d in 0..data.docs() {
+            resid_sum += sweep_doc_ctx(
+                data,
+                &ctx,
+                d,
+                &mut self.mu,
+                &mut self.theta,
+                &mut self.theta_old,
+                &mut self.dphi,
+                &mut self.r,
+                &mut lanes,
+            );
         }
         resid_sum
+    }
+
+    /// Doc-parallel sweep: the whole-shard sweep fanned over the fixed
+    /// doc blocks on up to `budget` OS threads of `pool` (0 = the full
+    /// pool; values above the pool are honored so tests can pin thread
+    /// counts). See the module doc for the determinism contract: μ, θ̂
+    /// and the returned residual are bitwise equal to [`ShardBp::sweep`];
+    /// Δφ̂/r rows are merged per word in ascending block order, so they
+    /// are bitwise reproducible at any thread count on any machine, and
+    /// equal to the serial path up to summation association.
+    ///
+    /// Folds `clear_selected_residuals` into the merge — callers must
+    /// *not* rely on pre-cleared residuals, and per-doc residuals of the
+    /// sweep are available afterwards via [`ShardBp::doc_residuals`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep_parallel(
+        &mut self,
+        pool: &Cluster,
+        budget: usize,
+        phi_wk: &[f32],
+        phi_tot: &[f32],
+        sel: &Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> (f64, SweepTiming) {
+        let k = self.k;
+        let nblocks = self.block_doc_off.len().saturating_sub(1);
+        if nblocks == 0 {
+            return (0.0, SweepTiming::default());
+        }
+        let srows = *self.block_row_off.last().unwrap() as usize;
+        if self.scratch_dphi.len() != srows * k {
+            self.scratch_dphi = vec![0.0; srows * k];
+            self.scratch_r = vec![0.0; srows * k];
+        }
+        let ctx = SweepCtx::new(self.data.w, k, phi_wk, phi_tot, sel, p, update_phi);
+
+        struct BlockTask<'a> {
+            d0: usize,
+            nnz0: usize,
+            mu: &'a mut [f32],
+            theta: &'a mut [f32],
+            theta_old: &'a mut [f32],
+            resid: &'a mut [f64],
+            sdphi: &'a mut [f32],
+            sr: &'a mut [f32],
+            /// words of this block's scratch rows, local-row order
+            words: &'a [u32],
+            lanes: LaneBuf,
+        }
+
+        // disjoint &mut views per block: docs (and their nnz rows) are
+        // contiguous, scratch rows are grouped by block
+        let data = &self.data;
+        let nnz_row = &self.nnz_row;
+        let mut tasks: Vec<BlockTask<'_>> = Vec::with_capacity(nblocks);
+        {
+            let mut mu_rest = &mut self.mu[..];
+            let mut th_rest = &mut self.theta[..];
+            let mut tho_rest = &mut self.theta_old[..];
+            let mut rd_rest = &mut self.resid_doc[..];
+            let mut sd_rest = &mut self.scratch_dphi[..];
+            let mut sr_rest = &mut self.scratch_r[..];
+            let mut words_rest = &self.row_word[..];
+            for b in 0..nblocks {
+                let d0 = self.block_doc_off[b] as usize;
+                let d1 = self.block_doc_off[b + 1] as usize;
+                let nnz0 = data.row_ptr[d0] as usize;
+                let nnz1 = data.row_ptr[d1] as usize;
+                let rows =
+                    (self.block_row_off[b + 1] - self.block_row_off[b]) as usize;
+                let (mu_b, rest) = mu_rest.split_at_mut((nnz1 - nnz0) * k);
+                mu_rest = rest;
+                let (th_b, rest) = th_rest.split_at_mut((d1 - d0) * k);
+                th_rest = rest;
+                let (tho_b, rest) = tho_rest.split_at_mut((d1 - d0) * k);
+                tho_rest = rest;
+                let (rd_b, rest) = rd_rest.split_at_mut(d1 - d0);
+                rd_rest = rest;
+                let (sd_b, rest) = sd_rest.split_at_mut(rows * k);
+                sd_rest = rest;
+                let (sr_b, rest) = sr_rest.split_at_mut(rows * k);
+                sr_rest = rest;
+                let (w_b, rest) = words_rest.split_at(rows);
+                words_rest = rest;
+                tasks.push(BlockTask {
+                    d0,
+                    nnz0,
+                    mu: mu_b,
+                    theta: th_b,
+                    theta_old: tho_b,
+                    resid: rd_b,
+                    sdphi: sd_b,
+                    sr: sr_b,
+                    words: w_b,
+                    lanes: LaneBuf::new(k),
+                });
+            }
+        }
+
+        // Small shards degenerate gracefully: one block (or budget 1)
+        // takes run_on_doc_blocks' serial path — no threads, no mutexes.
+        let block_secs = pool.run_on_doc_blocks(budget, &mut tasks, |_b, t| {
+            // zero this sweep's selected scratch rows (zero-at-start
+            // protocol: rows stay dirty between sweeps; every sweep
+            // cleans exactly the lanes it will write and merge)
+            for (lr, &wr) in t.words.iter().enumerate() {
+                let wi = wr as usize;
+                if !ctx.sel.word_sel[wi] {
+                    continue;
+                }
+                match ctx.sel.topics_of(wi) {
+                    None => {
+                        if ctx.update_phi {
+                            t.sdphi[lr * k..(lr + 1) * k].fill(0.0);
+                        }
+                        t.sr[lr * k..(lr + 1) * k].fill(0.0);
+                    }
+                    Some(ts) => {
+                        for &tt in ts {
+                            if ctx.update_phi {
+                                t.sdphi[lr * k + tt as usize] = 0.0;
+                            }
+                            t.sr[lr * k + tt as usize] = 0.0;
+                        }
+                    }
+                }
+            }
+            // NOTE: this is sweep_doc_ctx's traversal with block-local
+            // rows (mu/θ̂ offset by the block base, Δφ̂/r routed to scratch
+            // rows) — a protocol change there must be mirrored here, and
+            // sweep_equiv's bitwise tests will catch a mismatch.
+            let ndocs = t.resid.len();
+            for ld in 0..ndocs {
+                let d = t.d0 + ld;
+                t.theta_old[ld * k..(ld + 1) * k]
+                    .copy_from_slice(&t.theta[ld * k..(ld + 1) * k]);
+                let mut resid = 0f64;
+                for idx in data.row_range(d) {
+                    let wi = data.col[idx] as usize;
+                    if !ctx.sel.word_sel[wi] {
+                        continue;
+                    }
+                    let lr = nnz_row[idx] as usize;
+                    let li = idx - t.nnz0;
+                    let dphi_row = if ctx.update_phi {
+                        Some(&mut t.sdphi[lr * k..(lr + 1) * k])
+                    } else {
+                        None
+                    };
+                    resid += fused_update(
+                        &ctx,
+                        wi,
+                        data.val[idx],
+                        &mut t.mu[li * k..(li + 1) * k],
+                        &t.theta_old[ld * k..(ld + 1) * k],
+                        &mut t.theta[ld * k..(ld + 1) * k],
+                        dphi_row,
+                        &mut t.sr[lr * k..(lr + 1) * k],
+                        &mut t.lanes,
+                    );
+                }
+                t.resid[ld] = resid;
+            }
+        });
+        drop(tasks);
+
+        // --- deterministic merge: per word row, fold scratch rows in
+        //     ascending block order; parallel over word ranges (safe:
+        //     each output row depends only on its own word's rows) ---
+        let t0 = Instant::now();
+        struct MergeTask<'a> {
+            w0: usize,
+            dphi: &'a mut [f32],
+            r: &'a mut [f32],
+        }
+        let mut mtasks: Vec<MergeTask<'_>> =
+            Vec::with_capacity(self.merge_bounds.len());
+        {
+            let mut dp_rest = &mut self.dphi[..];
+            let mut r_rest = &mut self.r[..];
+            let mut prev = 0usize;
+            for &b in &self.merge_bounds[1..] {
+                let b = b as usize;
+                let (dp_b, rest) = dp_rest.split_at_mut((b - prev) * k);
+                dp_rest = rest;
+                let (r_b, rest) = r_rest.split_at_mut((b - prev) * k);
+                r_rest = rest;
+                mtasks.push(MergeTask { w0: prev, dphi: dp_b, r: r_b });
+                prev = b;
+            }
+        }
+        let merge_ptr = &self.merge_ptr;
+        let merge_rows = &self.merge_rows;
+        let sdphi = &self.scratch_dphi;
+        let sr = &self.scratch_r;
+        pool.run_on_doc_blocks(budget, &mut mtasks, |_i, mt| {
+            let nw = mt.r.len() / k;
+            for ww in 0..nw {
+                let wi = mt.w0 + ww;
+                if !ctx.sel.word_sel[wi] {
+                    continue;
+                }
+                let rows = &merge_rows
+                    [merge_ptr[wi] as usize..merge_ptr[wi + 1] as usize];
+                match ctx.sel.topics_of(wi) {
+                    None => {
+                        let rrow = &mut mt.r[ww * k..(ww + 1) * k];
+                        rrow.fill(0.0);
+                        for &srow in rows {
+                            let base = srow as usize * k;
+                            let src = &sr[base..base + k];
+                            for (o, &v) in rrow.iter_mut().zip(src) {
+                                *o += v;
+                            }
+                        }
+                        if ctx.update_phi {
+                            let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
+                            for &srow in rows {
+                                let base = srow as usize * k;
+                                let src = &sdphi[base..base + k];
+                                for (o, &v) in drow.iter_mut().zip(src) {
+                                    *o += v;
+                                }
+                            }
+                        }
+                    }
+                    Some(ts) => {
+                        let rrow = &mut mt.r[ww * k..(ww + 1) * k];
+                        for &tt in ts {
+                            rrow[tt as usize] = 0.0;
+                        }
+                        for &srow in rows {
+                            let base = srow as usize * k;
+                            for &tt in ts {
+                                rrow[tt as usize] += sr[base + tt as usize];
+                            }
+                        }
+                        if ctx.update_phi {
+                            let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
+                            for &srow in rows {
+                                let base = srow as usize * k;
+                                for &tt in ts {
+                                    drow[tt as usize] += sdphi[base + tt as usize];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        let merge_secs = t0.elapsed().as_secs_f64();
+
+        // per-doc f64 partials summed in doc order: bitwise equal to the
+        // serial doc loop's accumulation
+        let resid: f64 = self.resid_doc.iter().sum();
+        (resid, SweepTiming { block_secs, merge_secs })
+    }
+
+    /// Per-doc residuals of the last [`ShardBp::sweep_parallel`] call,
+    /// indexed by shard-local document id — the ABP scheduling signal
+    /// without a second pass.
+    pub fn doc_residuals(&self) -> &[f64] {
+        &self.resid_doc
+    }
+
+    /// Non-zero entries of word `wi` in this shard, from the inverted
+    /// index (O(1); the microbench work-item accounting uses this instead
+    /// of a per-doc binary-search scan).
+    pub fn word_entries(&self, wi: usize) -> usize {
+        (self.by_word_ptr[wi + 1] - self.by_word_ptr[wi]) as usize
     }
 
     /// Subset sweep through the inverted index: touches only the selected
@@ -237,8 +967,12 @@ impl ShardBp {
     /// Jacobi-equivalent to the doc-order path: entries are visited once,
     /// scores read the θ̂ snapshot, and per-row float accumulation order
     /// is identical (CSR rows are word-sorted; the index is doc-sorted
-    /// within each word). Beneficial only when the selection misses the
-    /// Zipf head — see the §Perf note in [`ShardBp::sweep`].
+    /// within each word), so the state it leaves is bitwise equal to
+    /// [`ShardBp::sweep`]'s — only the f64 residual *total* differs in
+    /// association. Runs the fused kernel; the packed φ̂ gathers pay off
+    /// here because each word's lanes are reused across all its entries.
+    /// Beneficial only when the selection misses the Zipf head — see the
+    /// §Perf note in [`ShardBp::sweep`].
     pub fn sweep_selected(
         &mut self,
         phi_wk: &[f32],
@@ -249,9 +983,13 @@ impl ShardBp {
     ) -> f64 {
         debug_assert!(!sel.full);
         self.theta_old.copy_from_slice(&self.theta);
+        let ctx =
+            SweepCtx::new(self.data.w, self.k, phi_wk, phi_tot, sel, p, update_phi);
+        let mut lanes = LaneBuf::new(self.k);
         let k = self.k;
+        let data = &self.data;
         let mut resid_sum = 0f64;
-        for wi in 0..self.data.w {
+        for wi in 0..data.w {
             if !sel.word_sel[wi] {
                 continue;
             }
@@ -260,18 +998,112 @@ impl ShardBp {
             for pos in lo..hi {
                 let idx = self.by_word_idx[pos] as usize;
                 let d = self.nnz_doc[idx] as usize;
-                resid_sum += self.update_entry(d, idx, wi, phi_wk, phi_tot, sel, p, update_phi);
+                let dphi_row = if ctx.update_phi {
+                    Some(&mut self.dphi[wi * k..(wi + 1) * k])
+                } else {
+                    None
+                };
+                resid_sum += fused_update(
+                    &ctx,
+                    wi,
+                    data.val[idx],
+                    &mut self.mu[idx * k..(idx + 1) * k],
+                    &self.theta_old[d * k..(d + 1) * k],
+                    &mut self.theta[d * k..(d + 1) * k],
+                    dphi_row,
+                    &mut self.r[wi * k..(wi + 1) * k],
+                    &mut lanes,
+                );
             }
         }
-        let _ = k;
         resid_sum
     }
 
     /// Sweep a single document (the ABP active-scheduling granule; also
     /// the unit `sweep` iterates). Takes this doc's own Jacobi θ̂
     /// snapshot — documents only read their own θ̂ row, so per-doc
-    /// snapshots are equivalent to a whole-shard snapshot.
+    /// snapshots are equivalent to a whole-shard snapshot. Builds the
+    /// sweep context per call; schedulers sweeping many docs against one
+    /// frozen φ̂ should prefer [`ShardBp::sweep_docs`].
     pub fn sweep_doc(
+        &mut self,
+        d: usize,
+        phi_wk: &[f32],
+        phi_tot: &[f32],
+        sel: &Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> f64 {
+        let ctx =
+            SweepCtx::new(self.data.w, self.k, phi_wk, phi_tot, sel, p, update_phi);
+        let mut lanes = LaneBuf::new(self.k);
+        sweep_doc_ctx(
+            &self.data,
+            &ctx,
+            d,
+            &mut self.mu,
+            &mut self.theta,
+            &mut self.theta_old,
+            &mut self.dphi,
+            &mut self.r,
+            &mut lanes,
+        )
+    }
+
+    /// Sweep a scheduled document list against one frozen φ̂, returning
+    /// each document's residual (aligned with `docs`). One context build
+    /// for the whole list — the ABP inner loop.
+    pub fn sweep_docs(
+        &mut self,
+        docs: &[u32],
+        phi_wk: &[f32],
+        phi_tot: &[f32],
+        sel: &Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> Vec<f64> {
+        let ctx =
+            SweepCtx::new(self.data.w, self.k, phi_wk, phi_tot, sel, p, update_phi);
+        let mut lanes = LaneBuf::new(self.k);
+        let data = &self.data;
+        let mut out = Vec::with_capacity(docs.len());
+        for &d in docs {
+            out.push(sweep_doc_ctx(
+                data,
+                &ctx,
+                d as usize,
+                &mut self.mu,
+                &mut self.theta,
+                &mut self.theta_old,
+                &mut self.dphi,
+                &mut self.r,
+                &mut lanes,
+            ));
+        }
+        out
+    }
+
+    /// The pre-fusion serial sweep, kept verbatim as the equivalence-test
+    /// oracle (the `serial_reference_step` pattern of the allreduce
+    /// subsystem): doc loop over [`ShardBp::sweep_doc_reference`].
+    pub fn sweep_reference(
+        &mut self,
+        phi_wk: &[f32],
+        phi_tot: &[f32],
+        sel: &Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> f64 {
+        let mut resid_sum = 0f64;
+        for d in 0..self.data.docs() {
+            resid_sum +=
+                self.sweep_doc_reference(d, phi_wk, phi_tot, sel, p, update_phi);
+        }
+        resid_sum
+    }
+
+    /// Pre-fusion single-document sweep (reference kernel, verbatim).
+    pub fn sweep_doc_reference(
         &mut self,
         d: usize,
         phi_wk: &[f32],
@@ -298,6 +1130,8 @@ impl ShardBp {
     /// scores over the selected topics, mass-preserving renormalization,
     /// θ̂/Δφ̂/r delta propagation. Reads the `theta_old` Jacobi snapshot —
     /// callers must have snapshotted the row (or the whole matrix) first.
+    /// This is the pre-fusion reference kernel; the hot paths run
+    /// [`fused_update`], which reproduces it bit-for-bit.
     #[allow(clippy::too_many_arguments)]
     #[inline]
     fn update_entry(
@@ -442,7 +1276,7 @@ impl ShardBp {
     /// Per-document residual totals of the last sweep’s fresh residuals —
     /// the ABP document-scheduling signal (r_d = Σ_{w∈d} r_{w,d}).
     /// Computed from messages vs a recomputation is expensive, so ABP
-    /// tracks it via [`ShardBp::sweep_doc`] return values instead; this
+    /// tracks it via [`ShardBp::sweep_docs`] return values instead; this
     /// helper exists for invariants/tests.
     pub fn doc_tokens(&self, d: usize) -> f64 {
         let (_, vs) = self.data.row(d);
@@ -635,5 +1469,51 @@ mod tests {
         assert_eq!(sel.topics_of(2).unwrap(), &[1, 3]);
         assert_eq!(sel.topics_of(0).unwrap(), &[0]);
         assert!(sel.topics_of(1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn doc_blocks_partition_and_merge_plan_consistent() {
+        let (s, _) = small_shard(7);
+        let nblocks = s.block_doc_off.len() - 1;
+        assert!(nblocks >= 1);
+        assert_eq!(s.block_doc_off[0], 0);
+        assert_eq!(*s.block_doc_off.last().unwrap() as usize, s.data.docs());
+        for b in 0..nblocks {
+            assert!(s.block_doc_off[b] < s.block_doc_off[b + 1], "empty block {b}");
+        }
+        // every entry's scratch row names the entry's own word
+        for b in 0..nblocks {
+            let (d0, d1) = (s.block_doc_off[b] as usize, s.block_doc_off[b + 1] as usize);
+            let base = s.block_row_off[b] as usize;
+            for d in d0..d1 {
+                for idx in s.data.row_range(d) {
+                    let srow = base + s.nnz_row[idx] as usize;
+                    assert_eq!(s.row_word[srow], s.data.col[idx]);
+                }
+            }
+        }
+        // merge lists: ascending scratch rows (= block order), word-consistent
+        for wi in 0..s.data.w {
+            let rows =
+                &s.merge_rows[s.merge_ptr[wi] as usize..s.merge_ptr[wi + 1] as usize];
+            for pair in rows.windows(2) {
+                assert!(pair[0] < pair[1]);
+            }
+            for &srow in rows {
+                assert_eq!(s.row_word[srow as usize] as usize, wi);
+            }
+        }
+        // scratch rows partition exactly across blocks
+        assert_eq!(
+            *s.block_row_off.last().unwrap() as usize,
+            s.row_word.len()
+        );
+        assert_eq!(s.merge_rows.len(), s.row_word.len());
+        // merge-task word ranges cover the vocabulary exactly once
+        assert_eq!(s.merge_bounds[0], 0);
+        assert_eq!(*s.merge_bounds.last().unwrap() as usize, s.data.w);
+        for pair in s.merge_bounds.windows(2) {
+            assert!(pair[0] < pair[1]);
+        }
     }
 }

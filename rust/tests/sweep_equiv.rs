@@ -1,0 +1,357 @@
+//! Equivalence and determinism tests for the doc-parallel sweep engine
+//! (engine::bp): the fused serial kernel must match the pre-fusion
+//! reference sweep bitwise; the doc-parallel sweep must match it exactly
+//! on μ/θ̂/residual (documents own their rows; per-doc f64 partials are
+//! summed in doc order), within tight tolerances on the block-merged
+//! Δφ̂/r, bitwise on frozen un-selected pairs, and bitwise-reproducibly
+//! across thread budgets {1, 2, 8} and repeated runs.
+
+use pobp::comm::Cluster;
+use pobp::engine::bp::{Selection, ShardBp};
+use pobp::engine::traits::LdaParams;
+use pobp::sched::{select_power, PowerParams};
+use pobp::synth::{generate, SynthSpec};
+use pobp::util::rng::Rng;
+
+const K: usize = 8;
+
+/// Fresh shard from a pinned seed: two calls give bitwise-identical
+/// state. Sized well past the block-partition threshold so the parallel
+/// engine genuinely runs multiple doc blocks.
+fn fresh_shard(seed: u64) -> ShardBp {
+    let spec = SynthSpec { docs: 400, ..SynthSpec::tiny(seed) };
+    let corpus = generate(&spec).corpus;
+    let mut rng = Rng::new(seed);
+    ShardBp::init(corpus, K, &mut rng)
+}
+
+fn phi_of(shard: &ShardBp) -> (Vec<f32>, Vec<f32>) {
+    let phi = shard.dphi.clone();
+    let mut tot = vec![0f32; shard.k];
+    for row in phi.chunks_exact(shard.k) {
+        for (t, &v) in row.iter().enumerate() {
+            tot[t] += v;
+        }
+    }
+    (phi, tot)
+}
+
+/// Copy the synchronizable state of `src` into `dst` (same corpus/seed
+/// required). θ̂_old needs no copy: every sweep re-snapshots it.
+fn resync(dst: &mut ShardBp, src: &ShardBp) {
+    dst.mu.copy_from_slice(&src.mu);
+    dst.theta.copy_from_slice(&src.theta);
+    dst.dphi.copy_from_slice(&src.dphi);
+    dst.r.copy_from_slice(&src.r);
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x == y, "{what}[{i}]: {x} vs {y} (bitwise)");
+    }
+}
+
+/// |a - b| ≤ tol · max(|a|, |b|, 1) per element — the merge-association
+/// bound for the block-summed Δφ̂/r matrices.
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+fn mass(v: &[f32]) -> f64 {
+    v.iter().map(|&x| x as f64).sum()
+}
+
+/// A non-trivial power selection derived from a warmed-up shard.
+fn warmed_selection(shard: &mut ShardBp, p: &LdaParams) -> Selection {
+    let sel_f = Selection::full(shard.data.w);
+    let (phi, tot) = phi_of(shard);
+    shard.clear_selected_residuals(&sel_f);
+    shard.sweep(&phi, &tot, &sel_f, p, true);
+    let ps = select_power(
+        &shard.r,
+        shard.data.w,
+        shard.k,
+        &PowerParams { lambda_w: 0.2, lambda_k_times_k: 3 },
+    );
+    Selection::from_power(&ps, shard.data.w)
+}
+
+#[test]
+fn fused_serial_matches_reference_bitwise() {
+    let p = LdaParams::paper(K);
+    // full then power selection, multi-iteration: the fused kernel must
+    // reproduce the pre-fusion reference kernel bit-for-bit
+    let mut a = fresh_shard(31); // reference
+    let mut b = fresh_shard(31); // fused
+    let w = a.data.w;
+    let mut sel = Selection::full(w);
+    for round in 0..4 {
+        let (phi, tot) = phi_of(&a);
+        a.clear_selected_residuals(&sel);
+        let ra = a.sweep_reference(&phi, &tot, &sel, &p, true);
+        b.clear_selected_residuals(&sel);
+        let rb = b.sweep(&phi, &tot, &sel, &p, true);
+        assert!(ra == rb, "round {round}: residual {ra} vs {rb}");
+        assert_bitwise(&a.mu, &b.mu, "mu");
+        assert_bitwise(&a.theta, &b.theta, "theta");
+        assert_bitwise(&a.dphi, &b.dphi, "dphi");
+        assert_bitwise(&a.r, &b.r, "r");
+        let ps = select_power(
+            &a.r, w, K,
+            &PowerParams { lambda_w: 0.25, lambda_k_times_k: 4 },
+        );
+        sel = Selection::from_power(&ps, w);
+    }
+}
+
+#[test]
+fn inverted_sweep_matches_fused_doc_order_bitwise() {
+    // same entries, same per-row accumulation order — only the f64
+    // residual total associates differently
+    let p = LdaParams::paper(K);
+    let mut a = fresh_shard(37);
+    let mut b = fresh_shard(37);
+    let sel = warmed_selection(&mut a, &p);
+    {
+        let (phi, tot) = phi_of(&b);
+        let sel_f = Selection::full(b.data.w);
+        b.clear_selected_residuals(&sel_f);
+        b.sweep(&phi, &tot, &sel_f, &p, true);
+    }
+    let (phi, tot) = phi_of(&a);
+    a.clear_selected_residuals(&sel);
+    let ra = a.sweep(&phi, &tot, &sel, &p, true);
+    b.clear_selected_residuals(&sel);
+    let rb = b.sweep_selected(&phi, &tot, &sel, &p, true);
+    assert_bitwise(&a.mu, &b.mu, "mu");
+    assert_bitwise(&a.theta, &b.theta, "theta");
+    assert_bitwise(&a.dphi, &b.dphi, "dphi");
+    assert_bitwise(&a.r, &b.r, "r");
+    let scale = ra.abs().max(1.0);
+    assert!((ra - rb).abs() < 1e-9 * scale, "residual {ra} vs {rb}");
+}
+
+/// Core tentpole contract: parallel vs serial at budgets {1, 2, 8}, full
+/// selection, multi-iteration with resync so every round compares one
+/// sweep from identical state.
+#[test]
+fn parallel_matches_serial_full_selection() {
+    let p = LdaParams::paper(K);
+    for &budget in &[1usize, 2, 8] {
+        let pool = Cluster::new(1, 0);
+        let mut ser = fresh_shard(41);
+        let mut par = fresh_shard(41);
+        let sel = Selection::full(ser.data.w);
+        for round in 0..3 {
+            resync(&mut par, &ser);
+            let (phi, tot) = phi_of(&ser);
+            ser.clear_selected_residuals(&sel);
+            let rs = ser.sweep_reference(&phi, &tot, &sel, &p, true);
+            let (rp, timing) =
+                par.sweep_parallel(&pool, budget, &phi, &tot, &sel, &p, true);
+            // documents own μ/θ̂ and the residual partials: bitwise
+            assert_bitwise(&ser.mu, &par.mu, "mu");
+            assert_bitwise(&ser.theta, &par.theta, "theta");
+            assert!(
+                rs == rp,
+                "budget {budget} round {round}: residual {rs} vs {rp}"
+            );
+            // block-merged accumulations: association-bounded
+            assert_close(&ser.dphi, &par.dphi, 2e-4, "dphi");
+            assert_close(&ser.r, &par.r, 2e-4, "r");
+            let (ms, mp) = (mass(&ser.dphi), mass(&par.dphi));
+            assert!(
+                (ms - mp).abs() <= 1e-5 * ms.abs().max(1.0),
+                "dphi mass {ms} vs {mp}"
+            );
+            assert!(!timing.block_secs.is_empty());
+            assert!(timing.block_secs.len() > 1, "want >1 doc block for a real test");
+        }
+    }
+}
+
+#[test]
+fn parallel_matches_serial_power_selection_and_freezes_unselected() {
+    let p = LdaParams::paper(K);
+    for &budget in &[1usize, 2, 8] {
+        let pool = Cluster::new(1, 0);
+        let mut ser = fresh_shard(43);
+        let sel = warmed_selection(&mut ser, &p);
+        let mut par = fresh_shard(43);
+        resync(&mut par, &ser);
+
+        let mu_before = ser.mu.clone();
+        let dphi_before = ser.dphi.clone();
+        let r_before = ser.r.clone();
+
+        let (phi, tot) = phi_of(&ser);
+        ser.clear_selected_residuals(&sel);
+        let rs = ser.sweep_reference(&phi, &tot, &sel, &p, true);
+        let (rp, _) = par.sweep_parallel(&pool, budget, &phi, &tot, &sel, &p, true);
+
+        assert_bitwise(&ser.mu, &par.mu, "mu");
+        assert_bitwise(&ser.theta, &par.theta, "theta");
+        assert!(rs == rp, "budget {budget}: residual {rs} vs {rp}");
+        assert_close(&ser.dphi, &par.dphi, 2e-4, "dphi");
+        assert_close(&ser.r, &par.r, 2e-4, "r");
+
+        // frozen un-selected pairs: exact (acceptance contract)
+        let k = par.k;
+        for wi in 0..par.data.w {
+            match sel.topics_of(wi) {
+                Some(ts) if sel.word_sel[wi] => {
+                    let selset: std::collections::HashSet<usize> =
+                        ts.iter().map(|&t| t as usize).collect();
+                    for t in 0..k {
+                        if !selset.contains(&t) {
+                            assert!(
+                                par.dphi[wi * k + t] == dphi_before[wi * k + t],
+                                "unselected topic moved: w{wi} t{t}"
+                            );
+                            assert!(
+                                par.r[wi * k + t] == r_before[wi * k + t],
+                                "unselected residual moved: w{wi} t{t}"
+                            );
+                        }
+                    }
+                }
+                _ => {
+                    for t in 0..k {
+                        assert!(
+                            par.dphi[wi * k + t] == dphi_before[wi * k + t],
+                            "unselected word moved: w{wi} t{t}"
+                        );
+                        assert!(
+                            par.r[wi * k + t] == r_before[wi * k + t],
+                            "unselected word residual moved: w{wi} t{t}"
+                        );
+                    }
+                }
+            }
+        }
+        // messages of un-selected words bitwise frozen
+        for d in 0..par.data.docs() {
+            for idx in par.data.row_range(d) {
+                let wi = par.data.col[idx] as usize;
+                if !sel.word_sel[wi] {
+                    assert_bitwise(
+                        &par.mu[idx * k..(idx + 1) * k],
+                        &mu_before[idx * k..(idx + 1) * k],
+                        "frozen mu row",
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The determinism contract: block boundaries come from NNZ counts, the
+/// merge folds in block order, so the parallel result is bitwise
+/// identical across thread budgets and across repeated runs.
+#[test]
+fn parallel_bitwise_reproducible_across_budgets_and_runs() {
+    let p = LdaParams::paper(K);
+    let run = |budget: usize| -> ShardBp {
+        let pool = Cluster::new(1, 0);
+        let mut s = fresh_shard(47);
+        let w = s.data.w;
+        let mut sel = Selection::full(w);
+        for _ in 0..4 {
+            let (phi, tot) = phi_of(&s);
+            s.sweep_parallel(&pool, budget, &phi, &tot, &sel, &p, true);
+            let ps = select_power(
+                &s.r, w, K,
+                &PowerParams { lambda_w: 0.3, lambda_k_times_k: 4 },
+            );
+            sel = Selection::from_power(&ps, w);
+        }
+        s
+    };
+    let base = run(1);
+    for &budget in &[1usize, 2, 8] {
+        let other = run(budget);
+        assert_bitwise(&base.mu, &other.mu, "mu");
+        assert_bitwise(&base.theta, &other.theta, "theta");
+        assert_bitwise(&base.dphi, &other.dphi, "dphi");
+        assert_bitwise(&base.r, &other.r, "r");
+    }
+}
+
+/// ABP granule contract: `sweep_docs` (one context, fused kernel) returns
+/// per-doc residuals and leaves state bitwise equal to the pre-fusion
+/// per-doc reference loop over the same schedule.
+#[test]
+fn abp_doc_granule_residuals_unchanged() {
+    let p = LdaParams::paper(K);
+    let mut a = fresh_shard(53);
+    let sel = warmed_selection(&mut a, &p);
+    let mut b = fresh_shard(53);
+    resync(&mut b, &a);
+
+    let scheduled: Vec<u32> =
+        (0..a.data.docs() as u32).filter(|d| d % 3 != 1).collect();
+    let (phi, tot) = phi_of(&a);
+
+    a.clear_selected_residuals(&sel);
+    let mut ref_resid = Vec::with_capacity(scheduled.len());
+    for &d in &scheduled {
+        ref_resid.push(a.sweep_doc_reference(d as usize, &phi, &tot, &sel, &p, true));
+    }
+
+    b.clear_selected_residuals(&sel);
+    let fused_resid = b.sweep_docs(&scheduled, &phi, &tot, &sel, &p, true);
+
+    assert_eq!(ref_resid.len(), fused_resid.len());
+    for (i, (x, y)) in ref_resid.iter().zip(&fused_resid).enumerate() {
+        assert!(x == y, "doc {}: residual {x} vs {y}", scheduled[i]);
+    }
+    assert_bitwise(&a.mu, &b.mu, "mu");
+    assert_bitwise(&a.theta, &b.theta, "theta");
+    assert_bitwise(&a.dphi, &b.dphi, "dphi");
+    assert_bitwise(&a.r, &b.r, "r");
+}
+
+/// The parallel sweep's per-doc residuals must equal the serial per-doc
+/// returns (the signal ABP's t = 1 consumes without a second pass).
+#[test]
+fn parallel_doc_residuals_match_serial_per_doc_returns() {
+    let p = LdaParams::paper(K);
+    let mut ser = fresh_shard(59);
+    let mut par = fresh_shard(59);
+    let sel = Selection::full(ser.data.w);
+    let (phi, tot) = phi_of(&ser);
+
+    ser.clear_selected_residuals(&sel);
+    let per_doc: Vec<f64> = (0..ser.data.docs())
+        .map(|d| ser.sweep_doc_reference(d, &phi, &tot, &sel, &p, true))
+        .collect();
+
+    let pool = Cluster::new(1, 0);
+    par.sweep_parallel(&pool, 0, &phi, &tot, &sel, &p, true);
+    assert_eq!(par.doc_residuals().len(), per_doc.len());
+    for (d, (x, y)) in per_doc.iter().zip(par.doc_residuals()).enumerate() {
+        assert!(x == y, "doc {d}: {x} vs {y}");
+    }
+}
+
+/// update_phi = false must freeze Δφ̂ on the parallel path too (the
+/// heldout fold-in contract).
+#[test]
+fn parallel_update_phi_false_freezes_gradient() {
+    let p = LdaParams::paper(K);
+    let mut s = fresh_shard(61);
+    let sel = Selection::full(s.data.w);
+    let (phi, tot) = phi_of(&s);
+    let dphi_before = s.dphi.clone();
+    let pool = Cluster::new(1, 0);
+    s.sweep_parallel(&pool, 0, &phi, &tot, &sel, &p, false);
+    assert_bitwise(&s.dphi, &dphi_before, "dphi");
+}
