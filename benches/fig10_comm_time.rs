@@ -37,7 +37,11 @@ fn main() {
                 let r = run_algo(algo, &corpus, &params, &o);
                 comm.push((
                     algo,
-                    r.ledger.comm_secs,
+                    // exposed comm: overlapped algorithms (YLDA) pay only
+                    // the fraction their computation cannot hide. The old
+                    // ledger hack hard-zeroed YLDA's comm; this plots the
+                    // honest residue, positive on comm-bound configs.
+                    r.ledger.exposed_comm_secs(),
                     r.ledger.payload_bytes_total() / 1_000_000,
                     r.ledger.sync_count(),
                 ));

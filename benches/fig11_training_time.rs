@@ -25,7 +25,15 @@ fn main() {
             let mut rows: Vec<(Algo, f64, f64, f64)> = Vec::new();
             for algo in Algo::paper_set() {
                 let r = run_algo(algo, &corpus, &params, &o);
-                rows.push((algo, r.sim_secs(), r.ledger.compute_secs, r.ledger.comm_secs));
+                // exposed comm (comm − overlap-hidden): the columns then
+                // satisfy sim ≈ compute + comm for every algorithm,
+                // overlapped (YLDA) included
+                rows.push((
+                    algo,
+                    r.sim_secs(),
+                    r.ledger.compute_secs,
+                    r.ledger.exposed_comm_secs(),
+                ));
             }
             let pobp = rows.iter().find(|(a, ..)| *a == Algo::Pobp).unwrap().1;
             for (algo, sim, comp, comm) in &rows {

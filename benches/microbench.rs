@@ -1,16 +1,28 @@
 //! Microbenchmarks of the L3 hot paths (criterion substitute): the sparse
 //! BP sweep (serial reference vs fused vs doc-parallel), the Gibbs
-//! samplers, the power selection partial sort, and the allreduce. These
-//! are the §Perf numbers in EXPERIMENTS.md; alongside the human table the
-//! run emits `BENCH_microbench.json` (name → items/s) so the perf
-//! trajectory is machine-trackable across PRs.
+//! samplers, the power selection partial sort, and the allreduce
+//! (serial reference vs retired leader-pool vs owner-sliced
+//! reduce-scatter). These are the §Perf numbers in EXPERIMENTS.md;
+//! alongside the human table the run emits `BENCH_microbench.json`
+//! (name → items/s, plus the measured POBP overlap efficiency) so the
+//! perf trajectory is machine-trackable across PRs.
+//!
+//! `--smoke` (or `--test`) runs every row once on the same corpus
+//! without writing the JSON — the CI quick pass that keeps the bench
+//! *executing*, not just compiling.
 
 #[path = "common/mod.rs"]
 mod common;
 
+use std::sync::Mutex;
 use std::time::Instant;
 
-use pobp::comm::{reduce_chunked, reduce_sum_into, Cluster};
+use pobp::comm::allreduce::{
+    allreduce_step, allreduce_step_overlap, allreduce_step_pool, serial_reference_step,
+    GlobalState, ReducePlan, ReduceSource, SerialState, SyncScratch,
+};
+use pobp::comm::{Cluster, NetModel};
+use pobp::coordinator::{fit, PobpConfig};
 use pobp::engine::bp::{Selection, ShardBp};
 use pobp::engine::fgs::FastGs;
 use pobp::engine::gibbs::{GibbsShard, PlainGs};
@@ -44,7 +56,13 @@ fn bench<F: FnMut()>(
 }
 
 fn main() {
+    // CI quick pass: one timed iteration per row, no JSON overwrite
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let it = |n: usize| if smoke { 1 } else { n };
     common::banner("microbench", "hot-path throughput", "enron-sim, K=50");
+    if smoke {
+        println!("   (--smoke: single-iteration rows, JSON not written)\n");
+    }
     let k = 50;
     let corpus = common::corpus("enron", k, 1);
     let params = common::params(k);
@@ -72,15 +90,15 @@ fn main() {
             tot[t] += v;
         }
     }
-    bench(&mut recs, "bp sweep (full, serial reference)", 10, updates, || {
+    bench(&mut recs, "bp sweep (full, serial reference)", it(10), updates, || {
         shard.clear_selected_residuals(&sel);
         shard.sweep_reference(&phi, &tot, &sel, &params, true);
     });
-    bench(&mut recs, "bp sweep (full, fused serial)", 10, updates, || {
+    bench(&mut recs, "bp sweep (full, fused serial)", it(10), updates, || {
         shard.clear_selected_residuals(&sel);
         shard.sweep(&phi, &tot, &sel, &params, true);
     });
-    bench(&mut recs, "bp sweep (full, doc-parallel)", 10, updates, || {
+    bench(&mut recs, "bp sweep (full, doc-parallel)", it(10), updates, || {
         shard.sweep_parallel(&pool, 0, &phi, &tot, &sel, &params, true);
     });
 
@@ -106,15 +124,15 @@ fn main() {
         "power subset: {} active entries, {} pair updates",
         active_entries, sub_updates
     );
-    bench(&mut recs, "bp sweep (power subset, doc-order)", 10, sub_updates, || {
+    bench(&mut recs, "bp sweep (power subset, doc-order)", it(10), sub_updates, || {
         shard.clear_selected_residuals(&sel_p);
         shard.sweep(&phi, &tot, &sel_p, &params, true);
     });
-    bench(&mut recs, "bp sweep (power subset, inverted idx)", 10, sub_updates, || {
+    bench(&mut recs, "bp sweep (power subset, inverted idx)", it(10), sub_updates, || {
         shard.clear_selected_residuals(&sel_p);
         shard.sweep_selected(&phi, &tot, &sel_p, &params, true);
     });
-    bench(&mut recs, "bp sweep (power subset, doc-parallel)", 10, sub_updates, || {
+    bench(&mut recs, "bp sweep (power subset, doc-parallel)", it(10), sub_updates, || {
         shard.sweep_parallel(&pool, 0, &phi, &tot, &sel_p, &params, true);
     });
 
@@ -123,61 +141,97 @@ fn main() {
     let mut gshard = GibbsShard::init(&corpus, k, &mut rng);
     let mut plain = PlainGs::new(k);
     let mut grng = Rng::new(2);
-    bench(&mut recs, "gibbs sweep (plain GS)", 5, tokens, || {
+    bench(&mut recs, "gibbs sweep (plain GS)", it(5), tokens, || {
         gshard.sweep(&mut plain, &params, &mut grng);
     });
     let mut sparse = SparseGs::new(k);
-    bench(&mut recs, "gibbs sweep (SparseLDA)", 5, tokens, || {
+    bench(&mut recs, "gibbs sweep (SparseLDA)", it(5), tokens, || {
         gshard.sweep(&mut sparse, &params, &mut grng);
     });
     let mut fast = FastGs::new(k);
-    bench(&mut recs, "gibbs sweep (FastLDA)", 5, tokens, || {
+    bench(&mut recs, "gibbs sweep (FastLDA)", it(5), tokens, || {
         gshard.sweep(&mut fast, &params, &mut grng);
     });
 
     // --- power selection (per coordinator iteration) ---
     let r = shard.r.clone();
-    bench(&mut recs, "power selection (partial sort W + topics)", 50, (corpus.w * k) as f64, || {
+    let sel_items = (corpus.w * k) as f64;
+    bench(&mut recs, "power selection (partial sort W + topics)", it(50), sel_items, || {
         let _ = select_power(&r, corpus.w, k, &PowerParams::paper_default());
     });
 
-    // --- leader-side allreduce, before/after: the pre-refactor serial
-    //     leader loop vs the chunked parallel reduction on the cluster
-    //     thread pool (comm::allreduce). Same bitwise result; the
-    //     parallel path buys leader wall-clock on multi-core hosts. ---
+    // --- allreduce: the full synchronization step. Serial reference
+    //     (the pre-refactor leader loop) vs the retired leader-pool path
+    //     (two chunked passes + serial scatter, fresh buffers per call)
+    //     vs the owner-sliced reduce-scatter (one fused dispatch, reused
+    //     scratch). All bitwise-equal on the replicated matrices; the
+    //     owner split buys leader wall-clock and kills alloc churn. ---
     let nw = 8;
     let cluster = Cluster::new(nw, 0);
-    let partials: Vec<Vec<f32>> = (0..nw).map(|i| vec![i as f32; corpus.w * k]).collect();
-    let parts: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
-    let mut g = vec![0f32; corpus.w * k];
-    let dense_items = (corpus.w * k * nw) as f64;
-    bench(&mut recs, "allreduce dense serial (old leader loop)", 20, dense_items, || {
-        g.fill(0.0);
-        reduce_sum_into(&mut g, &partials);
-        std::hint::black_box(&g);
+    let len = corpus.w * k;
+    let mut arng = Rng::new(9);
+    let srcs: Vec<Mutex<BenchSource>> = (0..nw)
+        .map(|_| {
+            Mutex::new(BenchSource {
+                dphi: (0..len).map(|_| arng.f32() * 2.0 - 0.5).collect(),
+                r: (0..len).map(|_| arng.f32()).collect(),
+            })
+        })
+        .collect();
+    let phi_acc: Vec<f32> = (0..len).map(|_| arng.f32()).collect();
+    let dense_items = (len * nw) as f64;
+    let mut ser_st = SerialState::new(&phi_acc, k);
+    let mut st = GlobalState::new(&phi_acc, k);
+    let mut scratch = SyncScratch::default();
+    let dense_plan = ReducePlan::Dense { len };
+    bench(&mut recs, "allreduce dense serial (reference step)", it(20), dense_items, || {
+        serial_reference_step(&dense_plan, k, &phi_acc, &srcs, &mut ser_st);
     });
-    bench(&mut recs, "allreduce dense parallel (chunked)", 20, dense_items, || {
-        reduce_chunked(&cluster, None, &parts, &mut g);
-        std::hint::black_box(&g);
+    bench(&mut recs, "allreduce dense leader-pool (chunked)", it(20), dense_items, || {
+        allreduce_step_pool(&cluster, &dense_plan, &phi_acc, &srcs, &mut st);
+    });
+    bench(&mut recs, "allreduce dense owner-sliced (fused)", it(20), dense_items, || {
+        allreduce_step(&cluster, &dense_plan, &phi_acc, &srcs, &mut st, &mut scratch);
     });
 
-    // subset variant at the paper's power-selection density: both sides
-    // reduce the same packed plan-order buffers, so the comparison
-    // isolates the chunked reduction itself
+    // subset at the paper's power-selection density: the same plan-order
+    // gather + reduce + scatter on every path
     let idx = select_power(&r, corpus.w, k, &PowerParams::paper_default()).flat_indices(k);
-    let sub_partials: Vec<Vec<f32>> = (0..nw).map(|i| vec![i as f32; idx.len()]).collect();
-    let sub_parts: Vec<&[f32]> = sub_partials.iter().map(|p| p.as_slice()).collect();
-    let mut red = vec![0f32; idx.len()];
+    let sub_plan = ReducePlan::Subset { indices: &idx };
     let sub_items = (idx.len() * nw) as f64;
-    bench(&mut recs, "allreduce subset serial (packed)", 200, sub_items, || {
-        red.fill(0.0);
-        reduce_sum_into(&mut red, &sub_partials);
-        std::hint::black_box(&red);
+    bench(&mut recs, "allreduce subset serial (reference step)", it(100), sub_items, || {
+        serial_reference_step(&sub_plan, k, &phi_acc, &srcs, &mut ser_st);
     });
-    bench(&mut recs, "allreduce subset parallel (chunked)", 200, sub_items, || {
-        reduce_chunked(&cluster, None, &sub_parts, &mut red);
-        std::hint::black_box(&red);
+    bench(&mut recs, "allreduce subset leader-pool (chunked)", it(100), sub_items, || {
+        allreduce_step_pool(&cluster, &sub_plan, &phi_acc, &srcs, &mut st);
     });
+    bench(&mut recs, "allreduce subset owner-sliced (fused)", it(100), sub_items, || {
+        allreduce_step(&cluster, &sub_plan, &phi_acc, &srcs, &mut st, &mut scratch);
+    });
+    bench(&mut recs, "allreduce subset owner-sliced (pipelined)", it(100), sub_items, || {
+        allreduce_step_overlap(&cluster, &sub_plan, &phi_acc, &srcs, &mut st, &mut scratch);
+    });
+
+    // --- overlap efficiency: a short pipelined POBP fit on a
+    //     compute-bound config; 1 − total/(compute+comm) is the fraction
+    //     of the serialized cost the pipeline hides ---
+    let ov_cfg = PobpConfig {
+        n_workers: 4,
+        nnz_budget: 8_000,
+        max_iters: if smoke { 3 } else { 10 },
+        overlap: true,
+        net: NetModel::infiniband_for_scale(k, corpus.w),
+        ..Default::default()
+    };
+    let ov = fit(&corpus, &params, &ov_cfg);
+    let overlap_eff = ov.ledger.overlap_efficiency();
+    println!(
+        "\noverlap efficiency (pipelined POBP, compute-bound): {overlap_eff:.4}  \
+         (compute {:.3}s, comm {:.3}s, total {:.3}s)",
+        ov.ledger.compute_secs,
+        ov.ledger.comm_secs,
+        ov.ledger.total_secs()
+    );
 
     // --- machine-readable record for the cross-PR perf trajectory ---
     let find = |recs: &[(String, f64)], name: &str| {
@@ -202,9 +256,27 @@ fn main() {
             ("k", Json::from(k)),
         ])),
         ("full_sweep_speedup_vs_serial", Json::from(speedup)),
+        ("overlap_efficiency", Json::from(overlap_eff)),
         ("items_per_sec", results),
     ]);
-    std::fs::write("BENCH_microbench.json", format!("{report}\n")).ok();
     println!("\nfull-sweep speedup vs serial reference: {speedup:.2}x");
-    println!("wrote BENCH_microbench.json");
+    if smoke {
+        println!("--smoke: skipping BENCH_microbench.json write");
+    } else {
+        std::fs::write("BENCH_microbench.json", format!("{report}\n")).ok();
+        println!("wrote BENCH_microbench.json");
+    }
+}
+
+/// Worker double for the allreduce rows: dense partials only (the trait
+/// default supplies the plan-order export).
+struct BenchSource {
+    dphi: Vec<f32>,
+    r: Vec<f32>,
+}
+
+impl ReduceSource for BenchSource {
+    fn dense_parts(&self) -> (&[f32], &[f32]) {
+        (&self.dphi, &self.r)
+    }
 }

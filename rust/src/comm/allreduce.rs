@@ -1,39 +1,56 @@
 //! The parallel sparse allreduce subsystem — the leader-side realization
 //! of the paper's synchronization step (Fig. 4 lines 9–10 / 23–24,
-//! Eqs. 6, 9, 15).
+//! Eqs. 6, 9, 15), organized as a true **owner-sliced reduce-scatter**.
+//!
+//! # Ownership model
+//!
+//! The flat reduce index space (row-major `w·K + k` over the `W × K`
+//! matrices) is partitioned into N static **owner slices**
+//! ([`OwnerSlices`]) — one per logical worker, boundaries derived from
+//! the index count and worker count only, never from the machine's core
+//! count. Each worker reduces and scatters *only the (word, topic) pairs
+//! that fall inside its slice*, in a single fused pass: Δφ̂, r and the
+//! f64 totals deltas move together, with no intermediate `red_dphi` /
+//! `red_r` buffers and no barrier between the two matrices. The
+//! "allgather" half of the allreduce — every processor republishing its
+//! owned slice — is free in this leader-memory simulation (the merged
+//! state *is* the shared replica) but is charged per segment by the
+//! ledger/network model exactly as before.
 //!
 //! # Gather-buffer layout
 //!
-//! Every worker contributes two flat `f32` buffers per synchronization —
-//! one for Δφ̂ and one for r — sharing a single index order, the *plan
-//! order*:
-//!
-//! * **Dense plan** (t = 1 full sync): plan order is row-major `w·K + k`
-//!   over the whole `W × K` matrix. Workers export nothing; the
-//!   reduction borrows their Δφ̂ / r matrices in place (a real deployment
-//!   would ship the matrix verbatim, so there is no packing step to
-//!   model).
+//! * **Dense plan** (t = 1 full sync): plan order is row-major `w·K + k`.
+//!   Workers export nothing; the owner tasks borrow their Δφ̂ / r
+//!   matrices in place (a real deployment ships the matrix verbatim, so
+//!   there is no packing step to model).
 //! * **Subset plan** (power iterations): plan order is
 //!   `PowerSet::flat_indices` order — selection order, words by
 //!   descending residual. Each worker packs its own [`GatherBuf`]
-//!   ([`ReduceSource::export_selected`]) in parallel on the cluster.
+//!   ([`ReduceSource::export_selected_into`]) in parallel on the
+//!   cluster, into buffers **reused across syncs** (the [`SyncScratch`]
+//!   pool — the old path allocated fresh buffers every iteration).
 //!
-//! The reduction itself runs *in parallel over contiguous index chunks*
-//! on the [`Cluster`] thread pool. Because every output element's
-//! accumulation chain (seed, then worker 0, worker 1, …) is independent
-//! of the chunking, the result is **bitwise identical** to the serial
-//! leader loop it replaced — [`serial_reference_step`] keeps that loop
-//! verbatim as the oracle the equivalence tests compare against.
+//! # Determinism
 //!
-//! The scatter back into the replicated [`GlobalState`] accumulates the
-//! φ̂ topic totals and the residual total in **f64**: the pre-refactor
-//! coordinator updated them incrementally in f32, which drifts over the
-//! hundreds of small power-subset scatters a long run performs.
+//! Every output element's accumulation chain is the serial leader loop's
+//! left fold (seed, then worker 0, worker 1, …) regardless of which
+//! thread runs its owner slice, so the result is **bitwise identical**
+//! to [`serial_reference_step`], the oracle the equivalence tests
+//! compare against. The f64 totals accumulate per owner (slot order
+//! within the owner) and merge in ascending owner order — a pure
+//! function of the data, identical between [`allreduce_step`] and the
+//! pipelined [`allreduce_step_overlap`].
 //!
-//! Simulated communication *time* is unchanged by any of this — it comes
-//! from the byte-exact ledger and the network model's per-segment
-//! (reduce-scatter + allgather) accounting; parallelizing the reduction
-//! buys leader wall-clock, which `benches/microbench.rs` measures.
+//! # Overlap pipeline
+//!
+//! [`allreduce_step_overlap`] is the double-buffered variant the
+//! coordinator's overlap mode runs: worker n+1's `export_selected`
+//! packing executes concurrently with the owner-sliced fold of worker
+//! n's buffer (two alternating gather buffers), modeling a pipeline that
+//! hides pack latency behind reduction. Results are bitwise identical to
+//! [`allreduce_step`] — only wall-clock scheduling differs; simulated
+//! *time* always comes from the byte-exact ledger and the network
+//! model's per-segment accounting.
 
 use std::sync::Mutex;
 
@@ -55,14 +72,23 @@ pub trait ReduceSource {
     /// row-major.
     fn dense_parts(&self) -> (&[f32], &[f32]);
 
-    /// Pack the partials at `indices` (flat `w·K + k`, plan order) into a
-    /// fresh gather buffer — the worker side of the sparse allreduce.
-    fn export_selected(&self, indices: &[u32]) -> GatherBuf {
+    /// Pack the partials at `indices` (flat `w·K + k`, plan order) into
+    /// `buf`, reusing its capacity — the worker side of the sparse
+    /// allreduce, called once per sync per worker on the cluster pool.
+    fn export_selected_into(&self, indices: &[u32], buf: &mut GatherBuf) {
         let (dphi, r) = self.dense_parts();
-        GatherBuf {
-            dphi: indices.iter().map(|&i| dphi[i as usize]).collect(),
-            r: indices.iter().map(|&i| r[i as usize]).collect(),
-        }
+        buf.dphi.clear();
+        buf.r.clear();
+        buf.dphi.extend(indices.iter().map(|&i| dphi[i as usize]));
+        buf.r.extend(indices.iter().map(|&i| r[i as usize]));
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`ReduceSource::export_selected_into`].
+    fn export_selected(&self, indices: &[u32]) -> GatherBuf {
+        let mut buf = GatherBuf::default();
+        self.export_selected_into(indices, &mut buf);
+        buf
     }
 }
 
@@ -71,7 +97,13 @@ pub trait ReduceSource {
 pub enum ReducePlan<'a> {
     /// every pair of the `W × K` matrices, row-major
     Dense { len: usize },
-    /// the pairs at these flat indices, in this (plan) order
+    /// the pairs at these flat indices, in this (plan) order. The plan
+    /// is a *set* of pairs: indices must be **distinct**
+    /// (`PowerSet::flat_indices` guarantees it — distinct words,
+    /// distinct topics per word). The serial and fused steps happen to
+    /// tolerate duplicates (each slot refolds from scratch), but the
+    /// pipelined step's in-place accumulator does not; distinctness is
+    /// the contract.
     Subset { indices: &'a [u32] },
 }
 
@@ -86,14 +118,106 @@ impl ReducePlan<'_> {
     }
 }
 
+/// Static ownership partition of the flat reduce index space over the N
+/// logical workers — the model-slice assignment of a real reduce-scatter
+/// (each processor reduces 1/N of the matrix, then allgathers it back).
+/// Boundaries derive from the index count and worker count only (never
+/// from the machine's core count), so the partition — and every
+/// floating-point accumulation order keyed on it — is machine-independent.
+#[derive(Clone, Copy, Debug)]
+pub struct OwnerSlices {
+    len: usize,
+    per: usize,
+    owners: usize,
+}
+
+impl OwnerSlices {
+    pub fn new(len: usize, owners: usize) -> OwnerSlices {
+        assert!(owners > 0);
+        OwnerSlices { len, per: len.div_ceil(owners).max(1), owners }
+    }
+
+    pub fn owners(&self) -> usize {
+        self.owners
+    }
+
+    /// Flat-index range owned by worker `n` (possibly empty for trailing
+    /// workers when the space is smaller than the worker count).
+    pub fn range(&self, n: usize) -> std::ops::Range<usize> {
+        let lo = (n * self.per).min(self.len);
+        let hi = ((n + 1) * self.per).min(self.len);
+        lo..hi
+    }
+
+    /// The worker owning flat index `i`.
+    pub fn owner_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.len);
+        (i / self.per).min(self.owners - 1)
+    }
+}
+
+/// Coordinator-owned buffer pool for the owner-sliced allreduce: the
+/// per-worker gather buffers, the owner-grouped slot permutation, the
+/// per-owner f64 totals deltas and the pipelined path's pre-overwrite
+/// snapshots. Reused across syncs and mini-batches — the retired
+/// leader-pool path ([`allreduce_step_pool`]) allocates fresh
+/// `GatherBuf`s and reduction vectors on every iteration, which showed
+/// up as allocator churn on the coordinator's critical path.
+#[derive(Debug, Default)]
+pub struct SyncScratch {
+    /// per-worker plan-order gather buffers ([`allreduce_step`]) /
+    /// double buffer ([`allreduce_step_overlap`])
+    gather: Vec<GatherBuf>,
+    /// owner n reduces plan slots `owner_slots[owner_off[n]..owner_off[n+1]]`
+    owner_off: Vec<u32>,
+    /// plan slot ids grouped by owner, plan order within each owner
+    owner_slots: Vec<u32>,
+    cursor: Vec<u32>,
+    /// per-owner totals deltas: owner n owns lanes `n·(k+1) .. (n+1)·(k+1)`
+    /// (k φ̂-topic lanes + 1 residual lane), merged in ascending owner order
+    tot_delta: Vec<f64>,
+    /// pre-overwrite `phi_eff` / `r_global` values at the owned slots
+    /// (pipelined path only; aligned with `owner_slots`)
+    old_phi: Vec<f32>,
+    old_r: Vec<f32>,
+}
+
+impl SyncScratch {
+    /// Group the plan slots by owning worker (counting sort, reused
+    /// storage): after the call, owner `n`'s slots are
+    /// `owner_slots[owner_off[n]..owner_off[n+1]]`, in plan order — the
+    /// deterministic per-owner scatter order.
+    fn group_by_owner(&mut self, indices: &[u32], slices: &OwnerSlices) {
+        let owners = slices.owners();
+        self.owner_off.clear();
+        self.owner_off.resize(owners + 1, 0);
+        for &ix in indices {
+            self.owner_off[slices.owner_of(ix as usize) + 1] += 1;
+        }
+        for n in 0..owners {
+            self.owner_off[n + 1] += self.owner_off[n];
+        }
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.owner_off[..owners]);
+        self.owner_slots.clear();
+        self.owner_slots.resize(indices.len(), 0);
+        for (slot, &ix) in indices.iter().enumerate() {
+            let o = slices.owner_of(ix as usize);
+            self.owner_slots[self.cursor[o] as usize] = slot as u32;
+            self.cursor[o] += 1;
+        }
+    }
+}
+
 /// The replicated state every processor holds after an allreduce:
 /// effective φ̂ (= φ̂_acc + Σ_n Δφ̂_n on synchronized pairs), the
 /// synchronized residual matrix, and their running totals.
 ///
 /// The totals are f64-backed: dense syncs recompute them from scratch,
-/// subset syncs accumulate exact f32→f64 deltas, so the drift of the old
-/// incremental-f32 bookkeeping is gone (see `totals_drift`). The sweep
-/// kernels consume the f32 render via [`GlobalState::phi_tot`].
+/// subset syncs accumulate exact f32→f64 deltas (per owner slice, merged
+/// in owner order), so the drift of the old incremental-f32 bookkeeping
+/// is gone (see `totals_drift`). The sweep kernels consume the f32
+/// render via [`GlobalState::phi_tot`].
 #[derive(Clone, Debug)]
 pub struct GlobalState {
     pub phi_eff: Vec<f32>,
@@ -147,6 +271,22 @@ impl GlobalState {
         }
     }
 
+    /// Fold the per-owner totals deltas in ascending owner order — the
+    /// deterministic second half of a subset reduce-scatter, shared by
+    /// the fused and pipelined paths (identical f64 op sequence, so the
+    /// two are bitwise interchangeable).
+    fn merge_owner_totals(&mut self, tot_delta: &[f64]) {
+        let k = self.k;
+        debug_assert_eq!(tot_delta.len() % (k + 1), 0);
+        for td in tot_delta.chunks_exact(k + 1) {
+            for (t, slot) in self.phi_tot64.iter_mut().enumerate() {
+                *slot += td[t];
+            }
+            self.r_total += td[k];
+        }
+        self.render_tot32();
+    }
+
     /// Drift diagnostics: (max |running − recomputed| over topic totals,
     /// |running − recomputed| residual total). Bounded by f64 rounding —
     /// the long-run drift test pins it near zero.
@@ -167,7 +307,8 @@ impl GlobalState {
     }
 
     /// Apply reduced plan-order sub-vectors at `indices`: the scatter
-    /// half of a subset allreduce. Matches the pre-refactor per-element
+    /// half of a subset allreduce (retained for the leader-pool baseline
+    /// [`allreduce_step_pool`]). Matches the pre-refactor per-element
     /// arithmetic on `phi_eff`/`r_global` bitwise; totals move by exact
     /// f32→f64 deltas.
     fn scatter_subset(
@@ -190,10 +331,426 @@ impl GlobalState {
     }
 }
 
+// ---------------------------------------------------------------------
+// owner-slice task types (module-level: inner items cannot name a
+// function's generic parameters)
+// ---------------------------------------------------------------------
+
+/// One owner's disjoint view of the replicated state for a dense fold.
+struct DenseSlice<'a> {
+    base: usize,
+    phi: &'a mut [f32],
+    r: &'a mut [f32],
+}
+
+/// One owner's disjoint view for a subset fold: the owned contiguous
+/// `phi_eff`/`r_global` windows, the plan slots that scatter into them,
+/// the owner's f64 totals lanes, and (pipelined path) the pre-overwrite
+/// value snapshots aligned with `slots`.
+struct FoldSlice<'a> {
+    base: usize,
+    phi: &'a mut [f32],
+    r: &'a mut [f32],
+    slots: &'a [u32],
+    td: &'a mut [f64],
+    old_phi: &'a mut [f32],
+    old_r: &'a mut [f32],
+}
+
+/// A pipelined dispatch round's task: fold one worker's buffer into an
+/// owner slice, or pack the *next* worker's buffer (the double-buffered
+/// gather export that overlaps with the fold).
+enum PipeTask<'a, S> {
+    Fold(FoldSlice<'a>),
+    Pack { worker: &'a Mutex<S>, dst: &'a mut GatherBuf },
+}
+
+/// Split the replicated state (and the owner-grouped scratch lanes) into
+/// per-owner disjoint fold tasks. `old` additionally hands each owner
+/// its aligned pre-overwrite snapshot windows (pipelined path).
+#[allow(clippy::too_many_arguments)]
+fn make_fold_slices<'a>(
+    slices: &OwnerSlices,
+    k: usize,
+    phi_eff: &'a mut [f32],
+    r_global: &'a mut [f32],
+    owner_off: &[u32],
+    owner_slots: &'a [u32],
+    tot_delta: &'a mut [f64],
+    old: Option<(&'a mut [f32], &'a mut [f32])>,
+) -> Vec<FoldSlice<'a>> {
+    let owners = slices.owners();
+    let mut out = Vec::with_capacity(owners);
+    let mut phi_rest = phi_eff;
+    let mut r_rest = r_global;
+    let mut slots_rest = owner_slots;
+    let mut td_rest = tot_delta;
+    let has_old = old.is_some();
+    let (mut op_rest, mut or_rest): (&'a mut [f32], &'a mut [f32]) = match old {
+        Some((p, r)) => (p, r),
+        None => (&mut [], &mut []),
+    };
+    for n in 0..owners {
+        let rg = slices.range(n);
+        let (phi_n, rest) = phi_rest.split_at_mut(rg.len());
+        phi_rest = rest;
+        let (r_n, rest) = r_rest.split_at_mut(rg.len());
+        r_rest = rest;
+        let cnt = (owner_off[n + 1] - owner_off[n]) as usize;
+        let (sl_n, rest) = slots_rest.split_at(cnt);
+        slots_rest = rest;
+        let (td_n, rest) = td_rest.split_at_mut(k + 1);
+        td_rest = rest;
+        let (op_n, or_n): (&'a mut [f32], &'a mut [f32]) = if has_old {
+            // the snapshot windows partition exactly like the slot lists
+            let (a, rest) = op_rest.split_at_mut(cnt);
+            op_rest = rest;
+            let (b, rest) = or_rest.split_at_mut(cnt);
+            or_rest = rest;
+            (a, b)
+        } else {
+            (&mut [], &mut [])
+        };
+        out.push(FoldSlice {
+            base: rg.start,
+            phi: phi_n,
+            r: r_n,
+            slots: sl_n,
+            td: td_n,
+            old_phi: op_n,
+            old_r: or_n,
+        });
+    }
+    out
+}
+
+/// Dense owner-sliced reduce-scatter: every owner folds its contiguous
+/// slice of both matrices in one fused pass over the worker partials —
+/// the per-element left fold of the serial reference (seed φ̂_acc / 0,
+/// then one add per worker in worker order), both matrices collected
+/// from each lock guard **once** (the old path walked `dense_parts`
+/// twice per guard).
+fn dense_owner_step<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+) -> usize {
+    let len = state.phi_eff.len();
+    debug_assert_eq!(phi_acc.len(), len);
+    let guards: Vec<_> = workers.iter().map(|m| m.lock().unwrap()).collect();
+    // one pass over the guards: Δφ̂ and r slices collected together
+    let parts: Vec<(&[f32], &[f32])> = guards.iter().map(|g| g.dense_parts()).collect();
+    let slices = OwnerSlices::new(len, workers.len());
+    let mut tasks: Vec<DenseSlice<'_>> = Vec::with_capacity(slices.owners());
+    {
+        let mut phi_rest = &mut state.phi_eff[..];
+        let mut r_rest = &mut state.r_global[..];
+        for n in 0..slices.owners() {
+            let rg = slices.range(n);
+            let (phi_n, rest) = phi_rest.split_at_mut(rg.len());
+            phi_rest = rest;
+            let (r_n, rest) = r_rest.split_at_mut(rg.len());
+            r_rest = rest;
+            tasks.push(DenseSlice { base: rg.start, phi: phi_n, r: r_n });
+        }
+    }
+    cluster.run_on_owner_slices(&mut tasks, |_n, t| {
+        for (j, (po, ro)) in t.phi.iter_mut().zip(t.r.iter_mut()).enumerate() {
+            let i = t.base + j;
+            let mut acc = phi_acc[i];
+            let mut racc = 0f32;
+            for (dp, rp) in &parts {
+                acc += dp[i];
+                racc += rp[i];
+            }
+            *po = acc;
+            *ro = racc;
+        }
+    });
+    drop(tasks);
+    drop(guards);
+    state.recompute_totals();
+    len
+}
+
+/// Subset owner-sliced reduce-scatter, single dispatch: gather every
+/// worker's plan-order buffer in parallel (reused scratch), then one
+/// owner dispatch where each owner folds **all** workers over its slots
+/// — Δφ̂ sum, r sum, scatter and f64 totals deltas fused per slot.
+fn subset_owner_step<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    indices: &[u32],
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+    scratch: &mut SyncScratch,
+) -> usize {
+    let nw = workers.len();
+    let k = state.k;
+    // parallel gather: each worker packs its own plan-order buffer into
+    // the reused pool
+    scratch.gather.resize_with(nw, GatherBuf::default);
+    {
+        let mut gtasks: Vec<&mut GatherBuf> = scratch.gather.iter_mut().collect();
+        cluster.run_on_owner_slices(&mut gtasks, |n, buf| {
+            workers[n].lock().unwrap().export_selected_into(indices, buf);
+        });
+    }
+    let slices = OwnerSlices::new(state.phi_eff.len(), nw);
+    scratch.group_by_owner(indices, &slices);
+    scratch.tot_delta.clear();
+    scratch.tot_delta.resize(slices.owners() * (k + 1), 0.0);
+    let bufs = &scratch.gather;
+    let mut tasks = make_fold_slices(
+        &slices,
+        k,
+        &mut state.phi_eff,
+        &mut state.r_global,
+        &scratch.owner_off,
+        &scratch.owner_slots,
+        &mut scratch.tot_delta,
+        None,
+    );
+    cluster.run_on_owner_slices(&mut tasks, |_n, t| {
+        for &s in t.slots {
+            let s = s as usize;
+            let i = indices[s] as usize;
+            let j = i - t.base;
+            // the serial reference's left folds, worker order, both
+            // matrices in one pass (0-seeded like the serial loop)
+            let mut dsum = 0f32;
+            let mut rsum = 0f32;
+            for b in bufs {
+                dsum += b.dphi[s];
+                rsum += b.r[s];
+            }
+            let new_phi = phi_acc[i] + dsum;
+            t.td[i % k] += new_phi as f64 - t.phi[j] as f64;
+            t.phi[j] = new_phi;
+            t.td[k] += rsum as f64 - t.r[j] as f64;
+            t.r[j] = rsum;
+        }
+    });
+    drop(tasks);
+    state.merge_owner_totals(&scratch.tot_delta);
+    indices.len()
+}
+
+/// Subset owner-sliced reduce-scatter, double-buffered pipeline: round n
+/// folds worker n's buffer into every owner slice while worker n+1 packs
+/// its export into the alternate buffer on the same dispatch. The fold
+/// accumulates directly in `phi_eff`/`r_global` (same f32 op sequence as
+/// the single-dispatch path's register accumulators), snapshots
+/// pre-overwrite values in round 0, and finalizes scatter + totals in
+/// the last round — bitwise identical to [`subset_owner_step`].
+///
+/// Relies on the [`ReducePlan::Subset`] distinctness contract: a
+/// duplicated flat index would re-seed the in-place accumulator mid-fold
+/// (the slot-local refold of the serial/fused paths has no such hazard).
+fn subset_owner_step_pipelined<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    indices: &[u32],
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+    scratch: &mut SyncScratch,
+) -> usize {
+    let nw = workers.len();
+    let k = state.k;
+    let m = indices.len();
+    let slices = OwnerSlices::new(state.phi_eff.len(), nw);
+    scratch.group_by_owner(indices, &slices);
+    scratch.tot_delta.clear();
+    scratch.tot_delta.resize(slices.owners() * (k + 1), 0.0);
+    scratch.old_phi.clear();
+    scratch.old_phi.resize(m.max(1), 0.0);
+    scratch.old_r.clear();
+    scratch.old_r.resize(m.max(1), 0.0);
+    if scratch.gather.len() < 2 {
+        scratch.gather.resize_with(2, GatherBuf::default);
+    }
+    // prime the pipeline: worker 0 packs on the leader thread
+    workers[0].lock().unwrap().export_selected_into(indices, &mut scratch.gather[0]);
+
+    for wn in 0..nw {
+        let first = wn == 0;
+        let last = wn + 1 == nw;
+        let (g0, g1) = scratch.gather.split_at_mut(1);
+        let (cur, next): (&GatherBuf, &mut GatherBuf) = if wn % 2 == 0 {
+            (&g0[0], &mut g1[0])
+        } else {
+            (&g1[0], &mut g0[0])
+        };
+        let fold = make_fold_slices(
+            &slices,
+            k,
+            &mut state.phi_eff,
+            &mut state.r_global,
+            &scratch.owner_off,
+            &scratch.owner_slots,
+            &mut scratch.tot_delta,
+            Some((&mut scratch.old_phi[..m], &mut scratch.old_r[..m])),
+        );
+        // Pack goes FIRST: tasks are claimed in index order, so on pools
+        // narrower than owners+1 a trailing pack would only start after
+        // every fold finished — the overlap this pipeline exists for.
+        let mut tasks: Vec<PipeTask<'_, S>> = Vec::with_capacity(fold.len() + 1);
+        if !last {
+            tasks.push(PipeTask::Pack { worker: &workers[wn + 1], dst: next });
+        }
+        tasks.extend(fold.into_iter().map(PipeTask::Fold));
+        cluster.run_on_owner_slices(&mut tasks, |_i, task| match task {
+            PipeTask::Pack { worker, dst } => {
+                worker.lock().unwrap().export_selected_into(indices, dst);
+            }
+            PipeTask::Fold(t) => {
+                for (p, &s) in t.slots.iter().enumerate() {
+                    let s = s as usize;
+                    let i = indices[s] as usize;
+                    let j = i - t.base;
+                    if first {
+                        t.old_phi[p] = t.phi[j];
+                        t.old_r[p] = t.r[j];
+                        // explicit 0 + x: the serial fold seeds each
+                        // accumulator with literal 0.0 (preserves the
+                        // -0.0 edge case bit-for-bit)
+                        t.phi[j] = 0f32 + cur.dphi[s];
+                        t.r[j] = 0f32 + cur.r[s];
+                    } else {
+                        t.phi[j] += cur.dphi[s];
+                        t.r[j] += cur.r[s];
+                    }
+                    if last {
+                        let new_phi = phi_acc[i] + t.phi[j];
+                        t.td[i % k] += new_phi as f64 - t.old_phi[p] as f64;
+                        t.phi[j] = new_phi;
+                        t.td[k] += t.r[j] as f64 - t.old_r[p] as f64;
+                    }
+                }
+            }
+        });
+    }
+    state.merge_owner_totals(&scratch.tot_delta);
+    m
+}
+
+/// One full synchronization as an owner-sliced reduce-scatter: gather
+/// worker partials per `plan` (subset plans pack into `scratch`'s reused
+/// buffers), then each owner reduces + scatters its slice in a single
+/// fused pass. Returns the number of (word, topic) pairs reduced; the
+/// caller charges `2 · 4 · pairs` payload bytes (φ̂ and r) to the ledger.
+///
+/// Equivalent — bitwise, on `phi_eff`/`r_global` — to
+/// [`serial_reference_step`] on the same inputs, at any thread budget.
+pub fn allreduce_step<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+    scratch: &mut SyncScratch,
+) -> usize {
+    assert_eq!(
+        workers.len(),
+        cluster.workers(),
+        "one shard per logical worker"
+    );
+    match plan {
+        ReducePlan::Dense { len } => {
+            debug_assert_eq!(*len, state.phi_eff.len());
+            dense_owner_step(cluster, phi_acc, workers, state)
+        }
+        ReducePlan::Subset { indices } => {
+            subset_owner_step(cluster, indices, phi_acc, workers, state, scratch)
+        }
+    }
+}
+
+/// The double-buffered pipelined synchronization (coordinator overlap
+/// mode): worker n+1's gather export overlaps the owner-sliced fold of
+/// worker n's buffer. Dense plans have no packing phase (matrices are
+/// borrowed in place), so they degenerate to the fused dense dispatch —
+/// their overlap shows up only in the ledger's `max(compute, comm)`
+/// accounting. Results are **bitwise identical** to [`allreduce_step`],
+/// totals included.
+pub fn allreduce_step_overlap<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+    scratch: &mut SyncScratch,
+) -> usize {
+    assert_eq!(
+        workers.len(),
+        cluster.workers(),
+        "one shard per logical worker"
+    );
+    match plan {
+        ReducePlan::Dense { len } => {
+            debug_assert_eq!(*len, state.phi_eff.len());
+            dense_owner_step(cluster, phi_acc, workers, state)
+        }
+        ReducePlan::Subset { indices } => {
+            subset_owner_step_pipelined(cluster, indices, phi_acc, workers, state, scratch)
+        }
+    }
+}
+
+/// The retired PR-1 leader-pool synchronization, kept as the microbench
+/// baseline and a second equivalence oracle: the whole pool reduces
+/// *every* slice in two chunk-parallel passes (`red_dphi`, then `red_r`)
+/// with freshly allocated gather/reduction buffers, followed by a serial
+/// scatter. Bitwise-equal to [`allreduce_step`] on `phi_eff`/`r_global`;
+/// slower (double pass, allocator churn, serial scatter).
+pub fn allreduce_step_pool<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+) -> usize {
+    assert_eq!(
+        workers.len(),
+        cluster.workers(),
+        "one shard per logical worker"
+    );
+    match plan {
+        ReducePlan::Dense { len } => {
+            debug_assert_eq!(*len, state.phi_eff.len());
+            let guards: Vec<_> = workers.iter().map(|m| m.lock().unwrap()).collect();
+            let parts: Vec<(&[f32], &[f32])> =
+                guards.iter().map(|g| g.dense_parts()).collect();
+            let dphi_parts: Vec<&[f32]> = parts.iter().map(|p| p.0).collect();
+            let r_parts: Vec<&[f32]> = parts.iter().map(|p| p.1).collect();
+            reduce_chunked(cluster, Some(phi_acc), &dphi_parts, &mut state.phi_eff);
+            reduce_chunked(cluster, None, &r_parts, &mut state.r_global);
+            drop(guards);
+            state.recompute_totals();
+            *len
+        }
+        ReducePlan::Subset { indices } => {
+            let (bufs, _) =
+                cluster.run(|n| workers[n].lock().unwrap().export_selected(indices));
+            let m = indices.len();
+            let mut red_dphi = vec![0f32; m];
+            let mut red_r = vec![0f32; m];
+            let dphi_parts: Vec<&[f32]> = bufs.iter().map(|b| b.dphi.as_slice()).collect();
+            let r_parts: Vec<&[f32]> = bufs.iter().map(|b| b.r.as_slice()).collect();
+            reduce_chunked(cluster, None, &dphi_parts, &mut red_dphi);
+            reduce_chunked(cluster, None, &r_parts, &mut red_r);
+            state.scatter_subset(indices, phi_acc, &red_dphi, &red_r);
+            m
+        }
+    }
+}
+
 /// Chunk-parallel element-wise sum on the cluster's OS threads:
 /// `out[i] = seed[i] + Σ_n parts[n][i]` (seed = 0 when `None`). Each
 /// element's accumulation chain is the same left fold the serial loop
-/// performs, so the result is bitwise independent of the chunking.
+/// performs, so the result is bitwise independent of the chunking. Used
+/// by the coordinator's end-of-batch fold and the leader-pool baseline.
 pub fn reduce_chunked(
     cluster: &Cluster,
     seed: Option<&[f32]>,
@@ -215,56 +772,6 @@ pub fn reduce_chunked(
             }
         }
     });
-}
-
-/// One full synchronization: gather worker partials per `plan`, reduce
-/// them in parallel over index chunks, scatter into `state`. Returns the
-/// number of (word, topic) pairs reduced; the caller charges
-/// `2 · 4 · pairs` payload bytes (φ̂ and r) to the ledger.
-///
-/// Equivalent — bitwise, on `phi_eff`/`r_global` — to
-/// [`serial_reference_step`] on the same inputs.
-pub fn allreduce_step<S: ReduceSource + Send>(
-    cluster: &Cluster,
-    plan: &ReducePlan,
-    phi_acc: &[f32],
-    workers: &[Mutex<S>],
-    state: &mut GlobalState,
-) -> usize {
-    assert_eq!(
-        workers.len(),
-        cluster.workers(),
-        "one shard per logical worker"
-    );
-    match plan {
-        ReducePlan::Dense { len } => {
-            debug_assert_eq!(*len, state.phi_eff.len());
-            let guards: Vec<_> = workers.iter().map(|m| m.lock().unwrap()).collect();
-            let dphi_parts: Vec<&[f32]> =
-                guards.iter().map(|g| g.dense_parts().0).collect();
-            let r_parts: Vec<&[f32]> =
-                guards.iter().map(|g| g.dense_parts().1).collect();
-            reduce_chunked(cluster, Some(phi_acc), &dphi_parts, &mut state.phi_eff);
-            reduce_chunked(cluster, None, &r_parts, &mut state.r_global);
-            drop(guards);
-            state.recompute_totals();
-            *len
-        }
-        ReducePlan::Subset { indices } => {
-            // parallel gather: each worker packs its own plan-order buffer
-            let (bufs, _) =
-                cluster.run(|n| workers[n].lock().unwrap().export_selected(indices));
-            let m = indices.len();
-            let mut red_dphi = vec![0f32; m];
-            let mut red_r = vec![0f32; m];
-            let dphi_parts: Vec<&[f32]> = bufs.iter().map(|b| b.dphi.as_slice()).collect();
-            let r_parts: Vec<&[f32]> = bufs.iter().map(|b| b.r.as_slice()).collect();
-            reduce_chunked(cluster, None, &dphi_parts, &mut red_dphi);
-            reduce_chunked(cluster, None, &r_parts, &mut red_r);
-            state.scatter_subset(indices, phi_acc, &red_dphi, &red_r);
-            m
-        }
-    }
 }
 
 /// The pre-refactor serial leader reduction, kept verbatim (modulo
@@ -402,6 +909,23 @@ mod tests {
     }
 
     #[test]
+    fn owner_slices_partition_exactly() {
+        for &(len, owners) in &[(1usize, 1usize), (10, 3), (100, 7), (5, 8), (8192, 4)] {
+            let s = OwnerSlices::new(len, owners);
+            let mut covered = 0usize;
+            for n in 0..owners {
+                let rg = s.range(n);
+                assert_eq!(rg.start, covered, "len={len} owners={owners} n={n}");
+                covered = rg.end;
+                for i in rg {
+                    assert_eq!(s.owner_of(i), n, "len={len} owners={owners} i={i}");
+                }
+            }
+            assert_eq!(covered, len);
+        }
+    }
+
+    #[test]
     fn reduce_sum_matches_sequential() {
         let partials = vec![vec![1.0f32, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
         let mut g = vec![0.5f32, 0.5, 0.5];
@@ -451,14 +975,27 @@ mod tests {
         let workers = random_workers(3, w * k, &mut rng);
         let cluster = Cluster::new(3, 0);
 
-        let mut par = GlobalState::new(&phi_acc, k);
+        let mut own = GlobalState::new(&phi_acc, k);
+        let mut pipe = GlobalState::new(&phi_acc, k);
+        let mut pool = GlobalState::new(&phi_acc, k);
         let mut ser = SerialState::new(&phi_acc, k);
+        let mut scr_own = SyncScratch::default();
+        let mut scr_pipe = SyncScratch::default();
         let plan = ReducePlan::Dense { len: w * k };
-        let pairs = allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut par);
+        let pairs = allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut own, &mut scr_own);
+        allreduce_step_overlap(&cluster, &plan, &phi_acc, &workers, &mut pipe, &mut scr_pipe);
+        allreduce_step_pool(&cluster, &plan, &phi_acc, &workers, &mut pool);
         serial_reference_step(&plan, k, &phi_acc, &workers, &mut ser);
         assert_eq!(pairs, w * k);
-        assert_eq!(par.phi_eff, ser.phi_eff);
-        assert_eq!(par.r_global, ser.r_global);
+        assert_eq!(own.phi_eff, ser.phi_eff);
+        assert_eq!(own.r_global, ser.r_global);
+        assert_eq!(pipe.phi_eff, ser.phi_eff);
+        assert_eq!(pipe.r_global, ser.r_global);
+        assert_eq!(pool.phi_eff, ser.phi_eff);
+        assert_eq!(pool.r_global, ser.r_global);
+        // fused and pipelined agree on the f64 totals bitwise
+        assert_eq!(own.phi_tot(), pipe.phi_tot());
+        assert_eq!(own.r_total().to_bits(), pipe.r_total().to_bits());
     }
 
     #[test]
@@ -469,8 +1006,12 @@ mod tests {
         let workers = random_workers(4, w * k, &mut rng);
         let cluster = Cluster::new(4, 0);
 
-        let mut par = GlobalState::new(&phi_acc, k);
+        let mut own = GlobalState::new(&phi_acc, k);
+        let mut pipe = GlobalState::new(&phi_acc, k);
+        let mut pool = GlobalState::new(&phi_acc, k);
         let mut ser = SerialState::new(&phi_acc, k);
+        let mut scr_own = SyncScratch::default();
+        let mut scr_pipe = SyncScratch::default();
         for round in 0..5 {
             // a fresh random subset each round, deliberately unsorted
             let mut indices: Vec<u32> =
@@ -480,11 +1021,24 @@ mod tests {
                 indices.push(rng.below(w * k) as u32);
             }
             let plan = ReducePlan::Subset { indices: &indices };
-            let pairs = allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut par);
+            let pairs =
+                allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut own, &mut scr_own);
+            allreduce_step_overlap(
+                &cluster, &plan, &phi_acc, &workers, &mut pipe, &mut scr_pipe,
+            );
+            allreduce_step_pool(&cluster, &plan, &phi_acc, &workers, &mut pool);
             serial_reference_step(&plan, k, &phi_acc, &workers, &mut ser);
             assert_eq!(pairs, indices.len());
-            assert_eq!(par.phi_eff, ser.phi_eff, "round {round}");
-            assert_eq!(par.r_global, ser.r_global, "round {round}");
+            assert_eq!(own.phi_eff, ser.phi_eff, "round {round}");
+            assert_eq!(own.r_global, ser.r_global, "round {round}");
+            assert_eq!(pipe.phi_eff, ser.phi_eff, "pipelined round {round}");
+            assert_eq!(pipe.r_global, ser.r_global, "pipelined round {round}");
+            assert_eq!(pool.phi_eff, ser.phi_eff, "pool round {round}");
+            assert_eq!(pool.r_global, ser.r_global, "pool round {round}");
+            // fused vs pipelined: totals bitwise (the coordinator's
+            // overlap-equivalence contract hinges on this)
+            assert_eq!(own.phi_tot(), pipe.phi_tot(), "round {round}");
+            assert_eq!(own.r_total().to_bits(), pipe.r_total().to_bits(), "round {round}");
             // mutate worker partials between rounds
             for m in &workers {
                 let mut g = m.lock().unwrap();
@@ -499,13 +1053,78 @@ mod tests {
     }
 
     #[test]
-    fn export_selected_default_packs_plan_order() {
+    fn single_worker_owner_step_degenerates() {
+        // N = 1: one owner slice covering everything, no pipeline rounds
+        let (w, k) = (30, 4);
+        let mut rng = Rng::new(8);
+        let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32()).collect();
+        let workers = random_workers(1, w * k, &mut rng);
+        let cluster = Cluster::new(1, 0);
+        let mut own = GlobalState::new(&phi_acc, k);
+        let mut pipe = GlobalState::new(&phi_acc, k);
+        let mut ser = SerialState::new(&phi_acc, k);
+        let mut scr = SyncScratch::default();
+        let mut scr2 = SyncScratch::default();
+        let indices: Vec<u32> = (0..(w * k) as u32).step_by(3).collect();
+        let plan = ReducePlan::Subset { indices: &indices };
+        allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut own, &mut scr);
+        allreduce_step_overlap(&cluster, &plan, &phi_acc, &workers, &mut pipe, &mut scr2);
+        serial_reference_step(&plan, k, &phi_acc, &workers, &mut ser);
+        assert_eq!(own.phi_eff, ser.phi_eff);
+        assert_eq!(pipe.phi_eff, ser.phi_eff);
+        assert_eq!(own.r_global, ser.r_global);
+        assert_eq!(pipe.r_global, ser.r_global);
+    }
+
+    #[test]
+    fn export_selected_into_reuses_buffer() {
         let src = VecSource {
             dphi: vec![10.0, 11.0, 12.0, 13.0],
             r: vec![0.1, 0.2, 0.3, 0.4],
         };
-        let buf = src.export_selected(&[3, 0, 2]);
+        let mut buf = GatherBuf::default();
+        src.export_selected_into(&[3, 0, 2], &mut buf);
         assert_eq!(buf.dphi, vec![13.0, 10.0, 12.0]);
         assert_eq!(buf.r, vec![0.4, 0.1, 0.3]);
+        // second export into the same buffer replaces, never appends
+        src.export_selected_into(&[1], &mut buf);
+        assert_eq!(buf.dphi, vec![11.0]);
+        assert_eq!(buf.r, vec![0.2]);
+        // the allocating wrapper agrees
+        let owned = src.export_selected(&[3, 0, 2]);
+        assert_eq!(owned.dphi, vec![13.0, 10.0, 12.0]);
+        assert_eq!(owned.r, vec![0.4, 0.1, 0.3]);
+    }
+
+    #[test]
+    fn group_by_owner_covers_each_slot_once() {
+        let mut rng = Rng::new(13);
+        let len = 997;
+        let slices = OwnerSlices::new(len, 5);
+        let mut indices: Vec<u32> =
+            (0..len as u32).filter(|_| rng.f32() < 0.3).collect();
+        rng.shuffle(&mut indices);
+        let mut scr = SyncScratch::default();
+        scr.group_by_owner(&indices, &slices);
+        assert_eq!(scr.owner_off.len(), 6);
+        assert_eq!(*scr.owner_off.last().unwrap() as usize, indices.len());
+        let mut seen = vec![false; indices.len()];
+        for n in 0..5 {
+            let lo = scr.owner_off[n] as usize;
+            let hi = scr.owner_off[n + 1] as usize;
+            let mut prev_slot = None;
+            for &s in &scr.owner_slots[lo..hi] {
+                let s = s as usize;
+                assert!(!seen[s], "slot {s} grouped twice");
+                seen[s] = true;
+                assert_eq!(slices.owner_of(indices[s] as usize), n);
+                // plan order preserved within each owner
+                if let Some(p) = prev_slot {
+                    assert!(s > p, "owner {n}: slot order violated");
+                }
+                prev_slot = Some(s);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
     }
 }

@@ -224,6 +224,23 @@ impl Cluster {
         }
         secs
     }
+
+    /// Slice-owning dispatch of the owner-sliced reduce-scatter
+    /// (comm::allreduce): run `f(i, &mut tasks[i])` for every owner task
+    /// concurrently on the full OS-thread pool. Semantically task `i`
+    /// belongs to logical worker `i` — its slice boundaries derive from
+    /// index counts only, never from the machine — so results are
+    /// machine-independent however the pool schedules the tasks. This is
+    /// [`Cluster::run_on_doc_blocks`] under the pool-wide budget, named
+    /// so the synchronization stack has a single dispatch point. Returns
+    /// each task's measured seconds, task order.
+    pub fn run_on_owner_slices<T, F>(&self, tasks: &mut [T], f: F) -> Vec<f64>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        self.run_on_doc_blocks(0, tasks, f)
+    }
 }
 
 #[cfg(test)]
@@ -279,6 +296,20 @@ mod tests {
             assert_eq!(secs.len(), 13);
             assert!(secs.iter().all(|&s| s >= 0.0));
             assert!(tasks.iter().all(|t| t.1 == 1), "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn owner_slice_dispatch_runs_each_task_once() {
+        for &(n, threads) in &[(1usize, 1usize), (4, 2), (8, 0)] {
+            let c = Cluster::new(n, threads);
+            let mut tasks: Vec<usize> = vec![0; n];
+            let secs = c.run_on_owner_slices(&mut tasks, |i, t| {
+                assert!(i < n);
+                *t += 1;
+            });
+            assert_eq!(secs.len(), n);
+            assert!(tasks.iter().all(|&t| t == 1), "n={n} threads={threads}");
         }
     }
 

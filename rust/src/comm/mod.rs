@@ -10,8 +10,9 @@ pub mod ledger;
 pub mod net;
 
 pub use allreduce::{
-    allreduce_step, reduce_chunked, reduce_sum_into, reduce_sum_subset_into, GatherBuf,
-    GlobalState, ReducePlan, ReduceSource,
+    allreduce_step, allreduce_step_overlap, allreduce_step_pool, reduce_chunked,
+    reduce_sum_into, reduce_sum_subset_into, GatherBuf, GlobalState, OwnerSlices,
+    ReducePlan, ReduceSource, SyncScratch,
 };
 pub use cluster::Cluster;
 pub use ledger::{Ledger, SyncEvent};

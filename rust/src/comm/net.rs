@@ -93,6 +93,15 @@ impl NetModel {
         self.reduce_scatter_secs(bytes, n) + self.allgather_secs(bytes, n)
     }
 
+    /// Iteration time when an allreduce of `bytes` across `n` overlaps
+    /// `compute_secs` of computation (the double-buffered pipeline /
+    /// parameter-server semantics the ledger's overlap mode charges):
+    /// `max(compute, comm)` — communication hides behind computation and
+    /// vice versa, never both.
+    pub fn overlapped_iter_secs(&self, compute_secs: f64, bytes: usize, n: usize) -> f64 {
+        compute_secs.max(self.allreduce_secs(bytes, n))
+    }
+
     /// Total wire bytes an `n`-processor allreduce of `bytes` moves
     /// (all links summed) — the quantity the paper's Eq. (5) counts
     /// as N·K·W elements.
@@ -152,6 +161,17 @@ mod tests {
         }
         assert_eq!(m.reduce_scatter_secs(1 << 20, 1), 0.0);
         assert_eq!(m.allgather_secs(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn overlapped_iter_is_max_of_segments() {
+        let m = NetModel::infiniband_20gbps();
+        let comm = m.allreduce_secs(1 << 20, 8);
+        // compute-bound: compute dominates; comm-bound: comm dominates
+        assert_eq!(m.overlapped_iter_secs(10.0 * comm, 1 << 20, 8), 10.0 * comm);
+        assert_eq!(m.overlapped_iter_secs(comm * 0.1, 1 << 20, 8), comm);
+        // n = 1 has no comm to hide
+        assert_eq!(m.overlapped_iter_secs(0.25, 1 << 20, 1), 0.25);
     }
 
     #[test]

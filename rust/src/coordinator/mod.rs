@@ -18,6 +18,30 @@
 //! (`nnz_budget = usize::MAX`) reduces to (parallel) batch BP; full
 //! `PowerParams` disables selection entirely.
 //!
+//! # Overlap pipeline (`PobpConfig::overlap`)
+//!
+//! The serialized loop charges compute + comm per iteration (the BSP
+//! semantics of Fig. 1). Overlap mode runs the same arithmetic through
+//! the pipelined synchronization stack instead:
+//!
+//! * the allreduce is the double-buffered
+//!   [`allreduce_step_overlap`]: worker n+1's gather export packs
+//!   concurrently with the owner-sliced fold of worker n's buffer;
+//! * the next mini-batch's shard construction runs concurrently with the
+//!   current batch's end-of-batch fold (both leader-side, disjoint
+//!   state);
+//! * the ledger charges `max(compute, comm)` per iteration
+//!   ([`Ledger::record_overlapped_iter`], the YLDA parameter-server
+//!   semantics of `engine::mpa`), keeping byte counts and per-segment
+//!   reduce-scatter/allgather attribution exact. The end-of-batch fold's
+//!   full-matrix sync stays serialized — the leader must finish folding
+//!   before freeing the batch (Fig. 4 line 30).
+//!
+//! Numerical results are **bitwise identical** between the two modes at
+//! any thread budget (`rust/tests/allreduce_equiv.rs` pins this): both
+//! run the same per-element left folds and the same per-owner f64
+//! totals sequence; only scheduling and time accounting differ.
+//!
 //! Simulation note (DESIGN.md §Substitutions): worker compute is measured
 //! per shard; communication time comes from the byte-exact ledger +
 //! network model. Numerical results are *identical* to a real N-process
@@ -25,9 +49,12 @@
 
 use std::sync::Mutex;
 
-use crate::comm::allreduce::{allreduce_step, reduce_chunked, GlobalState, ReducePlan};
+use crate::comm::allreduce::{
+    allreduce_step, allreduce_step_overlap, reduce_chunked, GlobalState, ReducePlan,
+    SyncScratch,
+};
 use crate::comm::{Cluster, Ledger, NetModel};
-use crate::corpus::{shard_ranges, Csr, MiniBatchStream};
+use crate::corpus::{shard_ranges, Csr, MiniBatch, MiniBatchStream};
 use crate::engine::bp::{Selection, ShardBp};
 use crate::engine::traits::{IterStat, LdaParams, Model, TrainResult};
 use crate::sched::{select_power, PowerParams, PowerSet};
@@ -70,6 +97,12 @@ pub struct PobpConfig {
     /// record a model snapshot every this many synchronizations
     /// (0 = never); used for perplexity-vs-time curves
     pub snapshot_every: usize,
+    /// run the overlap pipeline: double-buffered gather/fold allreduce,
+    /// next-batch shard construction overlapped with the fold, and
+    /// `max(compute, comm)` ledger accounting per iteration. Bitwise
+    /// identical results to the serialized mode (see module doc);
+    /// default `false` = the paper's serialized BSP accounting.
+    pub overlap: bool,
 }
 
 impl Default for PobpConfig {
@@ -86,6 +119,7 @@ impl Default for PobpConfig {
             net: NetModel::infiniband_20gbps(),
             seed: 42,
             snapshot_every: 0,
+            overlap: false,
         }
     }
 }
@@ -110,6 +144,29 @@ impl PobpConfig {
     }
 }
 
+/// Build one mini-batch's worker shards (Fig. 4 lines 3-5). The worker
+/// RNG streams split off `rng` in worker order, once per batch — the
+/// overlap pipeline calls this concurrently with the previous batch's
+/// fold, and draws the splits at the same point of the stream either
+/// way, so both modes see identical randomness.
+fn build_shards(
+    mb: &MiniBatch,
+    k: usize,
+    n_workers: usize,
+    rng: &mut Rng,
+) -> Vec<Mutex<ShardBp>> {
+    let ranges = shard_ranges(mb.data.docs(), n_workers);
+    let mut worker_rngs: Vec<Rng> =
+        (0..n_workers).map(|n| rng.split(n as u64)).collect();
+    ranges
+        .iter()
+        .zip(worker_rngs.iter_mut())
+        .map(|(rg, wrng)| {
+            Mutex::new(ShardBp::init(mb.data.slice_docs(rg.start, rg.end), k, wrng))
+        })
+        .collect()
+}
+
 /// Trains LDA with POBP over `corpus` and returns the learned model plus
 /// the full cost decomposition.
 pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
@@ -127,26 +184,26 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
     // fold also bumps `ledger.sync_count()`, which would skip/shift
     // snapshots whose multiple lands on a fold.
     let mut iter_syncs = 0usize;
+    // Reusable synchronization buffers (gather exports, owner-slot
+    // permutation, totals deltas) and the plan-index buffer — held for
+    // the whole run so the O(pairs) gather/reduction storage never
+    // reallocates across syncs (small per-dispatch task vectors remain).
+    let mut scratch = SyncScratch::default();
+    let mut flat_buf: Vec<u32> = Vec::new();
 
     let global_budget = cfg.nnz_budget.saturating_mul(cfg.n_workers);
-    for mb in MiniBatchStream::new(corpus, global_budget) {
+    let mut stream = MiniBatchStream::new(corpus, global_budget);
+    let mut pending = stream.next();
+    // Shards of the upcoming batch, possibly prebuilt by the overlap
+    // pipeline during the previous batch's fold.
+    let mut prebuilt: Option<Vec<Mutex<ShardBp>>> = None;
+    while let Some(mb) = pending.take() {
         let tokens = mb.data.tokens().max(1.0);
-        let ranges = shard_ranges(mb.data.docs(), cfg.n_workers);
 
-        // --- init worker shards (Fig. 4 lines 3-5) ---
-        let mut worker_rngs: Vec<Rng> =
-            (0..cfg.n_workers).map(|n| rng.split(n as u64)).collect();
-        let shards: Vec<Mutex<ShardBp>> = ranges
-            .iter()
-            .zip(worker_rngs.iter_mut())
-            .map(|(rg, wrng)| {
-                Mutex::new(ShardBp::init(
-                    mb.data.slice_docs(rg.start, rg.end),
-                    k,
-                    wrng,
-                ))
-            })
-            .collect();
+        let shards: Vec<Mutex<ShardBp>> = match prebuilt.take() {
+            Some(s) => s,
+            None => build_shards(&mb, k, cfg.n_workers, &mut rng),
+        };
 
         // Working global state for this batch: φ̂ = phi_acc + Σ_n Δφ̂_n,
         // plus the synchronized residual matrix — totals f64-backed
@@ -186,23 +243,35 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
                 .iter()
                 .map(|(_, timing)| timing.critical_path_secs(budget))
                 .collect();
-            ledger.record_compute(&secs);
 
             // --- synchronize Δφ̂ and r on the scheduled pairs (lines
-            //     9-10 / 23-24, Eqs. 9 & 15): one allreduce call for
-            //     both the full and the power schedule ---
-            let flat;
+            //     9-10 / 23-24, Eqs. 9 & 15): owner-sliced
+            //     reduce-scatter, one call for both the full and the
+            //     power schedule; overlap mode runs the double-buffered
+            //     pipelined variant (bitwise-identical results) ---
             let plan = match &power {
                 None => ReducePlan::Dense { len: w * k },
                 Some(ps) => {
-                    flat = ps.flat_indices(k);
-                    ReducePlan::Subset { indices: &flat }
+                    ps.flat_indices_into(k, &mut flat_buf);
+                    ReducePlan::Subset { indices: &flat_buf }
                 }
             };
-            let pairs = allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut state);
+            let pairs = if cfg.overlap {
+                allreduce_step_overlap(
+                    &cluster, &plan, &phi_acc, &shards, &mut state, &mut scratch,
+                )
+            } else {
+                allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut state, &mut scratch)
+            };
             // two f32 matrices (φ̂ and r) restricted to the selection
             let payload = 2 * 4 * pairs;
-            ledger.record_sync(mb.index, t, payload, cfg.n_workers);
+            if cfg.overlap {
+                // pipelined iteration: comm hides behind compute
+                ledger.record_overlapped_iter(mb.index, t, payload, cfg.n_workers, &secs);
+            } else {
+                ledger.record_compute(&secs);
+                ledger.record_sync(mb.index, t, payload, cfg.n_workers);
+            }
 
             iter_syncs += 1;
             let resid_per_token = state.r_total() / tokens;
@@ -252,16 +321,36 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
         // updates not yet communicated, so the fold ships one final full
         // φ̂ matrix (the paper frees the batch keeping the global matrix,
         // line 30) — and charges it: one sync per batch on top of the
-        // per-iteration ones, so sync_count = Σ_batches (iters + 1).
+        // per-iteration ones, so sync_count = Σ_batches (iters + 1). Its
+        // comm stays serialized even in overlap mode (the leader must
+        // finish folding before freeing the batch). Overlap mode builds
+        // the *next* batch's shards concurrently with the fold — both
+        // leader-side, disjoint state, and the RNG splits happen at the
+        // same stream position either way.
+        let next_mb = stream.next();
         {
             let guards: Vec<_> = shards.iter().map(|s| s.lock().unwrap()).collect();
             let dphi_parts: Vec<&[f32]> =
                 guards.iter().map(|g| g.dphi.as_slice()).collect();
-            reduce_chunked(&cluster, Some(&phi_acc), &dphi_parts, &mut state.phi_eff);
+            if cfg.overlap {
+                let rng_ref = &mut rng;
+                prebuilt = std::thread::scope(|scope| {
+                    let prefetch = next_mb.as_ref().map(|nmb| {
+                        scope.spawn(move || build_shards(nmb, k, cfg.n_workers, rng_ref))
+                    });
+                    reduce_chunked(&cluster, Some(&phi_acc), &dphi_parts, &mut state.phi_eff);
+                    prefetch.map(|h| h.join().expect("shard prefetch thread"))
+                });
+            } else {
+                reduce_chunked(&cluster, Some(&phi_acc), &dphi_parts, &mut state.phi_eff);
+                prebuilt =
+                    next_mb.as_ref().map(|nmb| build_shards(nmb, k, cfg.n_workers, &mut rng));
+            }
             drop(guards);
             phi_acc.copy_from_slice(&state.phi_eff);
             ledger.record_sync(mb.index, iters_run + 1, 4 * w * k, cfg.n_workers);
         }
+        pending = next_mb;
         let _ = wall.lap_secs();
     }
 
@@ -412,5 +501,32 @@ mod tests {
         let r = fit(&c, &params, &PobpConfig { nnz_budget: 700, ..PobpConfig::obp(5) });
         assert!(r.ledger.comm_secs == 0.0, "N=1 must not pay comm time");
         assert!(r.model.mass() > 0.0);
+    }
+
+    #[test]
+    fn overlap_mode_matches_serialized_and_hides_comm() {
+        // The deep bitwise pins (all thread budgets, history residuals)
+        // live in rust/tests/allreduce_equiv.rs; this is the smoke-level
+        // contract: same model bits, same bytes, max(compute, comm)
+        // accounting actually hides something.
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        let base = PobpConfig {
+            n_workers: 3,
+            nnz_budget: 900,
+            max_iters: 12,
+            ..Default::default()
+        };
+        let ser = fit(&c, &params, &PobpConfig { overlap: false, ..base.clone() });
+        let ov = fit(&c, &params, &PobpConfig { overlap: true, ..base });
+        assert_eq!(ov.model.phi_wk, ser.model.phi_wk);
+        assert_eq!(ov.history.len(), ser.history.len());
+        assert_eq!(ov.ledger.payload_bytes_total(), ser.ledger.payload_bytes_total());
+        assert_eq!(ov.ledger.sync_count(), ser.ledger.sync_count());
+        let l = &ov.ledger;
+        assert!(l.overlap_saved_secs > 0.0, "pipeline hid no communication");
+        assert!(l.total_secs() < l.compute_secs + l.comm_secs);
+        assert!(l.total_secs() + 1e-12 >= l.compute_secs.max(l.comm_secs));
+        assert_eq!(ser.ledger.overlap_saved_secs, 0.0);
     }
 }

@@ -1284,11 +1284,14 @@ impl ShardBp {
     }
 }
 
-/// Gives `ShardBp` the worker side of the sparse allreduce: the trait's
-/// `export_selected` default packs Δφ̂ and r at the plan's flat indices
-/// (`w·K + k`, plan order) into a
-/// [`GatherBuf`](crate::comm::allreduce::GatherBuf), per worker, in
-/// parallel on the cluster (comm::allreduce).
+/// Gives `ShardBp` the worker side of the owner-sliced sparse allreduce:
+/// the trait's `export_selected_into` default packs Δφ̂ and r at the
+/// plan's flat indices (`w·K + k`, plan order) into the coordinator's
+/// *reused* [`GatherBuf`](crate::comm::allreduce::GatherBuf) pool
+/// (`comm::allreduce::SyncScratch`), per worker, in parallel on the
+/// cluster — no per-sync allocation. In the coordinator's overlap mode
+/// this export runs pipelined: worker n+1 packs while worker n's buffer
+/// is folded into the owner slices.
 impl ReduceSource for ShardBp {
     fn dense_parts(&self) -> (&[f32], &[f32]) {
         (&self.dphi, &self.r)
@@ -1458,6 +1461,11 @@ mod tests {
             assert_eq!(buf.dphi[slot], s.dphi[ix as usize]);
             assert_eq!(buf.r[slot], s.r[ix as usize]);
         }
+        // the reusing export (the coordinator's hot path) packs the same
+        // bytes into a recycled buffer without growing it
+        let mut reused = buf.clone();
+        s.export_selected_into(&flat, &mut reused);
+        assert_eq!(reused, buf);
     }
 
     #[test]

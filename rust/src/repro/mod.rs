@@ -129,6 +129,10 @@ pub fn run_algo(algo: Algo, corpus: &Csr, params: &LdaParams, o: &RunOpts) -> Tr
                 net: o.net,
                 seed: o.seed,
                 snapshot_every: o.snapshot_every,
+                // figure parity: the paper charges POBP the serialized
+                // BSP cost (Fig. 1); the overlap pipeline is measured by
+                // the microbench / equivalence tests instead
+                overlap: false,
             };
             fit_pobp(corpus, params, &cfg)
         }

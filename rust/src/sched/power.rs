@@ -31,14 +31,23 @@ impl PowerSet {
     }
 
     /// Flat row-major indices (w·K + k) of the selected pairs, in
-    /// selection order. `k_total` is K.
-    pub fn flat_indices(&self, k_total: usize) -> Vec<u32> {
-        let mut out = Vec::with_capacity(self.pairs());
+    /// selection order, written into `out` (cleared first, capacity
+    /// reused) — the coordinator's per-iteration plan build without the
+    /// per-sync allocation. `k_total` is K.
+    pub fn flat_indices_into(&self, k_total: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.pairs());
         for (wi, &w) in self.words.iter().enumerate() {
             for &k in &self.topics[wi] {
                 out.push(w * k_total as u32 + k);
             }
         }
+    }
+
+    /// Allocating wrapper over [`PowerSet::flat_indices_into`].
+    pub fn flat_indices(&self, k_total: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.flat_indices_into(k_total, &mut out);
         out
     }
 
@@ -150,6 +159,10 @@ mod tests {
     fn flat_indices_row_major() {
         let ps = PowerSet { words: vec![3, 1], topics: vec![vec![0, 2], vec![1]] };
         assert_eq!(ps.flat_indices(4), vec![12, 14, 5]);
+        // the reusing variant clears stale contents
+        let mut buf = vec![99u32; 7];
+        ps.flat_indices_into(4, &mut buf);
+        assert_eq!(buf, vec![12, 14, 5]);
     }
 
     #[test]

@@ -1,17 +1,27 @@
-//! Equivalence and drift tests for the parallel sparse allreduce
-//! (comm::allreduce): a seeded multi-iteration run through the chunked
-//! parallel reduction must match the pre-refactor serial leader loop
-//! bitwise on `phi_eff`/`r_global`, for full and power schedules and for
-//! N ∈ {1, 2, 4}; and the f64-backed totals must not drift from a
-//! from-scratch recompute over hundreds of sparse scatters.
+//! Equivalence and drift tests for the owner-sliced reduce-scatter
+//! (comm::allreduce) and the coordinator's overlap pipeline:
+//!
+//! * a seeded multi-iteration run through the owner-sliced step, the
+//!   double-buffered pipelined step and the retired leader-pool step
+//!   must all match the pre-refactor serial leader loop bitwise on
+//!   `phi_eff`/`r_global`, for full and power schedules, for
+//!   N ∈ {1, 2, 4}, at OS-thread budgets {1, 2, 8};
+//! * the fused and pipelined paths must agree on the f64-backed totals
+//!   bitwise (the coordinator's overlap mode depends on it);
+//! * an overlapped coordinator run must be bitwise identical to the
+//!   serialized run — model, per-iteration residuals — at every thread
+//!   budget, while its ledger hides `Σ min(compute, comm)`;
+//! * the f64-backed totals must not drift from a from-scratch recompute
+//!   over hundreds of sparse scatters.
 
 use std::sync::Mutex;
 
 use pobp::comm::allreduce::{
-    allreduce_step, serial_reference_step, GlobalState, ReducePlan, ReduceSource,
-    SerialState,
+    allreduce_step, allreduce_step_overlap, allreduce_step_pool, serial_reference_step,
+    GlobalState, ReducePlan, ReduceSource, SerialState, SyncScratch,
 };
 use pobp::comm::Cluster;
+use pobp::coordinator::{fit, PobpConfig};
 use pobp::corpus::shard_ranges;
 use pobp::engine::bp::{Selection, ShardBp};
 use pobp::engine::traits::LdaParams;
@@ -20,14 +30,16 @@ use pobp::synth::{generate, SynthSpec};
 use pobp::util::rng::Rng;
 
 /// Run `iters` sweep+sync rounds on a seeded corpus, applying the
-/// parallel and the serial reduction to the same worker state each
-/// round, and assert bitwise equality of the replicated matrices.
-fn equiv_case(n: usize, power: Option<PowerParams>, seed: u64) {
+/// owner-sliced, pipelined, leader-pool and serial reductions to the
+/// same worker state each round, and assert bitwise equality of the
+/// replicated matrices (and, between the fused and pipelined owner
+/// paths, of the f64 totals).
+fn equiv_case(n: usize, threads: usize, power: Option<PowerParams>, seed: u64) {
     let corpus = generate(&SynthSpec::tiny(seed)).corpus;
     let k = 8;
     let w = corpus.w;
     let params = LdaParams::paper(k);
-    let cluster = Cluster::new(n, 0);
+    let cluster = Cluster::new(n, threads);
     let mut rng = Rng::new(seed);
 
     let ranges = shard_ranges(corpus.docs(), n);
@@ -42,15 +54,19 @@ fn equiv_case(n: usize, power: Option<PowerParams>, seed: u64) {
 
     // non-trivial accumulated model so the φ̂_acc seeding path is covered
     let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32() * 0.1).collect();
-    let mut par = GlobalState::new(&phi_acc, k);
+    let mut own = GlobalState::new(&phi_acc, k);
+    let mut pipe = GlobalState::new(&phi_acc, k);
+    let mut pool = GlobalState::new(&phi_acc, k);
     let mut ser = SerialState::new(&phi_acc, k);
+    let mut scr_own = SyncScratch::default();
+    let mut scr_pipe = SyncScratch::default();
     let mut selection = Selection::full(w);
     let mut flat: Option<Vec<u32>> = None;
 
     for t in 0..8 {
-        // sweep every shard against the parallel path's state
-        let phi = par.phi_eff.clone();
-        let tot = par.phi_tot().to_vec();
+        // sweep every shard against the owner-sliced path's state
+        let phi = own.phi_eff.clone();
+        let tot = own.phi_tot().to_vec();
         for s in &shards {
             let mut g = s.lock().unwrap();
             g.clear_selected_residuals(&selection);
@@ -61,14 +77,25 @@ fn equiv_case(n: usize, power: Option<PowerParams>, seed: u64) {
             None => ReducePlan::Dense { len: w * k },
             Some(ix) => ReducePlan::Subset { indices: ix },
         };
-        let pairs = allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut par);
+        let pairs = allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut own, &mut scr_own);
+        allreduce_step_overlap(&cluster, &plan, &phi_acc, &shards, &mut pipe, &mut scr_pipe);
+        allreduce_step_pool(&cluster, &plan, &phi_acc, &shards, &mut pool);
         serial_reference_step(&plan, k, &phi_acc, &shards, &mut ser);
         assert!(pairs > 0);
-        assert_eq!(par.phi_eff, ser.phi_eff, "phi_eff diverged at t={t}, n={n}");
-        assert_eq!(par.r_global, ser.r_global, "r diverged at t={t}, n={n}");
+        let ctx = format!("t={t}, n={n}, threads={threads}");
+        assert_eq!(own.phi_eff, ser.phi_eff, "owner-sliced phi_eff diverged at {ctx}");
+        assert_eq!(own.r_global, ser.r_global, "owner-sliced r diverged at {ctx}");
+        assert_eq!(pipe.phi_eff, ser.phi_eff, "pipelined phi_eff diverged at {ctx}");
+        assert_eq!(pipe.r_global, ser.r_global, "pipelined r diverged at {ctx}");
+        assert_eq!(pool.phi_eff, ser.phi_eff, "leader-pool phi_eff diverged at {ctx}");
+        assert_eq!(pool.r_global, ser.r_global, "leader-pool r diverged at {ctx}");
+        // fused vs pipelined: identical f64 totals sequence — the
+        // overlap-mode bitwise-equivalence contract
+        assert_eq!(own.phi_tot(), pipe.phi_tot(), "{ctx}");
+        assert_eq!(own.r_total().to_bits(), pipe.r_total().to_bits(), "{ctx}");
 
         if let Some(pp) = &power {
-            let ps = select_power(&par.r_global, w, k, pp);
+            let ps = select_power(&own.r_global, w, k, pp);
             flat = Some(ps.flat_indices(k));
             selection = Selection::from_power(&ps, w);
         }
@@ -77,32 +104,92 @@ fn equiv_case(n: usize, power: Option<PowerParams>, seed: u64) {
 
 #[test]
 fn parallel_matches_serial_full_n1() {
-    equiv_case(1, None, 11);
+    equiv_case(1, 0, None, 11);
 }
 
 #[test]
 fn parallel_matches_serial_full_n2() {
-    equiv_case(2, None, 12);
+    equiv_case(2, 0, None, 12);
 }
 
 #[test]
 fn parallel_matches_serial_full_n4() {
-    equiv_case(4, None, 13);
+    equiv_case(4, 0, None, 13);
 }
 
 #[test]
 fn parallel_matches_serial_power_n1() {
-    equiv_case(1, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 21);
+    equiv_case(1, 0, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 21);
 }
 
 #[test]
 fn parallel_matches_serial_power_n2() {
-    equiv_case(2, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 22);
+    equiv_case(2, 0, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 22);
 }
 
 #[test]
 fn parallel_matches_serial_power_n4() {
-    equiv_case(4, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 23);
+    equiv_case(4, 0, Some(PowerParams { lambda_w: 0.15, lambda_k_times_k: 4 }), 23);
+}
+
+/// The acceptance sweep: dense and subset plans at pinned OS-thread
+/// budgets — the owner partition derives from the logical worker count
+/// only, so every budget must produce the same bits.
+#[test]
+fn parallel_matches_serial_all_thread_budgets() {
+    for &threads in &[1usize, 2, 8] {
+        equiv_case(3, threads, None, 31);
+        equiv_case(3, threads, Some(PowerParams { lambda_w: 0.2, lambda_k_times_k: 3 }), 32);
+    }
+}
+
+/// Coordinator-level pin: an overlapped run (pipelined allreduce,
+/// prefetched shard construction, max(compute, comm) accounting) is
+/// bitwise identical to the serialized run at thread budgets 1/2/8 —
+/// model bits, per-iteration residuals, synced pair counts — while the
+/// ledger actually hides communication and keeps bytes exact.
+#[test]
+fn overlapped_coordinator_bitwise_equals_serialized() {
+    let corpus = generate(&SynthSpec::tiny(31)).corpus;
+    let params = LdaParams::paper(8);
+    let base = PobpConfig {
+        n_workers: 3,
+        nnz_budget: 900,
+        max_iters: 8,
+        converge_thresh: 0.0, // pin the iteration count
+        ..Default::default()
+    };
+    let ser = fit(&corpus, &params, &PobpConfig { overlap: false, ..base.clone() });
+    assert_eq!(ser.ledger.overlap_saved_secs, 0.0);
+    for threads in [1usize, 2, 8] {
+        let ov = fit(
+            &corpus,
+            &params,
+            &PobpConfig { overlap: true, max_threads: threads, ..base.clone() },
+        );
+        assert_eq!(ov.model.phi_wk, ser.model.phi_wk, "threads={threads}");
+        assert_eq!(ov.history.len(), ser.history.len(), "threads={threads}");
+        for (a, b) in ov.history.iter().zip(&ser.history) {
+            assert_eq!(
+                a.residual_per_token.to_bits(),
+                b.residual_per_token.to_bits(),
+                "batch {} iter {} residual diverged at threads={threads}",
+                a.batch,
+                a.iter
+            );
+            assert_eq!(a.synced_pairs, b.synced_pairs);
+        }
+        // ledger: totals follow the overlap semantics
+        // (total = Σ_iters max(compute, comm) + serialized folds), with
+        // byte counts and sync schedule identical to the serialized run
+        let l = &ov.ledger;
+        assert!(l.overlap_saved_secs > 0.0, "threads={threads}: nothing hidden");
+        assert!(l.total_secs() < l.compute_secs + l.comm_secs);
+        assert!(l.total_secs() + 1e-12 >= l.compute_secs.max(l.comm_secs));
+        assert_eq!(l.payload_bytes_total(), ser.ledger.payload_bytes_total());
+        assert_eq!(l.sync_count(), ser.ledger.sync_count());
+        assert_eq!(l.wire_bytes, ser.ledger.wire_bytes);
+    }
 }
 
 struct VecSource {
@@ -117,9 +204,10 @@ impl ReduceSource for VecSource {
 }
 
 /// Long-run drift: hundreds of sparse scatters with mutating partials.
-/// The f64-backed running totals must stay within f64-rounding distance
-/// of a from-scratch recompute — the old f32 incremental bookkeeping
-/// drifted orders of magnitude more over the same schedule.
+/// The f64-backed running totals (now accumulated per owner slice and
+/// merged in owner order) must stay within f64-rounding distance of a
+/// from-scratch recompute — the old f32 incremental bookkeeping drifted
+/// orders of magnitude more over the same schedule.
 #[test]
 fn subset_totals_do_not_drift_over_long_runs() {
     let (w, k) = (300, 16);
@@ -136,6 +224,7 @@ fn subset_totals_do_not_drift_over_long_runs() {
         .collect();
 
     let mut st = GlobalState::new(&phi_acc, k);
+    let mut scratch = SyncScratch::default();
     for round in 0..400 {
         for m in &workers {
             let mut g = m.lock().unwrap();
@@ -152,7 +241,13 @@ fn subset_totals_do_not_drift_over_long_runs() {
             indices.push(rng.below(w * k) as u32);
         }
         let plan = ReducePlan::Subset { indices: &indices };
-        allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut st);
+        // alternate fused and pipelined steps: both must keep the same
+        // running totals
+        if round % 2 == 0 {
+            allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut st, &mut scratch);
+        } else {
+            allreduce_step_overlap(&cluster, &plan, &phi_acc, &workers, &mut st, &mut scratch);
+        }
 
         let (phi_drift, r_drift) = st.totals_drift();
         assert!(
