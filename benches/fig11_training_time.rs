@@ -4,12 +4,19 @@
 //! Paper: POBP 5–100× faster than the others; PFGS/PSGS/YLDA comparable;
 //! PVB slowest. Simulated time = measured shard compute (barrier max) +
 //! modeled allreduce time.
+//!
+//! On top of the paper set, every (dataset, K) point runs the **overlap
+//! ablation**: the same POBP configuration through the pipelined
+//! synchronization stack (`RunOpts::overlap`, row `pobp+overlap`), whose
+//! results are bitwise identical to `pobp` while the ledger charges
+//! `max(compute, comm)` per iteration — the like-for-like comparison
+//! against YLDA, which always overlaps its parameter-server traffic.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use pobp::metrics::{results_dir, sig, Table};
-use pobp::repro::{run_algo, Algo};
+use pobp::repro::{run_algo, Algo, RunOpts};
 
 fn main() {
     common::banner("Fig 11", "training time vs K", "big-3 sims, K sweep, N=256");
@@ -22,25 +29,39 @@ fn main() {
             let corpus = common::corpus(name, k, 11);
             let params = common::params(k);
             let o = common::opts(256, k);
-            let mut rows: Vec<(Algo, f64, f64, f64)> = Vec::new();
+            let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
             for algo in Algo::paper_set() {
                 let r = run_algo(algo, &corpus, &params, &o);
                 // exposed comm (comm − overlap-hidden): the columns then
                 // satisfy sim ≈ compute + comm for every algorithm,
                 // overlapped (YLDA) included
                 rows.push((
-                    algo,
+                    algo.name().to_string(),
                     r.sim_secs(),
                     r.ledger.compute_secs,
                     r.ledger.exposed_comm_secs(),
                 ));
             }
-            let pobp = rows.iter().find(|(a, ..)| *a == Algo::Pobp).unwrap().1;
+            // overlap ablation: identical POBP arithmetic through the
+            // pipelined stack — comm hidden behind compute where it fits
+            let ov = run_algo(
+                Algo::Pobp,
+                &corpus,
+                &params,
+                &RunOpts { overlap: true, ..o.clone() },
+            );
+            rows.push((
+                "pobp+overlap".to_string(),
+                ov.sim_secs(),
+                ov.ledger.compute_secs,
+                ov.ledger.exposed_comm_secs(),
+            ));
+            let pobp = rows.iter().find(|(a, ..)| a == "pobp").unwrap().1;
             for (algo, sim, comp, comm) in &rows {
                 t.row(&[
                     name.to_string(),
                     k.to_string(),
-                    algo.name().to_string(),
+                    algo.clone(),
                     sig(*sim),
                     sig(*comp),
                     sig(*comm),
@@ -51,8 +72,8 @@ fn main() {
                 "{name} K={k}: pobp {}s, others {}",
                 sig(pobp),
                 rows.iter()
-                    .filter(|(a, ..)| *a != Algo::Pobp)
-                    .map(|(a, s, ..)| format!("{}={}s", a.name(), sig(*s)))
+                    .filter(|(a, ..)| a != "pobp")
+                    .map(|(a, s, ..)| format!("{a}={}s", sig(*s)))
                     .collect::<Vec<_>>()
                     .join(" ")
             );

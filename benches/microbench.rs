@@ -28,8 +28,9 @@ use pobp::engine::fgs::FastGs;
 use pobp::engine::gibbs::{GibbsShard, PlainGs};
 use pobp::engine::sgs::SparseGs;
 use pobp::metrics::sig;
-use pobp::sched::{select_power, PowerParams};
+use pobp::sched::{select_power, DocSchedule, PowerParams};
 use pobp::util::json::Json;
+use pobp::util::partial_sort::top_k_desc;
 use pobp::util::rng::Rng;
 
 fn bench<F: FnMut()>(
@@ -136,6 +137,51 @@ fn main() {
         shard.sweep_parallel(&pool, 0, &phi, &tot, &sel_p, &params, true);
     });
 
+    // --- scheduled (ABP t >= 2) sweep: residual-top 30% of the docs,
+    //     serial sweep_docs vs the permuted-block parallel path — the
+    //     last sweep that used to be serial. The schedule comes from the
+    //     per-doc residuals of the full parallel sweep above, like ABP's
+    //     own loop; work items count only the scheduled docs' updates. ---
+    let r_doc: Vec<f32> = shard.doc_residuals().iter().map(|&v| v as f32).collect();
+    let active_docs = (corpus.docs() * 3).div_ceil(10).max(1);
+    let scheduled = top_k_desc(&r_doc, active_docs);
+    let ds = DocSchedule::build(&scheduled, |d| corpus.row_range(d).len());
+    println!(
+        "scheduled sweep: {} docs, {} nnz, {} blocks",
+        ds.len(), ds.nnz(), ds.blocks()
+    );
+    let sched_updates = ds.nnz() as f64 * k as f64;
+    bench(&mut recs, "bp sweep (scheduled, serial sweep_docs)", it(10), sched_updates, || {
+        shard.clear_selected_residuals(&sel);
+        shard.sweep_docs(&scheduled, &phi, &tot, &sel, &params, true);
+    });
+    bench(&mut recs, "bp sweep (scheduled, permuted-block parallel)", it(10), sched_updates, || {
+        shard.clear_selected_residuals(&sel);
+        shard.sweep_docs_parallel(&pool, 0, &ds, &phi, &tot, &sel, &params, true);
+    });
+    // scheduled docs under the power selection — the exact ABP t >= 2
+    // configuration (doc schedule × word/topic schedule)
+    let sched_sub_updates: f64 = scheduled
+        .iter()
+        .flat_map(|&d| corpus.row_range(d as usize))
+        .map(|idx| {
+            let wi = corpus.col[idx] as usize;
+            if sel_p.word_sel[wi] {
+                sel_p.topics_of(wi).map(|t| t.len()).unwrap_or(k) as f64
+            } else {
+                0.0
+            }
+        })
+        .sum();
+    bench(&mut recs, "bp sweep (scheduled subset, serial docs)", it(20), sched_sub_updates, || {
+        shard.clear_selected_residuals(&sel_p);
+        shard.sweep_docs(&scheduled, &phi, &tot, &sel_p, &params, true);
+    });
+    bench(&mut recs, "bp sweep (scheduled subset, permuted-block)", it(20), sched_sub_updates, || {
+        shard.clear_selected_residuals(&sel_p);
+        shard.sweep_docs_parallel(&pool, 0, &ds, &phi, &tot, &sel_p, &params, true);
+    });
+
     // --- Gibbs samplers (tokens/s) ---
     let tokens = corpus.tokens();
     let mut gshard = GibbsShard::init(&corpus, k, &mut rng);
@@ -240,6 +286,9 @@ fn main() {
     let serial = find(&recs, "bp sweep (full, serial reference)");
     let par = find(&recs, "bp sweep (full, doc-parallel)");
     let speedup = if serial > 0.0 { par / serial } else { 0.0 };
+    let sched_ser = find(&recs, "bp sweep (scheduled, serial sweep_docs)");
+    let sched_par = find(&recs, "bp sweep (scheduled, permuted-block parallel)");
+    let sched_speedup = if sched_ser > 0.0 { sched_par / sched_ser } else { 0.0 };
     let results = Json::Obj(
         recs.into_iter().map(|(n, v)| (n, Json::Num(v))).collect(),
     );
@@ -256,10 +305,12 @@ fn main() {
             ("k", Json::from(k)),
         ])),
         ("full_sweep_speedup_vs_serial", Json::from(speedup)),
+        ("scheduled_sweep_speedup_vs_serial", Json::from(sched_speedup)),
         ("overlap_efficiency", Json::from(overlap_eff)),
         ("items_per_sec", results),
     ]);
     println!("\nfull-sweep speedup vs serial reference: {speedup:.2}x");
+    println!("scheduled-sweep speedup vs serial sweep_docs: {sched_speedup:.2}x");
     if smoke {
         println!("--smoke: skipping BENCH_microbench.json write");
     } else {

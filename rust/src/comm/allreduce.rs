@@ -1,6 +1,9 @@
 //! The parallel sparse allreduce subsystem — the leader-side realization
 //! of the paper's synchronization step (Fig. 4 lines 9–10 / 23–24,
 //! Eqs. 6, 9, 15), organized as a true **owner-sliced reduce-scatter**.
+//! (`docs/ARCHITECTURE.md` places these contracts in the whole
+//! mini-batch lifecycle; the equivalence tests that pin them live in
+//! `rust/tests/allreduce_equiv.rs`.)
 //!
 //! # Ownership model
 //!

@@ -7,6 +7,40 @@
 //! are multiplexed over cores and their shard times are still measured
 //! individually, so the barrier cost max_n(compute_n) used by the ledger
 //! stays meaningful for N up to the paper's 1024.
+//!
+//! # Determinism contract of the dispatches
+//!
+//! The pool is a pure executor: results must never depend on how many
+//! OS threads ran a dispatch or which thread claimed which task. The
+//! split of responsibility that guarantees it:
+//!
+//! * **Caller-fixed partitions** ([`Cluster::run`],
+//!   [`Cluster::run_on_doc_blocks`], [`Cluster::run_on_permuted_blocks`],
+//!   [`Cluster::run_on_owner_slices`]): the caller pre-builds the task
+//!   list from data counts only (doc blocks from NNZ, schedule blocks
+//!   from scheduled NNZ, owner slices from index counts); tasks are
+//!   mutually independent `&mut` views, claimed by work-stealing on an
+//!   atomic counter. Whatever the claim order, each task's work — and
+//!   therefore every float accumulation keyed on the partition — is
+//!   identical on every machine at every thread budget.
+//! * **Pool-derived chunks** ([`Cluster::run_on_chunks`]): boundaries
+//!   *do* depend on the core count, so the closure must be
+//!   element-local (each output element computed from that element's
+//!   inputs only) — the chunked allreduce reduction qualifies because
+//!   each element's fold chain is chunking-independent.
+//!
+//! Per-task seconds are measured individually and returned in task
+//! order, so the ledger's barrier/critical-path accounting is
+//! deterministic in *shape* (which tasks existed) even though the
+//! measured times themselves vary run to run.
+//!
+//! ```
+//! use pobp::comm::Cluster;
+//! let pool = Cluster::new(2, 0);
+//! let (squares, secs) = pool.run(|i| i * i);
+//! assert_eq!(squares, vec![0, 1]);
+//! assert_eq!(secs.len(), 2);
+//! ```
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -225,6 +259,32 @@ impl Cluster {
         secs
     }
 
+    /// Permuted-block dispatch of the scheduled-parallel doc sweep
+    /// (`engine::bp::ShardBp::sweep_docs_parallel`): run
+    /// `f(i, &mut blocks[i])` for every pre-built schedule block
+    /// concurrently on up to `budget` OS threads. Semantically the blocks
+    /// are *whole-document* slices of a per-iteration
+    /// [`DocSchedule`](crate::sched::DocSchedule) permutation — their
+    /// boundaries derive from scheduled-NNZ counts only, never from the
+    /// machine, so any float-accumulation order keyed on the block
+    /// structure is machine-independent however the pool schedules the
+    /// tasks. This is [`Cluster::run_on_doc_blocks`] with the permuted
+    /// (sorted-subset) ownership contract, named so the scheduling stack
+    /// has its own dispatch point. Returns each block's measured seconds,
+    /// block order.
+    pub fn run_on_permuted_blocks<T, F>(
+        &self,
+        budget: usize,
+        blocks: &mut [T],
+        f: F,
+    ) -> Vec<f64>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        self.run_on_doc_blocks(budget, blocks, f)
+    }
+
     /// Slice-owning dispatch of the owner-sliced reduce-scatter
     /// (comm::allreduce): run `f(i, &mut tasks[i])` for every owner task
     /// concurrently on the full OS-thread pool. Semantically task `i`
@@ -296,6 +356,20 @@ mod tests {
             assert_eq!(secs.len(), 13);
             assert!(secs.iter().all(|&s| s >= 0.0));
             assert!(tasks.iter().all(|t| t.1 == 1), "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn permuted_block_dispatch_runs_each_block_once_any_budget() {
+        for &budget in &[0usize, 1, 2, 8] {
+            let c = Cluster::new(1, 0);
+            let mut blocks: Vec<(usize, usize)> = (0..9).map(|i| (i, 0usize)).collect();
+            let secs = c.run_on_permuted_blocks(budget, &mut blocks, |i, b| {
+                assert_eq!(b.0, i);
+                b.1 += 1;
+            });
+            assert_eq!(secs.len(), 9);
+            assert!(blocks.iter().all(|b| b.1 == 1), "budget {budget}");
         }
     }
 

@@ -17,6 +17,21 @@
 //! [`Ledger::overlap_saved_secs`] and is subtracted from
 //! [`Ledger::total_secs`], so `total = Σ max(compute, comm)` over
 //! overlapped iterations plus the serialized cost of everything else.
+//!
+//! # Exactness invariants (both modes)
+//!
+//! Overlap changes *time* accounting only; the measured quantities the
+//! figures depend on never degrade:
+//!
+//! * payload bytes per sync are exact (`2 · 4 · pairs` for iteration
+//!   syncs, `4 · W · K` for the end-of-batch fold);
+//! * sync counts are exact: every mini-batch charges its iterations
+//!   plus one final fold, `sync_count = Σ_batches (iters + 1)`;
+//! * per-segment attribution covers comm exactly:
+//!   `reduce_scatter_secs + allgather_secs = comm_secs` per event;
+//! * the decomposition `total = compute + exposed_comm` holds, with
+//!   [`Ledger::exposed_comm_secs`] `= comm − overlap_saved` — the
+//!   communication an overlapped algorithm could not hide.
 
 use crate::comm::net::NetModel;
 

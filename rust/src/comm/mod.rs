@@ -3,6 +3,24 @@
 //! communication ledger. See DESIGN.md §Substitutions for why simulation
 //! preserves the paper's measured quantities (bytes moved and sync counts
 //! are exact; time follows the published link parameters).
+//!
+//! The subsystem's three standing contracts — written down per module
+//! and cross-referenced in `docs/ARCHITECTURE.md`:
+//!
+//! * **Determinism** ([`cluster`]): every dispatch executes
+//!   caller-fixed partitions whose boundaries derive from data counts
+//!   only, so float results are machine- and thread-count-independent
+//!   whenever accumulation order is keyed on the partition.
+//! * **Owner slicing** ([`allreduce`]): the reduce-scatter's
+//!   [`OwnerSlices`] partition of the flat index space, the per-element
+//!   serial left folds, and the per-owner f64 totals merged in owner
+//!   order — bitwise equal to [`allreduce::serial_reference_step`] on
+//!   every path, pipelined included.
+//! * **Ledger/overlap accounting** ([`ledger`]): exact bytes, sync
+//!   counts and per-segment attribution always; serialized iterations
+//!   charge `compute + comm`, overlapped iterations `max(compute,
+//!   comm)` with the hidden share tracked in
+//!   [`Ledger::overlap_saved_secs`].
 
 pub mod allreduce;
 pub mod cluster;

@@ -135,6 +135,10 @@ impl Experiment {
             },
             seed,
             snapshot_every: cf.typed("run", "snapshot_every", 0usize)?,
+            // `overlap = true` runs POBP through the pipelined
+            // synchronization stack (bitwise-identical results,
+            // max(compute, comm) time accounting)
+            overlap: cf.typed("run", "overlap", defaults.overlap)?,
         };
         Ok(Experiment { dataset, scale, seed, params, algo, opts })
     }

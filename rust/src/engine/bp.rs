@@ -36,6 +36,19 @@
 //! pre-fusion kernel kept as [`ShardBp::sweep_reference`] — the same
 //! oracle pattern the allreduce refactor used (`serial_reference_step`).
 //!
+//! # Scheduled-parallel sweep (ABP t ≥ 2)
+//!
+//! Residual-ordered document schedules are non-contiguous, so the fixed
+//! block split above does not apply. [`ShardBp::sweep_docs_parallel`]
+//! closes that gap: a per-iteration
+//! [`DocSchedule`](crate::sched::DocSchedule) permutes the scheduled
+//! docs into sorted order and cuts NNZ-balanced, doc-granular blocks
+//! (boundaries from *scheduled* NNZ counts only), which makes every
+//! block a plain contiguous span of the shard matrices; Δφ̂/r route
+//! through per-sweep scratch rows merged in ascending block order, the
+//! same deterministic protocol as above. That retires the last serial
+//! sweep path in the system — see the method's contract docs.
+//!
 //! The per-entry kernel itself ([`fused_update`]) is fused and
 //! SIMD-friendly: the score, mass and delta phases run as separate
 //! contiguous lane loops (pulling the mass reductions out of the score
@@ -49,7 +62,7 @@ use crate::comm::allreduce::ReduceSource;
 use crate::comm::Cluster;
 use crate::corpus::Csr;
 use crate::engine::traits::LdaParams;
-use crate::sched::PowerSet;
+use crate::sched::{DocSchedule, PowerSet};
 use crate::util::rng::Rng;
 
 /// The iteration schedule in worker-friendly form: a word membership
@@ -195,6 +208,43 @@ impl<'a> SweepCtx<'a> {
             update_phi,
         }
     }
+}
+
+/// Reusable per-sweep tables of the **scheduled**-parallel sweep
+/// ([`ShardBp::sweep_docs_parallel`]). Unlike the t = 1 engine's block
+/// tables — fixed at init because every sweep covers every doc — the
+/// scheduled tables depend on the iteration's [`DocSchedule`], so they
+/// are rebuilt per sweep (O(scheduled NNZ), amortized against the K-wide
+/// kernel work) into these buffers, which only ever grow: the
+/// O(NNZ + W) index storage never reallocates across iterations.
+#[derive(Debug, Default)]
+struct SchedScratch {
+    /// block-local scratch row of each scheduled non-zero entry (global
+    /// nnz-indexed; only scheduled, selected entries are written — and
+    /// only those are read back — each sweep)
+    entry_row: Vec<u32>,
+    /// word of each scratch row, block-grouped (len = Σ_b distinct
+    /// *selected* words of block b this sweep)
+    row_word: Vec<u32>,
+    /// per-block scratch-row offsets, len = blocks + 1
+    block_row_off: Vec<u32>,
+    /// per-word stamp / block-local row for the distinct-word build;
+    /// `gen` advances once per block so the stamps never need clearing
+    stamp: Vec<u64>,
+    local_of: Vec<u32>,
+    gen: u64,
+    /// scratch rows of word w: `merge_rows[merge_ptr[w]..merge_ptr[w+1]]`,
+    /// ascending (= block order) — the deterministic merge order
+    merge_ptr: Vec<u32>,
+    merge_rows: Vec<u32>,
+    merge_cursor: Vec<u32>,
+    /// merge-task word-range boundaries, balanced by scratch-row count
+    merge_bounds: Vec<u32>,
+    /// per-block Δφ̂ / r accumulators (scratch-row-major), grown on demand
+    sdphi: Vec<f32>,
+    sr: Vec<f32>,
+    /// per-doc residuals of the sweep, sorted-schedule order
+    resid_sorted: Vec<f64>,
 }
 
 /// Per-traversal lane scratch: score lanes plus the packed μ/θ̂ gathers
@@ -434,17 +484,17 @@ pub struct ShardBp {
     /// document of each non-zero entry (for the inverted traversal)
     nnz_doc: Vec<u32>,
     // --- doc-parallel sweep engine (layout fixed at init; module doc) ---
-    /// doc-block boundaries (docs of block b: off[b]..off[b+1]); derived
-    /// from NNZ counts only, so machine-independent
+    /// doc-block boundaries (docs of block b: `off[b]..off[b+1]`);
+    /// derived from NNZ counts only, so machine-independent
     block_doc_off: Vec<u32>,
     /// per-block scratch-row offsets (block b owns scratch rows
-    /// off[b]..off[b+1]; one row per distinct word in the block)
+    /// `off[b]..off[b+1]`; one row per distinct word in the block)
     block_row_off: Vec<u32>,
     /// word of each scratch row (len = Σ_b distinct words of block b)
     row_word: Vec<u32>,
     /// block-local scratch row of each non-zero entry
     nnz_row: Vec<u32>,
-    /// scratch rows of word w: merge_rows[merge_ptr[w]..merge_ptr[w+1]],
+    /// scratch rows of word w: `merge_rows[merge_ptr[w]..merge_ptr[w+1]]`,
     /// ascending == block order — the deterministic merge order
     merge_ptr: Vec<u32>,
     merge_rows: Vec<u32>,
@@ -457,6 +507,8 @@ pub struct ShardBp {
     scratch_r: Vec<f32>,
     /// per-doc residuals of the last whole-shard parallel sweep
     resid_doc: Vec<f64>,
+    /// reusable tables of the scheduled-parallel sweep (per-sweep build)
+    sched: SchedScratch,
 }
 
 impl ShardBp {
@@ -591,6 +643,7 @@ impl ShardBp {
             scratch_dphi: Vec::new(),
             scratch_r: Vec::new(),
             resid_doc: vec![0.0; docs],
+            sched: SchedScratch::default(),
         };
         s.recompute_stats();
         s
@@ -1081,6 +1134,371 @@ impl ShardBp {
             ));
         }
         out
+    }
+
+    /// Scheduled-parallel sweep — [`ShardBp::sweep_docs`] fanned over the
+    /// NNZ-balanced permuted blocks of a [`DocSchedule`] on up to
+    /// `budget` OS threads of `pool` (0 = the full pool budget), via
+    /// [`Cluster::run_on_permuted_blocks`]. This retires the last serial
+    /// sweep on the compute side: ABP's residual-ordered t ≥ 2
+    /// iterations now scale with the machine like the t = 1 path.
+    ///
+    /// Returns per-doc residuals **in the caller's original schedule
+    /// order** (via the schedule's inverse permutation), plus the sweep
+    /// timing; `merge_secs` includes the per-sweep index build (serial
+    /// leader work) on top of the deterministic merge.
+    ///
+    /// # Determinism contract (mirrors [`ShardBp::sweep_parallel`])
+    ///
+    /// * Blocks own disjoint whole documents — sorted ascending, so each
+    ///   block's μ/θ̂ rows live in one contiguous shard span. μ, θ̂ and
+    ///   the per-doc f64 residuals are **bitwise identical** to the
+    ///   serial [`ShardBp::sweep_docs`] over the same schedule (each doc
+    ///   appears once, reads only the frozen φ̂ and its own θ̂ snapshot).
+    /// * Δφ̂/r contributions route through per-block scratch rows (one
+    ///   per distinct selected word per block, built per sweep into the
+    ///   reused [`SchedScratch`]) and merge **in ascending block order
+    ///   per word row**. Block boundaries derive from scheduled-NNZ
+    ///   counts only, so the accumulation order is a pure function of
+    ///   the schedule and the data: bitwise reproducible at any thread
+    ///   count on any machine, equal to the serial path up to summation
+    ///   association (`rust/tests/sweep_equiv.rs` pins both).
+    /// * Un-selected (word, topic) pairs and un-scheduled documents stay
+    ///   bitwise frozen.
+    ///
+    /// Unlike [`ShardBp::sweep_parallel`], residual clearing is **not**
+    /// folded in: callers clear selected residuals first, exactly as
+    /// with the serial [`ShardBp::sweep_docs`] (the merge *adds* block
+    /// sums onto the cleared lanes, preserving the serial contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep_docs_parallel(
+        &mut self,
+        pool: &Cluster,
+        budget: usize,
+        sched: &DocSchedule,
+        phi_wk: &[f32],
+        phi_tot: &[f32],
+        sel: &Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> (Vec<f64>, SweepTiming) {
+        let k = self.k;
+        let nblocks = sched.blocks();
+        if nblocks == 0 {
+            return (Vec::new(), SweepTiming::default());
+        }
+        let ctx =
+            SweepCtx::new(self.data.w, k, phi_wk, phi_tot, sel, p, update_phi);
+        let mut scr = std::mem::take(&mut self.sched);
+        let data = &self.data;
+        let w = data.w;
+        let t_setup = Instant::now();
+
+        // --- per-sweep index build: one scratch row per (block, selected
+        //     word) pair, O(scheduled NNZ); the stamp generation advances
+        //     per block so the W-sized tables never need clearing ---
+        if scr.stamp.len() != w {
+            scr.stamp = vec![0; w];
+            scr.local_of = vec![0; w];
+            scr.gen = 0;
+        }
+        scr.entry_row.resize(data.nnz(), 0);
+        scr.row_word.clear();
+        scr.block_row_off.clear();
+        scr.block_row_off.push(0);
+        for b in 0..nblocks {
+            scr.gen += 1;
+            let g = scr.gen;
+            let mut count = 0u32;
+            for &d in sched.block(b) {
+                for idx in data.row_range(d as usize) {
+                    let wi = data.col[idx] as usize;
+                    if !ctx.sel.word_sel[wi] {
+                        continue;
+                    }
+                    if scr.stamp[wi] != g {
+                        scr.stamp[wi] = g;
+                        scr.local_of[wi] = count;
+                        scr.row_word.push(wi as u32);
+                        count += 1;
+                    }
+                    scr.entry_row[idx] = scr.local_of[wi];
+                }
+            }
+            let prev = *scr.block_row_off.last().unwrap();
+            scr.block_row_off.push(prev + count);
+        }
+        let srows = *scr.block_row_off.last().unwrap() as usize;
+        if scr.sdphi.len() < srows * k {
+            scr.sdphi.resize(srows * k, 0.0);
+            scr.sr.resize(srows * k, 0.0);
+        }
+        // merge plan: counting sort of the scratch rows by word — per
+        // word, ascending rows == ascending block order
+        scr.merge_ptr.clear();
+        scr.merge_ptr.resize(w + 1, 0);
+        for &wi in &scr.row_word {
+            scr.merge_ptr[wi as usize + 1] += 1;
+        }
+        for i in 0..w {
+            scr.merge_ptr[i + 1] += scr.merge_ptr[i];
+        }
+        scr.merge_cursor.clear();
+        scr.merge_cursor.extend_from_slice(&scr.merge_ptr[..w]);
+        scr.merge_rows.clear();
+        scr.merge_rows.resize(srows, 0);
+        for (srow, &wi) in scr.row_word.iter().enumerate() {
+            let c = &mut scr.merge_cursor[wi as usize];
+            scr.merge_rows[*c as usize] = srow as u32;
+            *c += 1;
+        }
+        // merge-task word ranges, balanced by scratch-row count
+        scr.merge_bounds.clear();
+        scr.merge_bounds.push(0);
+        let per = srows.div_ceil(nblocks).max(1);
+        let mut racc = 0usize;
+        for wi in 0..w {
+            racc += (scr.merge_ptr[wi + 1] - scr.merge_ptr[wi]) as usize;
+            if racc >= per && wi + 1 < w {
+                scr.merge_bounds.push((wi + 1) as u32);
+                racc = 0;
+            }
+        }
+        scr.merge_bounds.push(w as u32);
+        scr.resid_sorted.clear();
+        scr.resid_sorted.resize(sched.len(), 0.0);
+        let setup_secs = t_setup.elapsed().as_secs_f64();
+
+        struct SchedBlockTask<'a> {
+            /// first doc of the block's contiguous shard span
+            d0: usize,
+            /// nnz base of the span
+            nnz0: usize,
+            /// scheduled docs of the block, ascending
+            docs: &'a [u32],
+            mu: &'a mut [f32],
+            theta: &'a mut [f32],
+            theta_old: &'a mut [f32],
+            /// residual outputs, block-local sorted-schedule order
+            resid: &'a mut [f64],
+            sdphi: &'a mut [f32],
+            sr: &'a mut [f32],
+            /// words of this block's scratch rows, local-row order
+            words: &'a [u32],
+            lanes: LaneBuf,
+        }
+
+        // Disjoint &mut views per block: docs are sorted ascending and
+        // blocks are contiguous ranges of the sorted schedule, so each
+        // block's μ/θ̂ rows fall inside one global span [d0, d1) that
+        // never overlaps the next block's — the split skips the
+        // unscheduled gap before each span. (This is what the
+        // DocSchedule permutation buys: data-dependent schedules become
+        // plain split_at_mut work sets.)
+        let mut tasks: Vec<SchedBlockTask<'_>> = Vec::with_capacity(nblocks);
+        {
+            let mut mu_rest = &mut self.mu[..];
+            let mut th_rest = &mut self.theta[..];
+            let mut tho_rest = &mut self.theta_old[..];
+            let mut rd_rest = &mut scr.resid_sorted[..];
+            let mut sd_rest = &mut scr.sdphi[..srows * k];
+            let mut sr_rest = &mut scr.sr[..srows * k];
+            let mut words_rest = &scr.row_word[..];
+            let mut doc_cut = 0usize;
+            let mut nnz_cut = 0usize;
+            for b in 0..nblocks {
+                let docs_b = sched.block(b);
+                let d0 = docs_b[0] as usize;
+                let d1 = *docs_b.last().unwrap() as usize + 1;
+                let nnz0 = data.row_ptr[d0] as usize;
+                let nnz1 = data.row_ptr[d1] as usize;
+                let rows =
+                    (scr.block_row_off[b + 1] - scr.block_row_off[b]) as usize;
+                let (_, rest) = mu_rest.split_at_mut((nnz0 - nnz_cut) * k);
+                let (mu_b, rest) = rest.split_at_mut((nnz1 - nnz0) * k);
+                mu_rest = rest;
+                let (_, rest) = th_rest.split_at_mut((d0 - doc_cut) * k);
+                let (th_b, rest) = rest.split_at_mut((d1 - d0) * k);
+                th_rest = rest;
+                let (_, rest) = tho_rest.split_at_mut((d0 - doc_cut) * k);
+                let (tho_b, rest) = rest.split_at_mut((d1 - d0) * k);
+                tho_rest = rest;
+                let (rd_b, rest) = rd_rest.split_at_mut(docs_b.len());
+                rd_rest = rest;
+                let (sd_b, rest) = sd_rest.split_at_mut(rows * k);
+                sd_rest = rest;
+                let (sr_b, rest) = sr_rest.split_at_mut(rows * k);
+                sr_rest = rest;
+                let (w_b, rest) = words_rest.split_at(rows);
+                words_rest = rest;
+                doc_cut = d1;
+                nnz_cut = nnz1;
+                tasks.push(SchedBlockTask {
+                    d0,
+                    nnz0,
+                    docs: docs_b,
+                    mu: mu_b,
+                    theta: th_b,
+                    theta_old: tho_b,
+                    resid: rd_b,
+                    sdphi: sd_b,
+                    sr: sr_b,
+                    words: w_b,
+                    lanes: LaneBuf::new(k),
+                });
+            }
+        }
+
+        let entry_row = &scr.entry_row;
+        let block_secs = pool.run_on_permuted_blocks(budget, &mut tasks, |_b, t| {
+            // zero this sweep's selected scratch lanes (rows are freshly
+            // assigned per sweep, but the buffers persist dirty)
+            for (lr, &wr) in t.words.iter().enumerate() {
+                let wi = wr as usize;
+                match ctx.sel.topics_of(wi) {
+                    None => {
+                        if ctx.update_phi {
+                            t.sdphi[lr * k..(lr + 1) * k].fill(0.0);
+                        }
+                        t.sr[lr * k..(lr + 1) * k].fill(0.0);
+                    }
+                    Some(ts) => {
+                        for &tt in ts {
+                            if ctx.update_phi {
+                                t.sdphi[lr * k + tt as usize] = 0.0;
+                            }
+                            t.sr[lr * k + tt as usize] = 0.0;
+                        }
+                    }
+                }
+            }
+            // sweep_docs' traversal with span-local rows (μ/θ̂ offset by
+            // the span base, Δφ̂/r routed to the block's scratch rows)
+            for (i, &d) in t.docs.iter().enumerate() {
+                let d = d as usize;
+                let ld = d - t.d0;
+                t.theta_old[ld * k..(ld + 1) * k]
+                    .copy_from_slice(&t.theta[ld * k..(ld + 1) * k]);
+                let mut resid = 0f64;
+                for idx in data.row_range(d) {
+                    let wi = data.col[idx] as usize;
+                    if !ctx.sel.word_sel[wi] {
+                        continue;
+                    }
+                    let lr = entry_row[idx] as usize;
+                    let li = idx - t.nnz0;
+                    let dphi_row = if ctx.update_phi {
+                        Some(&mut t.sdphi[lr * k..(lr + 1) * k])
+                    } else {
+                        None
+                    };
+                    resid += fused_update(
+                        &ctx,
+                        wi,
+                        data.val[idx],
+                        &mut t.mu[li * k..(li + 1) * k],
+                        &t.theta_old[ld * k..(ld + 1) * k],
+                        &mut t.theta[ld * k..(ld + 1) * k],
+                        dphi_row,
+                        &mut t.sr[lr * k..(lr + 1) * k],
+                        &mut t.lanes,
+                    );
+                }
+                t.resid[i] = resid;
+            }
+        });
+        drop(tasks);
+
+        // --- deterministic merge: per touched word row, *add* the block
+        //     sums in ascending block order onto the caller-cleared
+        //     lanes (serial sweep_docs contract); parallel over the
+        //     per-sweep word-range tasks ---
+        let t0 = Instant::now();
+        struct MergeTask<'a> {
+            w0: usize,
+            dphi: &'a mut [f32],
+            r: &'a mut [f32],
+        }
+        let mut mtasks: Vec<MergeTask<'_>> =
+            Vec::with_capacity(scr.merge_bounds.len());
+        {
+            let mut dp_rest = &mut self.dphi[..];
+            let mut r_rest = &mut self.r[..];
+            let mut prev = 0usize;
+            for &b in &scr.merge_bounds[1..] {
+                let b = b as usize;
+                let (dp_b, rest) = dp_rest.split_at_mut((b - prev) * k);
+                dp_rest = rest;
+                let (r_b, rest) = r_rest.split_at_mut((b - prev) * k);
+                r_rest = rest;
+                mtasks.push(MergeTask { w0: prev, dphi: dp_b, r: r_b });
+                prev = b;
+            }
+        }
+        let merge_ptr = &scr.merge_ptr;
+        let merge_rows = &scr.merge_rows;
+        let sdphi = &scr.sdphi;
+        let sr = &scr.sr;
+        pool.run_on_permuted_blocks(budget, &mut mtasks, |_i, mt| {
+            let nw = mt.r.len() / k;
+            for ww in 0..nw {
+                let wi = mt.w0 + ww;
+                let rows = &merge_rows
+                    [merge_ptr[wi] as usize..merge_ptr[wi + 1] as usize];
+                if rows.is_empty() {
+                    continue; // word untouched by this schedule
+                }
+                match ctx.sel.topics_of(wi) {
+                    None => {
+                        let rrow = &mut mt.r[ww * k..(ww + 1) * k];
+                        for &srow in rows {
+                            let base = srow as usize * k;
+                            let src = &sr[base..base + k];
+                            for (o, &v) in rrow.iter_mut().zip(src) {
+                                *o += v;
+                            }
+                        }
+                        if ctx.update_phi {
+                            let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
+                            for &srow in rows {
+                                let base = srow as usize * k;
+                                let src = &sdphi[base..base + k];
+                                for (o, &v) in drow.iter_mut().zip(src) {
+                                    *o += v;
+                                }
+                            }
+                        }
+                    }
+                    Some(ts) => {
+                        let rrow = &mut mt.r[ww * k..(ww + 1) * k];
+                        for &srow in rows {
+                            let base = srow as usize * k;
+                            for &tt in ts {
+                                rrow[tt as usize] += sr[base + tt as usize];
+                            }
+                        }
+                        if ctx.update_phi {
+                            let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
+                            for &srow in rows {
+                                let base = srow as usize * k;
+                                for &tt in ts {
+                                    drow[tt as usize] += sdphi[base + tt as usize];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        let merge_secs = t0.elapsed().as_secs_f64() + setup_secs;
+
+        // per-doc residuals back in the caller's schedule order
+        let mut out = vec![0f64; sched.len()];
+        for (i, &pos) in sched.sched_pos().iter().enumerate() {
+            out[pos as usize] = scr.resid_sorted[i];
+        }
+        self.sched = scr;
+        (out, SweepTiming { block_secs, merge_secs })
     }
 
     /// The pre-fusion serial sweep, kept verbatim as the equivalence-test

@@ -1,0 +1,251 @@
+//! Scheduled-document permutation for the block-parallel ABP sweep.
+//!
+//! ABP's t ≥ 2 iterations sweep a residual-ordered *subset* of the
+//! documents, so the fixed doc-block partition of the t = 1 engine
+//! (`engine::bp`) does not apply: the scheduled docs are non-contiguous
+//! in the shard, and residual order changes every iteration. The
+//! standard fix ("Model-Parallel Inference for Big Topic Models", Zheng
+//! et al.) is to turn the data-dependent schedule into **disjoint work
+//! sets via an index permutation** — that permutation is what
+//! [`DocSchedule`] derives, once per scheduled sweep:
+//!
+//! 1. **Sort** the scheduled doc ids ascending. Documents are Jacobi-
+//!    independent within a sweep (each reads only the frozen global φ̂
+//!    and its own θ̂ row), so the processing order is free — and sorted
+//!    order makes every block's μ/θ̂ rows live inside one *contiguous*
+//!    span of the shard matrices, which is what lets the engine hand
+//!    plain disjoint `&mut` slices to the thread pool.
+//! 2. **Cut blocks** on cumulative *scheduled* NNZ only (never the core
+//!    count), exactly like the t = 1 block partition's contract: the
+//!    block structure — and therefore every merge-order-keyed float
+//!    accumulation downstream — is identical on every machine at every
+//!    thread budget. A document is never split across blocks.
+//! 3. **Remember the inverse permutation** ([`DocSchedule::sched_pos`])
+//!    so per-doc residuals can be handed back in the caller's original
+//!    schedule (residual-descending) order.
+//!
+//! The consumer is [`ShardBp::sweep_docs_parallel`], which drives the
+//! blocks over `Cluster::run_on_permuted_blocks` and merges per-block
+//! Δφ̂/r scratch rows in ascending block order (the same deterministic
+//! merge protocol as the t = 1 engine).
+//!
+//! [`ShardBp::sweep_docs_parallel`]: crate::engine::bp::ShardBp::sweep_docs_parallel
+//!
+//! # Example
+//!
+//! ```
+//! use pobp::sched::DocSchedule;
+//!
+//! // residual-descending schedule over a 6-doc shard; per-doc NNZ below
+//! let scheduled = [4u32, 1, 5, 2];
+//! let doc_nnz = [3usize, 2, 4, 1, 5, 2];
+//! let ds = DocSchedule::build(&scheduled, |d| doc_nnz[d]);
+//! assert_eq!(ds.docs_sorted(), &[1, 2, 4, 5]);     // the permutation
+//! assert_eq!(ds.len(), 4);
+//! assert_eq!(ds.nnz(), 2 + 4 + 5 + 2);             // scheduled NNZ only
+//! // blocks partition the sorted list; no doc is ever split
+//! let total: usize = (0..ds.blocks()).map(|b| ds.block(b).len()).sum();
+//! assert_eq!(total, ds.len());
+//! // the inverse permutation recovers schedule order
+//! for (i, &d) in ds.docs_sorted().iter().enumerate() {
+//!     assert_eq!(scheduled[ds.sched_pos()[i] as usize], d);
+//! }
+//! ```
+
+/// Block-partition targets for the scheduled sweep: blocks are cut when
+/// their scheduled-NNZ count reaches `max(sched_nnz / SCHED_BLOCK_MAX,
+/// SCHED_BLOCK_MIN_NNZ)`. Both constants are data-only (no core counts),
+/// mirroring the t = 1 engine's `DOC_BLOCK_MAX` / `DOC_BLOCK_MIN_NNZ`, so
+/// the block structure is machine-independent.
+const SCHED_BLOCK_MAX: usize = 32;
+const SCHED_BLOCK_MIN_NNZ: usize = 1024;
+
+/// A machine-independent permutation of one iteration's scheduled
+/// documents into NNZ-balanced, doc-granular blocks (module doc).
+#[derive(Clone, Debug, Default)]
+pub struct DocSchedule {
+    /// scheduled doc ids, ascending — the index permutation
+    docs_sorted: Vec<u32>,
+    /// inverse permutation: `sched_pos[i]` is the position of
+    /// `docs_sorted[i]` in the caller's original schedule order
+    sched_pos: Vec<u32>,
+    /// block boundaries into `docs_sorted`, len = blocks + 1
+    block_off: Vec<u32>,
+    /// total NNZ of the scheduled documents
+    nnz: usize,
+}
+
+impl DocSchedule {
+    /// Derive the permutation and block partition from a schedule of
+    /// **distinct** doc ids (`top_k_desc` order in ABP) and a per-doc
+    /// NNZ accessor. Boundaries come from scheduled-NNZ counts only.
+    pub fn build<F: Fn(usize) -> usize>(scheduled: &[u32], doc_nnz: F) -> DocSchedule {
+        let mut order: Vec<(u32, u32)> = scheduled
+            .iter()
+            .enumerate()
+            .map(|(pos, &d)| (d, pos as u32))
+            .collect();
+        order.sort_unstable();
+        let docs_sorted: Vec<u32> = order.iter().map(|&(d, _)| d).collect();
+        let sched_pos: Vec<u32> = order.iter().map(|&(_, p)| p).collect();
+        debug_assert!(
+            docs_sorted.windows(2).all(|w| w[0] < w[1]),
+            "schedule must hold distinct doc ids"
+        );
+        let nnz: usize = docs_sorted.iter().map(|&d| doc_nnz(d as usize)).sum();
+
+        let mut block_off = vec![0u32];
+        if !docs_sorted.is_empty() {
+            let target = nnz.div_ceil(SCHED_BLOCK_MAX).max(SCHED_BLOCK_MIN_NNZ);
+            let mut acc = 0usize;
+            for (i, &d) in docs_sorted.iter().enumerate() {
+                acc += doc_nnz(d as usize);
+                if acc >= target && i + 1 < docs_sorted.len() {
+                    block_off.push((i + 1) as u32);
+                    acc = 0;
+                }
+            }
+            block_off.push(docs_sorted.len() as u32);
+        }
+        DocSchedule { docs_sorted, sched_pos, block_off, nnz }
+    }
+
+    /// Scheduled docs in ascending (permuted) order.
+    pub fn docs_sorted(&self) -> &[u32] {
+        &self.docs_sorted
+    }
+
+    /// Inverse permutation back to the caller's schedule order.
+    pub fn sched_pos(&self) -> &[u32] {
+        &self.sched_pos
+    }
+
+    /// Number of scheduled documents.
+    pub fn len(&self) -> usize {
+        self.docs_sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs_sorted.is_empty()
+    }
+
+    /// Total NNZ of the scheduled documents.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Number of blocks (0 for an empty schedule).
+    pub fn blocks(&self) -> usize {
+        self.block_off.len().saturating_sub(1)
+    }
+
+    /// Ascending doc ids of block `b` — a whole-document slice of the
+    /// sorted schedule (a doc is never split across blocks).
+    pub fn block(&self, b: usize) -> &[u32] {
+        &self.docs_sorted[self.block_off[b] as usize..self.block_off[b + 1] as usize]
+    }
+
+    /// Half-open range of sorted-schedule positions covered by block `b`.
+    pub fn block_range(&self, b: usize) -> std::ops::Range<usize> {
+        self.block_off[b] as usize..self.block_off[b + 1] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn nnz_table(docs: usize, rng: &mut Rng) -> Vec<usize> {
+        (0..docs).map(|_| 1 + rng.below(400)).collect()
+    }
+
+    #[test]
+    fn permutation_roundtrips_and_blocks_partition() {
+        let mut rng = Rng::new(11);
+        for trial in 0..20 {
+            let docs = 1 + rng.below(3000);
+            let nnz = nnz_table(docs, &mut rng);
+            // distinct random subset in shuffled (schedule-like) order
+            let mut scheduled: Vec<u32> =
+                (0..docs as u32).filter(|_| rng.f32() < 0.4).collect();
+            if scheduled.is_empty() {
+                scheduled.push(rng.below(docs) as u32);
+            }
+            rng.shuffle(&mut scheduled);
+            let ds = DocSchedule::build(&scheduled, |d| nnz[d]);
+
+            assert_eq!(ds.len(), scheduled.len(), "trial {trial}");
+            assert_eq!(
+                ds.nnz(),
+                scheduled.iter().map(|&d| nnz[d as usize]).sum::<usize>()
+            );
+            // sorted ascending, distinct
+            assert!(ds.docs_sorted().windows(2).all(|w| w[0] < w[1]));
+            // inverse permutation recovers the original schedule
+            for (i, &d) in ds.docs_sorted().iter().enumerate() {
+                assert_eq!(scheduled[ds.sched_pos()[i] as usize], d);
+            }
+            // blocks partition the sorted list exactly once, no empty
+            // blocks, no doc split across blocks
+            let mut covered = 0usize;
+            for b in 0..ds.blocks() {
+                let rg = ds.block_range(b);
+                assert_eq!(rg.start, covered);
+                assert!(rg.end > rg.start, "empty block {b}");
+                assert_eq!(ds.block(b).len(), rg.len());
+                covered = rg.end;
+            }
+            assert_eq!(covered, ds.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_for_a_given_schedule() {
+        let mut rng = Rng::new(13);
+        let nnz = nnz_table(500, &mut rng);
+        let mut scheduled: Vec<u32> = (0..500u32).step_by(3).collect();
+        rng.shuffle(&mut scheduled);
+        let a = DocSchedule::build(&scheduled, |d| nnz[d]);
+        let b = DocSchedule::build(&scheduled, |d| nnz[d]);
+        assert_eq!(a.docs_sorted(), b.docs_sorted());
+        assert_eq!(a.sched_pos(), b.sched_pos());
+        assert_eq!(a.block_off, b.block_off);
+        // and independent of the schedule's order (the permutation
+        // depends only on the *set*)
+        let mut reordered = scheduled.clone();
+        reordered.reverse();
+        let c = DocSchedule::build(&reordered, |d| nnz[d]);
+        assert_eq!(a.docs_sorted(), c.docs_sorted());
+        assert_eq!(a.block_off, c.block_off);
+    }
+
+    #[test]
+    fn block_boundaries_balance_scheduled_nnz() {
+        // heavy uniform docs: every block except the last must carry at
+        // least the target NNZ, so no block is pathologically small
+        let nnz_per = 100usize;
+        let scheduled: Vec<u32> = (0..2000u32).collect();
+        let ds = DocSchedule::build(&scheduled, |_| nnz_per);
+        assert!(ds.blocks() > 1, "want a multi-block partition");
+        let target = (ds.nnz().div_ceil(SCHED_BLOCK_MAX)).max(SCHED_BLOCK_MIN_NNZ);
+        for b in 0..ds.blocks() - 1 {
+            let bn: usize = ds.block(b).len() * nnz_per;
+            assert!(bn >= target, "block {b} under target: {bn} < {target}");
+            assert!(bn < target + nnz_per, "block {b} overshot: {bn}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_schedules() {
+        let ds = DocSchedule::build(&[], |_| 7);
+        assert!(ds.is_empty());
+        assert_eq!(ds.blocks(), 0);
+        assert_eq!(ds.nnz(), 0);
+        let ds = DocSchedule::build(&[42], |_| 7);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds.blocks(), 1);
+        assert_eq!(ds.block(0), &[42]);
+        assert_eq!(ds.sched_pos(), &[0]);
+    }
+}

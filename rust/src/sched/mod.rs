@@ -1,6 +1,10 @@
 //! Dynamic scheduling: residual-driven power word/topic selection — the
-//! communication-efficient heart of the paper (§3.1).
+//! communication-efficient heart of the paper (§3.1) — plus the
+//! document-schedule permutation that makes ABP's residual-ordered doc
+//! sweeps block-parallel ([`DocSchedule`]).
 
+pub mod doc_schedule;
 pub mod power;
 
+pub use doc_schedule::DocSchedule;
 pub use power::{select_power, PowerParams, PowerSet};

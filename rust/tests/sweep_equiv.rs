@@ -9,8 +9,9 @@
 use pobp::comm::Cluster;
 use pobp::engine::bp::{Selection, ShardBp};
 use pobp::engine::traits::LdaParams;
-use pobp::sched::{select_power, PowerParams};
+use pobp::sched::{select_power, DocSchedule, PowerParams};
 use pobp::synth::{generate, SynthSpec};
+use pobp::util::partial_sort::top_k_desc;
 use pobp::util::rng::Rng;
 
 const K: usize = 8;
@@ -340,6 +341,244 @@ fn parallel_doc_residuals_match_serial_per_doc_returns() {
     for (d, (x, y)) in per_doc.iter().zip(par.doc_residuals()).enumerate() {
         assert!(x == y, "doc {d}: {x} vs {y}");
     }
+}
+
+/// A residual-descending document schedule (the ABP t ≥ 2 shape) over a
+/// warmed shard: top `frac` of the docs by last-sweep residual.
+fn residual_schedule(shard: &ShardBp, frac: f64) -> Vec<u32> {
+    let r_doc: Vec<f32> = shard.doc_residuals().iter().map(|&v| v as f32).collect();
+    let n = ((frac * r_doc.len() as f64).ceil() as usize).clamp(1, r_doc.len());
+    top_k_desc(&r_doc, n)
+}
+
+/// Warm a shard with one full parallel sweep (populating per-doc
+/// residuals) and hand back a residual-descending schedule.
+fn warmed_with_schedule(seed: u64, frac: f64) -> (ShardBp, Vec<u32>) {
+    let pool = Cluster::new(1, 0);
+    let mut s = fresh_shard(seed);
+    let sel = Selection::full(s.data.w);
+    let p = LdaParams::paper(K);
+    let (phi, tot) = phi_of(&s);
+    s.sweep_parallel(&pool, 0, &phi, &tot, &sel, &p, true);
+    let sched = residual_schedule(&s, frac);
+    (s, sched)
+}
+
+/// Tentpole contract: the scheduled-parallel sweep vs the serial
+/// `sweep_docs` oracle at thread budgets {1, 2, 8} — μ/θ̂ and the per-doc
+/// residuals (schedule order) bitwise, Δφ̂/r association-bounded — for
+/// both the full and a power selection.
+#[test]
+fn scheduled_parallel_matches_serial_sweep_docs() {
+    let p = LdaParams::paper(K);
+    for &budget in &[1usize, 2, 8] {
+        for &full_sel in &[true, false] {
+            let pool = Cluster::new(1, 0);
+            let (mut ser, sched) = warmed_with_schedule(67, 0.35);
+            let sel = if full_sel {
+                Selection::full(ser.data.w)
+            } else {
+                let ps = select_power(
+                    &ser.r,
+                    ser.data.w,
+                    K,
+                    &PowerParams { lambda_w: 0.2, lambda_k_times_k: 3 },
+                );
+                Selection::from_power(&ps, ser.data.w)
+            };
+            let mut par = fresh_shard(67);
+            resync(&mut par, &ser);
+            let (phi, tot) = phi_of(&ser);
+
+            ser.clear_selected_residuals(&sel);
+            let ser_resid = ser.sweep_docs(&sched, &phi, &tot, &sel, &p, true);
+
+            par.clear_selected_residuals(&sel);
+            let ds = DocSchedule::build(&sched, |d| par.data.row_range(d).len());
+            assert!(ds.blocks() > 1, "want a multi-block schedule for a real test");
+            let (par_resid, timing) =
+                par.sweep_docs_parallel(&pool, budget, &ds, &phi, &tot, &sel, &p, true);
+
+            // documents own μ/θ̂ and their residual: bitwise, and the
+            // parallel residuals come back in schedule order
+            assert_bitwise(&ser.mu, &par.mu, "mu");
+            assert_bitwise(&ser.theta, &par.theta, "theta");
+            assert_eq!(ser_resid.len(), par_resid.len());
+            for (i, (x, y)) in ser_resid.iter().zip(&par_resid).enumerate() {
+                assert!(
+                    x == y,
+                    "budget {budget} full={full_sel} doc {}: residual {x} vs {y}",
+                    sched[i]
+                );
+            }
+            // block-merged accumulations: association-bounded
+            assert_close(&ser.dphi, &par.dphi, 2e-4, "dphi");
+            assert_close(&ser.r, &par.r, 2e-4, "r");
+            let (ms, mp) = (mass(&ser.dphi), mass(&par.dphi));
+            assert!(
+                (ms - mp).abs() <= 1e-5 * ms.abs().max(1.0),
+                "dphi mass {ms} vs {mp}"
+            );
+            assert_eq!(timing.block_secs.len(), ds.blocks());
+        }
+    }
+}
+
+/// Un-scheduled documents and un-selected pairs stay bitwise frozen
+/// under the scheduled-parallel sweep.
+#[test]
+fn scheduled_parallel_freezes_unscheduled_and_unselected() {
+    let p = LdaParams::paper(K);
+    let pool = Cluster::new(1, 0);
+    let (mut s, sched) = warmed_with_schedule(71, 0.25);
+    let ps = select_power(
+        &s.r,
+        s.data.w,
+        K,
+        &PowerParams { lambda_w: 0.3, lambda_k_times_k: 4 },
+    );
+    let sel = Selection::from_power(&ps, s.data.w);
+    let in_sched: std::collections::HashSet<u32> = sched.iter().copied().collect();
+    let mu_before = s.mu.clone();
+    let theta_before = s.theta.clone();
+    let dphi_before = s.dphi.clone();
+    let r_before = s.r.clone();
+
+    let (phi, tot) = phi_of(&s);
+    s.clear_selected_residuals(&sel);
+    let r_cleared = s.r.clone();
+    let ds = DocSchedule::build(&sched, |d| s.data.row_range(d).len());
+    s.sweep_docs_parallel(&pool, 0, &ds, &phi, &tot, &sel, &p, true);
+
+    let k = s.k;
+    // θ̂ and μ of un-scheduled docs: bitwise frozen
+    for d in 0..s.data.docs() {
+        if in_sched.contains(&(d as u32)) {
+            continue;
+        }
+        assert_bitwise(
+            &s.theta[d * k..(d + 1) * k],
+            &theta_before[d * k..(d + 1) * k],
+            "frozen theta row",
+        );
+        for idx in s.data.row_range(d) {
+            assert_bitwise(
+                &s.mu[idx * k..(idx + 1) * k],
+                &mu_before[idx * k..(idx + 1) * k],
+                "frozen mu row",
+            );
+        }
+    }
+    // un-selected pairs: Δφ̂ frozen at the pre-sweep value, r frozen at
+    // the post-clear value (clearing touches only selected lanes)
+    for wi in 0..s.data.w {
+        for t in 0..k {
+            let selected = sel.word_sel[wi]
+                && match sel.topics_of(wi) {
+                    None => true,
+                    Some(ts) => ts.contains(&(t as u32)),
+                };
+            if !selected {
+                assert!(
+                    s.dphi[wi * k + t] == dphi_before[wi * k + t],
+                    "unselected dphi moved: w{wi} t{t}"
+                );
+                assert!(
+                    s.r[wi * k + t] == r_before[wi * k + t],
+                    "unselected r moved: w{wi} t{t}"
+                );
+            } else {
+                // selected pairs start from the cleared value...
+                assert_eq!(r_cleared[wi * k + t], 0.0);
+            }
+        }
+    }
+}
+
+/// Determinism: the scheduled-parallel result is bitwise identical
+/// across thread budgets and repeated runs (blocks and merge order are
+/// pure functions of the schedule and the data).
+#[test]
+fn scheduled_parallel_bitwise_reproducible_across_budgets() {
+    let p = LdaParams::paper(K);
+    let run = |budget: usize| -> ShardBp {
+        let pool = Cluster::new(1, 0);
+        let (mut s, _) = warmed_with_schedule(73, 0.4);
+        let w = s.data.w;
+        // several scheduled iterations, schedule re-derived from the
+        // evolving per-doc residual table like ABP's loop
+        let mut r_doc: Vec<f32> =
+            s.doc_residuals().iter().map(|&v| v as f32).collect();
+        let active = ((0.4 * r_doc.len() as f64).ceil() as usize).max(1);
+        let mut sel = Selection::full(w);
+        for _ in 0..3 {
+            let sched = top_k_desc(&r_doc, active);
+            let (phi, tot) = phi_of(&s);
+            s.clear_selected_residuals(&sel);
+            let ds = DocSchedule::build(&sched, |d| s.data.row_range(d).len());
+            let (rds, _) =
+                s.sweep_docs_parallel(&pool, budget, &ds, &phi, &tot, &sel, &p, true);
+            for (&d, &rd) in sched.iter().zip(&rds) {
+                r_doc[d as usize] = rd as f32;
+            }
+            let ps = select_power(
+                &s.r, w, K,
+                &PowerParams { lambda_w: 0.3, lambda_k_times_k: 4 },
+            );
+            sel = Selection::from_power(&ps, w);
+        }
+        s
+    };
+    let base = run(1);
+    for &budget in &[1usize, 2, 8] {
+        let other = run(budget);
+        assert_bitwise(&base.mu, &other.mu, "mu");
+        assert_bitwise(&base.theta, &other.theta, "theta");
+        assert_bitwise(&base.dphi, &other.dphi, "dphi");
+        assert_bitwise(&base.r, &other.r, "r");
+    }
+}
+
+/// The schedule permutation never splits a document across blocks, and
+/// the per-block doc lists partition the sorted schedule exactly.
+#[test]
+fn doc_schedule_blocks_are_doc_granular() {
+    let (s, sched) = warmed_with_schedule(79, 0.5);
+    let ds = DocSchedule::build(&sched, |d| s.data.row_range(d).len());
+    let mut seen = std::collections::HashSet::new();
+    let mut covered = 0usize;
+    for b in 0..ds.blocks() {
+        let docs = ds.block(b);
+        assert!(!docs.is_empty(), "empty block {b}");
+        for pair in docs.windows(2) {
+            assert!(pair[0] < pair[1], "block {b} not ascending");
+        }
+        for &d in docs {
+            assert!(seen.insert(d), "doc {d} appears in two blocks");
+        }
+        covered += docs.len();
+    }
+    assert_eq!(covered, sched.len());
+    assert_eq!(seen.len(), sched.len());
+    assert_eq!(
+        ds.nnz(),
+        sched.iter().map(|&d| s.data.row_range(d as usize).len()).sum::<usize>()
+    );
+}
+
+/// update_phi = false must freeze Δφ̂ on the scheduled-parallel path too.
+#[test]
+fn scheduled_parallel_update_phi_false_freezes_gradient() {
+    let p = LdaParams::paper(K);
+    let pool = Cluster::new(1, 0);
+    let (mut s, sched) = warmed_with_schedule(83, 0.3);
+    let sel = Selection::full(s.data.w);
+    let (phi, tot) = phi_of(&s);
+    let dphi_before = s.dphi.clone();
+    s.clear_selected_residuals(&sel);
+    let ds = DocSchedule::build(&sched, |d| s.data.row_range(d).len());
+    s.sweep_docs_parallel(&pool, 0, &ds, &phi, &tot, &sel, &p, false);
+    assert_bitwise(&s.dphi, &dphi_before, "dphi");
 }
 
 /// update_phi = false must freeze Δφ̂ on the parallel path too (the
