@@ -18,8 +18,9 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use pobp::comm::allreduce::{
-    allreduce_step, allreduce_step_overlap, allreduce_step_pool, serial_reference_step,
-    GlobalState, ReducePlan, ReduceSource, SerialState, SyncScratch,
+    allreduce_step, allreduce_step_overlap, allreduce_step_overlap_rounds,
+    allreduce_step_pool, serial_reference_step, GlobalState, ReducePlan, ReduceSource,
+    SerialState, SyncScratch,
 };
 use pobp::comm::{Cluster, NetModel};
 use pobp::coordinator::{fit, PobpConfig};
@@ -27,6 +28,7 @@ use pobp::engine::bp::{Selection, ShardBp};
 use pobp::engine::fgs::FastGs;
 use pobp::engine::gibbs::{GibbsShard, PlainGs};
 use pobp::engine::sgs::SparseGs;
+use pobp::engine::snapshot::{clone_rebuild, PhiSnapshot};
 use pobp::metrics::sig;
 use pobp::sched::{select_power, DocSchedule, PowerParams};
 use pobp::util::json::Json;
@@ -135,6 +137,31 @@ fn main() {
     });
     bench(&mut recs, "bp sweep (power subset, doc-parallel)", it(10), sub_updates, || {
         shard.sweep_parallel(&pool, 0, &phi, &tot, &sel_p, &params, true);
+    });
+
+    // --- ABP φ̂ publish: the retired per-iteration clone + f64 totals
+    //     rebuild (always O(W·K)) vs the incremental PhiSnapshot publish
+    //     (O(selected pairs + W) on power subsets) — the per-iteration
+    //     leader overhead the snapshot engine removes. Items = W·K for
+    //     every row (one logical view refresh), so the speedup is the
+    //     plain time ratio. ---
+    let pub_items = (corpus.w * k) as f64;
+    // clone_rebuild takes no selection (that is the point — its cost is
+    // O(W·K) regardless), so it is measured once and recorded under both
+    // selection labels as the baseline of the matching incremental rows
+    bench(&mut recs, "phi publish (clone+rebuild, full)", it(50), pub_items, || {
+        std::hint::black_box(clone_rebuild(&shard.dphi, k));
+    });
+    let clone_ips = recs.last().map(|&(_, v)| v).unwrap_or(0.0);
+    recs.push(("phi publish (clone+rebuild, power subset)".to_string(), clone_ips));
+    let mut snap = PhiSnapshot::new(&shard.dphi, k, 0);
+    bench(&mut recs, "phi publish (incremental, full)", it(50), pub_items, || {
+        snap.apply(&shard.dphi, &sel);
+    });
+    // the power-subset publish runs ABP's actual hot path: the
+    // PowerSet's explicit word list, no W-wide bitmap scan
+    bench(&mut recs, "phi publish (incremental, power subset)", it(200), pub_items, || {
+        snap.apply_power(&shard.dphi, &ps);
     });
 
     // --- scheduled (ABP t >= 2) sweep: residual-top 30% of the docs,
@@ -254,7 +281,15 @@ fn main() {
     bench(&mut recs, "allreduce subset owner-sliced (fused)", it(100), sub_items, || {
         allreduce_step(&cluster, &sub_plan, &phi_acc, &srcs, &mut st, &mut scratch);
     });
-    bench(&mut recs, "allreduce subset owner-sliced (pipelined)", it(100), sub_items, || {
+    // the two pipelines: per-worker double-buffered rounds (retained
+    // baseline) vs the slice-granular ready-counter pipeline the
+    // coordinator's overlap mode now runs
+    bench(&mut recs, "allreduce subset pipelined (per-worker)", it(100), sub_items, || {
+        allreduce_step_overlap_rounds(
+            &cluster, &sub_plan, &phi_acc, &srcs, &mut st, &mut scratch,
+        );
+    });
+    bench(&mut recs, "allreduce subset pipelined (slice-granular)", it(100), sub_items, || {
         allreduce_step_overlap(&cluster, &sub_plan, &phi_acc, &srcs, &mut st, &mut scratch);
     });
 
@@ -289,6 +324,12 @@ fn main() {
     let sched_ser = find(&recs, "bp sweep (scheduled, serial sweep_docs)");
     let sched_par = find(&recs, "bp sweep (scheduled, permuted-block parallel)");
     let sched_speedup = if sched_ser > 0.0 { sched_par / sched_ser } else { 0.0 };
+    // per-iteration ABP leader overhead: clone+rebuild vs incremental
+    // snapshot on the power-subset workload (acceptance: >= 5x)
+    let pub_clone = find(&recs, "phi publish (clone+rebuild, power subset)");
+    let pub_incr = find(&recs, "phi publish (incremental, power subset)");
+    let abp_iter_overhead_speedup =
+        if pub_clone > 0.0 { pub_incr / pub_clone } else { 0.0 };
     let results = Json::Obj(
         recs.into_iter().map(|(n, v)| (n, Json::Num(v))).collect(),
     );
@@ -306,11 +347,16 @@ fn main() {
         ])),
         ("full_sweep_speedup_vs_serial", Json::from(speedup)),
         ("scheduled_sweep_speedup_vs_serial", Json::from(sched_speedup)),
+        ("abp_iter_overhead_speedup", Json::from(abp_iter_overhead_speedup)),
         ("overlap_efficiency", Json::from(overlap_eff)),
         ("items_per_sec", results),
     ]);
     println!("\nfull-sweep speedup vs serial reference: {speedup:.2}x");
     println!("scheduled-sweep speedup vs serial sweep_docs: {sched_speedup:.2}x");
+    println!(
+        "abp iter-overhead speedup (snapshot vs clone+rebuild): \
+         {abp_iter_overhead_speedup:.2}x"
+    );
     if smoke {
         println!("--smoke: skipping BENCH_microbench.json write");
     } else {

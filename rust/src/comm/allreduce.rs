@@ -44,17 +44,32 @@
 //! function of the data, identical between [`allreduce_step`] and the
 //! pipelined [`allreduce_step_overlap`].
 //!
-//! # Overlap pipeline
+//! # Overlap pipeline (slice-granular)
 //!
-//! [`allreduce_step_overlap`] is the double-buffered variant the
-//! coordinator's overlap mode runs: worker n+1's `export_selected`
-//! packing executes concurrently with the owner-sliced fold of worker
-//! n's buffer (two alternating gather buffers), modeling a pipeline that
-//! hides pack latency behind reduction. Results are bitwise identical to
-//! [`allreduce_step`] — only wall-clock scheduling differs; simulated
+//! [`allreduce_step_overlap`] is the pipelined variant the coordinator's
+//! overlap mode runs, at **slice granularity**: each worker's gather
+//! export is split into per-owner-slice chunks, and an owner starts
+//! folding its slice as soon as *every worker has packed that slice* —
+//! tracked by per-slice ready counters — instead of waiting for whole
+//! workers. The per-worker double-buffered rounds pipeline this replaces
+//! is retained as [`allreduce_step_overlap_rounds`] (the second pipeline
+//! oracle and microbench baseline). Ordering rules that keep all paths
+//! bitwise interchangeable:
+//!
+//! * a slice's fold runs only after all N workers packed *that slice*
+//!   (`ready[s] == N`, acquire/release on the counter);
+//! * within a slice, every element folds the worker buffers in worker
+//!   order — the serial reference's left fold — and the owner's f64
+//!   totals deltas accumulate in plan order within the owner;
+//! * the per-owner totals merge in ascending owner order, the identical
+//!   f64 op sequence as the fused and per-worker-pipelined paths.
+//!
+//! Results are therefore bitwise identical to [`allreduce_step`] —
+//! totals included — only wall-clock scheduling differs; simulated
 //! *time* always comes from the byte-exact ledger and the network
 //! model's per-segment accounting.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::comm::Cluster;
@@ -92,6 +107,21 @@ pub trait ReduceSource {
         let mut buf = GatherBuf::default();
         self.export_selected_into(indices, &mut buf);
         buf
+    }
+
+    /// Pack the partials at the plan slots `slots` (positions into
+    /// `indices`) into `buf` — the per-owner-slice gather export of the
+    /// slice-granular pipeline ([`allreduce_step_overlap`]): one chunk
+    /// per (worker, owner slice), holding the owned slots' values in
+    /// plan order within the owner.
+    fn export_slice_into(&self, indices: &[u32], slots: &[u32], buf: &mut GatherBuf) {
+        let (dphi, r) = self.dense_parts();
+        buf.dphi.clear();
+        buf.r.clear();
+        buf.dphi
+            .extend(slots.iter().map(|&s| dphi[indices[s as usize] as usize]));
+        buf.r
+            .extend(slots.iter().map(|&s| r[indices[s as usize] as usize]));
     }
 }
 
@@ -169,7 +199,7 @@ impl OwnerSlices {
 #[derive(Debug, Default)]
 pub struct SyncScratch {
     /// per-worker plan-order gather buffers ([`allreduce_step`]) /
-    /// double buffer ([`allreduce_step_overlap`])
+    /// double buffer ([`allreduce_step_overlap_rounds`])
     gather: Vec<GatherBuf>,
     /// owner n reduces plan slots `owner_slots[owner_off[n]..owner_off[n+1]]`
     owner_off: Vec<u32>,
@@ -180,9 +210,18 @@ pub struct SyncScratch {
     /// (k φ̂-topic lanes + 1 residual lane), merged in ascending owner order
     tot_delta: Vec<f64>,
     /// pre-overwrite `phi_eff` / `r_global` values at the owned slots
-    /// (pipelined path only; aligned with `owner_slots`)
+    /// (per-worker rounds pipeline only; aligned with `owner_slots`)
     old_phi: Vec<f32>,
     old_r: Vec<f32>,
+    /// slice-granular pipeline: per-(owner slice, worker) gather chunks,
+    /// slice-major (`slice_bufs[s·N + w]`), reused across syncs. The
+    /// mutexes hand chunk ownership from the pack task that fills a
+    /// chunk to the fold task that reads it; each lock is uncontended
+    /// once the slice's ready counter has been observed.
+    slice_bufs: Vec<Mutex<GatherBuf>>,
+    /// slice-granular pipeline: per-slice pack-completion counters — a
+    /// slice's fold spins until its counter reaches the worker count
+    ready: Vec<AtomicUsize>,
 }
 
 impl SyncScratch {
@@ -368,6 +407,23 @@ enum PipeTask<'a, S> {
     Pack { worker: &'a Mutex<S>, dst: &'a mut GatherBuf },
 }
 
+/// A slice-granular dispatch task ([`allreduce_step_overlap`]): pack one
+/// worker's chunk of one owner slice, or fold one owner slice once its
+/// ready counter shows every worker has packed it.
+enum SliceTask<'a, S> {
+    Pack {
+        worker: &'a Mutex<S>,
+        chunk: &'a Mutex<GatherBuf>,
+        slots: &'a [u32],
+        ready: &'a AtomicUsize,
+    },
+    Fold {
+        t: FoldSlice<'a>,
+        chunks: &'a [Mutex<GatherBuf>],
+        ready: &'a AtomicUsize,
+    },
+}
+
 /// Split the replicated state (and the owner-grouped scratch lanes) into
 /// per-owner disjoint fold tasks. `old` additionally hands each owner
 /// its aligned pre-overwrite snapshot windows (pipelined path).
@@ -492,14 +548,12 @@ fn subset_owner_step<S: ReduceSource + Send>(
     let nw = workers.len();
     let k = state.k;
     // parallel gather: each worker packs its own plan-order buffer into
-    // the reused pool
+    // the reused pool — dispatched directly over the pooled buffers (the
+    // old per-sync `Vec<&mut GatherBuf>` task list is gone)
     scratch.gather.resize_with(nw, GatherBuf::default);
-    {
-        let mut gtasks: Vec<&mut GatherBuf> = scratch.gather.iter_mut().collect();
-        cluster.run_on_owner_slices(&mut gtasks, |n, buf| {
-            workers[n].lock().unwrap().export_selected_into(indices, buf);
-        });
-    }
+    cluster.run_on_owner_slices(&mut scratch.gather[..nw], |n, buf| {
+        workers[n].lock().unwrap().export_selected_into(indices, buf);
+    });
     let slices = OwnerSlices::new(state.phi_eff.len(), nw);
     scratch.group_by_owner(indices, &slices);
     scratch.tot_delta.clear();
@@ -540,7 +594,8 @@ fn subset_owner_step<S: ReduceSource + Send>(
     indices.len()
 }
 
-/// Subset owner-sliced reduce-scatter, double-buffered pipeline: round n
+/// Subset owner-sliced reduce-scatter, per-worker double-buffered rounds
+/// pipeline (retained behind [`allreduce_step_overlap_rounds`]): round n
 /// folds worker n's buffer into every owner slice while worker n+1 packs
 /// its export into the alternate buffer on the same dispatch. The fold
 /// accumulates directly in `phi_eff`/`r_global` (same f32 op sequence as
@@ -638,6 +693,126 @@ fn subset_owner_step_pipelined<S: ReduceSource + Send>(
     m
 }
 
+/// Subset owner-sliced reduce-scatter, **slice-granular** pipeline: every
+/// worker's gather export is split into per-owner-slice chunks, and the
+/// fold of slice `s` starts as soon as all `N` workers have packed *that
+/// slice* (per-slice ready counters) — no per-worker rounds, no barrier
+/// between packing and folding. One dispatch carries `N·S` pack tasks
+/// and `S` fold tasks, interleaved slice-major so early slices fold
+/// while later slices still pack.
+///
+/// Deadlock-freedom: tasks are claimed in index order, so a thread
+/// spinning in fold `s` implies every pack of slice `s` is claimed; the
+/// still-running ones execute on *other* threads (a spinning fold never
+/// holds a pack), so the counter always reaches `N`. On a single thread
+/// the tasks simply run in order (packs of `s`, then fold `s`).
+///
+/// Bitwise identical to [`subset_owner_step`]: per element the fold is
+/// the same worker-order left fold, the owner's f64 totals deltas
+/// accumulate in plan order within the owner, and the owners merge in
+/// ascending order — the identical f64 op sequence.
+fn subset_owner_step_sliced<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    indices: &[u32],
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+    scratch: &mut SyncScratch,
+) -> usize {
+    let nw = workers.len();
+    let k = state.k;
+    let slices = OwnerSlices::new(state.phi_eff.len(), nw);
+    let owners = slices.owners();
+    scratch.group_by_owner(indices, &slices);
+    scratch.tot_delta.clear();
+    scratch.tot_delta.resize(owners * (k + 1), 0.0);
+    if scratch.slice_bufs.len() < nw * owners {
+        scratch
+            .slice_bufs
+            .resize_with(nw * owners, || Mutex::new(GatherBuf::default()));
+    }
+    if scratch.ready.len() < owners {
+        scratch.ready.resize_with(owners, || AtomicUsize::new(0));
+    }
+    for rd in &scratch.ready[..owners] {
+        rd.store(0, Ordering::Relaxed);
+    }
+
+    let fold = make_fold_slices(
+        &slices,
+        k,
+        &mut state.phi_eff,
+        &mut state.r_global,
+        &scratch.owner_off,
+        &scratch.owner_slots,
+        &mut scratch.tot_delta,
+        None,
+    );
+
+    let owner_off = &scratch.owner_off;
+    let owner_slots = &scratch.owner_slots;
+    let slice_bufs = &scratch.slice_bufs;
+    let ready = &scratch.ready;
+    let mut tasks: Vec<SliceTask<'_, S>> = Vec::with_capacity(owners * (nw + 1));
+    for (s, fold_s) in fold.into_iter().enumerate() {
+        let slots =
+            &owner_slots[owner_off[s] as usize..owner_off[s + 1] as usize];
+        for (w, worker) in workers.iter().enumerate() {
+            tasks.push(SliceTask::Pack {
+                worker,
+                chunk: &slice_bufs[s * nw + w],
+                slots,
+                ready: &ready[s],
+            });
+        }
+        tasks.push(SliceTask::Fold {
+            t: fold_s,
+            chunks: &slice_bufs[s * nw..(s + 1) * nw],
+            ready: &ready[s],
+        });
+    }
+    cluster.run_on_owner_slices(&mut tasks, |_i, task| match task {
+        SliceTask::Pack { worker, chunk, slots, ready } => {
+            {
+                let mut buf = chunk.lock().unwrap();
+                worker.lock().unwrap().export_slice_into(indices, slots, &mut buf);
+            }
+            ready.fetch_add(1, Ordering::Release);
+        }
+        SliceTask::Fold { t, chunks, ready } => {
+            // slice-granular readiness: the other pool threads are
+            // running this slice's remaining packs
+            while ready.load(Ordering::Acquire) < nw {
+                std::thread::yield_now();
+            }
+            // one uncontended lock per worker chunk; the guard list is
+            // an O(N) per-fold allocation (guards are lifetime-bound and
+            // cannot live in the pool) — see the ROADMAP scratch note
+            let guards: Vec<_> =
+                chunks.iter().map(|c| c.lock().unwrap()).collect();
+            for (p, &slot) in t.slots.iter().enumerate() {
+                let i = indices[slot as usize] as usize;
+                let j = i - t.base;
+                // the serial reference's left folds, worker order
+                let mut dsum = 0f32;
+                let mut rsum = 0f32;
+                for g in &guards {
+                    dsum += g.dphi[p];
+                    rsum += g.r[p];
+                }
+                let new_phi = phi_acc[i] + dsum;
+                t.td[i % k] += new_phi as f64 - t.phi[j] as f64;
+                t.phi[j] = new_phi;
+                t.td[k] += rsum as f64 - t.r[j] as f64;
+                t.r[j] = rsum;
+            }
+        }
+    });
+    drop(tasks);
+    state.merge_owner_totals(&scratch.tot_delta);
+    indices.len()
+}
+
 /// One full synchronization as an owner-sliced reduce-scatter: gather
 /// worker partials per `plan` (subset plans pack into `scratch`'s reused
 /// buffers), then each owner reduces + scatters its slice in a single
@@ -670,14 +845,47 @@ pub fn allreduce_step<S: ReduceSource + Send>(
     }
 }
 
-/// The double-buffered pipelined synchronization (coordinator overlap
-/// mode): worker n+1's gather export overlaps the owner-sliced fold of
-/// worker n's buffer. Dense plans have no packing phase (matrices are
-/// borrowed in place), so they degenerate to the fused dense dispatch —
-/// their overlap shows up only in the ledger's `max(compute, comm)`
-/// accounting. Results are **bitwise identical** to [`allreduce_step`],
-/// totals included.
+/// The pipelined synchronization (coordinator overlap mode), at **slice
+/// granularity**: an owner folds its slice as soon as every worker has
+/// packed *that slice* (per-slice ready counters), so packing and
+/// folding interleave freely instead of alternating per-worker rounds.
+/// Dense plans have no packing phase (matrices are borrowed in place),
+/// so they degenerate to the fused dense dispatch — their overlap shows
+/// up only in the ledger's `max(compute, comm)` accounting. Results are
+/// **bitwise identical** to [`allreduce_step`] and to the retained
+/// per-worker rounds pipeline [`allreduce_step_overlap_rounds`], totals
+/// included.
 pub fn allreduce_step_overlap<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+    scratch: &mut SyncScratch,
+) -> usize {
+    assert_eq!(
+        workers.len(),
+        cluster.workers(),
+        "one shard per logical worker"
+    );
+    match plan {
+        ReducePlan::Dense { len } => {
+            debug_assert_eq!(*len, state.phi_eff.len());
+            dense_owner_step(cluster, phi_acc, workers, state)
+        }
+        ReducePlan::Subset { indices } => {
+            subset_owner_step_sliced(cluster, indices, phi_acc, workers, state, scratch)
+        }
+    }
+}
+
+/// The retained per-worker double-buffered rounds pipeline (the PR-3
+/// overlap path the slice-granular [`allreduce_step_overlap`] replaced):
+/// round n folds worker n's whole buffer into every owner slice while
+/// worker n+1 packs into the alternate buffer. Kept as the second
+/// pipeline oracle and the microbench baseline — bitwise identical to
+/// [`allreduce_step`] and [`allreduce_step_overlap`], totals included.
+pub fn allreduce_step_overlap_rounds<S: ReduceSource + Send>(
     cluster: &Cluster,
     plan: &ReducePlan,
     phi_acc: &[f32],
@@ -1011,10 +1219,12 @@ mod tests {
 
         let mut own = GlobalState::new(&phi_acc, k);
         let mut pipe = GlobalState::new(&phi_acc, k);
+        let mut rounds = GlobalState::new(&phi_acc, k);
         let mut pool = GlobalState::new(&phi_acc, k);
         let mut ser = SerialState::new(&phi_acc, k);
         let mut scr_own = SyncScratch::default();
         let mut scr_pipe = SyncScratch::default();
+        let mut scr_rounds = SyncScratch::default();
         for round in 0..5 {
             // a fresh random subset each round, deliberately unsorted
             let mut indices: Vec<u32> =
@@ -1029,19 +1239,26 @@ mod tests {
             allreduce_step_overlap(
                 &cluster, &plan, &phi_acc, &workers, &mut pipe, &mut scr_pipe,
             );
+            allreduce_step_overlap_rounds(
+                &cluster, &plan, &phi_acc, &workers, &mut rounds, &mut scr_rounds,
+            );
             allreduce_step_pool(&cluster, &plan, &phi_acc, &workers, &mut pool);
             serial_reference_step(&plan, k, &phi_acc, &workers, &mut ser);
             assert_eq!(pairs, indices.len());
             assert_eq!(own.phi_eff, ser.phi_eff, "round {round}");
             assert_eq!(own.r_global, ser.r_global, "round {round}");
-            assert_eq!(pipe.phi_eff, ser.phi_eff, "pipelined round {round}");
-            assert_eq!(pipe.r_global, ser.r_global, "pipelined round {round}");
+            assert_eq!(pipe.phi_eff, ser.phi_eff, "sliced round {round}");
+            assert_eq!(pipe.r_global, ser.r_global, "sliced round {round}");
+            assert_eq!(rounds.phi_eff, ser.phi_eff, "rounds round {round}");
+            assert_eq!(rounds.r_global, ser.r_global, "rounds round {round}");
             assert_eq!(pool.phi_eff, ser.phi_eff, "pool round {round}");
             assert_eq!(pool.r_global, ser.r_global, "pool round {round}");
-            // fused vs pipelined: totals bitwise (the coordinator's
+            // fused vs both pipelines: totals bitwise (the coordinator's
             // overlap-equivalence contract hinges on this)
             assert_eq!(own.phi_tot(), pipe.phi_tot(), "round {round}");
             assert_eq!(own.r_total().to_bits(), pipe.r_total().to_bits(), "round {round}");
+            assert_eq!(own.phi_tot(), rounds.phi_tot(), "round {round}");
+            assert_eq!(own.r_total().to_bits(), rounds.r_total().to_bits(), "round {round}");
             // mutate worker partials between rounds
             for m in &workers {
                 let mut g = m.lock().unwrap();
@@ -1065,18 +1282,25 @@ mod tests {
         let cluster = Cluster::new(1, 0);
         let mut own = GlobalState::new(&phi_acc, k);
         let mut pipe = GlobalState::new(&phi_acc, k);
+        let mut rounds = GlobalState::new(&phi_acc, k);
         let mut ser = SerialState::new(&phi_acc, k);
         let mut scr = SyncScratch::default();
         let mut scr2 = SyncScratch::default();
+        let mut scr3 = SyncScratch::default();
         let indices: Vec<u32> = (0..(w * k) as u32).step_by(3).collect();
         let plan = ReducePlan::Subset { indices: &indices };
         allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut own, &mut scr);
         allreduce_step_overlap(&cluster, &plan, &phi_acc, &workers, &mut pipe, &mut scr2);
+        allreduce_step_overlap_rounds(
+            &cluster, &plan, &phi_acc, &workers, &mut rounds, &mut scr3,
+        );
         serial_reference_step(&plan, k, &phi_acc, &workers, &mut ser);
         assert_eq!(own.phi_eff, ser.phi_eff);
         assert_eq!(pipe.phi_eff, ser.phi_eff);
+        assert_eq!(rounds.phi_eff, ser.phi_eff);
         assert_eq!(own.r_global, ser.r_global);
         assert_eq!(pipe.r_global, ser.r_global);
+        assert_eq!(rounds.r_global, ser.r_global);
     }
 
     #[test]

@@ -116,37 +116,34 @@ impl Cluster {
         } else {
             let counter = AtomicUsize::new(0);
             // Disjoint &mut views for the threads, claimed by work-stealing
-            // on the atomic counter. SAFETY-free version: give each OS
-            // thread its own result buffer and stitch after the join.
+            // on the atomic counter: per-slot mutexes hand each claiming
+            // thread its (result, seconds) pair directly. Each lock is
+            // uncontended (every index is claimed exactly once), and no
+            // per-thread collection buffers are allocated per dispatch.
+            let cells: Vec<Mutex<(&mut Option<T>, &mut f64)>> = results
+                .iter_mut()
+                .zip(secs.iter_mut())
+                .map(Mutex::new)
+                .collect();
             let fref = &f;
+            let cells_ref = &cells;
             let counter_ref = &counter;
-            let mut collected: Vec<Vec<(usize, T, f64)>> =
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = (0..self.threads)
-                        .map(|_| {
-                            scope.spawn(move || {
-                                let mut local = Vec::new();
-                                loop {
-                                    let i = counter_ref.fetch_add(1, Ordering::Relaxed);
-                                    if i >= n {
-                                        break;
-                                    }
-                                    let t0 = Instant::now();
-                                    let r = fref(i);
-                                    local.push((i, r, t0.elapsed().as_secs_f64()));
-                                }
-                                local
-                            })
-                        })
-                        .collect();
-                    handles.into_iter().map(|h| h.join().unwrap()).collect()
-                });
-            for chunk in collected.drain(..) {
-                for (i, r, s) in chunk {
-                    results[i] = Some(r);
-                    secs[i] = s;
+            std::thread::scope(|scope| {
+                for _ in 0..self.threads {
+                    scope.spawn(move || loop {
+                        let i = counter_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let t0 = Instant::now();
+                        let r = fref(i);
+                        let mut guard = cells_ref[i].lock().unwrap();
+                        *guard.0 = Some(r);
+                        *guard.1 = t0.elapsed().as_secs_f64();
+                    });
                 }
-            }
+            });
+            drop(cells);
         }
         (
             results.into_iter().map(|r| r.expect("worker missing")).collect(),
@@ -222,40 +219,37 @@ impl Cluster {
             }
             return secs;
         }
-        // per-block mutexes hand out the disjoint &mut views to whichever
-        // thread claims the block on the shared counter; each lock is
-        // uncontended (every index is claimed exactly once)
-        let cells: Vec<Mutex<&mut T>> = blocks.iter_mut().map(Mutex::new).collect();
+        // per-block mutexes hand out the disjoint (&mut block, &mut
+        // seconds-slot) views to whichever thread claims the block on the
+        // shared counter; each lock is uncontended (every index is
+        // claimed exactly once). Threads write their measurements through
+        // the cells, so the dispatch allocates no per-thread collection
+        // buffers (the last per-dispatch allocations besides the cell
+        // list itself and the returned seconds).
+        let cells: Vec<Mutex<(&mut T, &mut f64)>> = blocks
+            .iter_mut()
+            .zip(secs.iter_mut())
+            .map(Mutex::new)
+            .collect();
         let counter = AtomicUsize::new(0);
         let fref = &f;
         let cells_ref = &cells;
         let counter_ref = &counter;
-        let mut collected: Vec<Vec<(usize, f64)>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..threads)
-                .map(|_| {
-                    scope.spawn(move || {
-                        let mut local = Vec::new();
-                        loop {
-                            let i = counter_ref.fetch_add(1, Ordering::Relaxed);
-                            if i >= n {
-                                break;
-                            }
-                            let mut guard = cells_ref[i].lock().unwrap();
-                            let t0 = Instant::now();
-                            fref(i, &mut **guard);
-                            local.push((i, t0.elapsed().as_secs_f64()));
-                        }
-                        local
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for chunk in collected.drain(..) {
-            for (i, s) in chunk {
-                secs[i] = s;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(move || loop {
+                    let i = counter_ref.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let mut guard = cells_ref[i].lock().unwrap();
+                    let t0 = Instant::now();
+                    fref(i, &mut *guard.0);
+                    *guard.1 = t0.elapsed().as_secs_f64();
+                });
             }
-        }
+        });
+        drop(cells);
         secs
     }
 

@@ -18,6 +18,15 @@
 //! [`Ledger::total_secs`], so `total = Σ max(compute, comm)` over
 //! overlapped iterations plus the serialized cost of everything else.
 //!
+//! A sync recorded with [`Ledger::record_sync_deferred`] (the
+//! end-of-batch fold in overlap mode) keeps its bytes, count and segment
+//! attribution exact at record time, but its comm seconds join the
+//! *next* overlapped iteration's window: that iteration charges
+//! `max(compute, comm + deferred)` — the fold's transfer hides behind
+//! the next batch's t = 1 sweep. If no overlapped iteration follows
+//! (the run's last fold), the deferred comm stays fully serialized in
+//! the total.
+//!
 //! # Exactness invariants (both modes)
 //!
 //! Overlap changes *time* accounting only; the measured quantities the
@@ -69,6 +78,11 @@ pub struct Ledger {
     /// iterations (Σ min(compute, comm)); subtracted from the
     /// serialized total
     pub overlap_saved_secs: f64,
+    /// comm seconds of deferred syncs (the overlap-mode end-of-batch
+    /// fold) awaiting the next overlapped iteration's window; drained by
+    /// [`Ledger::record_overlapped_iter`], harmlessly serialized if the
+    /// run ends first
+    deferred_comm_secs: f64,
 }
 
 impl Ledger {
@@ -80,6 +94,7 @@ impl Ledger {
             wire_bytes: 0,
             comm_secs: 0.0,
             overlap_saved_secs: 0.0,
+            deferred_comm_secs: 0.0,
         }
     }
 
@@ -118,12 +133,33 @@ impl Ledger {
         secs
     }
 
+    /// Record a synchronization whose communication is *deferred* into
+    /// the next overlapped iteration's window — the end-of-batch fold in
+    /// overlap mode: the leader must fold before freeing the batch, but
+    /// the fold's full-matrix *transfer* can hide behind the next
+    /// batch's t = 1 sweep. Bytes, the sync count and the per-segment
+    /// attribution are recorded exactly now; the comm seconds join the
+    /// next [`Ledger::record_overlapped_iter`] (or stay serialized if
+    /// none follows). Returns the simulated comm seconds of the sync.
+    pub fn record_sync_deferred(
+        &mut self,
+        batch: usize,
+        iter: usize,
+        payload_bytes: usize,
+        n: usize,
+    ) -> f64 {
+        let secs = self.record_sync(batch, iter, payload_bytes, n);
+        self.deferred_comm_secs += secs;
+        secs
+    }
+
     /// Record one *pipelined* iteration — computation and the allreduce
-    /// overlapped (the coordinator's double-buffered pipeline / the YLDA
+    /// overlapped (the coordinator's pipelined allreduce / the YLDA
     /// parameter-server semantics): the iteration contributes
-    /// `max(compute, comm)` to the total, while bytes, the sync count
-    /// and the per-segment reduce-scatter/allgather attribution stay
-    /// exact. Returns the seconds charged.
+    /// `max(compute, comm + deferred)` to the total — its own allreduce
+    /// plus any deferred fold comm hide behind the sweep — while bytes,
+    /// the sync count and the per-segment reduce-scatter/allgather
+    /// attribution stay exact. Returns the seconds charged.
     pub fn record_overlapped_iter(
         &mut self,
         batch: usize,
@@ -134,10 +170,11 @@ impl Ledger {
     ) -> f64 {
         let compute = self.record_compute(per_worker_secs);
         let comm = self.record_sync(batch, iter, payload_bytes, n);
+        let deferred = std::mem::take(&mut self.deferred_comm_secs);
         // the charging rule lives in one place: the network model's
-        // overlapped-iteration time (max of the two segments)
-        let iter_secs = self.net.overlapped_iter_secs(compute, payload_bytes, n);
-        self.overlap_saved_secs += compute + comm - iter_secs;
+        // overlapped-iteration time, max(compute, comm + deferred)
+        let iter_secs = self.net.overlapped_iter_secs(compute, payload_bytes, n, deferred);
+        self.overlap_saved_secs += compute + comm + deferred - iter_secs;
         iter_secs
     }
 
@@ -199,6 +236,7 @@ impl Ledger {
         self.wire_bytes += other.wire_bytes;
         self.comm_secs += other.comm_secs;
         self.overlap_saved_secs += other.overlap_saved_secs;
+        self.deferred_comm_secs += other.deferred_comm_secs;
     }
 }
 
@@ -280,6 +318,47 @@ mod tests {
         let before = l.total_secs();
         let t = l.record_sync(0, 9, 1 << 16, 8);
         assert!((l.total_secs() - before - t).abs() < 1e-15);
+    }
+
+    #[test]
+    fn deferred_fold_comm_hides_behind_next_overlapped_iter() {
+        let net = NetModel::infiniband_20gbps();
+        let mut l = Ledger::new(net);
+        // the fold: bytes/segments exact now, comm deferred
+        let fold_bytes = 1usize << 20;
+        let fold_comm = l.record_sync_deferred(0, 5, fold_bytes, 8);
+        assert!(fold_comm > 0.0);
+        assert_eq!(l.sync_count(), 1);
+        assert_eq!(l.payload_bytes_total(), fold_bytes as u64);
+        // a compute-bound t = 1 iteration follows: the fold's comm (and
+        // the iteration's own allreduce) hide entirely behind the sweep
+        let iter_bytes = 1usize << 10;
+        let iter_comm = net.allreduce_secs(iter_bytes, 8);
+        let compute = (fold_comm + iter_comm) * 10.0;
+        let charged = l.record_overlapped_iter(0, 1, iter_bytes, 8, &[compute]);
+        assert!((charged - compute).abs() < 1e-15, "fold comm not hidden");
+        assert!(
+            (l.overlap_saved_secs - (fold_comm + iter_comm)).abs() < 1e-15,
+            "saved {} vs fold {} + iter {}",
+            l.overlap_saved_secs,
+            fold_comm,
+            iter_comm
+        );
+        assert!((l.total_secs() - compute).abs() < 1e-12);
+        // a comm-bound iteration after a second fold: charged the comm
+        // side, max(compute, comm + deferred)
+        let before = l.total_secs();
+        let fold2 = l.record_sync_deferred(1, 5, fold_bytes, 8);
+        let tiny = 1e-9;
+        let charged2 = l.record_overlapped_iter(1, 1, iter_bytes, 8, &[tiny]);
+        assert!((charged2 - (fold2 + iter_comm)).abs() < 1e-15);
+        // fold + iteration together cost exactly the overlapped window
+        assert!((l.total_secs() - before - charged2).abs() < 1e-12);
+        // a trailing deferred fold with no iteration after it stays
+        // fully serialized in the total
+        let before = l.total_secs();
+        let fold3 = l.record_sync_deferred(2, 5, fold_bytes, 8);
+        assert!((l.total_secs() - before - fold3).abs() < 1e-12);
     }
 
     #[test]

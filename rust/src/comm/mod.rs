@@ -28,9 +28,9 @@ pub mod ledger;
 pub mod net;
 
 pub use allreduce::{
-    allreduce_step, allreduce_step_overlap, allreduce_step_pool, reduce_chunked,
-    reduce_sum_into, reduce_sum_subset_into, GatherBuf, GlobalState, OwnerSlices,
-    ReducePlan, ReduceSource, SyncScratch,
+    allreduce_step, allreduce_step_overlap, allreduce_step_overlap_rounds,
+    allreduce_step_pool, reduce_chunked, reduce_sum_into, reduce_sum_subset_into,
+    GatherBuf, GlobalState, OwnerSlices, ReducePlan, ReduceSource, SyncScratch,
 };
 pub use cluster::Cluster;
 pub use ledger::{Ledger, SyncEvent};

@@ -93,13 +93,23 @@ impl NetModel {
         self.reduce_scatter_secs(bytes, n) + self.allgather_secs(bytes, n)
     }
 
-    /// Iteration time when an allreduce of `bytes` across `n` overlaps
-    /// `compute_secs` of computation (the double-buffered pipeline /
-    /// parameter-server semantics the ledger's overlap mode charges):
-    /// `max(compute, comm)` — communication hides behind computation and
-    /// vice versa, never both.
-    pub fn overlapped_iter_secs(&self, compute_secs: f64, bytes: usize, n: usize) -> f64 {
-        compute_secs.max(self.allreduce_secs(bytes, n))
+    /// Iteration time when an allreduce of `bytes` across `n` — plus any
+    /// `deferred_comm_secs` carried over from a deferred sync (the
+    /// overlap-mode end-of-batch fold) — overlaps `compute_secs` of
+    /// computation (the pipelined / parameter-server semantics the
+    /// ledger's overlap mode charges): `max(compute, comm + deferred)` —
+    /// communication hides behind computation and vice versa, never
+    /// both. This is the single home of the overlap charging rule;
+    /// [`Ledger::record_overlapped_iter`](crate::comm::Ledger::record_overlapped_iter)
+    /// delegates here.
+    pub fn overlapped_iter_secs(
+        &self,
+        compute_secs: f64,
+        bytes: usize,
+        n: usize,
+        deferred_comm_secs: f64,
+    ) -> f64 {
+        compute_secs.max(self.allreduce_secs(bytes, n) + deferred_comm_secs)
     }
 
     /// Total wire bytes an `n`-processor allreduce of `bytes` moves
@@ -168,10 +178,20 @@ mod tests {
         let m = NetModel::infiniband_20gbps();
         let comm = m.allreduce_secs(1 << 20, 8);
         // compute-bound: compute dominates; comm-bound: comm dominates
-        assert_eq!(m.overlapped_iter_secs(10.0 * comm, 1 << 20, 8), 10.0 * comm);
-        assert_eq!(m.overlapped_iter_secs(comm * 0.1, 1 << 20, 8), comm);
+        assert_eq!(m.overlapped_iter_secs(10.0 * comm, 1 << 20, 8, 0.0), 10.0 * comm);
+        assert_eq!(m.overlapped_iter_secs(comm * 0.1, 1 << 20, 8, 0.0), comm);
         // n = 1 has no comm to hide
-        assert_eq!(m.overlapped_iter_secs(0.25, 1 << 20, 1), 0.25);
+        assert_eq!(m.overlapped_iter_secs(0.25, 1 << 20, 1, 0.0), 0.25);
+        // deferred fold comm joins the window's comm side (comm + comm
+        // = 2·comm is exact in binary floating point)
+        assert_eq!(
+            m.overlapped_iter_secs(comm * 0.1, 1 << 20, 8, comm),
+            2.0 * comm
+        );
+        assert_eq!(
+            m.overlapped_iter_secs(10.0 * comm, 1 << 20, 8, comm),
+            10.0 * comm
+        );
     }
 
     #[test]

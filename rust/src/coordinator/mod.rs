@@ -24,9 +24,10 @@
 //! semantics of Fig. 1). Overlap mode runs the same arithmetic through
 //! the pipelined synchronization stack instead:
 //!
-//! * the allreduce is the double-buffered
-//!   [`allreduce_step_overlap`]: worker n+1's gather export packs
-//!   concurrently with the owner-sliced fold of worker n's buffer;
+//! * the allreduce is the slice-granular pipelined
+//!   [`allreduce_step_overlap`]: per-owner-slice gather chunks, each
+//!   owner folding its slice as soon as every worker has packed *that
+//!   slice* (per-slice ready counters — no per-worker rounds);
 //! * the next mini-batch's shard construction runs concurrently with the
 //!   current batch's end-of-batch fold (both leader-side, disjoint
 //!   state);
@@ -34,8 +35,13 @@
 //!   ([`Ledger::record_overlapped_iter`], the YLDA parameter-server
 //!   semantics of `engine::mpa`), keeping byte counts and per-segment
 //!   reduce-scatter/allgather attribution exact. The end-of-batch fold's
-//!   full-matrix sync stays serialized — the leader must finish folding
-//!   before freeing the batch (Fig. 4 line 30).
+//!   leader-side *work* stays serialized — the leader must finish
+//!   folding before freeing the batch (Fig. 4 line 30) — but its
+//!   simulated full-matrix *transfer* is deferred into the next batch's
+//!   t = 1 window ([`Ledger::record_sync_deferred`]): that iteration
+//!   charges `max(compute, comm + fold comm)`, with bytes and sync
+//!   counts exact. The run's last fold has no following iteration and
+//!   stays fully serialized.
 //!
 //! Numerical results are **bitwise identical** between the two modes at
 //! any thread budget (`rust/tests/allreduce_equiv.rs` pins this): both
@@ -97,8 +103,9 @@ pub struct PobpConfig {
     /// record a model snapshot every this many synchronizations
     /// (0 = never); used for perplexity-vs-time curves
     pub snapshot_every: usize,
-    /// run the overlap pipeline: double-buffered gather/fold allreduce,
-    /// next-batch shard construction overlapped with the fold, and
+    /// run the overlap pipeline: slice-granular gather/fold allreduce,
+    /// next-batch shard construction overlapped with the fold, the
+    /// fold's transfer deferred into the next batch's t = 1 window, and
     /// `max(compute, comm)` ledger accounting per iteration. Bitwise
     /// identical results to the serialized mode (see module doc);
     /// default `false` = the paper's serialized BSP accounting.
@@ -321,12 +328,14 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
         // updates not yet communicated, so the fold ships one final full
         // φ̂ matrix (the paper frees the batch keeping the global matrix,
         // line 30) — and charges it: one sync per batch on top of the
-        // per-iteration ones, so sync_count = Σ_batches (iters + 1). Its
-        // comm stays serialized even in overlap mode (the leader must
-        // finish folding before freeing the batch). Overlap mode builds
-        // the *next* batch's shards concurrently with the fold — both
-        // leader-side, disjoint state, and the RNG splits happen at the
-        // same stream position either way.
+        // per-iteration ones, so sync_count = Σ_batches (iters + 1). In
+        // overlap mode the fold's *transfer* is deferred into the next
+        // batch's t = 1 window (`record_sync_deferred`: bytes and count
+        // exact now, comm hidden behind the next sweep's max(compute,
+        // comm)); the leader-side folding work itself stays serialized.
+        // Overlap mode also builds the *next* batch's shards concurrently
+        // with the fold — both leader-side, disjoint state, and the RNG
+        // splits happen at the same stream position either way.
         let next_mb = stream.next();
         {
             let guards: Vec<_> = shards.iter().map(|s| s.lock().unwrap()).collect();
@@ -348,7 +357,11 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
             }
             drop(guards);
             phi_acc.copy_from_slice(&state.phi_eff);
-            ledger.record_sync(mb.index, iters_run + 1, 4 * w * k, cfg.n_workers);
+            if cfg.overlap {
+                ledger.record_sync_deferred(mb.index, iters_run + 1, 4 * w * k, cfg.n_workers);
+            } else {
+                ledger.record_sync(mb.index, iters_run + 1, 4 * w * k, cfg.n_workers);
+            }
         }
         pending = next_mb;
         let _ = wall.lap_secs();

@@ -32,12 +32,27 @@
 //!   residuals in schedule order. No sweep in the engine is serial
 //!   anymore; the ledger charges the critical-path estimate of each
 //!   sweep on the configured thread budget.
+//! * **Snapshot publish**: the frozen φ̂ each sweep reads lives in a
+//!   persistent [`PhiSnapshot`] — after the sweep, only the Δ at the
+//!   selected (word, topic) pairs is published (exact f32→f64 totals
+//!   deltas, dense resync every [`AbpConfig::resync_every`] subset
+//!   publishes). The old per-iteration `dphi.clone()` + totals rebuild
+//!   — O(W·K) leader work regardless of the selection — is retired to
+//!   [`clone_rebuild`](crate::engine::snapshot::clone_rebuild), the
+//!   equivalence-test oracle.
+//! * **Block-table reuse**: when a t ≥ 2 schedule covers at least
+//!   [`AbpConfig::sched_reuse_coverage`] of the documents, the sweep
+//!   reuses the t = 1 fixed block tables
+//!   ([`ShardBp::sweep_docs_parallel_fixed`]) instead of rebuilding the
+//!   per-sweep permutation tables — the per-iteration O(scheduled NNZ)
+//!   index build disappears exactly when it is largest.
 
 use crate::comm::Cluster;
 use crate::corpus::Csr;
 use crate::engine::bp::{Selection, ShardBp};
+use crate::engine::snapshot::PhiSnapshot;
 use crate::engine::traits::{IterStat, LdaParams, Model, TrainResult};
-use crate::sched::{select_power, DocSchedule, PowerParams};
+use crate::sched::{select_power, DocSchedule, PowerParams, PowerSet};
 use crate::util::partial_sort::top_k_desc;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
@@ -63,6 +78,25 @@ pub struct AbpConfig {
     /// pass over the per-iteration `DocSchedule` permutation
     /// (`ShardBp::sweep_docs_parallel`).
     pub threads: usize,
+    /// Dense totals-resync cadence of the φ̂ snapshot: rebuild the f64
+    /// topic totals from scratch every this many subset publishes
+    /// (0 = only on full-selection publishes; 1 = every publish, i.e.
+    /// bitwise the clone-and-rebuild oracle). Drift between resyncs is
+    /// bounded at the f64-rounding level
+    /// ([`PhiSnapshot::totals_drift`]).
+    pub resync_every: usize,
+    /// Scheduled-path block-table reuse threshold: when a t ≥ 2 schedule
+    /// covers at least this fraction of the documents, sweep over the
+    /// t = 1 fixed block tables ([`ShardBp::sweep_docs_parallel_fixed`])
+    /// instead of building the per-sweep permutation tables. Values
+    /// above 1.0 disable the reuse path; 0.0 forces it. The choice is a
+    /// pure function of the schedule length, so runs stay bitwise
+    /// deterministic; the two sweep forms differ only in Δφ̂/r summation
+    /// association (different block partitions) — which means the
+    /// default (0.9) shifts high-coverage trajectories vs the
+    /// rebuild-only path of earlier releases; set > 1.0 to keep the
+    /// per-sweep permutation on every iteration.
+    pub sched_reuse_coverage: f64,
 }
 
 impl Default for AbpConfig {
@@ -76,6 +110,8 @@ impl Default for AbpConfig {
             converge_rel: 0.01,
             seed: 42,
             threads: 0,
+            resync_every: 16,
+            sched_reuse_coverage: 0.9,
         }
     }
 }
@@ -98,6 +134,13 @@ pub fn fit_abp(corpus: &Csr, params: &LdaParams, cfg: &AbpConfig) -> TrainResult
     let mut prev_resid = f64::INFINITY;
     let mut first_resid = f64::INFINITY;
     let active_docs = ((cfg.lambda_d * docs as f64).ceil() as usize).clamp(1, docs.max(1));
+    // N = 1 "global" φ̂ is the shard's own gradient, frozen behind the
+    // incremental snapshot: each iteration publishes only the selected
+    // pairs' Δ instead of cloning + rebuilding the whole matrix
+    let mut snap = PhiSnapshot::new(&shard.dphi, k, cfg.resync_every);
+    // the PowerSet behind `selection` (None while the selection is
+    // full): the snapshot publish walks its explicit word list
+    let mut power: Option<PowerSet> = None;
 
     for t in 1..=cfg.max_iters {
         // doc schedule: top-λ_D docs by residual (all docs at t = 1)
@@ -107,15 +150,6 @@ pub fn fit_abp(corpus: &Csr, params: &LdaParams, cfg: &AbpConfig) -> TrainResult
             top_k_desc(&r_doc, active_docs)
         };
 
-        // N = 1 "global" φ̂ is the shard's own gradient
-        let phi = shard.dphi.clone();
-        let mut phi_tot = vec![0f32; k];
-        for row in phi.chunks_exact(k) {
-            for (tt, &v) in row.iter().enumerate() {
-                phi_tot[tt] += v;
-            }
-        }
-
         // same budget split as the POBP coordinator: N = 1, so the whole
         // pool goes to the single shard's doc blocks
         let budget = pool.doc_threads_per_worker();
@@ -123,25 +157,43 @@ pub fn fit_abp(corpus: &Csr, params: &LdaParams, cfg: &AbpConfig) -> TrainResult
             // whole-corpus sweep: doc-parallel over the fixed blocks; the
             // per-doc residuals come back from the same pass (residual
             // clearing is folded into the sweep's merge)
-            let (_, timing) =
-                shard.sweep_parallel(&pool, budget, &phi, &phi_tot, &selection, params, true);
+            let (_, timing) = shard.sweep_parallel(
+                &pool, budget, snap.phi(), snap.phi_tot(), &selection, params, true,
+            );
             for (rd, &v) in r_doc.iter_mut().zip(shard.doc_residuals()) {
                 *rd = v as f32;
             }
             ledger.record_compute(&[timing.critical_path_secs(budget)]);
         } else {
             // scheduled sweep: permute the residual-ordered doc list into
-            // NNZ-balanced blocks and fan them over the same pool; the
-            // per-doc residuals come back in schedule order
+            // blocks and fan them over the same pool; above the coverage
+            // threshold the permutation reuses the t = 1 fixed block
+            // tables (no per-sweep index build). The per-doc residuals
+            // come back in schedule order either way.
             shard.clear_selected_residuals(&selection);
             let ds = DocSchedule::build(&scheduled, |d| shard.data.row_range(d).len());
-            let (rds, timing) = shard.sweep_docs_parallel(
-                &pool, budget, &ds, &phi, &phi_tot, &selection, params, true,
-            );
+            let reuse_fixed = ds.coverage(docs) >= cfg.sched_reuse_coverage;
+            let (rds, timing) = if reuse_fixed {
+                shard.sweep_docs_parallel_fixed(
+                    &pool, budget, &ds, snap.phi(), snap.phi_tot(), &selection, params, true,
+                )
+            } else {
+                shard.sweep_docs_parallel(
+                    &pool, budget, &ds, snap.phi(), snap.phi_tot(), &selection, params, true,
+                )
+            };
             for (&d, &rd) in scheduled.iter().zip(&rds) {
                 r_doc[d as usize] = rd as f32;
             }
             ledger.record_compute(&[timing.critical_path_secs(budget)]);
+        }
+        // publish this sweep's Δ into the frozen snapshot — O(selected
+        // pairs) under power selection (the PowerSet's explicit word
+        // list, no W-wide bitmap scan), dense only when the selection is
+        // full (the sweep touched nothing outside `selection`)
+        match &power {
+            Some(ps) => snap.apply_power(&shard.dphi, ps),
+            None => snap.apply(&shard.dphi, &selection),
         }
 
         let resid_total: f64 = r_doc
@@ -174,6 +226,7 @@ pub fn fit_abp(corpus: &Csr, params: &LdaParams, cfg: &AbpConfig) -> TrainResult
         if cfg.power.lambda_w < 1.0 || cfg.power.lambda_k_times_k < k {
             let ps = select_power(&shard.r, w, k, &cfg.power);
             selection = Selection::from_power(&ps, w);
+            power = Some(ps);
         }
     }
 
@@ -312,6 +365,84 @@ mod tests {
             );
         }
         assert_eq!(a.model.phi_wk, b.model.phi_wk);
+    }
+
+    #[test]
+    fn abp_snapshot_path_bitwise_deterministic_under_power_selection() {
+        // the incremental-snapshot publish (sparse deltas + periodic
+        // resync) is a pure function of the sweep outputs: two identical
+        // runs on the power-subset path agree bitwise
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        let cfg = AbpConfig {
+            lambda_d: 0.4,
+            power: PowerParams { lambda_w: 0.3, lambda_k_times_k: 4 },
+            max_iters: 15,
+            converge_thresh: 0.0,
+            resync_every: 4,
+            ..Default::default()
+        };
+        let a = fit_abp(&c, &params, &cfg);
+        let b = fit_abp(&c, &params, &cfg);
+        assert_eq!(a.history.len(), b.history.len());
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(
+                x.residual_per_token.to_bits(),
+                y.residual_per_token.to_bits(),
+                "iter {} residual diverged",
+                x.iter
+            );
+        }
+        assert_eq!(a.model.phi_wk, b.model.phi_wk);
+    }
+
+    #[test]
+    fn block_reuse_path_matches_rebuild_path_at_t2() {
+        // With λ_D = 1.0 the t = 2 schedule covers every doc, so the
+        // coverage threshold routes it onto the fixed block tables.
+        // μ/θ̂/per-doc residuals are bitwise equal between the two sweep
+        // forms (both equal the serial sweep_docs oracle), so the t = 2
+        // residual agrees bitwise; Δφ̂/r differ only in block-merge
+        // association from t = 2 on.
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        let base = AbpConfig {
+            lambda_d: 1.0,
+            max_iters: 2,
+            converge_thresh: 0.0,
+            ..Default::default()
+        };
+        let reuse =
+            fit_abp(&c, &params, &AbpConfig { sched_reuse_coverage: 0.9, ..base.clone() });
+        let rebuild =
+            fit_abp(&c, &params, &AbpConfig { sched_reuse_coverage: 2.0, ..base });
+        assert_eq!(reuse.history.len(), rebuild.history.len());
+        for (x, y) in reuse.history.iter().zip(&rebuild.history) {
+            assert_eq!(
+                x.residual_per_token.to_bits(),
+                y.residual_per_token.to_bits(),
+                "iter {} residual diverged between reuse and rebuild",
+                x.iter
+            );
+        }
+    }
+
+    #[test]
+    fn block_reuse_path_converges_and_is_deterministic() {
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        let cfg = AbpConfig {
+            lambda_d: 0.95,
+            sched_reuse_coverage: 0.9, // every t >= 2 sweep reuses
+            max_iters: 40,
+            ..Default::default()
+        };
+        let a = fit_abp(&c, &params, &cfg);
+        let b = fit_abp(&c, &params, &cfg);
+        assert_eq!(a.model.phi_wk, b.model.phi_wk);
+        assert!((a.model.mass() - c.tokens()).abs() < c.tokens() * 1e-3);
+        let last = a.history.last().unwrap().residual_per_token;
+        assert!(last < 0.3, "reuse path did not converge: {last}");
     }
 
     #[test]

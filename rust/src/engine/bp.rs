@@ -245,6 +245,14 @@ struct SchedScratch {
     sr: Vec<f32>,
     /// per-doc residuals of the sweep, sorted-schedule order
     resid_sorted: Vec<f64>,
+    /// fixed-block reuse path ([`ShardBp::sweep_docs_parallel_fixed`]):
+    /// position cuts of the sorted schedule at the init-time block
+    /// boundaries (len = fixed blocks + 1)
+    fixed_cut: Vec<u32>,
+    /// per-sweep liveness of each *fixed* scratch row: rows of fixed
+    /// blocks with no scheduled docs stay dirty from earlier sweeps and
+    /// must not enter the merge
+    row_live: Vec<bool>,
 }
 
 /// Per-traversal lane scratch: score lanes plus the packed μ/θ̂ gathers
@@ -1480,6 +1488,349 @@ impl ShardBp {
                         if ctx.update_phi {
                             let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
                             for &srow in rows {
+                                let base = srow as usize * k;
+                                for &tt in ts {
+                                    drow[tt as usize] += sdphi[base + tt as usize];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        let merge_secs = t0.elapsed().as_secs_f64() + setup_secs;
+
+        // per-doc residuals back in the caller's schedule order
+        let mut out = vec![0f64; sched.len()];
+        for (i, &pos) in sched.sched_pos().iter().enumerate() {
+            out[pos as usize] = scr.resid_sorted[i];
+        }
+        self.sched = scr;
+        (out, SweepTiming { block_secs, merge_secs })
+    }
+
+    /// Fixed-block scheduled sweep — the high-coverage fast path of the
+    /// ABP t ≥ 2 iteration: sweep the documents of `sched` over the
+    /// **init-time** block tables of the t = 1 engine instead of
+    /// rebuilding the per-sweep permutation tables. The O(scheduled NNZ)
+    /// index build of [`ShardBp::sweep_docs_parallel`] disappears; the
+    /// trade is that the zero/merge phases walk every fixed scratch row
+    /// of the blocks that contain scheduled docs, which pays off exactly
+    /// when the schedule covers most of the shard — the caller gates on
+    /// [`DocSchedule::coverage`] against `AbpConfig::sched_reuse_coverage`.
+    ///
+    /// # Contract (mirrors [`ShardBp::sweep_docs_parallel`])
+    ///
+    /// * μ, θ̂ and the per-doc residuals (returned in the caller's
+    ///   schedule order) are **bitwise identical** to the serial
+    ///   [`ShardBp::sweep_docs`] over the same schedule.
+    /// * Δφ̂/r route through the fixed per-block scratch rows and merge
+    ///   per word in ascending fixed-block order — a different (coarser)
+    ///   partition than the per-sweep permutation blocks, so results
+    ///   equal the serial path (and the rebuild path) up to summation
+    ///   association, and are bitwise reproducible at any thread budget.
+    ///   Scratch rows whose block holds scheduled docs but whose word has
+    ///   no scheduled entry contribute exact `+0.0` lanes (zeroed in the
+    ///   zero phase, never written): `x + 0.0` is a bitwise identity for
+    ///   every reachable `x` — Δφ̂/r lanes are never `-0.0` (r
+    ///   accumulates absolute values from a `+0.0` clear; Δφ̂ descends
+    ///   from `+0.0`-seeded sums, and f32 addition yields `-0.0` only
+    ///   from two `-0.0` operands). Rows of fixed blocks with **no**
+    ///   scheduled docs stay dirty and are skipped via a per-sweep
+    ///   liveness table.
+    /// * Residual clearing is **not** folded in — callers
+    ///   [`ShardBp::clear_selected_residuals`] first, exactly as with
+    ///   the serial path (the merge *adds*).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep_docs_parallel_fixed(
+        &mut self,
+        pool: &Cluster,
+        budget: usize,
+        sched: &DocSchedule,
+        phi_wk: &[f32],
+        phi_tot: &[f32],
+        sel: &Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> (Vec<f64>, SweepTiming) {
+        let k = self.k;
+        let nblocks = self.block_doc_off.len().saturating_sub(1);
+        if nblocks == 0 || sched.is_empty() {
+            return (vec![0.0; sched.len()], SweepTiming::default());
+        }
+        let srows = *self.block_row_off.last().unwrap() as usize;
+        if self.scratch_dphi.len() != srows * k {
+            self.scratch_dphi = vec![0.0; srows * k];
+            self.scratch_r = vec![0.0; srows * k];
+        }
+        let ctx = SweepCtx::new(self.data.w, k, phi_wk, phi_tot, sel, p, update_phi);
+        let mut scr = std::mem::take(&mut self.sched);
+        let t_setup = Instant::now();
+
+        // cut the sorted schedule at the fixed block boundaries: block b
+        // owns sorted-schedule positions fixed_cut[b]..fixed_cut[b+1]
+        let docs_sorted = sched.docs_sorted();
+        scr.fixed_cut.clear();
+        scr.fixed_cut.push(0);
+        {
+            let mut pos = 0usize;
+            for b in 0..nblocks {
+                let d1 = self.block_doc_off[b + 1];
+                while pos < docs_sorted.len() && docs_sorted[pos] < d1 {
+                    pos += 1;
+                }
+                scr.fixed_cut.push(pos as u32);
+            }
+        }
+        // scratch-row liveness: only rows of blocks with scheduled docs
+        // are zeroed this sweep; the rest must not enter the merge
+        scr.row_live.clear();
+        scr.row_live.resize(srows, false);
+        for b in 0..nblocks {
+            if scr.fixed_cut[b + 1] > scr.fixed_cut[b] {
+                let lo = self.block_row_off[b] as usize;
+                let hi = self.block_row_off[b + 1] as usize;
+                for lv in &mut scr.row_live[lo..hi] {
+                    *lv = true;
+                }
+            }
+        }
+        scr.resid_sorted.clear();
+        scr.resid_sorted.resize(sched.len(), 0.0);
+        let setup_secs = t_setup.elapsed().as_secs_f64();
+
+        struct FixedBlockTask<'a> {
+            /// first doc of the fixed block (the μ/θ̂ span base)
+            d0: usize,
+            /// nnz base of the block's span
+            nnz0: usize,
+            /// scheduled docs inside the block, ascending
+            docs: &'a [u32],
+            mu: &'a mut [f32],
+            theta: &'a mut [f32],
+            theta_old: &'a mut [f32],
+            /// residual outputs, block-local sorted-schedule order
+            resid: &'a mut [f64],
+            sdphi: &'a mut [f32],
+            sr: &'a mut [f32],
+            /// words of this block's fixed scratch rows, local-row order
+            words: &'a [u32],
+            lanes: LaneBuf,
+        }
+
+        // disjoint &mut views per ACTIVE fixed block (blocks without
+        // scheduled docs are skipped; the cursors hop their spans)
+        let data = &self.data;
+        let nnz_row = &self.nnz_row;
+        let mut tasks: Vec<FixedBlockTask<'_>> = Vec::with_capacity(nblocks);
+        {
+            let mut mu_rest = &mut self.mu[..];
+            let mut th_rest = &mut self.theta[..];
+            let mut tho_rest = &mut self.theta_old[..];
+            let mut rd_rest = &mut scr.resid_sorted[..];
+            let mut sd_rest = &mut self.scratch_dphi[..];
+            let mut sr_rest = &mut self.scratch_r[..];
+            let mut words_rest = &self.row_word[..];
+            let mut doc_cut = 0usize;
+            let mut nnz_cut = 0usize;
+            let mut row_cut = 0usize;
+            for b in 0..nblocks {
+                let lo = scr.fixed_cut[b] as usize;
+                let hi = scr.fixed_cut[b + 1] as usize;
+                if lo == hi {
+                    continue; // no scheduled docs in this fixed block
+                }
+                let d0 = self.block_doc_off[b] as usize;
+                let d1 = self.block_doc_off[b + 1] as usize;
+                let nnz0 = data.row_ptr[d0] as usize;
+                let nnz1 = data.row_ptr[d1] as usize;
+                let row0 = self.block_row_off[b] as usize;
+                let rows = self.block_row_off[b + 1] as usize - row0;
+                let (_, rest) = mu_rest.split_at_mut((nnz0 - nnz_cut) * k);
+                let (mu_b, rest) = rest.split_at_mut((nnz1 - nnz0) * k);
+                mu_rest = rest;
+                let (_, rest) = th_rest.split_at_mut((d0 - doc_cut) * k);
+                let (th_b, rest) = rest.split_at_mut((d1 - d0) * k);
+                th_rest = rest;
+                let (_, rest) = tho_rest.split_at_mut((d0 - doc_cut) * k);
+                let (tho_b, rest) = rest.split_at_mut((d1 - d0) * k);
+                tho_rest = rest;
+                let (rd_b, rest) = rd_rest.split_at_mut(hi - lo);
+                rd_rest = rest;
+                let (_, rest) = sd_rest.split_at_mut((row0 - row_cut) * k);
+                let (sd_b, rest) = rest.split_at_mut(rows * k);
+                sd_rest = rest;
+                let (_, rest) = sr_rest.split_at_mut((row0 - row_cut) * k);
+                let (sr_b, rest) = rest.split_at_mut(rows * k);
+                sr_rest = rest;
+                let (_, rest) = words_rest.split_at(row0 - row_cut);
+                let (w_b, rest) = rest.split_at(rows);
+                words_rest = rest;
+                doc_cut = d1;
+                nnz_cut = nnz1;
+                row_cut = row0 + rows;
+                tasks.push(FixedBlockTask {
+                    d0,
+                    nnz0,
+                    docs: &docs_sorted[lo..hi],
+                    mu: mu_b,
+                    theta: th_b,
+                    theta_old: tho_b,
+                    resid: rd_b,
+                    sdphi: sd_b,
+                    sr: sr_b,
+                    words: w_b,
+                    lanes: LaneBuf::new(k),
+                });
+            }
+        }
+
+        let block_secs = pool.run_on_permuted_blocks(budget, &mut tasks, |_b, t| {
+            // zero the selected lanes of every fixed row of this block
+            // (rows without scheduled entries contribute exact +0.0)
+            for (lr, &wr) in t.words.iter().enumerate() {
+                let wi = wr as usize;
+                if !ctx.sel.word_sel[wi] {
+                    continue;
+                }
+                match ctx.sel.topics_of(wi) {
+                    None => {
+                        if ctx.update_phi {
+                            t.sdphi[lr * k..(lr + 1) * k].fill(0.0);
+                        }
+                        t.sr[lr * k..(lr + 1) * k].fill(0.0);
+                    }
+                    Some(ts) => {
+                        for &tt in ts {
+                            if ctx.update_phi {
+                                t.sdphi[lr * k + tt as usize] = 0.0;
+                            }
+                            t.sr[lr * k + tt as usize] = 0.0;
+                        }
+                    }
+                }
+            }
+            // sweep_docs' traversal over the block's scheduled docs, with
+            // block-local rows (μ/θ̂ offset by the span base, Δφ̂/r routed
+            // to the init-time scratch rows via the fixed nnz_row table)
+            for (i, &d) in t.docs.iter().enumerate() {
+                let d = d as usize;
+                let ld = d - t.d0;
+                t.theta_old[ld * k..(ld + 1) * k]
+                    .copy_from_slice(&t.theta[ld * k..(ld + 1) * k]);
+                let mut resid = 0f64;
+                for idx in data.row_range(d) {
+                    let wi = data.col[idx] as usize;
+                    if !ctx.sel.word_sel[wi] {
+                        continue;
+                    }
+                    let lr = nnz_row[idx] as usize;
+                    let li = idx - t.nnz0;
+                    let dphi_row = if ctx.update_phi {
+                        Some(&mut t.sdphi[lr * k..(lr + 1) * k])
+                    } else {
+                        None
+                    };
+                    resid += fused_update(
+                        &ctx,
+                        wi,
+                        data.val[idx],
+                        &mut t.mu[li * k..(li + 1) * k],
+                        &t.theta_old[ld * k..(ld + 1) * k],
+                        &mut t.theta[ld * k..(ld + 1) * k],
+                        dphi_row,
+                        &mut t.sr[lr * k..(lr + 1) * k],
+                        &mut t.lanes,
+                    );
+                }
+                t.resid[i] = resid;
+            }
+        });
+        drop(tasks);
+
+        // deterministic merge over the init-time plan: per selected word,
+        // ADD the live rows' sums in ascending fixed-block order onto the
+        // caller-cleared lanes (serial sweep_docs contract — no fill)
+        let t0 = Instant::now();
+        struct MergeTask<'a> {
+            w0: usize,
+            dphi: &'a mut [f32],
+            r: &'a mut [f32],
+        }
+        let mut mtasks: Vec<MergeTask<'_>> =
+            Vec::with_capacity(self.merge_bounds.len());
+        {
+            let mut dp_rest = &mut self.dphi[..];
+            let mut r_rest = &mut self.r[..];
+            let mut prev = 0usize;
+            for &b in &self.merge_bounds[1..] {
+                let b = b as usize;
+                let (dp_b, rest) = dp_rest.split_at_mut((b - prev) * k);
+                dp_rest = rest;
+                let (r_b, rest) = r_rest.split_at_mut((b - prev) * k);
+                r_rest = rest;
+                mtasks.push(MergeTask { w0: prev, dphi: dp_b, r: r_b });
+                prev = b;
+            }
+        }
+        let merge_ptr = &self.merge_ptr;
+        let merge_rows = &self.merge_rows;
+        let sdphi = &self.scratch_dphi;
+        let sr = &self.scratch_r;
+        let row_live = &scr.row_live;
+        pool.run_on_permuted_blocks(budget, &mut mtasks, |_i, mt| {
+            let nw = mt.r.len() / k;
+            for ww in 0..nw {
+                let wi = mt.w0 + ww;
+                if !ctx.sel.word_sel[wi] {
+                    continue;
+                }
+                let rows = &merge_rows
+                    [merge_ptr[wi] as usize..merge_ptr[wi + 1] as usize];
+                match ctx.sel.topics_of(wi) {
+                    None => {
+                        let rrow = &mut mt.r[ww * k..(ww + 1) * k];
+                        for &srow in rows {
+                            if !row_live[srow as usize] {
+                                continue;
+                            }
+                            let base = srow as usize * k;
+                            let src = &sr[base..base + k];
+                            for (o, &v) in rrow.iter_mut().zip(src) {
+                                *o += v;
+                            }
+                        }
+                        if ctx.update_phi {
+                            let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
+                            for &srow in rows {
+                                if !row_live[srow as usize] {
+                                    continue;
+                                }
+                                let base = srow as usize * k;
+                                let src = &sdphi[base..base + k];
+                                for (o, &v) in drow.iter_mut().zip(src) {
+                                    *o += v;
+                                }
+                            }
+                        }
+                    }
+                    Some(ts) => {
+                        let rrow = &mut mt.r[ww * k..(ww + 1) * k];
+                        for &srow in rows {
+                            if !row_live[srow as usize] {
+                                continue;
+                            }
+                            let base = srow as usize * k;
+                            for &tt in ts {
+                                rrow[tt as usize] += sr[base + tt as usize];
+                            }
+                        }
+                        if ctx.update_phi {
+                            let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
+                            for &srow in rows {
+                                if !row_live[srow as usize] {
+                                    continue;
+                                }
                                 let base = srow as usize * k;
                                 for &tt in ts {
                                     drow[tt as usize] += sdphi[base + tt as usize];

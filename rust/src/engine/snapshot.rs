@@ -1,0 +1,441 @@
+//! Incremental φ̂ snapshot engine — retires the last O(W·K)-per-iteration
+//! leader cost in ABP.
+//!
+//! The ABP loop needs a *frozen* global φ̂ (and its topic totals) for each
+//! sweep: the sweep mutates `ShardBp::dphi` in place, so it cannot read
+//! the matrix it is writing (Jacobi semantics). Before this engine the
+//! loop cloned the full `W × K` matrix and rebuilt the totals from
+//! scratch every iteration — O(W·K) leader work even when the power
+//! selection touched only a few percent of the pairs. The selection
+//! structure makes incremental maintenance exact (Zeng et al.,
+//! "Memory-Efficient Topic Modeling"): a sweep changes Δφ̂ *only on the
+//! selected (word, topic) pairs* (the freeze contract pinned by
+//! `engine::bp`'s tests), so publishing the sweep into the frozen view
+//! is O(selected pairs + W), not O(W·K) — the O(W) term is a flat scan
+//! of the selection's word bitmap, the same cost ABP's per-iteration
+//! selection build (`select_power` / `Selection::from_power`) already
+//! pays; it is the K-wide per-word work that is retired.
+//!
+//! # Invariants (the snapshot contract)
+//!
+//! * **Frozen view is exact**: after every [`PhiSnapshot::apply`], the
+//!   view is **bitwise equal** to the source matrix — the clone the old
+//!   loop made. Selected pairs are copied verbatim; un-selected pairs
+//!   were bitwise frozen by the sweep, so the stale copies are already
+//!   the right bits. `rust/tests/snapshot_equiv.rs` pins this against
+//!   the retained [`clone_rebuild`] oracle across full and power-subset
+//!   selections at thread budgets 1/2/8.
+//! * **Totals live in f64**: subset publishes move the topic totals by
+//!   *exact* deltas (`new as f64 − old as f64`; both promotions are
+//!   exact, so each step adds precisely the value change), the same
+//!   protocol that fixed the coordinator's drift
+//!   (`comm::allreduce::GlobalState`). The kernels read the f32 render
+//!   via [`PhiSnapshot::phi_tot`].
+//! * **Dense resync knob**: f64 accumulation still rounds, so repeated
+//!   subset deltas can drift from a from-scratch rebuild at the 1e-13
+//!   relative level. [`PhiSnapshot`] rebuilds the totals from scratch
+//!   (f64, word-ascending — the oracle's op order, so the result is
+//!   bitwise equal to the oracle's) every `resync_every` subset applies,
+//!   and on every dense (full-selection) apply. With `resync_every = 1`
+//!   the whole trajectory is bitwise identical to the clone-and-rebuild
+//!   oracle; larger cadences trade that for O(selected) publishes, with
+//!   the drift bounded by [`PhiSnapshot::totals_drift`] (pinned by the
+//!   drift test).
+
+use crate::engine::bp::Selection;
+use crate::sched::PowerSet;
+
+/// Persistent frozen φ̂ view + f64-backed topic totals (module doc).
+#[derive(Clone, Debug)]
+pub struct PhiSnapshot {
+    k: usize,
+    /// the frozen `W × K` view the sweeps read — bitwise equal to the
+    /// source matrix after every publish
+    phi: Vec<f32>,
+    /// f64 topic totals (exact deltas on subset publishes, from-scratch
+    /// rebuild on dense publishes/resyncs)
+    tot64: Vec<f64>,
+    /// f32 render of `tot64` — what the sweep kernels consume
+    tot32: Vec<f32>,
+    /// subset publishes since the last dense totals rebuild
+    since_resync: usize,
+    /// dense totals-resync cadence: rebuild from scratch every this many
+    /// subset publishes (0 = only on dense publishes; 1 = every publish,
+    /// i.e. bitwise the clone-and-rebuild oracle)
+    pub resync_every: usize,
+}
+
+impl PhiSnapshot {
+    /// Freeze `src` (full copy + from-scratch f64 totals).
+    pub fn new(src: &[f32], k: usize, resync_every: usize) -> PhiSnapshot {
+        let mut s = PhiSnapshot {
+            k,
+            phi: src.to_vec(),
+            tot64: vec![0.0; k],
+            tot32: vec![0.0; k],
+            since_resync: 0,
+            resync_every,
+        };
+        s.resync_totals();
+        s
+    }
+
+    /// The frozen φ̂ view (word-major `W × K`).
+    pub fn phi(&self) -> &[f32] {
+        &self.phi
+    }
+
+    /// Topic totals φ̂_Σ as the f32 render the sweep kernels read.
+    pub fn phi_tot(&self) -> &[f32] {
+        &self.tot32
+    }
+
+    /// Publish a sweep's changes from `src`: dense copy for full
+    /// selections, O(selected pairs + W) delta application otherwise
+    /// (module doc). `src` must differ from the last published state
+    /// only on `sel`'s pairs — exactly what the sweep freeze contract
+    /// guarantees.
+    pub fn apply(&mut self, src: &[f32], sel: &Selection) {
+        if sel.full {
+            self.apply_dense(src);
+        } else {
+            self.apply_selected(src, sel);
+        }
+    }
+
+    /// Dense publish: full copy + from-scratch f64 totals (the
+    /// unavoidable O(W·K) case — everything may have changed).
+    pub fn apply_dense(&mut self, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.phi.len());
+        self.phi.copy_from_slice(src);
+        self.resync_totals();
+    }
+
+    /// Subset publish: copy `src` at the selected pairs and move the f64
+    /// totals by the exact per-pair deltas. O(selected pairs + W) — the
+    /// word-bitmap scan; no K-wide work on un-selected words.
+    pub fn apply_selected(&mut self, src: &[f32], sel: &Selection) {
+        debug_assert_eq!(src.len(), self.phi.len());
+        let k = self.k;
+        for (wi, &is_sel) in sel.word_sel.iter().enumerate() {
+            if !is_sel {
+                continue;
+            }
+            // a full per-word topic list (K distinct ids in [0, K)) is
+            // the whole row: take the zipped lane path — bounds-check
+            // free and vectorizable, the same per-pair f64 op order as
+            // the indexed path (t ascending). The paper-default
+            // λ_K·K = K selection hits this on every selected word.
+            let full_row = match sel.topics_of(wi) {
+                None => true,
+                Some(ts) => ts.len() == k,
+            };
+            if full_row {
+                let row_src = &src[wi * k..(wi + 1) * k];
+                let row = &mut self.phi[wi * k..(wi + 1) * k];
+                for ((slot, d), &s) in
+                    self.tot64.iter_mut().zip(row.iter_mut()).zip(row_src)
+                {
+                    *slot += s as f64 - *d as f64;
+                    *d = s;
+                }
+            } else if let Some(ts) = sel.topics_of(wi) {
+                for &t in ts {
+                    let t = t as usize;
+                    let i = wi * k + t;
+                    let new = src[i];
+                    let old = self.phi[i];
+                    self.tot64[t] += new as f64 - old as f64;
+                    self.phi[i] = new;
+                }
+            }
+        }
+        self.finish_subset_publish();
+    }
+
+    /// Subset publish straight off a [`PowerSet`] — ABP's hot path. The
+    /// explicit selected-word list makes this truly **O(selected
+    /// pairs)**: no scan of the W-wide word bitmap at all. Copies the
+    /// same pairs as [`PhiSnapshot::apply_selected`] on the
+    /// corresponding `Selection` (the view bits are identical — copies
+    /// are order-independent); the f64 totals deltas accumulate in
+    /// selection order instead of word-ascending order, which is a pure
+    /// function of the `PowerSet` (deterministic) and bounded by the
+    /// same drift/resync contract.
+    pub fn apply_power(&mut self, src: &[f32], ps: &PowerSet) {
+        debug_assert_eq!(src.len(), self.phi.len());
+        let k = self.k;
+        for (ts, &wi) in ps.topics.iter().zip(&ps.words) {
+            let wi = wi as usize;
+            if ts.len() == k {
+                let row_src = &src[wi * k..(wi + 1) * k];
+                let row = &mut self.phi[wi * k..(wi + 1) * k];
+                for ((slot, d), &s) in
+                    self.tot64.iter_mut().zip(row.iter_mut()).zip(row_src)
+                {
+                    *slot += s as f64 - *d as f64;
+                    *d = s;
+                }
+            } else {
+                for &t in ts {
+                    let t = t as usize;
+                    let i = wi * k + t;
+                    let new = src[i];
+                    let old = self.phi[i];
+                    self.tot64[t] += new as f64 - old as f64;
+                    self.phi[i] = new;
+                }
+            }
+        }
+        self.finish_subset_publish();
+    }
+
+    /// Shared tail of the subset publishes: advance the resync counter
+    /// and either rebuild the totals from scratch (cadence reached) or
+    /// re-render the f32 view.
+    fn finish_subset_publish(&mut self) {
+        self.since_resync += 1;
+        if self.resync_every > 0 && self.since_resync >= self.resync_every {
+            self.resync_totals();
+        } else {
+            self.render_tot32();
+        }
+    }
+
+    /// Rebuild the f64 totals from the frozen view (word-ascending — the
+    /// same op order as [`clone_rebuild`], so the result is bitwise equal
+    /// to the oracle's) and reset the resync counter.
+    ///
+    /// NOTE: this is deliberately the same accumulation protocol as
+    /// `comm::allreduce::GlobalState::recompute_totals` (φ̂ half) — the
+    /// two live in different layers (worker-local engine vs coordinator
+    /// replica, with different state shapes), so the protocol is
+    /// duplicated rather than shared; a change to the op order or the
+    /// f32 render rule must land in both, and the drift/equivalence
+    /// tests on each side pin it.
+    pub fn resync_totals(&mut self) {
+        self.tot64.fill(0.0);
+        for row in self.phi.chunks_exact(self.k) {
+            for (t, &v) in row.iter().enumerate() {
+                self.tot64[t] += v as f64;
+            }
+        }
+        self.since_resync = 0;
+        self.render_tot32();
+    }
+
+    fn render_tot32(&mut self) {
+        for (o, &v) in self.tot32.iter_mut().zip(&self.tot64) {
+            *o = v as f32;
+        }
+    }
+
+    /// Drift diagnostics: max |running − recomputed| over the f64 topic
+    /// totals. Bounded by f64 rounding between resyncs; exactly zero
+    /// right after one.
+    pub fn totals_drift(&self) -> f64 {
+        let mut fresh = vec![0f64; self.k];
+        for row in self.phi.chunks_exact(self.k) {
+            for (t, &v) in row.iter().enumerate() {
+                fresh[t] += v as f64;
+            }
+        }
+        fresh
+            .iter()
+            .zip(&self.tot64)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// The retained clone-and-rebuild oracle — the per-iteration publish
+/// shape the snapshot engine replaces: clone the full matrix, rebuild
+/// the topic totals from scratch in f64 (word-ascending), render to
+/// f32. Kept as the equivalence-test oracle
+/// (`rust/tests/snapshot_equiv.rs`) and the microbench baseline, the
+/// same pattern as `serial_reference_step` / `ShardBp::sweep_reference`.
+///
+/// Note: this is *not* bit-for-bit the pre-snapshot ABP loop — that
+/// code accumulated the totals in **f32**. The totals here are
+/// deliberately upgraded to the f64 protocol the coordinator's
+/// `GlobalState` adopted in PR 1 (the f32 render usually agrees, but
+/// ABP trajectories shift at the f32-rounding level across the
+/// upgrade; recorded in CHANGES.md). What the oracle pins is the
+/// clone-and-rebuild *publish semantics* the incremental engine must
+/// reproduce exactly.
+pub fn clone_rebuild(src: &[f32], k: usize) -> (Vec<f32>, Vec<f32>) {
+    let phi = src.to_vec();
+    let mut tot64 = vec![0f64; k];
+    for row in phi.chunks_exact(k) {
+        for (t, &v) in row.iter().enumerate() {
+            tot64[t] += v as f64;
+        }
+    }
+    let tot32: Vec<f32> = tot64.iter().map(|&v| v as f32).collect();
+    (phi, tot32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn selection_every_third(w: usize, k: usize) -> Selection {
+        // sparse selection: every 3rd word, topics {0, 2, 4, ...}
+        let mut word_sel = vec![false; w];
+        let mut topic_off = Vec::with_capacity(w + 1);
+        let mut topic_ids = Vec::new();
+        topic_off.push(0u32);
+        for wi in 0..w {
+            if wi % 3 == 0 {
+                word_sel[wi] = true;
+                for t in (0..k as u32).step_by(2) {
+                    topic_ids.push(t);
+                }
+            }
+            topic_off.push(topic_ids.len() as u32);
+        }
+        Selection { full: false, word_sel, topic_off, topic_ids }
+    }
+
+    #[test]
+    fn fresh_snapshot_matches_oracle_bitwise() {
+        let (w, k) = (40, 8);
+        let mut rng = Rng::new(3);
+        let src: Vec<f32> = (0..w * k).map(|_| rng.f32() * 5.0).collect();
+        let snap = PhiSnapshot::new(&src, k, 0);
+        let (phi_o, tot_o) = clone_rebuild(&src, k);
+        assert_eq!(snap.phi(), &phi_o[..]);
+        assert_eq!(snap.phi_tot(), &tot_o[..]);
+    }
+
+    #[test]
+    fn selected_apply_tracks_source_exactly() {
+        let (w, k) = (30, 8);
+        let mut rng = Rng::new(5);
+        let mut src: Vec<f32> = (0..w * k).map(|_| rng.f32() * 2.0).collect();
+        let sel = selection_every_third(w, k);
+        let mut snap = PhiSnapshot::new(&src, k, 0);
+        for _ in 0..50 {
+            // mutate only the selected pairs (the sweep freeze contract)
+            for (wi, &is_sel) in sel.word_sel.iter().enumerate() {
+                if !is_sel {
+                    continue;
+                }
+                for &t in sel.topics_of(wi).unwrap() {
+                    src[wi * k + t as usize] += rng.f32() - 0.5;
+                }
+            }
+            snap.apply_selected(&src, &sel);
+            // the frozen view is the clone the old loop made, bit for bit
+            assert_eq!(snap.phi(), &src[..]);
+            // f64 deltas keep the totals within f64-rounding distance of
+            // a from-scratch rebuild (no resync configured here)
+            assert!(snap.totals_drift() < 1e-8, "drift {}", snap.totals_drift());
+        }
+    }
+
+    #[test]
+    fn resync_every_one_is_bitwise_the_oracle() {
+        let (w, k) = (25, 6);
+        let mut rng = Rng::new(7);
+        let mut src: Vec<f32> = (0..w * k).map(|_| rng.f32()).collect();
+        let sel = selection_every_third(w, k);
+        let mut snap = PhiSnapshot::new(&src, k, 1);
+        for _ in 0..20 {
+            for (wi, &is_sel) in sel.word_sel.iter().enumerate() {
+                if !is_sel {
+                    continue;
+                }
+                for &t in sel.topics_of(wi).unwrap() {
+                    src[wi * k + t as usize] += rng.f32() - 0.4;
+                }
+            }
+            snap.apply_selected(&src, &sel);
+            let (phi_o, tot_o) = clone_rebuild(&src, k);
+            assert_eq!(snap.phi(), &phi_o[..]);
+            assert_eq!(snap.phi_tot(), &tot_o[..]);
+        }
+    }
+
+    #[test]
+    fn dense_apply_resets_to_oracle() {
+        let (w, k) = (20, 4);
+        let mut rng = Rng::new(9);
+        let src: Vec<f32> = (0..w * k).map(|_| rng.f32()).collect();
+        let mut snap = PhiSnapshot::new(&src, k, 0);
+        let src2: Vec<f32> = (0..w * k).map(|_| rng.f32() * 3.0).collect();
+        let sel = Selection::full(w);
+        snap.apply(&src2, &sel);
+        let (phi_o, tot_o) = clone_rebuild(&src2, k);
+        assert_eq!(snap.phi(), &phi_o[..]);
+        assert_eq!(snap.phi_tot(), &tot_o[..]);
+        assert_eq!(snap.totals_drift(), 0.0);
+    }
+
+    #[test]
+    fn apply_power_matches_apply_selected() {
+        let (w, k) = (30, 8);
+        let mut rng = Rng::new(13);
+        let mut src: Vec<f32> = (0..w * k).map(|_| rng.f32()).collect();
+        // a power set with mixed full and partial topic lists (words in
+        // selection — residual-descending-like — order, not ascending)
+        let ps = PowerSet {
+            words: vec![7, 2, 19, 11],
+            topics: vec![
+                (0..k as u32).collect(),
+                vec![1, 3, 5],
+                (0..k as u32).collect(),
+                vec![0, 6],
+            ],
+        };
+        let sel = Selection::from_power(&ps, w);
+        let mut a = PhiSnapshot::new(&src, k, 0);
+        let mut b = a.clone();
+        for _ in 0..10 {
+            for (ts, &wi) in ps.topics.iter().zip(&ps.words) {
+                for &t in ts {
+                    src[wi as usize * k + t as usize] += rng.f32() - 0.5;
+                }
+            }
+            a.apply_selected(&src, &sel);
+            b.apply_power(&src, &ps);
+            // identical view bits (copies are order-independent); totals
+            // differ only in f64 add order — drift-bounded
+            assert_eq!(a.phi(), b.phi());
+            assert_eq!(a.phi(), &src[..]);
+            assert!(b.totals_drift() < 1e-8, "drift {}", b.totals_drift());
+        }
+        // after a resync both are bitwise the from-scratch totals
+        a.resync_totals();
+        b.resync_totals();
+        assert_eq!(a.phi_tot(), b.phi_tot());
+    }
+
+    #[test]
+    fn resync_cadence_restores_exactness() {
+        let (w, k) = (30, 8);
+        let mut rng = Rng::new(11);
+        let mut src: Vec<f32> = (0..w * k).map(|_| rng.f32() * 4.0).collect();
+        let sel = selection_every_third(w, k);
+        let cadence = 4;
+        let mut snap = PhiSnapshot::new(&src, k, cadence);
+        for i in 0..32 {
+            for (wi, &is_sel) in sel.word_sel.iter().enumerate() {
+                if !is_sel {
+                    continue;
+                }
+                for &t in sel.topics_of(wi).unwrap() {
+                    src[wi * k + t as usize] += rng.f32() - 0.5;
+                }
+            }
+            snap.apply_selected(&src, &sel);
+            if (i + 1) % cadence == 0 {
+                // the resync just fired: totals from scratch, zero drift
+                assert_eq!(snap.totals_drift(), 0.0, "apply {i}");
+                let (_, tot_o) = clone_rebuild(&src, k);
+                assert_eq!(snap.phi_tot(), &tot_o[..], "apply {i}");
+            }
+        }
+    }
+}

@@ -134,6 +134,19 @@ impl DocSchedule {
         self.nnz
     }
 
+    /// Fraction of a `total_docs`-document shard this schedule covers —
+    /// the quantity the fixed-block reuse threshold compares against
+    /// (`AbpConfig::sched_reuse_coverage`): above the threshold the
+    /// consumer sweeps over the t = 1 fixed block tables instead of
+    /// building the per-sweep permutation tables.
+    pub fn coverage(&self, total_docs: usize) -> f64 {
+        if total_docs == 0 {
+            0.0
+        } else {
+            self.docs_sorted.len() as f64 / total_docs as f64
+        }
+    }
+
     /// Number of blocks (0 for an empty schedule).
     pub fn blocks(&self) -> usize {
         self.block_off.len().saturating_sub(1)
@@ -234,6 +247,14 @@ mod tests {
             assert!(bn >= target, "block {b} under target: {bn} < {target}");
             assert!(bn < target + nnz_per, "block {b} overshot: {bn}");
         }
+    }
+
+    #[test]
+    fn coverage_is_schedule_fraction() {
+        let ds = DocSchedule::build(&[0, 2, 4, 6], |_| 3);
+        assert!((ds.coverage(8) - 0.5).abs() < 1e-12);
+        assert_eq!(ds.coverage(0), 0.0);
+        assert_eq!(DocSchedule::build(&[], |_| 1).coverage(10), 0.0);
     }
 
     #[test]

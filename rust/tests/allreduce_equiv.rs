@@ -1,24 +1,27 @@
 //! Equivalence and drift tests for the owner-sliced reduce-scatter
 //! (comm::allreduce) and the coordinator's overlap pipeline:
 //!
-//! * a seeded multi-iteration run through the owner-sliced step, the
-//!   double-buffered pipelined step and the retired leader-pool step
-//!   must all match the pre-refactor serial leader loop bitwise on
-//!   `phi_eff`/`r_global`, for full and power schedules, for
+//! * a seeded multi-iteration run through the owner-sliced fused step,
+//!   the **slice-granular** pipelined step, the retained per-worker
+//!   rounds pipeline and the retired leader-pool step — the 5-way
+//!   equivalence — must all match the pre-refactor serial leader loop
+//!   bitwise on `phi_eff`/`r_global`, for full and power schedules, for
 //!   N ∈ {1, 2, 4}, at OS-thread budgets {1, 2, 8};
-//! * the fused and pipelined paths must agree on the f64-backed totals
-//!   bitwise (the coordinator's overlap mode depends on it);
+//! * the fused and both pipelined paths must agree on the f64-backed
+//!   totals bitwise (the coordinator's overlap mode depends on it);
 //! * an overlapped coordinator run must be bitwise identical to the
 //!   serialized run — model, per-iteration residuals — at every thread
-//!   budget, while its ledger hides `Σ min(compute, comm)`;
+//!   budget, while its ledger hides `Σ min(compute, comm)` plus the
+//!   deferred end-of-batch fold comm;
 //! * the f64-backed totals must not drift from a from-scratch recompute
 //!   over hundreds of sparse scatters.
 
 use std::sync::Mutex;
 
 use pobp::comm::allreduce::{
-    allreduce_step, allreduce_step_overlap, allreduce_step_pool, serial_reference_step,
-    GlobalState, ReducePlan, ReduceSource, SerialState, SyncScratch,
+    allreduce_step, allreduce_step_overlap, allreduce_step_overlap_rounds,
+    allreduce_step_pool, serial_reference_step, GlobalState, ReducePlan, ReduceSource,
+    SerialState, SyncScratch,
 };
 use pobp::comm::Cluster;
 use pobp::coordinator::{fit, PobpConfig};
@@ -56,10 +59,12 @@ fn equiv_case(n: usize, threads: usize, power: Option<PowerParams>, seed: u64) {
     let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32() * 0.1).collect();
     let mut own = GlobalState::new(&phi_acc, k);
     let mut pipe = GlobalState::new(&phi_acc, k);
+    let mut rounds = GlobalState::new(&phi_acc, k);
     let mut pool = GlobalState::new(&phi_acc, k);
     let mut ser = SerialState::new(&phi_acc, k);
     let mut scr_own = SyncScratch::default();
     let mut scr_pipe = SyncScratch::default();
+    let mut scr_rounds = SyncScratch::default();
     let mut selection = Selection::full(w);
     let mut flat: Option<Vec<u32>> = None;
 
@@ -79,20 +84,27 @@ fn equiv_case(n: usize, threads: usize, power: Option<PowerParams>, seed: u64) {
         };
         let pairs = allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut own, &mut scr_own);
         allreduce_step_overlap(&cluster, &plan, &phi_acc, &shards, &mut pipe, &mut scr_pipe);
+        allreduce_step_overlap_rounds(
+            &cluster, &plan, &phi_acc, &shards, &mut rounds, &mut scr_rounds,
+        );
         allreduce_step_pool(&cluster, &plan, &phi_acc, &shards, &mut pool);
         serial_reference_step(&plan, k, &phi_acc, &shards, &mut ser);
         assert!(pairs > 0);
         let ctx = format!("t={t}, n={n}, threads={threads}");
         assert_eq!(own.phi_eff, ser.phi_eff, "owner-sliced phi_eff diverged at {ctx}");
         assert_eq!(own.r_global, ser.r_global, "owner-sliced r diverged at {ctx}");
-        assert_eq!(pipe.phi_eff, ser.phi_eff, "pipelined phi_eff diverged at {ctx}");
-        assert_eq!(pipe.r_global, ser.r_global, "pipelined r diverged at {ctx}");
+        assert_eq!(pipe.phi_eff, ser.phi_eff, "slice-granular phi_eff diverged at {ctx}");
+        assert_eq!(pipe.r_global, ser.r_global, "slice-granular r diverged at {ctx}");
+        assert_eq!(rounds.phi_eff, ser.phi_eff, "rounds phi_eff diverged at {ctx}");
+        assert_eq!(rounds.r_global, ser.r_global, "rounds r diverged at {ctx}");
         assert_eq!(pool.phi_eff, ser.phi_eff, "leader-pool phi_eff diverged at {ctx}");
         assert_eq!(pool.r_global, ser.r_global, "leader-pool r diverged at {ctx}");
-        // fused vs pipelined: identical f64 totals sequence — the
+        // fused vs both pipelines: identical f64 totals sequence — the
         // overlap-mode bitwise-equivalence contract
         assert_eq!(own.phi_tot(), pipe.phi_tot(), "{ctx}");
         assert_eq!(own.r_total().to_bits(), pipe.r_total().to_bits(), "{ctx}");
+        assert_eq!(own.phi_tot(), rounds.phi_tot(), "{ctx}");
+        assert_eq!(own.r_total().to_bits(), rounds.r_total().to_bits(), "{ctx}");
 
         if let Some(pp) = &power {
             let ps = select_power(&own.r_global, w, k, pp);
@@ -241,12 +253,22 @@ fn subset_totals_do_not_drift_over_long_runs() {
             indices.push(rng.below(w * k) as u32);
         }
         let plan = ReducePlan::Subset { indices: &indices };
-        // alternate fused and pipelined steps: both must keep the same
-        // running totals
-        if round % 2 == 0 {
-            allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut st, &mut scratch);
-        } else {
-            allreduce_step_overlap(&cluster, &plan, &phi_acc, &workers, &mut st, &mut scratch);
+        // rotate through the fused, slice-granular and rounds steps: all
+        // three must keep the same running totals
+        match round % 3 {
+            0 => {
+                allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut st, &mut scratch);
+            }
+            1 => {
+                allreduce_step_overlap(
+                    &cluster, &plan, &phi_acc, &workers, &mut st, &mut scratch,
+                );
+            }
+            _ => {
+                allreduce_step_overlap_rounds(
+                    &cluster, &plan, &phi_acc, &workers, &mut st, &mut scratch,
+                );
+            }
         }
 
         let (phi_drift, r_drift) = st.totals_drift();

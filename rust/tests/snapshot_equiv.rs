@@ -1,0 +1,173 @@
+//! Equivalence and drift tests for the incremental φ̂ snapshot engine
+//! (`engine::snapshot`) against the retained clone-and-rebuild oracle:
+//!
+//! * driving two identical shards through the same sweep sequence — one
+//!   reading the [`PhiSnapshot`] (resync every publish), one reading a
+//!   fresh [`clone_rebuild`] each iteration — must produce **bitwise
+//!   identical** state (μ, θ̂, Δφ̂, r, residuals) across full and
+//!   power-subset selections at thread budgets 1/2/8;
+//! * the frozen view must equal the source matrix bitwise after every
+//!   publish, resync or not — the clone the old ABP loop made;
+//! * sparse f64 totals deltas must stay within f64-rounding distance of
+//!   a from-scratch rebuild, and a dense resync must restore bitwise
+//!   equality with the oracle's totals (drift test alternating sparse
+//!   updates with periodic resyncs);
+//! * a whole ABP run on the snapshot path (power selection + doc
+//!   scheduling + block-table reuse) is bitwise deterministic.
+
+use pobp::comm::Cluster;
+use pobp::engine::abp::{fit_abp, AbpConfig};
+use pobp::engine::bp::{Selection, ShardBp};
+use pobp::engine::snapshot::{clone_rebuild, PhiSnapshot};
+use pobp::engine::traits::LdaParams;
+use pobp::sched::{select_power, PowerParams};
+use pobp::synth::{generate, SynthSpec};
+use pobp::util::rng::Rng;
+
+fn twin_shards(seed: u64, k: usize) -> (ShardBp, ShardBp, LdaParams) {
+    let corpus = generate(&SynthSpec::tiny(seed)).corpus;
+    let params = LdaParams::paper(k);
+    let mut rng_a = Rng::new(seed);
+    let mut rng_b = Rng::new(seed);
+    let a = ShardBp::init(corpus.clone(), k, &mut rng_a);
+    let b = ShardBp::init(corpus, k, &mut rng_b);
+    (a, b, params)
+}
+
+/// Drive the snapshot path and the clone-and-rebuild oracle path through
+/// the same sweep sequence and assert bitwise equality every iteration.
+fn snapshot_vs_oracle_case(threads: usize, power: Option<PowerParams>, seed: u64) {
+    let k = 8;
+    let (mut sa, mut sb, params) = twin_shards(seed, k);
+    let w = sa.data.w;
+    let pool = Cluster::new(1, 0);
+    // resync_every = 1: the snapshot's totals are rebuilt from scratch on
+    // every publish — the whole trajectory is bitwise the oracle's
+    let mut snap = PhiSnapshot::new(&sa.dphi, k, 1);
+    let mut selection = Selection::full(w);
+
+    for t in 0..8 {
+        // the oracle: what the old ABP loop did every iteration
+        let (phi_o, tot_o) = clone_rebuild(&sb.dphi, k);
+        let ctx = format!("t={t}, threads={threads}");
+        assert_eq!(snap.phi(), &phi_o[..], "frozen view diverged at {ctx}");
+        assert_eq!(snap.phi_tot(), &tot_o[..], "totals diverged at {ctx}");
+
+        let (ra, _) = sa.sweep_parallel(
+            &pool, threads, snap.phi(), snap.phi_tot(), &selection, &params, true,
+        );
+        let (rb, _) =
+            sb.sweep_parallel(&pool, threads, &phi_o, &tot_o, &selection, &params, true);
+        assert_eq!(ra.to_bits(), rb.to_bits(), "residual diverged at {ctx}");
+        assert_eq!(sa.mu, sb.mu, "mu diverged at {ctx}");
+        assert_eq!(sa.theta, sb.theta, "theta diverged at {ctx}");
+        assert_eq!(sa.dphi, sb.dphi, "dphi diverged at {ctx}");
+        assert_eq!(sa.r, sb.r, "r diverged at {ctx}");
+
+        // publish the sweep into the snapshot — O(selected pairs + W)
+        snap.apply(&sa.dphi, &selection);
+
+        if let Some(pp) = &power {
+            let ps = select_power(&sa.r, w, k, pp);
+            selection = Selection::from_power(&ps, w);
+        }
+    }
+}
+
+#[test]
+fn snapshot_matches_oracle_full_selection_budgets_1_2_8() {
+    for &threads in &[1usize, 2, 8] {
+        snapshot_vs_oracle_case(threads, None, 41);
+    }
+}
+
+#[test]
+fn snapshot_matches_oracle_power_selection_budgets_1_2_8() {
+    for &threads in &[1usize, 2, 8] {
+        snapshot_vs_oracle_case(
+            threads,
+            Some(PowerParams { lambda_w: 0.25, lambda_k_times_k: 4 }),
+            43,
+        );
+    }
+}
+
+/// Sparse-delta drift: without any resync the frozen view still equals
+/// the source bitwise, and the f64 totals stay within rounding distance
+/// of a from-scratch rebuild; with a cadence, every resync restores
+/// bitwise equality with the oracle's totals.
+#[test]
+fn sparse_deltas_drift_bounded_and_resyncs_exact() {
+    let k = 8;
+    let (mut shard, _, params) = twin_shards(47, k);
+    let w = shard.data.w;
+    let pool = Cluster::new(1, 0);
+    let pp = PowerParams { lambda_w: 0.2, lambda_k_times_k: 3 };
+
+    // warm up with one full sweep so residuals are non-trivial
+    let mut never = PhiSnapshot::new(&shard.dphi, k, 0);
+    let full = Selection::full(w);
+    shard.sweep_parallel(&pool, 0, never.phi(), never.phi_tot(), &full, &params, true);
+    never.apply_dense(&shard.dphi);
+
+    let cadence = 3;
+    let mut cadenced = never.clone();
+    cadenced.resync_every = cadence;
+
+    let mut selection = {
+        let ps = select_power(&shard.r, w, k, &pp);
+        Selection::from_power(&ps, w)
+    };
+    for i in 0..24 {
+        shard.clear_selected_residuals(&selection);
+        shard.sweep_selected(never.phi(), never.phi_tot(), &selection, &params, true);
+        never.apply_selected(&shard.dphi, &selection);
+        cadenced.apply_selected(&shard.dphi, &selection);
+
+        // the frozen view is exact on both, resync or not
+        assert_eq!(never.phi(), &shard.dphi[..], "view diverged at {i}");
+        assert_eq!(cadenced.phi(), &shard.dphi[..], "cadenced view diverged at {i}");
+        // sparse-delta totals: f64-rounding-level drift only
+        assert!(never.totals_drift() < 1e-8, "drift {} at {i}", never.totals_drift());
+        if (i + 1) % cadence == 0 {
+            // the resync just fired: totals from scratch — bitwise the
+            // oracle's, zero drift
+            assert_eq!(cadenced.totals_drift(), 0.0, "resync missed at {i}");
+            let (_, tot_o) = clone_rebuild(&shard.dphi, k);
+            assert_eq!(cadenced.phi_tot(), &tot_o[..], "resync totals at {i}");
+        }
+
+        let ps = select_power(&shard.r, w, k, &pp);
+        selection = Selection::from_power(&ps, w);
+    }
+}
+
+/// Whole-run determinism pin on the new path: ABP with power selection,
+/// doc scheduling, sparse snapshot publishes with periodic resyncs, and
+/// the fixed-block reuse path all active — two runs agree bitwise on the
+/// history and the model.
+#[test]
+fn abp_whole_run_bitwise_deterministic_on_snapshot_path() {
+    let corpus = generate(&SynthSpec::tiny(53)).corpus;
+    let params = LdaParams::paper(8);
+    let cfg = AbpConfig {
+        lambda_d: 0.95, // above the default coverage threshold: reuse path
+        power: PowerParams { lambda_w: 0.3, lambda_k_times_k: 4 },
+        max_iters: 14,
+        converge_thresh: 0.0,
+        resync_every: 4,
+        ..Default::default()
+    };
+    let a = fit_abp(&corpus, &params, &cfg);
+    let b = fit_abp(&corpus, &params, &cfg);
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(
+            x.residual_per_token.to_bits(),
+            y.residual_per_token.to_bits(),
+            "iter {} residual diverged",
+            x.iter
+        );
+    }
+    assert_eq!(a.model.phi_wk, b.model.phi_wk);
+}

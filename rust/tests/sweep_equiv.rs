@@ -581,6 +581,123 @@ fn scheduled_parallel_update_phi_false_freezes_gradient() {
     assert_bitwise(&s.dphi, &dphi_before, "dphi");
 }
 
+/// Fixed-block reuse path (the high-coverage ABP fast path): the sweep
+/// over the init-time block tables vs the serial `sweep_docs` oracle at
+/// budgets {1, 2, 8} — μ/θ̂ and the per-doc residuals (schedule order)
+/// bitwise, Δφ̂/r association-bounded — for full and power selections,
+/// plus bitwise reproducibility across budgets and the unscheduled-doc
+/// freeze.
+#[test]
+fn fixed_block_reuse_matches_serial_sweep_docs() {
+    let p = LdaParams::paper(K);
+    for &budget in &[1usize, 2, 8] {
+        for &full_sel in &[true, false] {
+            let pool = Cluster::new(1, 0);
+            // high coverage — the regime the reuse path is gated to
+            let (mut ser, sched) = warmed_with_schedule(89, 0.9);
+            let sel = if full_sel {
+                Selection::full(ser.data.w)
+            } else {
+                let ps = select_power(
+                    &ser.r,
+                    ser.data.w,
+                    K,
+                    &PowerParams { lambda_w: 0.2, lambda_k_times_k: 3 },
+                );
+                Selection::from_power(&ps, ser.data.w)
+            };
+            let mut par = fresh_shard(89);
+            resync(&mut par, &ser);
+            let (phi, tot) = phi_of(&ser);
+
+            ser.clear_selected_residuals(&sel);
+            let ser_resid = ser.sweep_docs(&sched, &phi, &tot, &sel, &p, true);
+
+            par.clear_selected_residuals(&sel);
+            let ds = DocSchedule::build(&sched, |d| par.data.row_range(d).len());
+            let (par_resid, timing) = par.sweep_docs_parallel_fixed(
+                &pool, budget, &ds, &phi, &tot, &sel, &p, true,
+            );
+
+            assert_bitwise(&ser.mu, &par.mu, "mu");
+            assert_bitwise(&ser.theta, &par.theta, "theta");
+            assert_eq!(ser_resid.len(), par_resid.len());
+            for (i, (x, y)) in ser_resid.iter().zip(&par_resid).enumerate() {
+                assert!(
+                    x == y,
+                    "budget {budget} full={full_sel} doc {}: residual {x} vs {y}",
+                    sched[i]
+                );
+            }
+            assert_close(&ser.dphi, &par.dphi, 2e-4, "dphi");
+            assert_close(&ser.r, &par.r, 2e-4, "r");
+            let (ms, mp) = (mass(&ser.dphi), mass(&par.dphi));
+            assert!(
+                (ms - mp).abs() <= 1e-5 * ms.abs().max(1.0),
+                "dphi mass {ms} vs {mp}"
+            );
+            assert!(!timing.block_secs.is_empty());
+        }
+    }
+}
+
+/// The fixed-block reuse path is bitwise reproducible across thread
+/// budgets (the fixed partition and the liveness-filtered merge order
+/// are pure functions of the schedule and the data), and leaves
+/// unscheduled documents bitwise frozen even at partial coverage.
+#[test]
+fn fixed_block_reuse_deterministic_and_freezes_unscheduled() {
+    let p = LdaParams::paper(K);
+    let run = |budget: usize| -> ShardBp {
+        let pool = Cluster::new(1, 0);
+        let (mut s, sched) = warmed_with_schedule(97, 0.6);
+        let sel = Selection::full(s.data.w);
+        let (phi, tot) = phi_of(&s);
+        s.clear_selected_residuals(&sel);
+        let ds = DocSchedule::build(&sched, |d| s.data.row_range(d).len());
+        s.sweep_docs_parallel_fixed(&pool, budget, &ds, &phi, &tot, &sel, &p, true);
+        s
+    };
+    let base = run(1);
+    for &budget in &[2usize, 8] {
+        let other = run(budget);
+        assert_bitwise(&base.mu, &other.mu, "mu");
+        assert_bitwise(&base.theta, &other.theta, "theta");
+        assert_bitwise(&base.dphi, &other.dphi, "dphi");
+        assert_bitwise(&base.r, &other.r, "r");
+    }
+
+    // freeze contract at 60% coverage: unscheduled docs untouched
+    let pool = Cluster::new(1, 0);
+    let (mut s, sched) = warmed_with_schedule(97, 0.6);
+    let sel = Selection::full(s.data.w);
+    let in_sched: std::collections::HashSet<u32> = sched.iter().copied().collect();
+    let mu_before = s.mu.clone();
+    let theta_before = s.theta.clone();
+    let (phi, tot) = phi_of(&s);
+    s.clear_selected_residuals(&sel);
+    let ds = DocSchedule::build(&sched, |d| s.data.row_range(d).len());
+    s.sweep_docs_parallel_fixed(&pool, 0, &ds, &phi, &tot, &sel, &p, true);
+    let k = s.k;
+    for d in 0..s.data.docs() {
+        if in_sched.contains(&(d as u32)) {
+            continue;
+        }
+        assert_bitwise(
+            &s.theta[d * k..(d + 1) * k],
+            &theta_before[d * k..(d + 1) * k],
+            "frozen theta row (fixed path)",
+        );
+        for idx in s.data.row_range(d) {
+            assert_bitwise(
+                &s.mu[idx * k..(idx + 1) * k],
+                &mu_before[idx * k..(idx + 1) * k],
+                "frozen mu row (fixed path)",
+            );
+        }
+    }
+}
+
 /// update_phi = false must freeze Δφ̂ on the parallel path too (the
 /// heldout fold-in contract).
 #[test]
