@@ -19,12 +19,14 @@ use std::time::Instant;
 
 use pobp::comm::allreduce::{
     allreduce_step, allreduce_step_overlap, allreduce_step_overlap_rounds,
-    allreduce_step_pool, serial_reference_step, GlobalState, ReducePlan, ReduceSource,
-    SerialState, SyncScratch,
+    allreduce_step_pool, allreduce_step_sharded, serial_reference_step, GlobalState,
+    OwnerSlices, ReducePlan, ReduceSource, SerialState, ShardedState, SyncScratch,
 };
 use pobp::comm::{Cluster, NetModel};
 use pobp::coordinator::{fit, PobpConfig};
 use pobp::engine::bp::{Selection, ShardBp};
+use pobp::storage::{PhiShard, PhiStorageMode};
+use pobp::util::mem::MemModel;
 use pobp::engine::fgs::FastGs;
 use pobp::engine::gibbs::{GibbsShard, PlainGs};
 use pobp::engine::sgs::SparseGs;
@@ -292,6 +294,44 @@ fn main() {
     bench(&mut recs, "allreduce subset pipelined (slice-granular)", it(100), sub_items, || {
         allreduce_step_overlap(&cluster, &sub_plan, &phi_acc, &srcs, &mut st, &mut scratch);
     });
+    // sharded storage mode: the same owner-sliced fold landing in the
+    // per-owner *stored* slices — no dense replica anywhere; each
+    // worker's resident φ̂ is one row-aligned slice (O(W·K/N))
+    let os = OwnerSlices::row_aligned(len, k, nw);
+    let acc_parts: Vec<Vec<f32>> =
+        (0..nw).map(|n| phi_acc[os.range(n)].to_vec()).collect();
+    let mut sh_st = ShardedState::new(&acc_parts, k, os);
+    let mut sh_scratch = SyncScratch::default();
+    bench(&mut recs, "allreduce dense sharded (owner-store)", it(20), dense_items, || {
+        allreduce_step_sharded(
+            &cluster, &dense_plan, &acc_parts, &srcs, &mut sh_st, &mut sh_scratch,
+        );
+    });
+    bench(&mut recs, "allreduce subset sharded (owner-store)", it(100), sub_items, || {
+        allreduce_step_sharded(
+            &cluster, &sub_plan, &acc_parts, &srcs, &mut sh_st, &mut sh_scratch,
+        );
+    });
+    // the owner-store fold must land on the replicated oracle's bits —
+    // replay one dense step on fresh state for both paths and compare
+    {
+        let mut oracle = GlobalState::new(&phi_acc, k);
+        allreduce_step(&cluster, &dense_plan, &phi_acc, &srcs, &mut oracle, &mut scratch);
+        let mut fresh = ShardedState::new(&acc_parts, k, os);
+        allreduce_step_sharded(
+            &cluster, &dense_plan, &acc_parts, &srcs, &mut fresh, &mut sh_scratch,
+        );
+        assert_eq!(
+            fresh.render_dense(),
+            oracle.phi_eff,
+            "sharded allreduce diverged from the replicated oracle"
+        );
+        println!(
+            "sharded resident phi+r per worker: {} KB (replicated: {} KB)",
+            fresh.resident_bytes_per_worker() / 1024,
+            2 * 4 * len / 1024
+        );
+    }
 
     // --- overlap efficiency: a short pipelined POBP fit on a
     //     compute-bound config; 1 − total/(compute+comm) is the fraction
@@ -312,6 +352,66 @@ fn main() {
         ov.ledger.compute_secs,
         ov.ledger.comm_secs,
         ov.ledger.total_secs()
+    );
+
+    // --- storage modes: one sharded fit (runs in --smoke too, so CI's
+    //     quick pass exercises the sharded sync path end to end) pinned
+    //     bitwise against the replicated oracle, plus the per-worker
+    //     resident φ̂ bytes the mode is for ---
+    let store_n = 4;
+    let sh_cfg = PobpConfig {
+        n_workers: store_n,
+        nnz_budget: 8_000,
+        max_iters: if smoke { 3 } else { 10 },
+        storage: PhiStorageMode::Sharded,
+        net: NetModel::infiniband_for_scale(k, corpus.w),
+        ..Default::default()
+    };
+    let sh_fit = fit(&corpus, &params, &sh_cfg);
+    let rep_fit = fit(
+        &corpus,
+        &params,
+        &PobpConfig { storage: PhiStorageMode::Replicated, ..sh_cfg },
+    );
+    assert_eq!(
+        sh_fit.model.phi_wk, rep_fit.model.phi_wk,
+        "sharded fit diverged from the replicated oracle"
+    );
+    // φ̂ + r pairs: replicated keeps both W·K replicas per worker;
+    // sharded keeps one row-aligned slice of each
+    let rep_resident = 2 * 4 * corpus.w * k;
+    let sh_resident =
+        2 * PhiShard::sharded(corpus.w, k, store_n).resident_bytes_per_worker();
+    println!(
+        "\nstorage modes (N={store_n}): sharded fit bitwise == replicated; \
+         resident phi+r per worker {} KB vs {} KB",
+        sh_resident / 1024,
+        rep_resident / 1024
+    );
+    // the big-K claim, analytically (PUBMED W, K = 8000): the dense
+    // replica alone blows the paper's 2 GB per-processor budget, the
+    // owner slice fits with room for the working set
+    let bigk = MemModel {
+        docs_resident: 1000,
+        nnz_resident: 45_000,
+        tokens_resident: 0,
+        k: 8000,
+        w: 141_043,
+    };
+    let bigk_n = 8;
+    let budget = 2usize * (1 << 30);
+    let bigk_replica = bigk.phi_replica_bytes();
+    let bigk_sharded = bigk.phi_sharded_bytes(bigk_n, bigk.nnz_resident);
+    assert!(bigk_replica > budget, "big-K config must exceed the budget replicated");
+    assert!(bigk_sharded < budget, "big-K config must fit sharded");
+    println!(
+        "big-K analytic (W={}, K={}, N={bigk_n}): replica {} MB > {} MB budget; \
+         sharded slice {} MB",
+        bigk.w,
+        bigk.k,
+        bigk_replica / (1 << 20),
+        budget / (1 << 20),
+        bigk_sharded / (1 << 20)
     );
 
     // --- machine-readable record for the cross-PR perf trajectory ---
@@ -349,6 +449,17 @@ fn main() {
         ("scheduled_sweep_speedup_vs_serial", Json::from(sched_speedup)),
         ("abp_iter_overhead_speedup", Json::from(abp_iter_overhead_speedup)),
         ("overlap_efficiency", Json::from(overlap_eff)),
+        ("phi_mem_modes", Json::obj(vec![
+            ("n_workers", Json::from(store_n)),
+            ("replicated_resident_bytes_per_worker", Json::from(rep_resident)),
+            ("sharded_resident_bytes_per_worker", Json::from(sh_resident)),
+            ("bigk_w", Json::from(bigk.w)),
+            ("bigk_k", Json::from(bigk.k)),
+            ("bigk_n", Json::from(bigk_n)),
+            ("bigk_budget_bytes", Json::from(budget)),
+            ("bigk_replicated_bytes_per_worker", Json::from(bigk_replica)),
+            ("bigk_sharded_bytes_per_worker", Json::from(bigk_sharded)),
+        ])),
         ("items_per_sec", results),
     ]);
     println!("\nfull-sweep speedup vs serial reference: {speedup:.2}x");

@@ -14,11 +14,28 @@
 //! count. Each worker reduces and scatters *only the (word, topic) pairs
 //! that fall inside its slice*, in a single fused pass: Δφ̂, r and the
 //! f64 totals deltas move together, with no intermediate `red_dphi` /
-//! `red_r` buffers and no barrier between the two matrices. The
-//! "allgather" half of the allreduce — every processor republishing its
-//! owned slice — is free in this leader-memory simulation (the merged
-//! state *is* the shared replica) but is charged per segment by the
-//! ledger/network model exactly as before.
+//! `red_r` buffers and no barrier between the two matrices.
+//!
+//! # Storage modes
+//!
+//! The same owner partition now has two storage realizations:
+//!
+//! * **Replicated** ([`GlobalState`]): every worker (and the leader)
+//!   holds the full `W·K` φ̂/r replica. The "allgather" half of the
+//!   allreduce — every processor republishing its owned slice — is free
+//!   in this leader-memory simulation (the merged state *is* the shared
+//!   replica), and the ledger charges it per segment exactly as before.
+//! * **Sharded** ([`ShardedState`]): owner `n` *persistently stores only
+//!   its row-aligned slice* of φ̂_eff, r and φ̂_acc
+//!   ([`OwnerSlices::row_aligned`] — slice boundaries snapped to whole
+//!   φ̂ rows), so per-worker φ̂ memory is O(W·K/N). Sweeps read rows
+//!   through a sliced view; the allgather back to the workers ships only
+//!   the *next working set's* slices and is charged separately from the
+//!   reduce-scatter (`Ledger::record_sync_split`). Every step is bitwise
+//!   identical to the replicated oracle — same row-aligned partition,
+//!   same per-element left folds, same per-owner f64 totals merge — so
+//!   the two modes are interchangeable (pinned by
+//!   `rust/tests/shard_equiv.rs`).
 //!
 //! # Gather-buffer layout
 //!
@@ -170,8 +187,31 @@ impl OwnerSlices {
         OwnerSlices { len, per: len.div_ceil(owners).max(1), owners }
     }
 
+    /// Row-aligned partition for a flat `W·K` index space: slice
+    /// boundaries are snapped to multiples of `k`, so no word's topic row
+    /// straddles two owners — the alignment storage sharding requires
+    /// (an owner must hold whole φ̂ rows to serve sweep row reads).
+    /// Still derived from the index count and worker count only, hence
+    /// machine-independent like [`OwnerSlices::new`]. This is the
+    /// partition **both** storage modes use for reductions, so the
+    /// per-owner f64 totals grouping — and with it every bitwise
+    /// equivalence between the modes — lines up.
+    pub fn row_aligned(len: usize, k: usize, owners: usize) -> OwnerSlices {
+        assert!(owners > 0);
+        assert!(k > 0);
+        assert_eq!(len % k, 0, "flat space must be whole φ̂ rows");
+        let per = (len / k).div_ceil(owners).max(1) * k;
+        OwnerSlices { len, per, owners }
+    }
+
     pub fn owners(&self) -> usize {
         self.owners
+    }
+
+    /// Slice width in flat indices (the last owner's slice may be
+    /// shorter; trailing owners may be empty).
+    pub fn per(&self) -> usize {
+        self.per
     }
 
     /// Flat-index range owned by worker `n` (possibly empty for trailing
@@ -500,7 +540,7 @@ fn dense_owner_step<S: ReduceSource + Send>(
     let guards: Vec<_> = workers.iter().map(|m| m.lock().unwrap()).collect();
     // one pass over the guards: Δφ̂ and r slices collected together
     let parts: Vec<(&[f32], &[f32])> = guards.iter().map(|g| g.dense_parts()).collect();
-    let slices = OwnerSlices::new(len, workers.len());
+    let slices = OwnerSlices::row_aligned(len, state.k, workers.len());
     let mut tasks: Vec<DenseSlice<'_>> = Vec::with_capacity(slices.owners());
     {
         let mut phi_rest = &mut state.phi_eff[..];
@@ -554,7 +594,7 @@ fn subset_owner_step<S: ReduceSource + Send>(
     cluster.run_on_owner_slices(&mut scratch.gather[..nw], |n, buf| {
         workers[n].lock().unwrap().export_selected_into(indices, buf);
     });
-    let slices = OwnerSlices::new(state.phi_eff.len(), nw);
+    let slices = OwnerSlices::row_aligned(state.phi_eff.len(), k, nw);
     scratch.group_by_owner(indices, &slices);
     scratch.tot_delta.clear();
     scratch.tot_delta.resize(slices.owners() * (k + 1), 0.0);
@@ -617,7 +657,7 @@ fn subset_owner_step_pipelined<S: ReduceSource + Send>(
     let nw = workers.len();
     let k = state.k;
     let m = indices.len();
-    let slices = OwnerSlices::new(state.phi_eff.len(), nw);
+    let slices = OwnerSlices::row_aligned(state.phi_eff.len(), k, nw);
     scratch.group_by_owner(indices, &slices);
     scratch.tot_delta.clear();
     scratch.tot_delta.resize(slices.owners() * (k + 1), 0.0);
@@ -721,7 +761,7 @@ fn subset_owner_step_sliced<S: ReduceSource + Send>(
 ) -> usize {
     let nw = workers.len();
     let k = state.k;
-    let slices = OwnerSlices::new(state.phi_eff.len(), nw);
+    let slices = OwnerSlices::row_aligned(state.phi_eff.len(), k, nw);
     let owners = slices.owners();
     scratch.group_by_owner(indices, &slices);
     scratch.tot_delta.clear();
@@ -957,6 +997,368 @@ pub fn allreduce_step_pool<S: ReduceSource + Send>(
     }
 }
 
+// ---------------------------------------------------------------------
+// sharded storage mode: φ̂ partitioned by owner slice
+// ---------------------------------------------------------------------
+
+/// One owner's fold task in sharded dense mode: the owner's *stored*
+/// slices (φ̂_eff, r) plus its φ̂_acc slice, all row-aligned.
+struct ShardDenseTask<'a> {
+    base: usize,
+    acc: &'a [f32],
+    phi: &'a mut [f32],
+    r: &'a mut [f32],
+}
+
+/// One owner's fold task in sharded subset mode: stored slices, φ̂_acc
+/// slice, the plan slots scattering into them and the owner's f64 totals
+/// lanes.
+struct ShardFoldTask<'a> {
+    base: usize,
+    acc: &'a [f32],
+    phi: &'a mut [f32],
+    r: &'a mut [f32],
+    slots: &'a [u32],
+    td: &'a mut [f64],
+}
+
+/// One owner's end-of-batch accumulator fold: φ̂_acc slice += Σ Δφ̂.
+struct ShardAccTask<'a> {
+    base: usize,
+    phi: &'a mut [f32],
+    acc: &'a mut [f32],
+}
+
+/// The **sharded** realization of the post-allreduce state: owner `n`
+/// persistently stores only its row-aligned slice of φ̂_eff and r
+/// (`phi_slices[n]` / `r_slices[n]` covering `OwnerSlices::range(n)` of
+/// the flat row-major space), plus the shared f64 totals. This is the
+/// model-parallel big-K storage mode: no processor ever materializes the
+/// dense `W·K` replica, so per-worker φ̂ memory is O(W·K/N).
+///
+/// Bitwise contract (Contract 5): with the same row-aligned partition,
+/// every fold is the serial reference's per-element left fold and the
+/// totals accumulate per owner and merge in ascending owner order —
+/// exactly [`GlobalState`]'s op sequence — so
+/// `concat(phi_slices) == GlobalState::phi_eff` bitwise after each sync,
+/// totals included. [`GlobalState`] stays the oracle.
+#[derive(Clone, Debug)]
+pub struct ShardedState {
+    os: OwnerSlices,
+    k: usize,
+    /// per-owner φ̂_eff slices, owner order; `phi_slices[n]` covers the
+    /// flat range `os.range(n)`
+    pub phi_slices: Vec<Vec<f32>>,
+    /// per-owner synchronized-residual slices, aligned with `phi_slices`
+    pub r_slices: Vec<Vec<f32>>,
+    phi_tot64: Vec<f64>,
+    phi_tot32: Vec<f32>,
+    r_total: f64,
+}
+
+impl ShardedState {
+    /// Fresh per-batch state from the sharded accumulator: φ_eff slice =
+    /// φ̂_acc slice, no residuals yet — the sharded mirror of
+    /// [`GlobalState::new`].
+    pub fn new(phi_acc_parts: &[Vec<f32>], k: usize, os: OwnerSlices) -> ShardedState {
+        assert_eq!(phi_acc_parts.len(), os.owners());
+        for (n, p) in phi_acc_parts.iter().enumerate() {
+            assert_eq!(p.len(), os.range(n).len(), "acc slice {n} misaligned");
+        }
+        let mut s = ShardedState {
+            os,
+            k,
+            phi_slices: phi_acc_parts.to_vec(),
+            r_slices: phi_acc_parts.iter().map(|p| vec![0.0; p.len()]).collect(),
+            phi_tot64: vec![0.0; k],
+            phi_tot32: vec![0.0; k],
+            r_total: 0.0,
+        };
+        s.recompute_totals();
+        s
+    }
+
+    /// The row-aligned owner partition this state stores φ̂ under.
+    pub fn owner_slices(&self) -> OwnerSlices {
+        self.os
+    }
+
+    /// φ̂ rows (words) per owner slice — the stride of the sliced row
+    /// view (`row w lives in slice w / rows_per, local row w % rows_per`).
+    pub fn rows_per(&self) -> usize {
+        self.os.per / self.k
+    }
+
+    /// Topic totals φ̂_Σ(k) as the f32 view the sweep kernels read.
+    pub fn phi_tot(&self) -> &[f32] {
+        &self.phi_tot32
+    }
+
+    /// Total synchronized residual Σ r (line 26's convergence quantity).
+    pub fn r_total(&self) -> f64 {
+        self.r_total
+    }
+
+    /// Borrowed per-owner φ̂_eff slices, owner order (the sliced sweep
+    /// view / snapshot publish source).
+    pub fn phi_parts(&self) -> Vec<&[f32]> {
+        self.phi_slices.iter().map(|p| p.as_slice()).collect()
+    }
+
+    /// Borrowed per-owner r slices, owner order (sharded power selection).
+    pub fn r_parts(&self) -> Vec<&[f32]> {
+        self.r_slices.iter().map(|p| p.as_slice()).collect()
+    }
+
+    /// Largest per-worker resident φ̂ footprint in bytes (φ̂_eff + r
+    /// slices) — what one processor actually stores in sharded mode.
+    pub fn resident_bytes_per_worker(&self) -> usize {
+        self.phi_slices
+            .iter()
+            .zip(&self.r_slices)
+            .map(|(p, r)| 4 * (p.len() + r.len()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Materialize the dense φ̂_eff (evaluation / oracle comparison only
+    /// — the training path never calls this).
+    pub fn render_dense(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.os.len);
+        for p in &self.phi_slices {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Rebuild both totals from the stored slices, in f64. Slices are
+    /// walked in owner order, rows in order within each slice — the
+    /// concatenation is the dense row order, so the f64 op sequence is
+    /// identical to [`GlobalState::recompute_totals`].
+    pub fn recompute_totals(&mut self) {
+        self.phi_tot64.fill(0.0);
+        for part in &self.phi_slices {
+            for row in part.chunks_exact(self.k) {
+                for (t, &v) in row.iter().enumerate() {
+                    self.phi_tot64[t] += v as f64;
+                }
+            }
+        }
+        self.r_total = 0.0;
+        for part in &self.r_slices {
+            for &v in part {
+                self.r_total += v as f64;
+            }
+        }
+        self.render_tot32();
+    }
+
+    fn render_tot32(&mut self) {
+        for (o, &v) in self.phi_tot32.iter_mut().zip(&self.phi_tot64) {
+            *o = v as f32;
+        }
+    }
+
+    /// Ascending-owner-order totals merge — [`GlobalState`]'s identical
+    /// f64 op sequence (Contract 5's totals interchangeability).
+    fn merge_owner_totals(&mut self, tot_delta: &[f64]) {
+        let k = self.k;
+        debug_assert_eq!(tot_delta.len() % (k + 1), 0);
+        for td in tot_delta.chunks_exact(k + 1) {
+            for (t, slot) in self.phi_tot64.iter_mut().enumerate() {
+                *slot += td[t];
+            }
+            self.r_total += td[k];
+        }
+        self.render_tot32();
+    }
+
+    /// End-of-batch accumulator fold, sharded: each owner folds every
+    /// worker's dense Δφ̂ over its slice —
+    /// `acc[j] ← acc[j] + Σ_n Δφ̂_n[base + j]`, the element-local left
+    /// fold [`reduce_chunked`] performs — writing both the accumulator
+    /// slice and the φ̂_eff slice (the replicated path's fold + copy-back,
+    /// fused). Totals are left stale, matching the replicated path: the
+    /// state is rebuilt fresh at the next batch.
+    pub fn fold_batch(
+        &mut self,
+        cluster: &Cluster,
+        phi_acc_parts: &mut [Vec<f32>],
+        dphi_parts: &[&[f32]],
+    ) {
+        let os = self.os;
+        assert_eq!(phi_acc_parts.len(), os.owners());
+        let mut tasks: Vec<ShardAccTask<'_>> = Vec::with_capacity(os.owners());
+        for (n, (phi, acc)) in self
+            .phi_slices
+            .iter_mut()
+            .zip(phi_acc_parts.iter_mut())
+            .enumerate()
+        {
+            tasks.push(ShardAccTask { base: os.range(n).start, phi, acc });
+        }
+        cluster.run_on_owner_slices(&mut tasks, |_n, t| {
+            for j in 0..t.acc.len() {
+                let i = t.base + j;
+                let mut v = t.acc[j];
+                for dp in dphi_parts {
+                    v += dp[i];
+                }
+                t.phi[j] = v;
+                t.acc[j] = v;
+            }
+        });
+    }
+}
+
+/// Dense reduce-scatter in sharded storage mode: identical per-element
+/// arithmetic to [`dense_owner_step`] (seed φ̂_acc, left fold in worker
+/// order, fused Δφ̂/r pass), but each owner reads its φ̂_acc slice and
+/// writes its *stored* slices — no dense replica anywhere.
+fn sharded_dense_step<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    phi_acc_parts: &[Vec<f32>],
+    workers: &[Mutex<S>],
+    state: &mut ShardedState,
+) -> usize {
+    let os = state.os;
+    let guards: Vec<_> = workers.iter().map(|m| m.lock().unwrap()).collect();
+    let parts: Vec<(&[f32], &[f32])> = guards.iter().map(|g| g.dense_parts()).collect();
+    let mut tasks: Vec<ShardDenseTask<'_>> = Vec::with_capacity(os.owners());
+    for (n, ((phi, r), acc)) in state
+        .phi_slices
+        .iter_mut()
+        .zip(state.r_slices.iter_mut())
+        .zip(phi_acc_parts)
+        .enumerate()
+    {
+        tasks.push(ShardDenseTask { base: os.range(n).start, acc, phi, r });
+    }
+    cluster.run_on_owner_slices(&mut tasks, |_n, t| {
+        for (j, (po, ro)) in t.phi.iter_mut().zip(t.r.iter_mut()).enumerate() {
+            let i = t.base + j;
+            // the serial reference's left fold, worker order, both
+            // matrices in one pass — dense_owner_step's exact body with
+            // the seed read from the owner's acc slice
+            let mut acc = t.acc[j];
+            let mut racc = 0f32;
+            for (dp, rp) in &parts {
+                acc += dp[i];
+                racc += rp[i];
+            }
+            *po = acc;
+            *ro = racc;
+        }
+    });
+    drop(tasks);
+    drop(guards);
+    state.recompute_totals();
+    os.len
+}
+
+/// Subset reduce-scatter in sharded storage mode: same parallel gather
+/// into the reused [`SyncScratch`] pool and same per-slot fold as
+/// [`subset_owner_step`], with the seed read from the owner's φ̂_acc
+/// slice and the scatter landing in the owner's stored slices.
+fn sharded_subset_step<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    indices: &[u32],
+    phi_acc_parts: &[Vec<f32>],
+    workers: &[Mutex<S>],
+    state: &mut ShardedState,
+    scratch: &mut SyncScratch,
+) -> usize {
+    let nw = workers.len();
+    let k = state.k;
+    let os = state.os;
+    scratch.gather.resize_with(nw, GatherBuf::default);
+    cluster.run_on_owner_slices(&mut scratch.gather[..nw], |n, buf| {
+        workers[n].lock().unwrap().export_selected_into(indices, buf);
+    });
+    scratch.group_by_owner(indices, &os);
+    scratch.tot_delta.clear();
+    scratch.tot_delta.resize(os.owners() * (k + 1), 0.0);
+    let bufs = &scratch.gather;
+    let owner_off = &scratch.owner_off;
+    let owner_slots = &scratch.owner_slots;
+    let mut tasks: Vec<ShardFoldTask<'_>> = Vec::with_capacity(os.owners());
+    {
+        let mut td_rest = &mut scratch.tot_delta[..];
+        for (n, ((phi, r), acc)) in state
+            .phi_slices
+            .iter_mut()
+            .zip(state.r_slices.iter_mut())
+            .zip(phi_acc_parts)
+            .enumerate()
+        {
+            let slots = &owner_slots[owner_off[n] as usize..owner_off[n + 1] as usize];
+            let (td, rest) = td_rest.split_at_mut(k + 1);
+            td_rest = rest;
+            tasks.push(ShardFoldTask { base: os.range(n).start, acc, phi, r, slots, td });
+        }
+    }
+    cluster.run_on_owner_slices(&mut tasks, |_n, t| {
+        for &s in t.slots {
+            let s = s as usize;
+            let i = indices[s] as usize;
+            let j = i - t.base;
+            // subset_owner_step's exact per-slot body, seed from the
+            // owner's acc slice
+            let mut dsum = 0f32;
+            let mut rsum = 0f32;
+            for b in bufs {
+                dsum += b.dphi[s];
+                rsum += b.r[s];
+            }
+            let new_phi = t.acc[j] + dsum;
+            t.td[i % k] += new_phi as f64 - t.phi[j] as f64;
+            t.phi[j] = new_phi;
+            t.td[k] += rsum as f64 - t.r[j] as f64;
+            t.r[j] = rsum;
+        }
+    });
+    drop(tasks);
+    state.merge_owner_totals(&scratch.tot_delta);
+    indices.len()
+}
+
+/// One full synchronization in **sharded storage mode**: the same
+/// owner-sliced reduce-scatter as [`allreduce_step`], folding into the
+/// per-owner *stored* slices of [`ShardedState`] instead of a dense
+/// replica. Returns the number of (word, topic) pairs reduced; the
+/// caller charges the reduce and the (working-set) allgather halves
+/// separately via `Ledger::record_sync_split`.
+///
+/// Bitwise contract: with `phi_acc_parts` the row-aligned sharding of
+/// the replicated path's `phi_acc`, `concat(state.phi_slices)` /
+/// `concat(state.r_slices)` equal [`GlobalState`]'s `phi_eff` /
+/// `r_global` after [`allreduce_step`] on the same inputs, totals
+/// bitwise included, at any thread budget.
+pub fn allreduce_step_sharded<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc_parts: &[Vec<f32>],
+    workers: &[Mutex<S>],
+    state: &mut ShardedState,
+    scratch: &mut SyncScratch,
+) -> usize {
+    assert_eq!(
+        workers.len(),
+        cluster.workers(),
+        "one shard per logical worker"
+    );
+    assert_eq!(workers.len(), state.os.owners(), "one owner slice per worker");
+    match plan {
+        ReducePlan::Dense { len } => {
+            debug_assert_eq!(*len, state.os.len);
+            sharded_dense_step(cluster, phi_acc_parts, workers, state)
+        }
+        ReducePlan::Subset { indices } => {
+            sharded_subset_step(cluster, indices, phi_acc_parts, workers, state, scratch)
+        }
+    }
+}
+
 /// Chunk-parallel element-wise sum on the cluster's OS threads:
 /// `out[i] = seed[i] + Σ_n parts[n][i]` (seed = 0 when `None`). Each
 /// element's accumulation chain is the same left fold the serial loop
@@ -1137,6 +1539,43 @@ mod tests {
     }
 
     #[test]
+    fn row_aligned_slices_never_split_a_row() {
+        for &(w, k, owners) in &[
+            (1usize, 1usize, 1usize),
+            (40, 8, 3),
+            (100, 7, 7),
+            (5, 6, 8),
+            (2000, 50, 8),
+            (997, 3, 5),
+        ] {
+            let len = w * k;
+            let s = OwnerSlices::row_aligned(len, k, owners);
+            let mut covered = 0usize;
+            for n in 0..owners {
+                let rg = s.range(n);
+                assert_eq!(rg.start, covered, "w={w} k={k} owners={owners} n={n}");
+                assert_eq!(rg.start % k, 0, "slice start off row boundary");
+                assert!(rg.len() % k == 0, "slice holds partial rows");
+                covered = rg.end;
+                for i in rg {
+                    assert_eq!(s.owner_of(i), n, "w={w} k={k} owners={owners} i={i}");
+                }
+            }
+            assert_eq!(covered, len);
+            // all of a word's topics land on one owner
+            for wi in 0..w {
+                let o = s.owner_of(wi * k);
+                for t in 0..k {
+                    assert_eq!(s.owner_of(wi * k + t), o, "row {wi} straddles owners");
+                }
+            }
+            // row count per slice is the index-count-derived ceil split
+            assert_eq!(s.per() % k, 0);
+            assert_eq!(s.per() / k, w.div_ceil(owners).max(1));
+        }
+    }
+
+    #[test]
     fn reduce_sum_matches_sequential() {
         let partials = vec![vec![1.0f32, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
         let mut g = vec![0.5f32, 0.5, 0.5];
@@ -1270,6 +1709,107 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Shard a dense vector by the given owner partition.
+    fn shard_vec(dense: &[f32], os: &OwnerSlices) -> Vec<Vec<f32>> {
+        (0..os.owners()).map(|n| dense[os.range(n)].to_vec()).collect()
+    }
+
+    #[test]
+    fn sharded_steps_bitwise_equal_replicated_oracle() {
+        let (w, k) = (50, 6);
+        let mut rng = Rng::new(21);
+        let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32() * 4.0).collect();
+        let nw = 4;
+        let workers = random_workers(nw, w * k, &mut rng);
+        let cluster = Cluster::new(nw, 0);
+        let os = OwnerSlices::row_aligned(w * k, k, nw);
+        let acc_parts = shard_vec(&phi_acc, &os);
+
+        let mut rep = GlobalState::new(&phi_acc, k);
+        let mut shd = ShardedState::new(&acc_parts, k, os);
+        let mut scr_rep = SyncScratch::default();
+        let mut scr_shd = SyncScratch::default();
+
+        // fresh-state totals agree bitwise
+        assert_eq!(rep.phi_tot(), shd.phi_tot());
+        assert_eq!(rep.r_total().to_bits(), shd.r_total().to_bits());
+
+        // dense sync
+        let plan = ReducePlan::Dense { len: w * k };
+        let p1 = allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut rep, &mut scr_rep);
+        let p2 = allreduce_step_sharded(
+            &cluster, &plan, &acc_parts, &workers, &mut shd, &mut scr_shd,
+        );
+        assert_eq!(p1, p2);
+        assert_eq!(shd.render_dense(), rep.phi_eff);
+        assert_eq!(rep.phi_tot(), shd.phi_tot());
+        assert_eq!(rep.r_total().to_bits(), shd.r_total().to_bits());
+
+        // subset rounds with mutating worker partials
+        for round in 0..5 {
+            let mut indices: Vec<u32> =
+                (0..(w * k) as u32).filter(|_| rng.f32() < 0.2).collect();
+            rng.shuffle(&mut indices);
+            if indices.is_empty() {
+                indices.push(rng.below(w * k) as u32);
+            }
+            let plan = ReducePlan::Subset { indices: &indices };
+            allreduce_step(&cluster, &plan, &phi_acc, &workers, &mut rep, &mut scr_rep);
+            allreduce_step_sharded(
+                &cluster, &plan, &acc_parts, &workers, &mut shd, &mut scr_shd,
+            );
+            assert_eq!(shd.render_dense(), rep.phi_eff, "round {round}");
+            let r_dense: Vec<f32> = shd.r_parts().concat();
+            assert_eq!(r_dense, rep.r_global, "round {round}");
+            assert_eq!(rep.phi_tot(), shd.phi_tot(), "round {round}");
+            assert_eq!(
+                rep.r_total().to_bits(),
+                shd.r_total().to_bits(),
+                "round {round}"
+            );
+            for m in &workers {
+                let mut g = m.lock().unwrap();
+                for v in g.dphi.iter_mut() {
+                    *v += rng.f32() - 0.5;
+                }
+                for v in g.r.iter_mut() {
+                    *v = rng.f32();
+                }
+            }
+        }
+
+        // per-worker resident bytes: one slice of each matrix, not W·K
+        let full = 2 * 4 * w * k;
+        assert_eq!(shd.resident_bytes_per_worker(), 2 * 4 * os.per());
+        assert!(shd.resident_bytes_per_worker() < full);
+    }
+
+    #[test]
+    fn sharded_fold_batch_matches_reduce_chunked() {
+        let (w, k, nw) = (37, 5, 3);
+        let mut rng = Rng::new(22);
+        let phi_acc: Vec<f32> = (0..w * k).map(|_| rng.f32() * 2.0).collect();
+        let dphi: Vec<Vec<f32>> = (0..nw)
+            .map(|_| (0..w * k).map(|_| rng.f32() - 0.3).collect())
+            .collect();
+        let dphi_parts: Vec<&[f32]> = dphi.iter().map(|p| p.as_slice()).collect();
+        let cluster = Cluster::new(nw, 0);
+        let os = OwnerSlices::row_aligned(w * k, k, nw);
+
+        // replicated oracle: fold into phi_eff, copy back to acc
+        let mut rep_acc = phi_acc.clone();
+        let mut folded = vec![0f32; w * k];
+        reduce_chunked(&cluster, Some(&rep_acc), &dphi_parts, &mut folded);
+        rep_acc.copy_from_slice(&folded);
+
+        // sharded path
+        let mut acc_parts = shard_vec(&phi_acc, &os);
+        let mut shd = ShardedState::new(&acc_parts, k, os);
+        shd.fold_batch(&cluster, &mut acc_parts, &dphi_parts);
+        assert_eq!(acc_parts.concat(), rep_acc);
+        assert_eq!(shd.render_dense(), rep_acc);
     }
 
     #[test]

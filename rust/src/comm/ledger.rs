@@ -125,6 +125,50 @@ impl Ledger {
         comm_secs
     }
 
+    /// Record a synchronization whose reduce-scatter and allgather move
+    /// **different byte counts** — the sharded storage mode, where the
+    /// reduce half ships this sync's reduced pairs while the allgather
+    /// half republishes only the *next working set's* slices (zero when
+    /// the batch is stopping). `payload_bytes` records the reduce
+    /// payload (the Eq. 6 per-processor quantity, comparable across
+    /// modes); wire bytes count both halves. The per-event invariant
+    /// `reduce_scatter_secs + allgather_secs = comm_secs` is preserved,
+    /// and a split with equal halves is byte- and second-identical to
+    /// [`Ledger::record_sync`]. Returns the simulated seconds charged.
+    pub fn record_sync_split(
+        &mut self,
+        batch: usize,
+        iter: usize,
+        reduce_bytes: usize,
+        gather_bytes: usize,
+        n: usize,
+    ) -> f64 {
+        let reduce_scatter_secs = self.net.reduce_scatter_secs(reduce_bytes, n);
+        // zero gather bytes means the allgather is *skipped* (a stopping
+        // iteration republishes nothing), not a zero-byte collective —
+        // no latency steps either
+        let allgather_secs = if gather_bytes == 0 {
+            0.0
+        } else {
+            self.net.allgather_secs(gather_bytes, n)
+        };
+        let comm_secs = reduce_scatter_secs + allgather_secs;
+        // each half moves its own bytes over the N−1 ring links
+        self.wire_bytes +=
+            ((reduce_bytes + gather_bytes) * n.saturating_sub(1)) as u64;
+        self.comm_secs += comm_secs;
+        self.events.push(SyncEvent {
+            batch,
+            iter,
+            payload_bytes: reduce_bytes,
+            n,
+            comm_secs,
+            reduce_scatter_secs,
+            allgather_secs,
+        });
+        comm_secs
+    }
+
     /// Record one iteration's computation: barrier semantics charge the
     /// slowest worker's measured seconds.
     pub fn record_compute(&mut self, per_worker_secs: &[f64]) -> f64 {
@@ -272,6 +316,32 @@ mod tests {
             let gap = (e.reduce_scatter_secs + e.allgather_secs - e.comm_secs).abs();
             assert!(gap < 1e-18);
         }
+    }
+
+    #[test]
+    fn split_sync_attribution_is_exact() {
+        let net = NetModel::infiniband_20gbps();
+        // equal halves degenerate to record_sync exactly
+        let mut a = Ledger::new(net);
+        let mut b = Ledger::new(net);
+        let ta = a.record_sync(0, 1, 1 << 16, 8);
+        let tb = b.record_sync_split(0, 1, 1 << 16, 1 << 16, 8);
+        assert_eq!(ta.to_bits(), tb.to_bits());
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+        assert_eq!(a.payload_bytes_total(), b.payload_bytes_total());
+        // asymmetric halves: segments cover comm, wire counts both
+        let mut l = Ledger::new(net);
+        let t = l.record_sync_split(0, 2, 1 << 14, 1 << 18, 8);
+        let e = l.events[0];
+        assert!((e.reduce_scatter_secs + e.allgather_secs - e.comm_secs).abs() < 1e-18);
+        assert!((t - e.comm_secs).abs() < 1e-18);
+        assert_eq!(e.payload_bytes, 1 << 14);
+        assert_eq!(l.wire_bytes, (((1u64 << 14) + (1 << 18)) * 7) as u64);
+        // a zero-byte allgather (stopping iteration) charges no gather time
+        let mut z = Ledger::new(net);
+        z.record_sync_split(0, 3, 1 << 14, 0, 8);
+        assert_eq!(z.events[0].allgather_secs, 0.0);
+        assert!(z.events[0].reduce_scatter_secs > 0.0);
     }
 
     #[test]

@@ -12,10 +12,12 @@
 //!   only, so float results are machine- and thread-count-independent
 //!   whenever accumulation order is keyed on the partition.
 //! * **Owner slicing** ([`allreduce`]): the reduce-scatter's
-//!   [`OwnerSlices`] partition of the flat index space, the per-element
-//!   serial left folds, and the per-owner f64 totals merged in owner
-//!   order — bitwise equal to [`allreduce::serial_reference_step`] on
-//!   every path, pipelined included.
+//!   [`OwnerSlices`] partition of the flat index space — row-aligned to
+//!   whole φ̂ rows so it doubles as the *storage* partition of the
+//!   sharded mode ([`allreduce::ShardedState`]) — the per-element serial
+//!   left folds, and the per-owner f64 totals merged in owner order:
+//!   bitwise equal to [`allreduce::serial_reference_step`] on every
+//!   path, pipelined and sharded included.
 //! * **Ledger/overlap accounting** ([`ledger`]): exact bytes, sync
 //!   counts and per-segment attribution always; serialized iterations
 //!   charge `compute + comm`, overlapped iterations `max(compute,
@@ -29,8 +31,9 @@ pub mod net;
 
 pub use allreduce::{
     allreduce_step, allreduce_step_overlap, allreduce_step_overlap_rounds,
-    allreduce_step_pool, reduce_chunked, reduce_sum_into, reduce_sum_subset_into,
-    GatherBuf, GlobalState, OwnerSlices, ReducePlan, ReduceSource, SyncScratch,
+    allreduce_step_pool, allreduce_step_sharded, reduce_chunked, reduce_sum_into,
+    reduce_sum_subset_into, GatherBuf, GlobalState, OwnerSlices, ReducePlan,
+    ReduceSource, ShardedState, SyncScratch,
 };
 pub use cluster::Cluster;
 pub use ledger::{Ledger, SyncEvent};

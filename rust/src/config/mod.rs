@@ -31,6 +31,7 @@ use crate::comm::NetModel;
 use crate::engine::traits::LdaParams;
 use crate::repro::{Algo, RunOpts};
 use crate::sched::PowerParams;
+use crate::storage::PhiStorageMode;
 
 /// Parsed `[section] key = value` file.
 #[derive(Clone, Debug, Default)]
@@ -139,6 +140,14 @@ impl Experiment {
             // synchronization stack (bitwise-identical results,
             // max(compute, comm) time accounting)
             overlap: cf.typed("run", "overlap", defaults.overlap)?,
+            // `storage = sharded` trains the POBP family with φ̂ held as
+            // row-aligned owner slices (O(W·K/N) per-worker model
+            // memory, bitwise-identical results)
+            storage: match cf.get("run", "storage").unwrap_or("replicated") {
+                "replicated" => PhiStorageMode::Replicated,
+                "sharded" => PhiStorageMode::Sharded,
+                other => bail!("[run] storage = {other}: replicated|sharded"),
+            },
         };
         Ok(Experiment { dataset, scale, seed, params, algo, opts })
     }

@@ -48,6 +48,23 @@
 //! run the same per-element left folds and the same per-owner f64
 //! totals sequence; only scheduling and time accounting differ.
 //!
+//! # Storage modes (`PobpConfig::storage`)
+//!
+//! The φ̂ accumulator and the per-batch working state come in two
+//! layouts (Contract 5, docs/ARCHITECTURE.md):
+//!
+//! * [`PhiStorageMode::Replicated`] (default) — every processor holds
+//!   the dense `W·K` replica; the bitwise oracle.
+//! * [`PhiStorageMode::Sharded`] — each logical worker persistently
+//!   stores only its row-aligned owner slice of φ̂ and r
+//!   (O(W·K/N) per-worker model memory, the big-K mode). Sweeps read
+//!   rows in place through [`PhiView::Slices`]; the allreduce folds
+//!   into the stored slices; the ledger attributes the reduce-scatter
+//!   and the next iteration's working-set allgather separately.
+//!
+//! Model, totals and residual history are **bitwise identical** across
+//! the two modes at any thread budget (`rust/tests/shard_equiv.rs`).
+//!
 //! Simulation note (DESIGN.md §Substitutions): worker compute is measured
 //! per shard; communication time comes from the byte-exact ledger +
 //! network model. Numerical results are *identical* to a real N-process
@@ -56,14 +73,15 @@
 use std::sync::Mutex;
 
 use crate::comm::allreduce::{
-    allreduce_step, allreduce_step_overlap, reduce_chunked, GlobalState, ReducePlan,
-    SyncScratch,
+    allreduce_step, allreduce_step_overlap, allreduce_step_sharded, reduce_chunked,
+    GlobalState, ReducePlan, ShardedState, SyncScratch,
 };
 use crate::comm::{Cluster, Ledger, NetModel};
 use crate::corpus::{shard_ranges, Csr, MiniBatch, MiniBatchStream};
-use crate::engine::bp::{Selection, ShardBp};
+use crate::engine::bp::{PhiView, Selection, ShardBp};
 use crate::engine::traits::{IterStat, LdaParams, Model, TrainResult};
-use crate::sched::{select_power, PowerParams, PowerSet};
+use crate::sched::{select_power, select_power_sharded, PowerParams, PowerSet};
+use crate::storage::{PhiShard, PhiStorageMode};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -110,6 +128,13 @@ pub struct PobpConfig {
     /// identical results to the serialized mode (see module doc);
     /// default `false` = the paper's serialized BSP accounting.
     pub overlap: bool,
+    /// φ̂ storage layout: `Replicated` keeps the classic dense `W·K`
+    /// replica on every processor (the bitwise oracle); `Sharded`
+    /// stores only a row-aligned owner slice per logical worker —
+    /// O(W·K/N) per-worker φ̂ memory with bitwise-identical results
+    /// (Contract 5, `rust/tests/shard_equiv.rs`). Sharded mode does
+    /// not support the overlap pipeline yet.
+    pub storage: PhiStorageMode,
 }
 
 impl Default for PobpConfig {
@@ -127,6 +152,7 @@ impl Default for PobpConfig {
             seed: 42,
             snapshot_every: 0,
             overlap: false,
+            storage: PhiStorageMode::Replicated,
         }
     }
 }
@@ -175,8 +201,19 @@ fn build_shards(
 }
 
 /// Trains LDA with POBP over `corpus` and returns the learned model plus
-/// the full cost decomposition.
+/// the full cost decomposition. Dispatches on [`PobpConfig::storage`];
+/// both modes produce bitwise-identical models, totals and residual
+/// histories (Contract 5).
 pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
+    match cfg.storage {
+        PhiStorageMode::Replicated => fit_replicated(corpus, params, cfg),
+        PhiStorageMode::Sharded => fit_sharded(corpus, params, cfg),
+    }
+}
+
+/// [`fit`] in replicated storage mode: the dense `W·K` φ̂ replica, the
+/// paper's layout and the bitwise oracle for the sharded mode.
+fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
     let mut wall = Stopwatch::new();
     let (w, k) = (corpus.w, params.k);
     let cluster = Cluster::new(cfg.n_workers, cfg.max_threads);
@@ -376,6 +413,198 @@ pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
     }
 }
 
+/// [`fit`] in **sharded** storage mode: each logical worker persistently
+/// holds only its row-aligned owner slice of φ̂ and the synchronized
+/// residual matrix ([`PhiShard::Sharded`] / [`ShardedState`]) — per-worker
+/// model memory O(W·K/N) — while every number (model, totals, residual
+/// history) stays bitwise equal to [`fit_replicated`]. The differences
+/// are pure reorderings of identical arithmetic:
+///
+/// * sweeps read φ̂ rows in place through [`PhiView::Slices`] — the same
+///   bits [`fit_replicated`]'s dense rows hand the kernels;
+/// * the allreduce folds into the stored slices
+///   ([`allreduce_step_sharded`]), per-element left folds and per-owner
+///   f64 totals in the replicated op order;
+/// * power selection reads the sharded residual slices
+///   ([`select_power_sharded`], bitwise-equal schedule);
+/// * the ledger charges the reduce-scatter and the allgather halves
+///   separately ([`Ledger::record_sync_split`]): the reduce ships the
+///   synchronized pairs, the gather ships the **next** iteration's φ̂
+///   working set (the full matrix before a dense sweep, the selected
+///   rows before a power sweep, nothing when the batch stops here).
+///
+/// The overlap pipeline is not wired through sharded storage yet;
+/// `cfg.overlap` is rejected.
+fn fit_sharded(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
+    assert!(!cfg.overlap, "sharded storage does not support the overlap pipeline yet");
+    let mut wall = Stopwatch::new();
+    let (w, k) = (corpus.w, params.k);
+    let cluster = Cluster::new(cfg.n_workers, cfg.max_threads);
+    let mut ledger = Ledger::new(cfg.net);
+    let mut history = Vec::new();
+    let mut snapshots: Vec<(f64, Model)> = Vec::new();
+    let mut rng = Rng::new(cfg.seed);
+
+    // Global accumulated φ̂ (Eq. 11's phi^{m}), stored as row-aligned
+    // owner slices — no worker ever holds the dense matrix.
+    let mut phi_acc = PhiShard::sharded(w, k, cfg.n_workers);
+    let os = phi_acc.owner_slices();
+    let rows_per = phi_acc.rows_per();
+    // iteration-sync counter for the snapshot cadence (see
+    // fit_replicated: the end-of-batch fold must not shift snapshots)
+    let mut iter_syncs = 0usize;
+    let mut scratch = SyncScratch::default();
+    let mut flat_buf: Vec<u32> = Vec::new();
+
+    let global_budget = cfg.nnz_budget.saturating_mul(cfg.n_workers);
+    let mut stream = MiniBatchStream::new(corpus, global_budget);
+    let mut pending = stream.next();
+    while let Some(mb) = pending.take() {
+        let tokens = mb.data.tokens().max(1.0);
+        // worker RNG splits drawn at the same stream position as the
+        // replicated path (once per batch, batch order), so both modes
+        // see identical shard initialization
+        let shards: Vec<Mutex<ShardBp>> = build_shards(&mb, k, cfg.n_workers, &mut rng);
+
+        // Per-batch working state: φ̂_eff and r as per-owner stored
+        // slices, f64-backed totals (comm::allreduce::ShardedState).
+        let mut state = ShardedState::new(phi_acc.parts(), k, os);
+        let mut selection = Selection::full(w);
+        let mut power: Option<PowerSet> = None;
+        let mut prev_resid = f64::INFINITY;
+        let mut first_resid = f64::INFINITY;
+        let mut iters_run = 0;
+
+        for t in 1..=cfg.max_iters {
+            iters_run = t;
+            // --- doc-parallel sweep, φ̂ rows read in place from the
+            //     owner slices (no gather materialization leader-side;
+            //     the simulated transfer is charged below) ---
+            let budget = cluster.doc_threads_per_worker();
+            let (reports, _wall) = {
+                let phi_parts = state.phi_parts();
+                let view = PhiView::Slices { parts: &phi_parts, rows_per };
+                let tot_ref: &[f32] = state.phi_tot();
+                let sel_ref = &selection;
+                cluster.run(|n| {
+                    let mut shard = shards[n].lock().unwrap();
+                    shard.sweep_parallel_view(
+                        &cluster, budget, view, tot_ref, sel_ref, params, true,
+                    )
+                })
+            };
+            let secs: Vec<f64> = reports
+                .iter()
+                .map(|(_, timing)| timing.critical_path_secs(budget))
+                .collect();
+
+            // --- owner-sliced reduce-scatter into the stored slices ---
+            let plan = match &power {
+                None => ReducePlan::Dense { len: w * k },
+                Some(ps) => {
+                    ps.flat_indices_into(k, &mut flat_buf);
+                    ReducePlan::Subset { indices: &flat_buf }
+                }
+            };
+            let pairs = allreduce_step_sharded(
+                &cluster, &plan, phi_acc.parts(), &shards, &mut state, &mut scratch,
+            );
+
+            // --- convergence decision first (line 26), so the ledger's
+            //     allgather half can charge exactly the next sweep's
+            //     working set — nothing when the batch stops here ---
+            let resid_per_token = state.r_total() / tokens;
+            if t == 1 {
+                first_resid = resid_per_token.max(1e-12);
+            }
+            let converged = t >= cfg.min_iters
+                && resid_per_token <= cfg.converge_thresh
+                && resid_per_token <= cfg.converge_rel * first_resid
+                && resid_per_token <= prev_resid;
+            let stopping = converged || t == cfg.max_iters;
+
+            // --- dynamic power selection for the next iteration, from
+            //     the sharded residual slices (bitwise-equal schedule) ---
+            let next: Option<PowerSet> = if !stopping
+                && (cfg.power.lambda_w < 1.0 || cfg.power.lambda_k_times_k < k)
+            {
+                Some(select_power_sharded(&state.r_parts(), rows_per, w, k, &cfg.power))
+            } else {
+                None
+            };
+
+            // reduce half: the synchronized Δφ̂ + r pairs; gather half:
+            // the φ̂ working set the next sweep reads (full matrix when
+            // the next sweep is dense)
+            let reduce_bytes = 2 * 4 * pairs;
+            let gather_bytes = if stopping {
+                0
+            } else {
+                4 * next.as_ref().map_or(w * k, |ps| ps.pairs())
+            };
+            ledger.record_compute(&secs);
+            ledger.record_sync_split(mb.index, t, reduce_bytes, gather_bytes, cfg.n_workers);
+
+            iter_syncs += 1;
+            if cfg.snapshot_every > 0 && iter_syncs % cfg.snapshot_every == 0 {
+                snapshots.push((
+                    ledger.total_secs(),
+                    Model { k, w, phi_wk: state.render_dense() },
+                ));
+            }
+            history.push(IterStat {
+                batch: mb.index,
+                iter: t,
+                residual_per_token: resid_per_token,
+                synced_pairs: pairs,
+                sim_elapsed: ledger.total_secs(),
+                wall_elapsed: wall.total_secs(),
+            });
+
+            if converged {
+                break;
+            }
+            prev_resid = resid_per_token;
+            if let Some(ps) = next {
+                selection = Selection::from_power(&ps, w);
+                power = Some(ps);
+            }
+        }
+
+        // --- fold the batch gradient into the sharded accumulator
+        //     (Eq. 11): each owner folds every worker's Δφ̂ over its own
+        //     slice — reduce_chunked's per-element left fold, fused with
+        //     the copy-back. The simulated transfer is the replicated
+        //     fold's: one full φ̂ matrix reduced and re-gathered
+        //     (identical payload and wire bytes to `record_sync`). ---
+        let next_mb = stream.next();
+        {
+            let guards: Vec<_> = shards.iter().map(|s| s.lock().unwrap()).collect();
+            let dphi_parts: Vec<&[f32]> =
+                guards.iter().map(|g| g.dphi.as_slice()).collect();
+            state.fold_batch(&cluster, phi_acc.parts_mut(), &dphi_parts);
+            drop(guards);
+            ledger.record_sync_split(
+                mb.index,
+                iters_run + 1,
+                4 * w * k,
+                4 * w * k,
+                cfg.n_workers,
+            );
+        }
+        pending = next_mb;
+        let _ = wall.lap_secs();
+    }
+
+    TrainResult {
+        model: Model { k, w, phi_wk: phi_acc.to_dense() },
+        history,
+        ledger,
+        wall_secs: wall.total_secs(),
+        snapshots,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -514,6 +743,54 @@ mod tests {
         let r = fit(&c, &params, &PobpConfig { nnz_budget: 700, ..PobpConfig::obp(5) });
         assert!(r.ledger.comm_secs == 0.0, "N=1 must not pay comm time");
         assert!(r.model.mass() > 0.0);
+    }
+
+    #[test]
+    fn sharded_storage_matches_replicated_oracle() {
+        // The deep bitwise pins (thread budgets 1/2/8, full + power
+        // configs) live in rust/tests/shard_equiv.rs; this is the
+        // smoke-level contract: same model bits, same residual
+        // trajectory, same pair/byte accounting, smaller resident φ̂.
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        let base = PobpConfig {
+            n_workers: 3,
+            nnz_budget: 900,
+            max_iters: 12,
+            ..Default::default()
+        };
+        let rep = fit(&c, &params, &base);
+        let sh = fit(
+            &c,
+            &params,
+            &PobpConfig { storage: PhiStorageMode::Sharded, ..base },
+        );
+        assert_eq!(sh.model.phi_wk, rep.model.phi_wk);
+        assert_eq!(sh.history.len(), rep.history.len());
+        for (a, b) in sh.history.iter().zip(&rep.history) {
+            assert_eq!(
+                a.residual_per_token.to_bits(),
+                b.residual_per_token.to_bits()
+            );
+            assert_eq!(a.synced_pairs, b.synced_pairs);
+        }
+        assert_eq!(sh.ledger.sync_count(), rep.ledger.sync_count());
+        assert_eq!(
+            sh.ledger.payload_bytes_total(),
+            rep.ledger.payload_bytes_total()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap pipeline")]
+    fn sharded_storage_rejects_overlap() {
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        fit(&c, &params, &PobpConfig {
+            storage: PhiStorageMode::Sharded,
+            overlap: true,
+            ..Default::default()
+        });
     }
 
     #[test]

@@ -152,6 +152,41 @@ impl SweepTiming {
     }
 }
 
+/// A read-only view of the frozen global φ̂ the sweep kernels consume:
+/// either the dense replicated `W·K` matrix, or the sharded storage
+/// mode's per-owner row-aligned slices read in place (no worker ever
+/// concatenates them). Rows are whole in either representation —
+/// `OwnerSlices::row_aligned` guarantees a word's topic row never
+/// straddles two slices — so [`PhiView::row`] hands the kernel the
+/// identical bits either way.
+#[derive(Clone, Copy)]
+pub enum PhiView<'a> {
+    /// the replicated dense `W·K` matrix, row-major
+    Dense(&'a [f32]),
+    /// row-aligned owner slices: row `w` lives in
+    /// `parts[w / rows_per]` at local row `w % rows_per`
+    Slices {
+        /// per-owner φ̂ slices, owner order
+        parts: &'a [&'a [f32]],
+        /// φ̂ rows per owner slice (the partition stride)
+        rows_per: usize,
+    },
+}
+
+impl<'a> PhiView<'a> {
+    /// Word `wi`'s topic row (len `k`), identical bits in either mode.
+    #[inline]
+    pub fn row(&self, wi: usize, k: usize) -> &'a [f32] {
+        match *self {
+            PhiView::Dense(d) => &d[wi * k..(wi + 1) * k],
+            PhiView::Slices { parts, rows_per } => {
+                let lo = (wi % rows_per) * k;
+                &parts[wi / rows_per][lo..lo + k]
+            }
+        }
+    }
+}
+
 /// Per-sweep frozen context shared by every document: the global φ̂ and
 /// its topic totals, the selection, hoisted α/β/Wβ, and — for subset
 /// sweeps — the packed per-word φ̂/φ̂_Σ gathers at each selected word's
@@ -159,7 +194,7 @@ impl SweepTiming {
 /// the kernel's subset lanes read contiguous memory.
 struct SweepCtx<'a> {
     k: usize,
-    phi_wk: &'a [f32],
+    phi: PhiView<'a>,
     phi_tot: &'a [f32],
     sel: &'a Selection,
     packed_phi: Vec<f32>,
@@ -181,6 +216,18 @@ impl<'a> SweepCtx<'a> {
         update_phi: bool,
     ) -> SweepCtx<'a> {
         debug_assert_eq!(phi_wk.len(), w * k);
+        SweepCtx::new_view(w, k, PhiView::Dense(phi_wk), phi_tot, sel, p, update_phi)
+    }
+
+    fn new_view(
+        w: usize,
+        k: usize,
+        phi: PhiView<'a>,
+        phi_tot: &'a [f32],
+        sel: &'a Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> SweepCtx<'a> {
         let (mut packed_phi, mut packed_tot) = (Vec::new(), Vec::new());
         if !sel.full {
             let pairs = sel.topic_ids.len();
@@ -189,15 +236,19 @@ impl<'a> SweepCtx<'a> {
             for wi in 0..w {
                 let lo = sel.topic_off[wi] as usize;
                 let hi = sel.topic_off[wi + 1] as usize;
+                if lo == hi {
+                    continue;
+                }
+                let row = phi.row(wi, k);
                 for &t in &sel.topic_ids[lo..hi] {
-                    packed_phi.push(phi_wk[wi * k + t as usize]);
+                    packed_phi.push(row[t as usize]);
                     packed_tot.push(phi_tot[t as usize]);
                 }
             }
         }
         SweepCtx {
             k,
-            phi_wk,
+            phi,
             phi_tot,
             sel,
             packed_phi,
@@ -296,7 +347,7 @@ fn fused_update(
             let mu = &mut mu[..k];
             let th = &mut th[..k];
             let th_old = &th_old[..k];
-            let phi_row = &ctx.phi_wk[wi * k..(wi + 1) * k];
+            let phi_row = ctx.phi.row(wi, k);
             let phi_tot = &ctx.phi_tot[..k];
             let scores = &mut lanes.scores[..k];
             // score phase: pure elementwise lanes (vectorizable)
@@ -775,6 +826,34 @@ impl ShardBp {
         p: &LdaParams,
         update_phi: bool,
     ) -> (f64, SweepTiming) {
+        debug_assert_eq!(phi_wk.len(), self.data.w * self.k);
+        self.sweep_parallel_view(
+            pool,
+            budget,
+            PhiView::Dense(phi_wk),
+            phi_tot,
+            sel,
+            p,
+            update_phi,
+        )
+    }
+
+    /// [`ShardBp::sweep_parallel`] generalized over the φ̂ representation:
+    /// the sharded storage mode's sweep entry point, reading φ̂ rows
+    /// through a [`PhiView`] (dense replica or row-aligned owner slices)
+    /// — identical bits either way, so results are bitwise equal to the
+    /// dense path on the same φ̂ contents.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep_parallel_view(
+        &mut self,
+        pool: &Cluster,
+        budget: usize,
+        view: PhiView<'_>,
+        phi_tot: &[f32],
+        sel: &Selection,
+        p: &LdaParams,
+        update_phi: bool,
+    ) -> (f64, SweepTiming) {
         let k = self.k;
         let nblocks = self.block_doc_off.len().saturating_sub(1);
         if nblocks == 0 {
@@ -785,7 +864,7 @@ impl ShardBp {
             self.scratch_dphi = vec![0.0; srows * k];
             self.scratch_r = vec![0.0; srows * k];
         }
-        let ctx = SweepCtx::new(self.data.w, k, phi_wk, phi_tot, sel, p, update_phi);
+        let ctx = SweepCtx::new_view(self.data.w, k, view, phi_tot, sel, p, update_phi);
 
         struct BlockTask<'a> {
             d0: usize,

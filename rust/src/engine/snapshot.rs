@@ -111,6 +111,25 @@ impl PhiSnapshot {
         self.resync_totals();
     }
 
+    /// Dense publish from a **sliced** source — the sharded storage
+    /// mode's snapshot path: the per-owner row-aligned φ̂ slices are
+    /// copied consecutively (owner order = dense row order) and the f64
+    /// totals rebuilt from scratch. Bitwise identical to
+    /// [`PhiSnapshot::apply_dense`] on the concatenation, without the
+    /// caller ever materializing it.
+    pub fn apply_dense_parts(&mut self, parts: &[&[f32]]) {
+        debug_assert_eq!(
+            parts.iter().map(|p| p.len()).sum::<usize>(),
+            self.phi.len()
+        );
+        let mut off = 0;
+        for p in parts {
+            self.phi[off..off + p.len()].copy_from_slice(p);
+            off += p.len();
+        }
+        self.resync_totals();
+    }
+
     /// Subset publish: copy `src` at the selected pairs and move the f64
     /// totals by the exact per-pair deltas. O(selected pairs + W) — the
     /// word-bitmap scan; no K-wide work on un-selected words.
@@ -307,6 +326,24 @@ mod tests {
         let (phi_o, tot_o) = clone_rebuild(&src, k);
         assert_eq!(snap.phi(), &phi_o[..]);
         assert_eq!(snap.phi_tot(), &tot_o[..]);
+    }
+
+    #[test]
+    fn dense_parts_publish_matches_concatenated_apply() {
+        let (w, k) = (40, 8);
+        let mut rng = Rng::new(17);
+        let src: Vec<f32> = (0..w * k).map(|_| rng.f32() * 5.0).collect();
+        // row-aligned slices like the sharded coordinator's state
+        let os = crate::comm::OwnerSlices::row_aligned(w * k, k, 3);
+        let parts: Vec<&[f32]> = (0..os.owners()).map(|n| &src[os.range(n)]).collect();
+
+        let zeros = vec![0.0; w * k];
+        let mut from_parts = PhiSnapshot::new(&zeros, k, 0);
+        from_parts.apply_dense_parts(&parts);
+        let mut from_dense = PhiSnapshot::new(&zeros, k, 0);
+        from_dense.apply_dense(&src);
+        assert_eq!(from_parts.phi(), from_dense.phi());
+        assert_eq!(from_parts.phi_tot(), from_dense.phi_tot());
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::engine::traits::{LdaParams, Model, TrainResult};
 use crate::engine::vb::fit_vb;
 use crate::eval::perplexity::predictive_perplexity;
 use crate::sched::PowerParams;
+use crate::storage::PhiStorageMode;
 use crate::synth::{generate, SynthSpec, TABLE3};
 
 /// Every algorithm the paper evaluates (Figs. 8–12, Tables 4–5).
@@ -93,6 +94,12 @@ pub struct RunOpts {
     /// by construction). Default `false`: the paper charges POBP the
     /// serialized BSP cost of Fig. 1.
     pub overlap: bool,
+    /// φ̂ storage layout for the POBP family (`PobpConfig::storage`):
+    /// `Replicated` (default) keeps the dense per-processor replica,
+    /// `Sharded` stores row-aligned owner slices — O(W·K/N) per-worker
+    /// φ̂ memory, bitwise-identical results. Ignored by the Gibbs/VB
+    /// algorithms.
+    pub storage: PhiStorageMode,
 }
 
 impl Default for RunOpts {
@@ -111,6 +118,7 @@ impl Default for RunOpts {
             seed: 42,
             snapshot_every: 0,
             overlap: false,
+            storage: PhiStorageMode::Replicated,
         }
     }
 }
@@ -146,6 +154,7 @@ pub fn run_algo(algo: Algo, corpus: &Csr, params: &LdaParams, o: &RunOpts) -> Tr
                 // BSP cost (Fig. 1); the overlap ablation flips this to
                 // compare pipelined POBP against the overlapped YLDA
                 overlap: o.overlap,
+                storage: o.storage,
             };
             fit_pobp(corpus, params, &cfg)
         }

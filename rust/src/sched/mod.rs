@@ -7,4 +7,4 @@ pub mod doc_schedule;
 pub mod power;
 
 pub use doc_schedule::DocSchedule;
-pub use power::{select_power, PowerParams, PowerSet};
+pub use power::{select_power, select_power_sharded, PowerParams, PowerSet};

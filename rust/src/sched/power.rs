@@ -114,6 +114,50 @@ pub fn select_power(r_wk: &[f32], w: usize, k: usize, params: &PowerParams) -> P
     PowerSet { words, topics }
 }
 
+/// [`select_power`] over a **sharded** residual matrix: the per-owner
+/// row-aligned r slices of the sharded storage mode (`r_parts`, owner
+/// order; word `wi`'s row lives in `r_parts[wi / rows_per]` at local row
+/// `wi % rows_per`). Per-row sums, the word partial sort and the
+/// per-word topic partial sorts all see the identical values in the
+/// identical order as the dense path, so the selection is **bitwise
+/// equal** to [`select_power`] on the concatenation — the schedule, and
+/// with it the whole sharded training trajectory, cannot drift from the
+/// replicated oracle's.
+pub fn select_power_sharded(
+    r_parts: &[&[f32]],
+    rows_per: usize,
+    w: usize,
+    k: usize,
+    params: &PowerParams,
+) -> PowerSet {
+    debug_assert_eq!(r_parts.iter().map(|p| p.len()).sum::<usize>(), w * k);
+    // Step 1: word marginals, rows read in place from the owner slices
+    let r_w: Vec<f32> = (0..w)
+        .map(|wi| {
+            let lo = (wi % rows_per) * k;
+            r_parts[wi / rows_per][lo..lo + k].iter().sum()
+        })
+        .collect();
+    let words = top_k_desc(&r_w, params.words_of(w));
+    // Step 2: per selected word, top topics within its slice-local row
+    // (window-relative indices = topic ids, same as the dense stride)
+    let kk = params.topics_of(k);
+    let topics = words
+        .iter()
+        .map(|&wi| {
+            let wi = wi as usize;
+            top_k_desc_strided(
+                r_parts[wi / rows_per],
+                (wi % rows_per) * k,
+                1,
+                k,
+                kk,
+            )
+        })
+        .collect();
+    PowerSet { words, topics }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +207,30 @@ mod tests {
         let mut buf = vec![99u32; 7];
         ps.flat_indices_into(4, &mut buf);
         assert_eq!(buf, vec![12, 14, 5]);
+    }
+
+    #[test]
+    fn sharded_selection_bitwise_equals_dense() {
+        // ties included: coarse quantization forces equal residuals, so
+        // this also pins the tie-breaking (lower index wins) across the
+        // two layouts
+        let mut rng = Rng::new(9);
+        for &(w, k, owners) in &[(6usize, 4usize, 2usize), (50, 6, 4), (37, 5, 8)] {
+            let r: Vec<f32> =
+                (0..w * k).map(|_| (rng.f32() * 4.0).floor() / 4.0).collect();
+            let os = crate::comm::OwnerSlices::row_aligned(w * k, k, owners);
+            let parts: Vec<&[f32]> =
+                (0..os.owners()).map(|n| &r[os.range(n)]).collect();
+            let rows_per = os.per() / k;
+            for params in [
+                PowerParams { lambda_w: 0.5, lambda_k_times_k: 2 },
+                PowerParams::paper_default(),
+            ] {
+                let dense = select_power(&r, w, k, &params);
+                let sharded = select_power_sharded(&parts, rows_per, w, k, &params);
+                assert_eq!(dense, sharded, "w={w} k={k} owners={owners}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Storage-mode abstraction for the accumulated topic–word matrix φ̂:
+//! the coordinator's big-K "model-parallel" switch (ISSUE 6 / ROADMAP
+//! open item 2, after *Model-Parallel Inference for Big Topic Models*,
+//! Zheng et al.).
+//!
+//! * [`PhiShard::Replicated`] — the classic dense `W·K` replica every
+//!   processor holds; retained as the default mode and the bitwise
+//!   oracle.
+//! * [`PhiShard::Sharded`] — each logical worker persistently stores
+//!   only its **row-aligned owner slice** of φ̂
+//!   ([`OwnerSlices::row_aligned`]), so per-worker φ̂ memory is
+//!   O(W·K/N) and a K·W that cannot fit as a dense replica still
+//!   trains. Sweeps read rows through `engine::bp::PhiView::Slices`;
+//!   nothing on the training path ever concatenates the slices.
+//!
+//! Contract 5 (docs/ARCHITECTURE.md) pins the interchangeability: with
+//! identical inputs the two modes produce bitwise-identical models,
+//! totals and residual histories (`rust/tests/shard_equiv.rs`).
+
+use crate::comm::OwnerSlices;
+
+/// Which φ̂ storage layout the coordinator trains under.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PhiStorageMode {
+    /// dense `W·K` replica on every processor (the oracle)
+    #[default]
+    Replicated,
+    /// row-aligned owner slices, one per logical worker — O(W·K/N)
+    /// per-worker φ̂ memory
+    Sharded,
+}
+
+/// The accumulated φ̂ matrix under either storage mode.
+#[derive(Clone, Debug)]
+pub enum PhiShard {
+    /// the dense row-major `W·K` matrix
+    Replicated(Vec<f32>),
+    /// per-owner row-aligned slices, owner order; `parts[n]` covers
+    /// `os.range(n)` of the flat row-major space
+    Sharded {
+        /// the row-aligned owner partition
+        os: OwnerSlices,
+        /// topics per word (row width)
+        k: usize,
+        /// per-owner slices
+        parts: Vec<Vec<f32>>,
+    },
+}
+
+impl PhiShard {
+    /// Zeroed dense replica.
+    pub fn replicated(w: usize, k: usize) -> PhiShard {
+        PhiShard::Replicated(vec![0.0; w * k])
+    }
+
+    /// Zeroed sharded accumulator: `owners` row-aligned slices of a
+    /// `W·K` flat space.
+    pub fn sharded(w: usize, k: usize, owners: usize) -> PhiShard {
+        let os = OwnerSlices::row_aligned(w * k, k, owners);
+        let parts = (0..owners).map(|n| vec![0.0; os.range(n).len()]).collect();
+        PhiShard::Sharded { os, k, parts }
+    }
+
+    /// The storage mode this matrix is held under.
+    pub fn mode(&self) -> PhiStorageMode {
+        match self {
+            PhiShard::Replicated(_) => PhiStorageMode::Replicated,
+            PhiShard::Sharded { .. } => PhiStorageMode::Sharded,
+        }
+    }
+
+    /// The owner slices (sharded mode only).
+    ///
+    /// # Panics
+    /// On a replicated matrix, which has no owner partition.
+    pub fn owner_slices(&self) -> OwnerSlices {
+        match self {
+            PhiShard::Replicated(_) => panic!("replicated φ̂ has no owner slices"),
+            PhiShard::Sharded { os, .. } => *os,
+        }
+    }
+
+    /// Borrowed per-owner slices (sharded mode only) — the
+    /// `ShardedState` / `PhiView::Slices` input.
+    ///
+    /// # Panics
+    /// On a replicated matrix.
+    pub fn parts(&self) -> &[Vec<f32>] {
+        match self {
+            PhiShard::Replicated(_) => panic!("replicated φ̂ has no slice parts"),
+            PhiShard::Sharded { parts, .. } => parts,
+        }
+    }
+
+    /// Mutable per-owner slices (sharded mode only) — the end-of-batch
+    /// accumulator fold target.
+    ///
+    /// # Panics
+    /// On a replicated matrix.
+    pub fn parts_mut(&mut self) -> &mut [Vec<f32>] {
+        match self {
+            PhiShard::Replicated(_) => panic!("replicated φ̂ has no slice parts"),
+            PhiShard::Sharded { parts, .. } => parts,
+        }
+    }
+
+    /// φ̂ rows per owner slice (sharded mode only) — the `PhiView`
+    /// stride.
+    ///
+    /// # Panics
+    /// On a replicated matrix.
+    pub fn rows_per(&self) -> usize {
+        match self {
+            PhiShard::Replicated(_) => panic!("replicated φ̂ has no slice stride"),
+            PhiShard::Sharded { os, k, .. } => os.per() / k,
+        }
+    }
+
+    /// Bytes of φ̂ one worker keeps resident: the full matrix when
+    /// replicated, the largest owner slice when sharded.
+    pub fn resident_bytes_per_worker(&self) -> usize {
+        match self {
+            PhiShard::Replicated(d) => 4 * d.len(),
+            PhiShard::Sharded { parts, .. } => {
+                parts.iter().map(|p| 4 * p.len()).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Materialize the dense row-major matrix (model export /
+    /// evaluation; the sharded training path never calls this
+    /// mid-batch).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            PhiShard::Replicated(d) => d.clone(),
+            PhiShard::Sharded { parts, .. } => parts.concat(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharded_partition_is_row_aligned_and_complete() {
+        let (w, k, n) = (37, 5, 4);
+        let s = PhiShard::sharded(w, k, n);
+        let os = s.owner_slices();
+        assert_eq!(os.owners(), n);
+        assert_eq!(s.rows_per(), w.div_ceil(n));
+        let total: usize = s.parts().iter().map(|p| p.len()).sum();
+        assert_eq!(total, w * k);
+        for (i, p) in s.parts().iter().enumerate() {
+            assert_eq!(p.len(), os.range(i).len());
+            assert_eq!(p.len() % k, 0, "slice {i} holds partial rows");
+        }
+        assert_eq!(s.mode(), PhiStorageMode::Sharded);
+    }
+
+    #[test]
+    fn to_dense_round_trips_slice_writes() {
+        let (w, k, n) = (10, 3, 3);
+        let mut s = PhiShard::sharded(w, k, n);
+        // write a distinct value into each word's row through the parts
+        let rows_per = s.rows_per();
+        for (part_i, part) in s.parts_mut().iter_mut().enumerate() {
+            for (j, v) in part.iter_mut().enumerate() {
+                let wi = part_i * rows_per + j / k;
+                *v = wi as f32;
+            }
+        }
+        let dense = s.to_dense();
+        assert_eq!(dense.len(), w * k);
+        for wi in 0..w {
+            for t in 0..k {
+                assert_eq!(dense[wi * k + t], wi as f32);
+            }
+        }
+        // replicated round trip for parity
+        let r = PhiShard::Replicated(dense.clone());
+        assert_eq!(r.to_dense(), dense);
+    }
+
+    #[test]
+    fn resident_bytes_shrink_with_owners() {
+        let (w, k) = (2000, 50);
+        let rep = PhiShard::replicated(w, k);
+        assert_eq!(rep.resident_bytes_per_worker(), 4 * w * k);
+        let mut prev = usize::MAX;
+        for n in [1usize, 2, 4, 8] {
+            let s = PhiShard::sharded(w, k, n);
+            let b = s.resident_bytes_per_worker();
+            assert_eq!(b, 4 * w.div_ceil(n) * k);
+            assert!(b <= prev);
+            prev = b;
+        }
+        // ≈ W·K/N: within one row of the even split
+        let s8 = PhiShard::sharded(w, k, 8);
+        assert!(s8.resident_bytes_per_worker() <= 4 * (w / 8 + 1) * k);
+    }
+
+    #[test]
+    fn default_mode_is_replicated() {
+        assert_eq!(PhiStorageMode::default(), PhiStorageMode::Replicated);
+    }
+}

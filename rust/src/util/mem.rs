@@ -53,6 +53,31 @@ impl MemModel {
             + 8 * self.nnz_resident // CSR (word id + count)
     }
 
+    /// Bytes of the global φ̂ + r replica one processor keeps resident in
+    /// **replicated** storage mode — the `2·4·K·W` term of
+    /// [`MemModel::pobp_bytes`], broken out so the two storage modes can
+    /// be compared like-for-like.
+    pub fn phi_replica_bytes(&self) -> usize {
+        2 * 4 * self.k * self.w
+    }
+
+    /// Per-processor resident φ̂ bytes in **sharded** storage mode: the
+    /// row-aligned owner slice of φ̂ + r (`2·4·ceil(W/N)·K`, the
+    /// `OwnerSlices::row_aligned` split) plus the gathered working set
+    /// of the current power selection (`4·working_pairs` packed f32
+    /// lanes). O(W·K/N) — the model-parallel big-K claim.
+    pub fn phi_sharded_bytes(&self, n: usize, working_pairs: usize) -> usize {
+        2 * 4 * self.w.div_ceil(n.max(1)) * self.k + 4 * working_pairs
+    }
+
+    /// [`MemModel::pobp_bytes`] with the φ̂ replica swapped for the
+    /// sharded per-processor slice — what one worker keeps resident when
+    /// the coordinator trains with `PhiStorageMode::Sharded`.
+    pub fn pobp_sharded_bytes(&self, n: usize, working_pairs: usize) -> usize {
+        self.pobp_bytes() - self.phi_replica_bytes()
+            + self.phi_sharded_bytes(n, working_pairs)
+    }
+
     /// Parallel GS family: token topic labels (u32) + ndk (D/N x K u32) +
     /// global nwk (K x W u32) + nk + tokens (doc,word) u32 pairs.
     pub fn pgs_bytes(&self) -> usize {
@@ -93,6 +118,37 @@ mod tests {
             w: 5000,
         };
         assert_eq!(mk(128).pobp_bytes(), mk(1024).pobp_bytes());
+    }
+
+    #[test]
+    fn sharded_phi_memory_shrinks_as_w_k_over_n() {
+        let m = MemModel {
+            docs_resident: 1000,
+            nnz_resident: 45_000,
+            tokens_resident: 0,
+            k: 8000,
+            w: 141_043,
+        };
+        // replicated replica is constant in N; sharded slice shrinks
+        let mut prev = usize::MAX;
+        for n in [1usize, 2, 8, 64, 256] {
+            let b = m.phi_sharded_bytes(n, 0);
+            assert!(b < prev, "n={n}");
+            prev = b;
+            // ≈ W·K/N: exact up to the ceil's one-row slack
+            let ideal = 2 * 4 * m.k * m.w / n;
+            assert!(b >= ideal, "n={n}");
+            assert!(b <= ideal + 2 * 4 * m.k, "n={n}: {b} vs {ideal}");
+        }
+        // n = 1 degenerates to the replica
+        assert_eq!(m.phi_sharded_bytes(1, 0), m.phi_replica_bytes());
+        // the working set rides on top
+        assert_eq!(
+            m.phi_sharded_bytes(8, 1000) - m.phi_sharded_bytes(8, 0),
+            4 * 1000
+        );
+        // whole-worker accounting: sharded strictly below replicated
+        assert!(m.pobp_sharded_bytes(8, 45_000) < m.pobp_bytes());
     }
 
     #[test]
