@@ -9,7 +9,9 @@
 //!
 //! `--smoke` (or `--test`) runs every row once on the same corpus
 //! without writing the JSON — the CI quick pass that keeps the bench
-//! *executing*, not just compiling.
+//! *executing*, not just compiling. The smoke pass includes the
+//! kill-and-recover matrix (Contract 6): a training run is killed at
+//! each sync phase in both storage modes and must recover bitwise.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -23,9 +25,11 @@ use pobp::comm::allreduce::{
     OwnerSlices, ReducePlan, ReduceSource, SerialState, ShardedState, SyncScratch,
 };
 use pobp::comm::{Cluster, NetModel};
-use pobp::coordinator::{fit, PobpConfig};
+use pobp::coordinator::{fit, fit_resilient, PobpConfig, ResilienceConfig};
 use pobp::engine::bp::{Selection, ShardBp};
-use pobp::storage::{PhiShard, PhiStorageMode};
+use pobp::fault::{FaultPlan, SyncPhase};
+use pobp::storage::checkpoint::list_checkpoints;
+use pobp::storage::{Checkpoint, PhiShard, PhiStorageMode};
 use pobp::util::mem::MemModel;
 use pobp::engine::fgs::FastGs;
 use pobp::engine::gibbs::{GibbsShard, PlainGs};
@@ -414,6 +418,95 @@ fn main() {
         bigk_sharded / (1 << 20)
     );
 
+    // --- resilience (Contract 6): the kill-and-recover matrix — runs in
+    //     --smoke too, so every CI pass kills a training run at each
+    //     sync phase in both storage modes and asserts the recovered
+    //     result lands on the uninterrupted oracle's bits ---
+    let ck_root = std::env::temp_dir()
+        .join(format!("pobp-microbench-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ck_root);
+    let res_iters = 4;
+    let res_base = PobpConfig {
+        n_workers: 3,
+        // global budget 12k nnz/batch: several mini-batches on this
+        // corpus, so batch-1 kills recover from a real checkpoint
+        nnz_budget: 4_000,
+        max_iters: res_iters,
+        converge_thresh: 0.0,
+        net: NetModel::infiniband_for_scale(k, corpus.w),
+        ..Default::default()
+    };
+    let mut recoveries = 0usize;
+    let mut replay_secs = 0.0;
+    let mut oracle_secs = 0.0;
+    for mode in [PhiStorageMode::Replicated, PhiStorageMode::Sharded] {
+        let mode_name = match mode {
+            PhiStorageMode::Replicated => "replicated",
+            PhiStorageMode::Sharded => "sharded",
+        };
+        let cfg = PobpConfig { storage: mode, ..res_base.clone() };
+        let oracle = fit(&corpus, &params, &cfg);
+        let batches = oracle.history.iter().map(|h| h.batch).max().unwrap_or(0) + 1;
+        assert!(batches >= 3, "kill matrix needs >= 3 mini-batches, got {batches}");
+        oracle_secs += oracle.ledger.total_secs();
+        for (phase, iter) in [
+            (SyncPhase::Sweep, 2),
+            (SyncPhase::MidReduce, 3),
+            (SyncPhase::Fold, res_iters + 1),
+        ] {
+            let dir = ck_root.join(format!("{mode_name}-{}", phase.name()));
+            let plan = FaultPlan::kill(1, iter, phase, 0);
+            let got = fit_resilient(
+                &corpus,
+                &params,
+                &cfg,
+                &ResilienceConfig::in_dir(&dir),
+                Some(&plan),
+            )
+            .unwrap_or_else(|e| {
+                panic!("kill-and-recover ({mode_name}, {}): {e}", phase.name())
+            });
+            assert_eq!(plan.kills_remaining(), 0, "kill point never reached");
+            assert!(got.ledger.recovery_count >= 1, "run was never killed");
+            assert_eq!(
+                got.model.phi_wk, oracle.model.phi_wk,
+                "recovered fit diverged from the oracle ({mode_name}, {})",
+                phase.name()
+            );
+            assert_eq!(
+                got.ledger.total_secs().to_bits(),
+                oracle.ledger.total_secs().to_bits(),
+                "recovered ledger diverged from the oracle ({mode_name}, {})",
+                phase.name()
+            );
+            recoveries += got.ledger.recovery_count as usize;
+            replay_secs += got.ledger.recovery_replay_secs;
+        }
+    }
+    println!(
+        "\nkill-and-recover matrix: {recoveries} kills absorbed (2 storage modes x \
+         sweep/mid-reduce/fold), all bitwise == oracle; replay overhead {:.3}s \
+         on {:.3}s of oracle time",
+        replay_secs, oracle_secs
+    );
+
+    // checkpoint serialize/restore throughput (bytes/s) on a real
+    // checkpoint the matrix left behind
+    let ck_path = list_checkpoints(&ck_root.join("replicated-sweep"))
+        .ok()
+        .and_then(|mut v| v.pop())
+        .expect("kill-and-recover left no checkpoint behind");
+    let ck = Checkpoint::load(&ck_path).expect("checkpoint unreadable");
+    let ck_bytes = std::fs::metadata(&ck_path).map(|m| m.len() as f64).unwrap_or(0.0);
+    let ck_bench_dir = ck_root.join("bench");
+    bench(&mut recs, "checkpoint write (encode+fsync+rename)", it(20), ck_bytes, || {
+        ck.write(&ck_bench_dir, 2).expect("checkpoint write failed");
+    });
+    bench(&mut recs, "checkpoint restore (decode+verify)", it(20), ck_bytes, || {
+        std::hint::black_box(Checkpoint::load(&ck_path).expect("checkpoint load failed"));
+    });
+    let _ = std::fs::remove_dir_all(&ck_root);
+
     // --- machine-readable record for the cross-PR perf trajectory ---
     let find = |recs: &[(String, f64)], name: &str| {
         recs.iter().find(|(n, _)| n == name).map(|&(_, v)| v).unwrap_or(0.0)
@@ -449,6 +542,16 @@ fn main() {
         ("scheduled_sweep_speedup_vs_serial", Json::from(sched_speedup)),
         ("abp_iter_overhead_speedup", Json::from(abp_iter_overhead_speedup)),
         ("overlap_efficiency", Json::from(overlap_eff)),
+        ("resilience", Json::obj(vec![
+            ("kill_recover_cases", Json::from(6usize)),
+            ("recoveries", Json::from(recoveries)),
+            ("checkpoint_bytes", Json::from(ck_bytes as usize)),
+            ("recovery_replay_secs", Json::from(replay_secs)),
+            (
+                "recovery_overhead_frac",
+                Json::from(if oracle_secs > 0.0 { replay_secs / oracle_secs } else { 0.0 }),
+            ),
+        ])),
         ("phi_mem_modes", Json::obj(vec![
             ("n_workers", Json::from(store_n)),
             ("replicated_resident_bytes_per_worker", Json::from(rep_resident)),

@@ -90,6 +90,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::comm::Cluster;
+use crate::fault::{FaultEvent, FaultPlan, SyncPhase};
 
 /// One worker's contribution to a sparse allreduce: Δφ̂ and r values at
 /// the plan's flat indices, in plan order.
@@ -1357,6 +1358,73 @@ pub fn allreduce_step_sharded<S: ReduceSource + Send>(
             sharded_subset_step(cluster, indices, phi_acc_parts, workers, state, scratch)
         }
     }
+}
+
+/// [`allreduce_step`] with the Contract 6 fault-injection hook *inside*
+/// the collective's boundary: the reduce-scatter half has run (the
+/// owners folded their slices into `state` — the working state is
+/// mid-sync) when the plan is consulted, so a tripped
+/// [`SyncPhase::MidReduce`] kill leaves the batch state unusable and
+/// recovery must replay the batch from the last checkpoint. The
+/// arithmetic is the unfaulted step's, bitwise — the hook only decides
+/// whether the result is allowed to reach the coordinator.
+#[allow(clippy::too_many_arguments)]
+pub fn allreduce_step_injected<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+    scratch: &mut SyncScratch,
+    faults: &FaultPlan,
+    batch: usize,
+    iter: usize,
+) -> Result<usize, FaultEvent> {
+    let pairs = allreduce_step(cluster, plan, phi_acc, workers, state, scratch);
+    faults.trip(batch, iter, SyncPhase::MidReduce)?;
+    Ok(pairs)
+}
+
+/// [`allreduce_step_overlap`] with the mid-reduce fault hook — see
+/// [`allreduce_step_injected`].
+#[allow(clippy::too_many_arguments)]
+pub fn allreduce_step_overlap_injected<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc: &[f32],
+    workers: &[Mutex<S>],
+    state: &mut GlobalState,
+    scratch: &mut SyncScratch,
+    faults: &FaultPlan,
+    batch: usize,
+    iter: usize,
+) -> Result<usize, FaultEvent> {
+    let pairs = allreduce_step_overlap(cluster, plan, phi_acc, workers, state, scratch);
+    faults.trip(batch, iter, SyncPhase::MidReduce)?;
+    Ok(pairs)
+}
+
+/// [`allreduce_step_sharded`] with the mid-reduce fault hook — see
+/// [`allreduce_step_injected`]. In sharded storage a mid-reduce kill is
+/// the interesting case: the owner slices (the *persistent* φ̂ working
+/// state) are partially synchronized when the worker dies, and only the
+/// checkpoint's copy is trustworthy.
+#[allow(clippy::too_many_arguments)]
+pub fn allreduce_step_sharded_injected<S: ReduceSource + Send>(
+    cluster: &Cluster,
+    plan: &ReducePlan,
+    phi_acc_parts: &[Vec<f32>],
+    workers: &[Mutex<S>],
+    state: &mut ShardedState,
+    scratch: &mut SyncScratch,
+    faults: &FaultPlan,
+    batch: usize,
+    iter: usize,
+) -> Result<usize, FaultEvent> {
+    let pairs =
+        allreduce_step_sharded(cluster, plan, phi_acc_parts, workers, state, scratch);
+    faults.trip(batch, iter, SyncPhase::MidReduce)?;
+    Ok(pairs)
 }
 
 /// Chunk-parallel element-wise sum on the cluster's OS threads:

@@ -83,6 +83,28 @@ pub struct Ledger {
     /// [`Ledger::record_overlapped_iter`], harmlessly serialized if the
     /// run ends first
     deferred_comm_secs: f64,
+    /// simulated seconds the barrier waited on injected stragglers
+    /// beyond the healthy critical path (Σ over iterations of
+    /// `max(base + delay) − max(base)`); degraded-run attribution only
+    /// — never enters [`Ledger::total_secs`]
+    pub straggler_wait_secs: f64,
+    /// straggler-timeout polls issued while waiting (exponential
+    /// backoff against the α–β timeout,
+    /// [`NetModel::straggler_timeout_secs`])
+    pub straggler_polls: u64,
+    /// measured wall seconds spent writing checkpoints (I/O, not
+    /// simulated; excluded from [`Ledger::total_secs`])
+    pub checkpoint_secs: f64,
+    /// bytes of checkpoint files written
+    pub checkpoint_bytes: u64,
+    /// checkpoints written
+    pub checkpoint_count: u64,
+    /// simulated seconds of training replayed after recoveries (work
+    /// past the restored checkpoint that the killed attempt had already
+    /// paid for); degraded-run attribution only
+    pub recovery_replay_secs: f64,
+    /// recoveries performed (restore-and-replay cycles)
+    pub recovery_count: u64,
 }
 
 impl Ledger {
@@ -95,6 +117,13 @@ impl Ledger {
             comm_secs: 0.0,
             overlap_saved_secs: 0.0,
             deferred_comm_secs: 0.0,
+            straggler_wait_secs: 0.0,
+            straggler_polls: 0,
+            checkpoint_secs: 0.0,
+            checkpoint_bytes: 0,
+            checkpoint_count: 0,
+            recovery_replay_secs: 0.0,
+            recovery_count: 0,
         }
     }
 
@@ -222,12 +251,84 @@ impl Ledger {
         iter_secs
     }
 
+    /// Record one iteration's straggler wait: `base_secs` are the
+    /// healthy per-worker sweep times (already charged through
+    /// [`Ledger::record_compute`]), `delay_secs` the injected per-worker
+    /// straggle. The barrier pays `max(base + delay) − max(base)` —
+    /// exactly the Σmax bookkeeping [`Ledger::record_compute`] uses, so
+    /// the invariant `compute_secs + straggler_wait_secs =
+    /// Σ_iters max(base + delay)` holds to f64 addition order. The
+    /// leader polls the straggler with exponential backoff starting at
+    /// `timeout_secs` (the α–β-model timeout), doubling until the wait
+    /// is covered; polls accumulate in [`Ledger::straggler_polls`].
+    /// Nothing here perturbs [`Ledger::total_secs`] — degraded time is
+    /// reported through [`Ledger::degraded_total_secs`]. Returns the
+    /// wait charged.
+    pub fn record_straggler(
+        &mut self,
+        base_secs: &[f64],
+        delay_secs: &[f64],
+        timeout_secs: f64,
+    ) -> f64 {
+        debug_assert_eq!(base_secs.len(), delay_secs.len());
+        let base = base_secs.iter().cloned().fold(0.0, f64::max);
+        let delayed = base_secs
+            .iter()
+            .zip(delay_secs)
+            .map(|(b, d)| b + d)
+            .fold(0.0, f64::max);
+        let wait = (delayed - base).max(0.0);
+        if wait > 0.0 {
+            self.straggler_wait_secs += wait;
+            let mut t = timeout_secs.max(1e-12);
+            let mut covered = 0.0;
+            while covered < wait && self.straggler_polls < u64::MAX {
+                covered += t;
+                t *= 2.0;
+                self.straggler_polls += 1;
+            }
+        }
+        wait
+    }
+
+    /// Record one checkpoint write: `bytes` of file emitted in `secs`
+    /// of measured wall-clock I/O. Checkpoint I/O is real time, not
+    /// simulated time — it accumulates in the side counters and
+    /// [`Ledger::degraded_total_secs`], never in [`Ledger::total_secs`].
+    pub fn record_checkpoint(&mut self, bytes: usize, secs: f64) {
+        self.checkpoint_count += 1;
+        self.checkpoint_bytes += bytes as u64;
+        self.checkpoint_secs += secs;
+    }
+
+    /// Record one recovery's replay cost: the simulated seconds the
+    /// killed attempt had progressed past the checkpoint the new
+    /// attempt restores from — training work paid twice. Degraded-run
+    /// attribution only.
+    pub fn record_recovery_replay(&mut self, secs: f64) {
+        if secs > 0.0 {
+            self.recovery_count += 1;
+            self.recovery_replay_secs += secs;
+        }
+    }
+
     /// Total simulated elapsed seconds: compute + comm serialized as in
     /// the synchronous MPA of Fig. 1, minus the fraction hidden by
     /// overlap-mode iterations (zero unless
     /// [`Ledger::record_overlapped_iter`] was used).
     pub fn total_secs(&self) -> f64 {
         self.compute_secs + self.comm_secs - self.overlap_saved_secs
+    }
+
+    /// What a degraded run actually cost: the healthy total plus
+    /// straggler waits, checkpoint I/O and recovery replay. Equals
+    /// [`Ledger::total_secs`] exactly on a fault-free run with
+    /// checkpointing disabled.
+    pub fn degraded_total_secs(&self) -> f64 {
+        self.total_secs()
+            + self.straggler_wait_secs
+            + self.checkpoint_secs
+            + self.recovery_replay_secs
     }
 
     /// Communication seconds left *exposed* on the critical path:
@@ -281,6 +382,110 @@ impl Ledger {
         self.comm_secs += other.comm_secs;
         self.overlap_saved_secs += other.overlap_saved_secs;
         self.deferred_comm_secs += other.deferred_comm_secs;
+        self.straggler_wait_secs += other.straggler_wait_secs;
+        self.straggler_polls += other.straggler_polls;
+        self.checkpoint_secs += other.checkpoint_secs;
+        self.checkpoint_bytes += other.checkpoint_bytes;
+        self.checkpoint_count += other.checkpoint_count;
+        self.recovery_replay_secs += other.recovery_replay_secs;
+        self.recovery_count += other.recovery_count;
+    }
+
+    /// Append the ledger's full state — the [`NetModel`], every
+    /// accumulator including the private deferred-comm carry, and the
+    /// event list — to `out` as little-endian bytes (f64s as raw IEEE
+    /// bits). This is the checkpoint engine's LEDGER section payload
+    /// (`storage::checkpoint`, Contract 6): a restored ledger resumes
+    /// accumulating from bitwise-identical f64 sums, which is what
+    /// makes a recovered run's cost accounting equal an uninterrupted
+    /// run's.
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        fn pu(out: &mut Vec<u8>, v: u64) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        fn pf(out: &mut Vec<u8>, v: f64) {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        pf(out, self.net.latency_s);
+        pf(out, self.net.bandwidth_bps);
+        pf(out, self.compute_secs);
+        pu(out, self.wire_bytes);
+        pf(out, self.comm_secs);
+        pf(out, self.overlap_saved_secs);
+        pf(out, self.deferred_comm_secs);
+        pf(out, self.straggler_wait_secs);
+        pu(out, self.straggler_polls);
+        pf(out, self.checkpoint_secs);
+        pu(out, self.checkpoint_bytes);
+        pu(out, self.checkpoint_count);
+        pf(out, self.recovery_replay_secs);
+        pu(out, self.recovery_count);
+        pu(out, self.events.len() as u64);
+        for e in &self.events {
+            pu(out, e.batch as u64);
+            pu(out, e.iter as u64);
+            pu(out, e.payload_bytes as u64);
+            pu(out, e.n as u64);
+            pf(out, e.comm_secs);
+            pf(out, e.reduce_scatter_secs);
+            pf(out, e.allgather_secs);
+        }
+    }
+
+    /// Inverse of [`Ledger::serialize_into`]. `None` if the payload is
+    /// truncated or malformed (the checkpoint loader treats that as
+    /// corruption and refuses the file).
+    pub fn deserialize(bytes: &[u8]) -> Option<Ledger> {
+        struct Rd<'a> {
+            b: &'a [u8],
+            pos: usize,
+        }
+        impl Rd<'_> {
+            fn u64(&mut self) -> Option<u64> {
+                let s = self.b.get(self.pos..self.pos + 8)?;
+                self.pos += 8;
+                Some(u64::from_le_bytes(s.try_into().ok()?))
+            }
+            fn f64(&mut self) -> Option<f64> {
+                Some(f64::from_bits(self.u64()?))
+            }
+        }
+        let mut r = Rd { b: bytes, pos: 0 };
+        let net = NetModel { latency_s: r.f64()?, bandwidth_bps: r.f64()? };
+        let mut l = Ledger::new(net);
+        l.compute_secs = r.f64()?;
+        l.wire_bytes = r.u64()?;
+        l.comm_secs = r.f64()?;
+        l.overlap_saved_secs = r.f64()?;
+        l.deferred_comm_secs = r.f64()?;
+        l.straggler_wait_secs = r.f64()?;
+        l.straggler_polls = r.u64()?;
+        l.checkpoint_secs = r.f64()?;
+        l.checkpoint_bytes = r.u64()?;
+        l.checkpoint_count = r.u64()?;
+        l.recovery_replay_secs = r.f64()?;
+        l.recovery_count = r.u64()?;
+        let n_events = r.u64()? as usize;
+        // sanity bound: each event is 7 fields of 8 bytes
+        if bytes.len().saturating_sub(r.pos) < n_events.checked_mul(56)? {
+            return None;
+        }
+        l.events.reserve(n_events);
+        for _ in 0..n_events {
+            l.events.push(SyncEvent {
+                batch: r.u64()? as usize,
+                iter: r.u64()? as usize,
+                payload_bytes: r.u64()? as usize,
+                n: r.u64()? as usize,
+                comm_secs: r.f64()?,
+                reduce_scatter_secs: r.f64()?,
+                allgather_secs: r.f64()?,
+            });
+        }
+        if r.pos != bytes.len() {
+            return None;
+        }
+        Some(l)
     }
 }
 
@@ -429,6 +634,125 @@ mod tests {
         let before = l.total_secs();
         let fold3 = l.record_sync_deferred(2, 5, fold_bytes, 8);
         assert!((l.total_secs() - before - fold3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_wait_obeys_sigma_max_bookkeeping() {
+        // Σmax invariant: per iteration record_compute charges
+        // max(base) and record_straggler charges max(base + delay) −
+        // max(base), so compute + straggler_wait = Σ max(base + delay).
+        let net = NetModel::infiniband_20gbps();
+        let mut l = Ledger::new(net);
+        let timeout = net.straggler_timeout_secs(1 << 16, 4, 4.0);
+        let iters: &[(&[f64], &[f64])] = &[
+            (&[0.2, 0.5, 0.3], &[0.0, 0.0, 0.7]),   // straggler shifts the max
+            (&[0.4, 0.1, 0.2], &[0.05, 0.0, 0.0]),  // delay hides under the max
+            (&[0.3, 0.3, 0.3], &[0.0, 0.0, 0.0]),   // healthy iteration
+        ];
+        let mut expect = 0.0;
+        for (base, delay) in iters {
+            l.record_compute(base);
+            l.record_straggler(base, delay, timeout);
+            expect += base
+                .iter()
+                .zip(delay.iter())
+                .map(|(b, d)| b + d)
+                .fold(0.0, f64::max);
+        }
+        assert!(
+            (l.compute_secs + l.straggler_wait_secs - expect).abs() < 1e-12,
+            "Σmax broken: {} + {} vs {expect}",
+            l.compute_secs,
+            l.straggler_wait_secs
+        );
+        // the second iteration's delay hid under the healthy max
+        assert!((l.straggler_wait_secs - 0.5).abs() < 1e-12);
+        // backoff polls: first poll at the timeout, doubling — a 0.5 s
+        // wait against a micro-scale timeout needs several polls
+        assert!(l.straggler_polls > 1);
+        // degraded attribution never leaks into the healthy total
+        assert!((l.total_secs() - l.compute_secs).abs() < 1e-15);
+        assert!(
+            (l.degraded_total_secs() - (l.total_secs() + l.straggler_wait_secs)).abs()
+                < 1e-15
+        );
+    }
+
+    #[test]
+    fn checkpoint_and_replay_accounting_stay_out_of_total() {
+        let mut l = Ledger::new(NetModel::infiniband_20gbps());
+        l.record_sync(0, 1, 1 << 16, 8);
+        l.record_compute(&[0.25]);
+        let healthy = l.total_secs();
+        l.record_checkpoint(4096, 0.002);
+        l.record_checkpoint(4096, 0.003);
+        l.record_recovery_replay(0.5);
+        l.record_recovery_replay(0.0); // no-op: nothing was replayed
+        assert_eq!(l.checkpoint_count, 2);
+        assert_eq!(l.checkpoint_bytes, 8192);
+        assert_eq!(l.recovery_count, 1);
+        assert_eq!(l.total_secs().to_bits(), healthy.to_bits());
+        assert!(
+            (l.degraded_total_secs() - (healthy + 0.005 + 0.5)).abs() < 1e-15
+        );
+    }
+
+    #[test]
+    fn ledger_serialization_round_trips_bitwise() {
+        let mut l = Ledger::new(NetModel::gige());
+        l.record_sync(0, 1, 1 << 14, 4);
+        l.record_sync_split(0, 2, 1 << 10, 1 << 12, 4);
+        l.record_compute(&[0.125, 0.5]);
+        l.record_sync_deferred(1, 3, 1 << 12, 4);
+        l.record_overlapped_iter(1, 1, 1 << 10, 4, &[0.25]);
+        l.record_straggler(&[0.1, 0.2], &[0.4, 0.0], 1e-4);
+        l.record_checkpoint(1000, 0.001);
+        l.record_recovery_replay(0.25);
+        let mut buf = Vec::new();
+        l.serialize_into(&mut buf);
+        let r = Ledger::deserialize(&buf).expect("round trip");
+        assert_eq!(r.events.len(), l.events.len());
+        for (a, b) in r.events.iter().zip(&l.events) {
+            assert_eq!(a.batch, b.batch);
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.payload_bytes, b.payload_bytes);
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.comm_secs.to_bits(), b.comm_secs.to_bits());
+            assert_eq!(
+                a.reduce_scatter_secs.to_bits(),
+                b.reduce_scatter_secs.to_bits()
+            );
+            assert_eq!(a.allgather_secs.to_bits(), b.allgather_secs.to_bits());
+        }
+        assert_eq!(r.compute_secs.to_bits(), l.compute_secs.to_bits());
+        assert_eq!(r.comm_secs.to_bits(), l.comm_secs.to_bits());
+        assert_eq!(r.overlap_saved_secs.to_bits(), l.overlap_saved_secs.to_bits());
+        assert_eq!(r.deferred_comm_secs.to_bits(), l.deferred_comm_secs.to_bits());
+        assert_eq!(r.wire_bytes, l.wire_bytes);
+        assert_eq!(
+            r.straggler_wait_secs.to_bits(),
+            l.straggler_wait_secs.to_bits()
+        );
+        assert_eq!(r.straggler_polls, l.straggler_polls);
+        assert_eq!(r.checkpoint_secs.to_bits(), l.checkpoint_secs.to_bits());
+        assert_eq!(r.checkpoint_bytes, l.checkpoint_bytes);
+        assert_eq!(r.checkpoint_count, l.checkpoint_count);
+        assert_eq!(
+            r.recovery_replay_secs.to_bits(),
+            l.recovery_replay_secs.to_bits()
+        );
+        assert_eq!(r.recovery_count, l.recovery_count);
+        assert_eq!(r.total_secs().to_bits(), l.total_secs().to_bits());
+        assert_eq!(
+            r.degraded_total_secs().to_bits(),
+            l.degraded_total_secs().to_bits()
+        );
+        // truncation is detected, front and back
+        assert!(Ledger::deserialize(&buf[..buf.len() - 1]).is_none());
+        assert!(Ledger::deserialize(&buf[..16]).is_none());
+        let mut longer = buf.clone();
+        longer.push(0);
+        assert!(Ledger::deserialize(&longer).is_none());
     }
 
     #[test]

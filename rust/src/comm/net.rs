@@ -112,6 +112,17 @@ impl NetModel {
         compute_secs.max(self.allreduce_secs(bytes, n) + deferred_comm_secs)
     }
 
+    /// Straggler timeout for a sync of `bytes` across `n`: `factor`
+    /// times the α–β allreduce time — a worker that has not reached the
+    /// barrier within `factor` healthy sync windows is presumed slow
+    /// and the leader starts its backoff polling
+    /// ([`Ledger::record_straggler`](crate::comm::Ledger::record_straggler)).
+    /// Floored at one message latency so an n = 1 or zero-byte sync
+    /// still yields a usable (non-zero) timeout.
+    pub fn straggler_timeout_secs(&self, bytes: usize, n: usize, factor: f64) -> f64 {
+        (factor * self.allreduce_secs(bytes, n)).max(self.latency_s)
+    }
+
     /// Total wire bytes an `n`-processor allreduce of `bytes` moves
     /// (all links summed) — the quantity the paper's Eq. (5) counts
     /// as N·K·W elements.
@@ -192,6 +203,19 @@ mod tests {
             m.overlapped_iter_secs(10.0 * comm, 1 << 20, 8, comm),
             10.0 * comm
         );
+    }
+
+    #[test]
+    fn straggler_timeout_scales_with_sync_and_floors_at_latency() {
+        let m = NetModel::infiniband_20gbps();
+        let t = m.straggler_timeout_secs(1 << 20, 8, 4.0);
+        assert_eq!(t, 4.0 * m.allreduce_secs(1 << 20, 8));
+        assert!(
+            m.straggler_timeout_secs(1 << 20, 8, 8.0)
+                > m.straggler_timeout_secs(1 << 20, 8, 4.0)
+        );
+        // n = 1 has a free allreduce; the timeout floors at one latency
+        assert_eq!(m.straggler_timeout_secs(1 << 20, 1, 4.0), m.latency_s);
     }
 
     #[test]

@@ -148,7 +148,34 @@ impl Experiment {
                 "sharded" => PhiStorageMode::Sharded,
                 other => bail!("[run] storage = {other}: replicated|sharded"),
             },
+            // fault tolerance (Contract 6): `checkpoint_every > 0` or
+            // `resume = true` routes the POBP family through
+            // `coordinator::fit_resilient`
+            checkpoint_every: cf.typed("run", "checkpoint_every", defaults.checkpoint_every)?,
+            checkpoint_dir: cf
+                .get("run", "checkpoint_dir")
+                .unwrap_or(&defaults.checkpoint_dir)
+                .to_string(),
+            max_retries: cf.typed("run", "max_retries", defaults.max_retries)?,
+            straggler_timeout_factor: cf.typed(
+                "run",
+                "straggler_timeout",
+                defaults.straggler_timeout_factor,
+            )?,
+            resume: cf.typed("run", "resume", defaults.resume)?,
         };
+        // invalid [run] combinations fail here with the typed message,
+        // not as a panic mid-run (e.g. overlap + sharded storage)
+        if matches!(algo, Algo::Pobp | Algo::PobpFull | Algo::Obp | Algo::BatchBp) {
+            crate::repro::pobp_config(algo, &params, &opts)
+                .validate()
+                .map_err(|e| anyhow::anyhow!("[run] {e}"))?;
+            if opts.wants_resilience() {
+                opts.resilience()
+                    .validate()
+                    .map_err(|e| anyhow::anyhow!("[run] {e}"))?;
+            }
+        }
         Ok(Experiment { dataset, scale, seed, params, algo, opts })
     }
 }
@@ -201,6 +228,36 @@ network = gige
         let cf = ConfigFile::parse("[run]\nalgo = nope\n").unwrap();
         assert!(Experiment::from_config(&cf).is_err());
         let cf = ConfigFile::parse("[run]\nworkers = many\n").unwrap();
+        assert!(Experiment::from_config(&cf).is_err());
+    }
+
+    #[test]
+    fn rejects_overlap_with_sharded_storage() {
+        // the invalid combination fails at config-resolution time with
+        // the typed coordinator message, not as a panic mid-run
+        let cf =
+            ConfigFile::parse("[run]\noverlap = true\nstorage = sharded\n").unwrap();
+        let err = Experiment::from_config(&cf).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn resilience_keys_resolve() {
+        let cf = ConfigFile::parse(
+            "[run]\ncheckpoint_every = 2\ncheckpoint_dir = ckpts\n\
+             max_retries = 5\nstraggler_timeout = 6.5\nresume = true\n",
+        )
+        .unwrap();
+        let e = Experiment::from_config(&cf).unwrap();
+        assert_eq!(e.opts.checkpoint_every, 2);
+        assert_eq!(e.opts.checkpoint_dir, "ckpts");
+        assert_eq!(e.opts.max_retries, 5);
+        assert!((e.opts.straggler_timeout_factor - 6.5).abs() < 1e-12);
+        assert!(e.opts.resume);
+        assert!(e.opts.wants_resilience());
+        // degenerate resilience knobs are rejected the same way
+        let cf = ConfigFile::parse("[run]\ncheckpoint_every = 1\nstraggler_timeout = 0\n")
+            .unwrap();
         assert!(Experiment::from_config(&cf).is_err());
     }
 

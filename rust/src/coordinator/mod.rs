@@ -70,18 +70,23 @@
 //! network model. Numerical results are *identical* to a real N-process
 //! deployment because the allreduce is a deterministic leader-side sum.
 
+use std::fmt;
+use std::path::PathBuf;
 use std::sync::Mutex;
 
 use crate::comm::allreduce::{
-    allreduce_step, allreduce_step_overlap, allreduce_step_sharded, reduce_chunked,
-    GlobalState, ReducePlan, ShardedState, SyncScratch,
+    allreduce_step, allreduce_step_injected, allreduce_step_overlap,
+    allreduce_step_overlap_injected, allreduce_step_sharded,
+    allreduce_step_sharded_injected, reduce_chunked, GlobalState, ReducePlan,
+    ShardedState, SyncScratch,
 };
 use crate::comm::{Cluster, Ledger, NetModel};
 use crate::corpus::{shard_ranges, Csr, MiniBatch, MiniBatchStream};
 use crate::engine::bp::{PhiView, Selection, ShardBp};
 use crate::engine::traits::{IterStat, LdaParams, Model, TrainResult};
+use crate::fault::{FaultEvent, FaultPlan, SyncPhase};
 use crate::sched::{select_power, select_power_sharded, PowerParams, PowerSet};
-use crate::storage::{PhiShard, PhiStorageMode};
+use crate::storage::{Checkpoint, CkptExpect, PhiShard, PhiStorageMode};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -175,6 +180,251 @@ impl PobpConfig {
             ..Default::default()
         }
     }
+
+    /// Check for unsupported or degenerate combinations. Every `fit_*`
+    /// entry point calls this before touching the corpus, so invalid
+    /// configurations surface as typed [`ConfigError`]s at the front
+    /// door instead of panics deep inside a training loop.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.n_workers == 0 {
+            return Err(ConfigError::ZeroWorkers);
+        }
+        if self.max_iters == 0 {
+            return Err(ConfigError::ZeroMaxIters);
+        }
+        if self.nnz_budget == 0 {
+            return Err(ConfigError::ZeroNnzBudget);
+        }
+        if self.overlap && self.storage == PhiStorageMode::Sharded {
+            return Err(ConfigError::OverlapShardedUnsupported);
+        }
+        Ok(())
+    }
+}
+
+/// A rejected configuration. Every unsupported combination that used to
+/// be an `assert!` inside a fit loop is a typed variant here, so front
+/// ends (TOML configs, CLI flags) can report it before any work starts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ConfigError {
+    /// `storage = sharded` with `overlap = true`: the overlap pipeline
+    /// is not wired through sharded storage yet.
+    OverlapShardedUnsupported,
+    /// `n_workers == 0`
+    ZeroWorkers,
+    /// `max_iters == 0`
+    ZeroMaxIters,
+    /// `nnz_budget == 0`
+    ZeroNnzBudget,
+    /// checkpointing or resume requested without a checkpoint directory
+    CheckpointDirMissing,
+    /// `keep_checkpoints == 0` would prune a checkpoint the moment it
+    /// is written, leaving nothing to recover from
+    ZeroKeepCheckpoints,
+    /// the straggler timeout must be a positive finite multiple of the
+    /// modeled sync time
+    BadStragglerFactor(f64),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::OverlapShardedUnsupported => write!(
+                f,
+                "sharded storage does not support the overlap pipeline yet \
+                 (set overlap = false or storage = replicated)"
+            ),
+            ConfigError::ZeroWorkers => write!(f, "n_workers must be at least 1"),
+            ConfigError::ZeroMaxIters => write!(f, "max_iters must be at least 1"),
+            ConfigError::ZeroNnzBudget => write!(f, "nnz_budget must be positive"),
+            ConfigError::CheckpointDirMissing => {
+                write!(f, "checkpointing is enabled but checkpoint_dir is empty")
+            }
+            ConfigError::ZeroKeepCheckpoints => {
+                write!(f, "keep_checkpoints must be at least 1")
+            }
+            ConfigError::BadStragglerFactor(x) => write!(
+                f,
+                "straggler_timeout_factor must be positive and finite, got {x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Why a training attempt did not produce a [`TrainResult`].
+#[derive(Debug)]
+pub enum TrainError {
+    /// rejected by [`PobpConfig::validate`] / [`ResilienceConfig::validate`]
+    Config(ConfigError),
+    /// an injected kill fired; `sim_secs_at_death` is the simulated
+    /// clock at the kill point, which [`fit_resilient`] uses to charge
+    /// the recovery replay exactly
+    Killed { fault: FaultEvent, sim_secs_at_death: f64 },
+    /// [`fit_resilient`] gave up: kills kept firing past `max_retries`
+    RetriesExhausted { fault: FaultEvent, retries: usize },
+    /// checkpoint I/O or state-restore failure
+    Checkpoint(String),
+}
+
+impl TrainError {
+    fn killed(fault: FaultEvent, ledger: &Ledger) -> TrainError {
+        TrainError::Killed { fault, sim_secs_at_death: ledger.total_secs() }
+    }
+}
+
+impl fmt::Display for TrainError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrainError::Config(e) => write!(f, "invalid configuration: {e}"),
+            TrainError::Killed { fault, sim_secs_at_death } => {
+                write!(f, "{fault} at simulated t={sim_secs_at_death:.3}s")
+            }
+            TrainError::RetriesExhausted { fault, retries } => write!(
+                f,
+                "gave up after {retries} retries; last fault: {fault}"
+            ),
+            TrainError::Checkpoint(msg) => write!(f, "checkpoint failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TrainError::Config(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ConfigError> for TrainError {
+    fn from(e: ConfigError) -> TrainError {
+        TrainError::Config(e)
+    }
+}
+
+/// Fault-tolerance knobs for [`fit_resilient`] (Contract 6,
+/// docs/ARCHITECTURE.md).
+#[derive(Clone, Debug)]
+pub struct ResilienceConfig {
+    /// write a checkpoint after every this many completed mini-batches
+    /// (0 = never checkpoint; recovery then replays from scratch)
+    pub checkpoint_every: usize,
+    /// where checkpoint files live (created on first write)
+    pub checkpoint_dir: PathBuf,
+    /// how many recent checkpoints to retain (≥ 1); older files are
+    /// pruned after each successful write
+    pub keep_checkpoints: usize,
+    /// how many kills [`fit_resilient`] absorbs before giving up
+    pub max_retries: usize,
+    /// straggler timeout = this factor × the modeled allreduce time for
+    /// the iteration's payload, floored at one network latency
+    /// ([`NetModel::straggler_timeout_secs`])
+    pub straggler_timeout_factor: f64,
+    /// start by loading the newest matching checkpoint from
+    /// `checkpoint_dir` (resume a previously interrupted process)
+    pub resume: bool,
+}
+
+impl ResilienceConfig {
+    /// Checkpoint every batch into `dir`, keep two, absorb three kills.
+    pub fn in_dir(dir: impl Into<PathBuf>) -> ResilienceConfig {
+        ResilienceConfig {
+            checkpoint_every: 1,
+            checkpoint_dir: dir.into(),
+            keep_checkpoints: 2,
+            max_retries: 3,
+            straggler_timeout_factor: 4.0,
+            resume: false,
+        }
+    }
+
+    /// Typed validation, same contract as [`PobpConfig::validate`].
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if (self.checkpoint_every > 0 || self.resume)
+            && self.checkpoint_dir.as_os_str().is_empty()
+        {
+            return Err(ConfigError::CheckpointDirMissing);
+        }
+        if self.keep_checkpoints == 0 {
+            return Err(ConfigError::ZeroKeepCheckpoints);
+        }
+        if !self.straggler_timeout_factor.is_finite()
+            || self.straggler_timeout_factor <= 0.0
+        {
+            return Err(ConfigError::BadStragglerFactor(self.straggler_timeout_factor));
+        }
+        Ok(())
+    }
+}
+
+/// Per-attempt harness state threaded into the storage-specific run
+/// loops: resilience knobs, the fault plan, and — on recovery — the
+/// checkpoint to restore plus the replay time to charge.
+struct RunCtx<'a> {
+    res: Option<&'a ResilienceConfig>,
+    faults: Option<&'a FaultPlan>,
+    resume: Option<Checkpoint>,
+    replay_secs: f64,
+}
+
+impl RunCtx<'_> {
+    /// A plain, unfaulted, checkpoint-free run.
+    fn bare() -> RunCtx<'static> {
+        RunCtx { res: None, faults: None, resume: None, replay_secs: 0.0 }
+    }
+}
+
+/// Restore-time sanity: a checkpoint handed to a run loop must describe
+/// the same problem and configuration. [`fit_resilient`] already
+/// filters candidates through [`CkptExpect`]; this guards direct misuse.
+fn check_resume(
+    ck: &Checkpoint,
+    w: usize,
+    k: usize,
+    cfg: &PobpConfig,
+) -> Result<(), TrainError> {
+    let ok = ck.w == w
+        && ck.k == k
+        && ck.n_workers == cfg.n_workers
+        && ck.seed == cfg.seed
+        && ck.phi.mode() == cfg.storage;
+    if ok {
+        Ok(())
+    } else {
+        Err(TrainError::Checkpoint(format!(
+            "checkpoint ({}x{}, n={}, seed={}, {:?}) does not match the run \
+             ({}x{}, n={}, seed={}, {:?})",
+            ck.w,
+            ck.k,
+            ck.n_workers,
+            ck.seed,
+            ck.phi.mode(),
+            w,
+            k,
+            cfg.n_workers,
+            cfg.seed,
+            cfg.storage,
+        )))
+    }
+}
+
+/// Write `ck` atomically under the resilience config's directory
+/// (tmp-file + rename, retention pruning) and charge the measured I/O
+/// to the live ledger's side accumulators — never to `total_secs()`.
+fn write_checkpoint(
+    res: &ResilienceConfig,
+    ck: &Checkpoint,
+    ledger: &mut Ledger,
+) -> Result<(), TrainError> {
+    let t0 = std::time::Instant::now();
+    let (_, bytes) = ck
+        .write(&res.checkpoint_dir, res.keep_checkpoints)
+        .map_err(|e| TrainError::Checkpoint(e.to_string()))?;
+    ledger.record_checkpoint(bytes, t0.elapsed().as_secs_f64());
+    Ok(())
 }
 
 /// Build one mini-batch's worker shards (Fig. 4 lines 3-5). The worker
@@ -204,16 +454,106 @@ fn build_shards(
 /// the full cost decomposition. Dispatches on [`PobpConfig::storage`];
 /// both modes produce bitwise-identical models, totals and residual
 /// histories (Contract 5).
+///
+/// Panics on an invalid configuration; use [`fit_checked`] for the typed
+/// error.
 pub fn fit(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
+    match fit_checked(corpus, params, cfg) {
+        Ok(r) => r,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`fit`] with typed configuration errors instead of panics.
+pub fn fit_checked(
+    corpus: &Csr,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+) -> Result<TrainResult, TrainError> {
+    cfg.validate()?;
     match cfg.storage {
-        PhiStorageMode::Replicated => fit_replicated(corpus, params, cfg),
-        PhiStorageMode::Sharded => fit_sharded(corpus, params, cfg),
+        PhiStorageMode::Replicated => {
+            fit_replicated(corpus, params, cfg, RunCtx::bare())
+        }
+        PhiStorageMode::Sharded => fit_sharded(corpus, params, cfg, RunCtx::bare()),
+    }
+}
+
+/// Fault-tolerant [`fit`] (Contract 6): writes a crash-consistent
+/// checkpoint every `res.checkpoint_every` completed mini-batches, and
+/// when a (possibly injected) kill fires, resumes from the newest good
+/// checkpoint — deterministically replaying the interrupted batch —
+/// until the run completes or `res.max_retries` kills have been
+/// absorbed.
+///
+/// The recovered result is **bitwise identical** to an uninterrupted
+/// run at any thread budget and in both storage modes
+/// (`rust/tests/fault_equiv.rs`); only the ledger's side accumulators
+/// (checkpoint I/O, straggler wait, recovery replay) record that the
+/// road was bumpy. Corrupt or mismatching checkpoint files are skipped
+/// in favor of the previous good one; with none left, recovery replays
+/// from scratch.
+pub fn fit_resilient(
+    corpus: &Csr,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+    res: &ResilienceConfig,
+    faults: Option<&FaultPlan>,
+) -> Result<TrainResult, TrainError> {
+    cfg.validate()?;
+    res.validate()?;
+    let expect = CkptExpect {
+        w: corpus.w,
+        k: params.k,
+        n_workers: cfg.n_workers,
+        seed: cfg.seed,
+        mode: cfg.storage,
+    };
+    let mut allow_resume = res.resume;
+    let mut last_death: Option<f64> = None;
+    let mut retries = 0usize;
+    loop {
+        let resume = if allow_resume {
+            Checkpoint::load_latest_good(&res.checkpoint_dir, Some(&expect))
+                .map(|(ck, _)| ck)
+        } else {
+            None
+        };
+        // Replay cost: the simulated time the dead attempt had covered
+        // past the restore point (or past t = 0 with no checkpoint).
+        let resumed_secs = resume.as_ref().map_or(0.0, |ck| ck.ledger.total_secs());
+        let replay_secs = last_death.map_or(0.0, |d| (d - resumed_secs).max(0.0));
+        let ctx = RunCtx { res: Some(res), faults, resume, replay_secs };
+        let attempt = match cfg.storage {
+            PhiStorageMode::Replicated => fit_replicated(corpus, params, cfg, ctx),
+            PhiStorageMode::Sharded => fit_sharded(corpus, params, cfg, ctx),
+        };
+        match attempt {
+            Err(TrainError::Killed { fault, sim_secs_at_death }) => {
+                retries += 1;
+                if retries > res.max_retries {
+                    return Err(TrainError::RetriesExhausted {
+                        fault,
+                        retries: res.max_retries,
+                    });
+                }
+                last_death = Some(sim_secs_at_death);
+                allow_resume = true;
+            }
+            other => return other,
+        }
     }
 }
 
 /// [`fit`] in replicated storage mode: the dense `W·K` φ̂ replica, the
 /// paper's layout and the bitwise oracle for the sharded mode.
-fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
+fn fit_replicated(
+    corpus: &Csr,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+    ctx: RunCtx<'_>,
+) -> Result<TrainResult, TrainError> {
+    let RunCtx { res, faults, resume, replay_secs } = ctx;
     let mut wall = Stopwatch::new();
     let (w, k) = (corpus.w, params.k);
     let cluster = Cluster::new(cfg.n_workers, cfg.max_threads);
@@ -228,6 +568,24 @@ fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainRe
     // fold also bumps `ledger.sync_count()`, which would skip/shift
     // snapshots whose multiple lands on a fold.
     let mut iter_syncs = 0usize;
+    // Stream cursor of a resumed run: (next_doc, next_batch).
+    let mut cursor: Option<(usize, usize)> = None;
+    if let Some(ck) = resume {
+        // Contract 6 restore: every piece of training state the loop
+        // below reads comes off the checkpoint, so the continuation is
+        // the same deterministic program an uninterrupted run executes.
+        check_resume(&ck, w, k, cfg)?;
+        phi_acc = ck.phi.to_dense();
+        rng = Rng::from_state(ck.rng_state);
+        iter_syncs = ck.iter_syncs;
+        ledger = ck.ledger;
+        history = ck.history;
+        snapshots = ck.snapshots;
+        cursor = Some((ck.next_doc, ck.next_batch));
+    }
+    // Simulated time the dead attempt covered past the restore point —
+    // a side accumulator, never part of `total_secs()` (Contract 6).
+    ledger.record_recovery_replay(replay_secs);
     // Reusable synchronization buffers (gather exports, owner-slot
     // permutation, totals deltas) and the plan-index buffer — held for
     // the whole run so the O(pairs) gather/reduction storage never
@@ -236,7 +594,12 @@ fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainRe
     let mut flat_buf: Vec<u32> = Vec::new();
 
     let global_budget = cfg.nnz_budget.saturating_mul(cfg.n_workers);
-    let mut stream = MiniBatchStream::new(corpus, global_budget);
+    let mut stream = match cursor {
+        Some((doc, batch)) => {
+            MiniBatchStream::resume(corpus, global_budget, doc, batch)
+        }
+        None => MiniBatchStream::new(corpus, global_budget),
+    };
     let mut pending = stream.next();
     // Shards of the upcoming batch, possibly prebuilt by the overlap
     // pipeline during the previous batch's fold.
@@ -264,6 +627,12 @@ fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainRe
 
         for t in 1..=cfg.max_iters {
             iters_run = t;
+            // --- fault injection (Contract 6): a planned sweep-phase
+            //     kill fires before any work on this iteration ---
+            if let Some(f) = faults {
+                f.trip(mb.index, t, SyncPhase::Sweep)
+                    .map_err(|e| TrainError::killed(e, &ledger))?;
+            }
             // --- doc-parallel sweep (lines 6-8 / 15-20): each worker
             //     fans its shard's fixed NNZ-derived doc blocks over its
             //     share of the OS-thread pool, so an N = 1 (OBP) run
@@ -300,12 +669,26 @@ fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainRe
                     ReducePlan::Subset { indices: &flat_buf }
                 }
             };
-            let pairs = if cfg.overlap {
-                allreduce_step_overlap(
+            let pairs = match (cfg.overlap, faults) {
+                (true, None) => allreduce_step_overlap(
                     &cluster, &plan, &phi_acc, &shards, &mut state, &mut scratch,
+                ),
+                (false, None) => {
+                    allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut state, &mut scratch)
+                }
+                // fault-aware variants: the step runs, then a planned
+                // mid-reduce kill fires inside the sync boundary (the
+                // partial republish is discarded by the batch replay)
+                (true, Some(f)) => allreduce_step_overlap_injected(
+                    &cluster, &plan, &phi_acc, &shards, &mut state, &mut scratch, f,
+                    mb.index, t,
                 )
-            } else {
-                allreduce_step(&cluster, &plan, &phi_acc, &shards, &mut state, &mut scratch)
+                .map_err(|e| TrainError::killed(e, &ledger))?,
+                (false, Some(f)) => allreduce_step_injected(
+                    &cluster, &plan, &phi_acc, &shards, &mut state, &mut scratch, f,
+                    mb.index, t,
+                )
+                .map_err(|e| TrainError::killed(e, &ledger))?,
             };
             // two f32 matrices (φ̂ and r) restricted to the selection
             let payload = 2 * 4 * pairs;
@@ -315,6 +698,19 @@ fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainRe
             } else {
                 ledger.record_compute(&secs);
                 ledger.record_sync(mb.index, t, payload, cfg.n_workers);
+            }
+            // --- injected straggler delays: the slow workers finish
+            //     late, and the leader's timeout/backoff wait lands in a
+            //     side accumulator under the Σmax invariant
+            //     ([`Ledger::record_straggler`]) — `total_secs()` keeps
+            //     the fault-free bits ---
+            if let Some(delays) =
+                faults.and_then(|f| f.delays_at(mb.index, t, cfg.n_workers))
+            {
+                let factor = res.map_or(4.0, |r| r.straggler_timeout_factor);
+                let timeout =
+                    cfg.net.straggler_timeout_secs(payload, cfg.n_workers, factor);
+                ledger.record_straggler(&secs, &delays, timeout);
             }
 
             iter_syncs += 1;
@@ -374,6 +770,16 @@ fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainRe
         // with the fold — both leader-side, disjoint state, and the RNG
         // splits happen at the same stream position either way.
         let next_mb = stream.next();
+        // Contract 6: the checkpointed RNG position is the batch
+        // boundary — after this batch's worker splits, before the next
+        // batch's (which the fold block below draws).
+        let rng_boundary = rng.state();
+        // A planned fold-phase kill fires before the fold mutates
+        // φ̂_acc, so the checkpointed state stays batch-consistent.
+        if let Some(f) = faults {
+            f.trip(mb.index, iters_run + 1, SyncPhase::Fold)
+                .map_err(|e| TrainError::killed(e, &ledger))?;
+        }
         {
             let guards: Vec<_> = shards.iter().map(|s| s.lock().unwrap()).collect();
             let dphi_parts: Vec<&[f32]> =
@@ -400,17 +806,39 @@ fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainRe
                 ledger.record_sync(mb.index, iters_run + 1, 4 * w * k, cfg.n_workers);
             }
         }
+        // --- checkpoint cadence (Contract 6): after the fold, φ̂ and
+        //     the ledger are batch-consistent; the cursor names the
+        //     batch the restored run starts from ---
+        if let (Some(r), Some(nmb)) = (res, next_mb.as_ref()) {
+            if r.checkpoint_every > 0 && (mb.index + 1) % r.checkpoint_every == 0 {
+                let ck = Checkpoint {
+                    w,
+                    k,
+                    n_workers: cfg.n_workers,
+                    seed: cfg.seed,
+                    next_batch: nmb.index,
+                    next_doc: nmb.doc_range.start,
+                    iter_syncs,
+                    rng_state: rng_boundary,
+                    phi: PhiShard::Replicated(phi_acc.clone()),
+                    ledger: ledger.clone(),
+                    history: history.clone(),
+                    snapshots: snapshots.clone(),
+                };
+                write_checkpoint(r, &ck, &mut ledger)?;
+            }
+        }
         pending = next_mb;
         let _ = wall.lap_secs();
     }
 
-    TrainResult {
+    Ok(TrainResult {
         model: Model { k, w, phi_wk: phi_acc },
         history,
         ledger,
         wall_secs: wall.total_secs(),
         snapshots,
-    }
+    })
 }
 
 /// [`fit`] in **sharded** storage mode: each logical worker persistently
@@ -434,9 +862,15 @@ fn fit_replicated(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainRe
 ///   rows before a power sweep, nothing when the batch stops here).
 ///
 /// The overlap pipeline is not wired through sharded storage yet;
-/// `cfg.overlap` is rejected.
-fn fit_sharded(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResult {
-    assert!(!cfg.overlap, "sharded storage does not support the overlap pipeline yet");
+/// `cfg.overlap` is rejected up front by [`PobpConfig::validate`]
+/// ([`ConfigError::OverlapShardedUnsupported`]).
+fn fit_sharded(
+    corpus: &Csr,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+    ctx: RunCtx<'_>,
+) -> Result<TrainResult, TrainError> {
+    let RunCtx { res, faults, resume, replay_secs } = ctx;
     let mut wall = Stopwatch::new();
     let (w, k) = (corpus.w, params.k);
     let cluster = Cluster::new(cfg.n_workers, cfg.max_threads);
@@ -448,16 +882,37 @@ fn fit_sharded(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResul
     // Global accumulated φ̂ (Eq. 11's phi^{m}), stored as row-aligned
     // owner slices — no worker ever holds the dense matrix.
     let mut phi_acc = PhiShard::sharded(w, k, cfg.n_workers);
-    let os = phi_acc.owner_slices();
-    let rows_per = phi_acc.rows_per();
     // iteration-sync counter for the snapshot cadence (see
     // fit_replicated: the end-of-batch fold must not shift snapshots)
     let mut iter_syncs = 0usize;
+    // Stream cursor of a resumed run: (next_doc, next_batch).
+    let mut cursor: Option<(usize, usize)> = None;
+    if let Some(ck) = resume {
+        // Contract 6 restore, sharded flavor: the decoded checkpoint's
+        // owner partition is the canonical row-aligned split for
+        // (W, K, N), i.e. exactly what `PhiShard::sharded` above built.
+        check_resume(&ck, w, k, cfg)?;
+        phi_acc = ck.phi;
+        rng = Rng::from_state(ck.rng_state);
+        iter_syncs = ck.iter_syncs;
+        ledger = ck.ledger;
+        history = ck.history;
+        snapshots = ck.snapshots;
+        cursor = Some((ck.next_doc, ck.next_batch));
+    }
+    ledger.record_recovery_replay(replay_secs);
+    let os = phi_acc.owner_slices();
+    let rows_per = phi_acc.rows_per();
     let mut scratch = SyncScratch::default();
     let mut flat_buf: Vec<u32> = Vec::new();
 
     let global_budget = cfg.nnz_budget.saturating_mul(cfg.n_workers);
-    let mut stream = MiniBatchStream::new(corpus, global_budget);
+    let mut stream = match cursor {
+        Some((doc, batch)) => {
+            MiniBatchStream::resume(corpus, global_budget, doc, batch)
+        }
+        None => MiniBatchStream::new(corpus, global_budget),
+    };
     let mut pending = stream.next();
     while let Some(mb) = pending.take() {
         let tokens = mb.data.tokens().max(1.0);
@@ -477,6 +932,12 @@ fn fit_sharded(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResul
 
         for t in 1..=cfg.max_iters {
             iters_run = t;
+            // --- fault injection (Contract 6): a planned sweep-phase
+            //     kill fires before any work on this iteration ---
+            if let Some(f) = faults {
+                f.trip(mb.index, t, SyncPhase::Sweep)
+                    .map_err(|e| TrainError::killed(e, &ledger))?;
+            }
             // --- doc-parallel sweep, φ̂ rows read in place from the
             //     owner slices (no gather materialization leader-side;
             //     the simulated transfer is charged below) ---
@@ -506,9 +967,18 @@ fn fit_sharded(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResul
                     ReducePlan::Subset { indices: &flat_buf }
                 }
             };
-            let pairs = allreduce_step_sharded(
-                &cluster, &plan, phi_acc.parts(), &shards, &mut state, &mut scratch,
-            );
+            let pairs = match faults {
+                None => allreduce_step_sharded(
+                    &cluster, &plan, phi_acc.parts(), &shards, &mut state, &mut scratch,
+                ),
+                // fault-aware variant: the step runs, then a planned
+                // mid-reduce kill fires inside the sync boundary
+                Some(f) => allreduce_step_sharded_injected(
+                    &cluster, &plan, phi_acc.parts(), &shards, &mut state,
+                    &mut scratch, f, mb.index, t,
+                )
+                .map_err(|e| TrainError::killed(e, &ledger))?,
+            };
 
             // --- convergence decision first (line 26), so the ledger's
             //     allgather half can charge exactly the next sweep's
@@ -544,6 +1014,20 @@ fn fit_sharded(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResul
             };
             ledger.record_compute(&secs);
             ledger.record_sync_split(mb.index, t, reduce_bytes, gather_bytes, cfg.n_workers);
+            // --- injected straggler delays (see fit_replicated): the
+            //     leader's wait goes to a side accumulator under the
+            //     Σmax invariant; `total_secs()` keeps fault-free bits ---
+            if let Some(delays) =
+                faults.and_then(|f| f.delays_at(mb.index, t, cfg.n_workers))
+            {
+                let factor = res.map_or(4.0, |r| r.straggler_timeout_factor);
+                let timeout = cfg.net.straggler_timeout_secs(
+                    reduce_bytes + gather_bytes,
+                    cfg.n_workers,
+                    factor,
+                );
+                ledger.record_straggler(&secs, &delays, timeout);
+            }
 
             iter_syncs += 1;
             if cfg.snapshot_every > 0 && iter_syncs % cfg.snapshot_every == 0 {
@@ -578,6 +1062,16 @@ fn fit_sharded(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResul
         //     fold's: one full φ̂ matrix reduced and re-gathered
         //     (identical payload and wire bytes to `record_sync`). ---
         let next_mb = stream.next();
+        // Contract 6: the batch-boundary RNG position — this batch's
+        // splits were drawn at the loop top, the next batch's have not
+        // been (the sharded path draws them at the next loop top).
+        let rng_boundary = rng.state();
+        // A planned fold-phase kill fires before the fold mutates the
+        // sharded accumulator, keeping checkpoint state batch-consistent.
+        if let Some(f) = faults {
+            f.trip(mb.index, iters_run + 1, SyncPhase::Fold)
+                .map_err(|e| TrainError::killed(e, &ledger))?;
+        }
         {
             let guards: Vec<_> = shards.iter().map(|s| s.lock().unwrap()).collect();
             let dphi_parts: Vec<&[f32]> =
@@ -592,17 +1086,38 @@ fn fit_sharded(corpus: &Csr, params: &LdaParams, cfg: &PobpConfig) -> TrainResul
                 cfg.n_workers,
             );
         }
+        // --- checkpoint cadence (Contract 6): the sharded checkpoint
+        //     stores the owner slices as-is; no densification ---
+        if let (Some(r), Some(nmb)) = (res, next_mb.as_ref()) {
+            if r.checkpoint_every > 0 && (mb.index + 1) % r.checkpoint_every == 0 {
+                let ck = Checkpoint {
+                    w,
+                    k,
+                    n_workers: cfg.n_workers,
+                    seed: cfg.seed,
+                    next_batch: nmb.index,
+                    next_doc: nmb.doc_range.start,
+                    iter_syncs,
+                    rng_state: rng_boundary,
+                    phi: phi_acc.clone(),
+                    ledger: ledger.clone(),
+                    history: history.clone(),
+                    snapshots: snapshots.clone(),
+                };
+                write_checkpoint(r, &ck, &mut ledger)?;
+            }
+        }
         pending = next_mb;
         let _ = wall.lap_secs();
     }
 
-    TrainResult {
+    Ok(TrainResult {
         model: Model { k, w, phi_wk: phi_acc.to_dense() },
         history,
         ledger,
         wall_secs: wall.total_secs(),
         snapshots,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -782,15 +1297,88 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "overlap pipeline")]
     fn sharded_storage_rejects_overlap() {
-        let c = tiny();
-        let params = LdaParams::paper(8);
-        fit(&c, &params, &PobpConfig {
+        // the combination fails closed with a typed error — both at
+        // validation time and through the checked front door
+        let cfg = PobpConfig {
             storage: PhiStorageMode::Sharded,
             overlap: true,
             ..Default::default()
-        });
+        };
+        assert_eq!(cfg.validate(), Err(ConfigError::OverlapShardedUnsupported));
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        match fit_checked(&c, &params, &cfg) {
+            Err(TrainError::Config(e)) => {
+                assert_eq!(e, ConfigError::OverlapShardedUnsupported);
+                assert!(e.to_string().contains("overlap pipeline"));
+            }
+            Err(other) => panic!("unexpected error: {other}"),
+            Ok(_) => panic!("invalid config must be rejected"),
+        }
+    }
+
+    #[test]
+    fn validate_catches_degenerate_configs() {
+        assert_eq!(PobpConfig::default().validate(), Ok(()));
+        assert_eq!(
+            PobpConfig { n_workers: 0, ..Default::default() }.validate(),
+            Err(ConfigError::ZeroWorkers)
+        );
+        assert_eq!(
+            PobpConfig { max_iters: 0, ..Default::default() }.validate(),
+            Err(ConfigError::ZeroMaxIters)
+        );
+        assert_eq!(
+            PobpConfig { nnz_budget: 0, ..Default::default() }.validate(),
+            Err(ConfigError::ZeroNnzBudget)
+        );
+        let mut res = ResilienceConfig::in_dir("");
+        assert_eq!(res.validate(), Err(ConfigError::CheckpointDirMissing));
+        res.checkpoint_dir = "ckpts".into();
+        res.keep_checkpoints = 0;
+        assert_eq!(res.validate(), Err(ConfigError::ZeroKeepCheckpoints));
+        res.keep_checkpoints = 1;
+        res.straggler_timeout_factor = -1.0;
+        assert!(matches!(
+            res.validate(),
+            Err(ConfigError::BadStragglerFactor(_))
+        ));
+        res.straggler_timeout_factor = 4.0;
+        assert_eq!(res.validate(), Ok(()));
+    }
+
+    #[test]
+    fn resilient_run_without_faults_matches_fit_and_writes_checkpoints() {
+        // the deep kill/recover pins live in rust/tests/fault_equiv.rs;
+        // this is the smoke-level contract: the resilient wrapper is a
+        // bitwise no-op on a healthy run, and the checkpoint I/O lands
+        // only in the ledger's side accumulators
+        let dir = std::env::temp_dir()
+            .join(format!("pobp-coord-res-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = tiny();
+        let params = LdaParams::paper(8);
+        let cfg = PobpConfig {
+            n_workers: 2,
+            nnz_budget: 600,
+            max_iters: 7,
+            converge_thresh: 0.0,
+            ..Default::default()
+        };
+        let oracle = fit(&c, &params, &cfg);
+        let res = ResilienceConfig::in_dir(&dir);
+        let r = fit_resilient(&c, &params, &cfg, &res, None).expect("resilient run");
+        assert_eq!(r.model.phi_wk, oracle.model.phi_wk);
+        assert_eq!(r.ledger.sync_count(), oracle.ledger.sync_count());
+        assert!(r.ledger.checkpoint_count >= 1, "no checkpoint was written");
+        assert_eq!(r.ledger.recovery_count, 0);
+        assert_eq!(
+            r.ledger.total_secs().to_bits(),
+            oracle.ledger.total_secs().to_bits(),
+            "checkpoint I/O must never leak into total_secs"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -32,6 +32,23 @@ impl<'a> MiniBatchStream<'a> {
         MiniBatchStream { corpus, nnz_budget, next_doc: 0, next_index: 0 }
     }
 
+    /// Resume the deterministic stream at an exact cursor captured from
+    /// a checkpoint (Contract 6): the next batch starts at document
+    /// `next_doc` and takes index `next_index`. Because batching is a
+    /// pure function of the corpus and the budget, the resumed stream
+    /// yields exactly the suffix a fresh stream would — without
+    /// re-slicing the already-trained prefix.
+    pub fn resume(
+        corpus: &'a Csr,
+        nnz_budget: usize,
+        next_doc: usize,
+        next_index: usize,
+    ) -> Self {
+        assert!(nnz_budget > 0, "nnz budget must be positive");
+        assert!(next_doc <= corpus.docs(), "resume cursor past the corpus");
+        MiniBatchStream { corpus, nnz_budget, next_doc, next_index }
+    }
+
     /// Number of batches this stream will yield (without consuming it).
     pub fn count(corpus: &Csr, nnz_budget: usize) -> usize {
         MiniBatchStream::new(corpus, nnz_budget).map(|_| 1).sum()
@@ -133,6 +150,28 @@ mod tests {
                 if mb.doc_range.len() > 1 {
                     assert!(mb.data.nnz() <= budget);
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn resumed_stream_yields_the_exact_suffix() {
+        check("stream resume suffix", 30, |rng| {
+            let d = rng.range(1, 60);
+            let c = corpus(rng, d, 20);
+            let budget = rng.range(1, 30);
+            let all: Vec<MiniBatch> = MiniBatchStream::new(&c, budget).collect();
+            let skip = rng.below(all.len() + 1);
+            let cursor_doc = all
+                .get(skip)
+                .map_or(c.docs(), |mb| mb.doc_range.start);
+            let resumed: Vec<MiniBatch> =
+                MiniBatchStream::resume(&c, budget, cursor_doc, skip).collect();
+            assert_eq!(resumed.len(), all.len() - skip);
+            for (a, b) in resumed.iter().zip(&all[skip..]) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.doc_range, b.doc_range);
+                assert_eq!(a.data.nnz(), b.data.nnz());
             }
         });
     }

@@ -1,0 +1,317 @@
+//! Seeded fault injection for the resilience subsystem (Contract 6).
+//!
+//! A [`FaultPlan`] deterministically kills or delays logical workers at
+//! chosen `(batch, iteration, sync-phase)` points of the training loop.
+//! The coordinator consults the plan at three pinned sync-phase
+//! boundaries:
+//!
+//! * [`SyncPhase::Sweep`] — before the doc-parallel sweep of an
+//!   iteration starts (the "worker died computing" case; the t = 1
+//!   sweep of a batch is the canonical kill point because nothing of
+//!   the batch has been communicated yet);
+//! * [`SyncPhase::MidReduce`] — *inside* the allreduce boundary
+//!   (`comm::allreduce::allreduce_step_injected` and friends): the
+//!   owners have folded their slices but the allgather republish has
+//!   not completed, so the batch working state is mid-sync and
+//!   unusable;
+//! * [`SyncPhase::Fold`] — at the end-of-batch fold (iteration index
+//!   `iters + 1`, matching the ledger's fold-sync numbering), before
+//!   the batch gradient joins the global φ̂.
+//!
+//! # Semantics
+//!
+//! * **Kills fire exactly once.** Each [`FaultKind::Kill`] spec carries
+//!   a fired flag; after it trips, replays of the same `(batch, iter,
+//!   phase)` point pass through. Without this, the recovery loop would
+//!   die at the same point forever.
+//! * **Delays are stateless** and fire on *every* encounter, including
+//!   recovery replays — a deterministic model of a persistently slow
+//!   worker. They add simulated seconds to the worker's compute time;
+//!   the ledger charges the barrier wait via
+//!   [`Ledger::record_straggler`](crate::comm::Ledger::record_straggler).
+//! * **Everything derives from the seed.** [`FaultPlan::seeded`] draws
+//!   its kill/delay points from [`Rng`], so a fault schedule is
+//!   reproducible from a single `u64` — the same property the training
+//!   loop itself has (Contract 1).
+//!
+//! Recovery (coordinator `fit_resilient`) replays the interrupted batch
+//! from the last good checkpoint; determinism makes the replay — and
+//! therefore the recovered run — bitwise identical to an uninterrupted
+//! run (`rust/tests/fault_equiv.rs`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::rng::Rng;
+
+/// Where in an iteration's sync cycle a fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncPhase {
+    /// before the doc-parallel sweep of iteration `iter`
+    Sweep,
+    /// inside the allreduce boundary: after the owner fold, before the
+    /// allgather republish completes
+    MidReduce,
+    /// at the end-of-batch fold (`iter = iters_run + 1`, the ledger's
+    /// fold-sync index)
+    Fold,
+}
+
+impl SyncPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncPhase::Sweep => "sweep",
+            SyncPhase::MidReduce => "mid-reduce",
+            SyncPhase::Fold => "fold",
+        }
+    }
+}
+
+/// What the fault does to the targeted worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// the worker process dies: the run aborts at the fault point and
+    /// must be recovered from the last checkpoint
+    Kill,
+    /// the worker straggles: `secs` of simulated extra compute time at
+    /// the iteration's barrier
+    Delay {
+        /// simulated extra seconds added to the worker's sweep time
+        secs: f64,
+    },
+}
+
+/// One injected fault at a `(batch, iter, phase, worker)` point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// mini-batch index m
+    pub batch: usize,
+    /// iteration t within the batch (fold faults use `iters + 1`)
+    pub iter: usize,
+    /// sync-phase boundary the fault fires at
+    pub phase: SyncPhase,
+    /// targeted logical worker (attribution only for kills — the whole
+    /// bulk-synchronous step dies with any member)
+    pub worker: usize,
+    pub kind: FaultKind,
+}
+
+/// A fault that actually fired — the error payload a killed run
+/// surfaces through `coordinator::TrainError::Killed`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub batch: usize,
+    pub iter: usize,
+    pub phase: SyncPhase,
+    pub worker: usize,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "worker {} killed at batch {} iter {} ({})",
+            self.worker,
+            self.batch,
+            self.iter,
+            self.phase.name()
+        )
+    }
+}
+
+/// A deterministic fault schedule. Kills fire once (interior fired
+/// flags — shared through `&self` so the plan can be threaded through
+/// the retry loop); delays fire on every encounter.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+    fired: Vec<AtomicBool>,
+}
+
+impl FaultPlan {
+    /// A plan from explicit fault points (the pinned-point constructor
+    /// `fault_equiv.rs` uses).
+    pub fn new(specs: Vec<FaultSpec>) -> FaultPlan {
+        let fired = specs.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultPlan { specs, fired }
+    }
+
+    /// A single-kill plan — the common test shape.
+    pub fn kill(batch: usize, iter: usize, phase: SyncPhase, worker: usize) -> FaultPlan {
+        FaultPlan::new(vec![FaultSpec {
+            batch,
+            iter,
+            phase,
+            worker,
+            kind: FaultKind::Kill,
+        }])
+    }
+
+    /// A seeded plan: `kills` kill points drawn uniformly over
+    /// `batches × iters × {sweep, mid-reduce, fold} × n_workers`.
+    /// Iterations are drawn in `1..=iters`; fold kills use the fold
+    /// index `iters + 1` so they land on a boundary the coordinator
+    /// actually visits. Deterministic in `seed`.
+    pub fn seeded(
+        seed: u64,
+        n_workers: usize,
+        kills: usize,
+        batches: usize,
+        iters: usize,
+    ) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_1A5E_D00D_F00D);
+        let specs = (0..kills)
+            .map(|_| {
+                let phase = match rng.below(3) {
+                    0 => SyncPhase::Sweep,
+                    1 => SyncPhase::MidReduce,
+                    _ => SyncPhase::Fold,
+                };
+                let iter = match phase {
+                    SyncPhase::Fold => iters + 1,
+                    _ => 1 + rng.below(iters.max(1)),
+                };
+                FaultSpec {
+                    batch: rng.below(batches.max(1)),
+                    iter,
+                    phase,
+                    worker: rng.below(n_workers.max(1)),
+                    kind: FaultKind::Kill,
+                }
+            })
+            .collect();
+        FaultPlan::new(specs)
+    }
+
+    /// The underlying schedule.
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// Kill specs that have not fired yet.
+    pub fn kills_remaining(&self) -> usize {
+        self.specs
+            .iter()
+            .zip(&self.fired)
+            .filter(|(s, f)| {
+                matches!(s.kind, FaultKind::Kill) && !f.load(Ordering::SeqCst)
+            })
+            .count()
+    }
+
+    /// Consult the plan at a sync-phase boundary: if an unfired kill
+    /// matches `(batch, iter, phase)`, mark it fired and return the
+    /// event. The swap makes each kill fire exactly once even across
+    /// recovery replays of the same point.
+    pub fn trip(
+        &self,
+        batch: usize,
+        iter: usize,
+        phase: SyncPhase,
+    ) -> Result<(), FaultEvent> {
+        for (spec, fired) in self.specs.iter().zip(&self.fired) {
+            if matches!(spec.kind, FaultKind::Kill)
+                && spec.batch == batch
+                && spec.iter == iter
+                && spec.phase == phase
+                && !fired.swap(true, Ordering::SeqCst)
+            {
+                return Err(FaultEvent {
+                    batch,
+                    iter,
+                    phase,
+                    worker: spec.worker,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-worker simulated delay seconds at `(batch, iter)` — `None`
+    /// when no delay spec matches. Delays are stateless: a recovery
+    /// replay of the iteration experiences them again.
+    pub fn delays_at(
+        &self,
+        batch: usize,
+        iter: usize,
+        n_workers: usize,
+    ) -> Option<Vec<f64>> {
+        let mut out: Option<Vec<f64>> = None;
+        for spec in &self.specs {
+            if let FaultKind::Delay { secs } = spec.kind {
+                if spec.batch == batch && spec.iter == iter && spec.worker < n_workers {
+                    out.get_or_insert_with(|| vec![0.0; n_workers])[spec.worker] += secs;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_fires_exactly_once() {
+        let plan = FaultPlan::kill(2, 3, SyncPhase::MidReduce, 1);
+        // wrong points pass through
+        assert!(plan.trip(2, 3, SyncPhase::Sweep).is_ok());
+        assert!(plan.trip(1, 3, SyncPhase::MidReduce).is_ok());
+        assert_eq!(plan.kills_remaining(), 1);
+        // the pinned point fires once ...
+        let ev = plan.trip(2, 3, SyncPhase::MidReduce).unwrap_err();
+        assert_eq!(
+            ev,
+            FaultEvent { batch: 2, iter: 3, phase: SyncPhase::MidReduce, worker: 1 }
+        );
+        // ... and the recovery replay of the same point passes
+        assert!(plan.trip(2, 3, SyncPhase::MidReduce).is_ok());
+        assert_eq!(plan.kills_remaining(), 0);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(99, 4, 5, 10, 8);
+        let b = FaultPlan::seeded(99, 4, 5, 10, 8);
+        assert_eq!(a.specs(), b.specs());
+        assert_eq!(a.specs().len(), 5);
+        for s in a.specs() {
+            assert!(s.batch < 10);
+            assert!(s.worker < 4);
+            match s.phase {
+                SyncPhase::Fold => assert_eq!(s.iter, 9),
+                _ => assert!(s.iter >= 1 && s.iter <= 8),
+            }
+        }
+        let c = FaultPlan::seeded(100, 4, 5, 10, 8);
+        assert_ne!(a.specs(), c.specs(), "different seeds, different plans");
+    }
+
+    #[test]
+    fn delays_accumulate_per_worker_and_are_stateless() {
+        let plan = FaultPlan::new(vec![
+            FaultSpec {
+                batch: 0,
+                iter: 2,
+                phase: SyncPhase::Sweep,
+                worker: 1,
+                kind: FaultKind::Delay { secs: 0.5 },
+            },
+            FaultSpec {
+                batch: 0,
+                iter: 2,
+                phase: SyncPhase::Sweep,
+                worker: 1,
+                kind: FaultKind::Delay { secs: 0.25 },
+            },
+        ]);
+        assert!(plan.delays_at(0, 1, 3).is_none());
+        let d = plan.delays_at(0, 2, 3).unwrap();
+        assert_eq!(d, vec![0.0, 0.75, 0.0]);
+        // stateless: a replay sees the same delays
+        assert_eq!(plan.delays_at(0, 2, 3).unwrap(), d);
+        // a delay never trips the kill path
+        assert!(plan.trip(0, 2, SyncPhase::Sweep).is_ok());
+    }
+}

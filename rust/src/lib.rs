@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod corpus;
 pub mod engine;
 pub mod eval;
+pub mod fault;
 pub mod metrics;
 pub mod repro;
 pub mod runtime;

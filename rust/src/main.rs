@@ -5,6 +5,8 @@
 //!                 [--workers N] [--iters T] [--lambda-w 0.1]
 //!                 [--lambda-kk 50] [--nnz-budget 45000] [--seed S]
 //!                 [--engine native|xla] [--save model.bin] [--topics 5]
+//!                 [--checkpoint-every M] [--checkpoint-dir DIR]
+//!                 [--retries R] [--resume]
 //! pobp gen-data   --dataset pubmed --scale 2000 --out data/
 //! pobp topics     --model model.bin [--top 10]
 //! pobp perplexity --model model.bin --dataset enron --scale 400 --k 50
@@ -49,6 +51,8 @@ pobp — communication-efficient parallel online belief propagation for LDA
 
 subcommands:
   train       train a model on a (synthetic Table-3) dataset
+              (--checkpoint-every M --checkpoint-dir DIR for fault-tolerant
+               runs; --resume continues from the newest good checkpoint)
   run         train from a config file (see configs/*.conf)
   gen-data    write a synthetic corpus in UCI bag-of-words format
   topics      print top words per topic of a saved model
@@ -80,6 +84,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             lambda_k_times_k: args.get("lambda-kk", 50)?,
         },
         seed: args.get("seed", 42)?,
+        // fault tolerance (Contract 6): checkpoint cadence + resume
+        checkpoint_every: args.get("checkpoint-every", 0)?,
+        checkpoint_dir: args.get_str("checkpoint-dir", ""),
+        max_retries: args.get("retries", 3)?,
+        resume: args.switch("resume"),
         ..Default::default()
     };
     let engine = args.get_str("engine", "native");
@@ -116,6 +125,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.ledger.sync_count(),
         result.ledger.wire_bytes / 1_000_000,
     );
+    if opts.checkpoint_every > 0 || opts.resume {
+        println!(
+            "resilience: checkpoints {} ({} MB, {}), recoveries {} (replay {})",
+            result.ledger.checkpoint_count,
+            result.ledger.checkpoint_bytes / 1_000_000,
+            fmt_secs(result.ledger.checkpoint_secs),
+            result.ledger.recovery_count,
+            fmt_secs(result.ledger.recovery_replay_secs),
+        );
+    }
     let perp = eval_model(&result.model, &corpus, &params, opts.seed);
     println!("predictive perplexity (Eq. 20): {}", sig(perp));
 

@@ -4,7 +4,9 @@
 //! 1:1 onto a paper table/figure (DESIGN.md §5).
 
 use crate::comm::NetModel;
-use crate::coordinator::{fit as fit_pobp, PobpConfig};
+use crate::coordinator::{
+    fit_checked, fit_resilient, PobpConfig, ResilienceConfig, TrainError,
+};
 use crate::corpus::{split_tokens, Csr, Split};
 use crate::engine::mpa::{fit_gibbs, GsVariant, MpaConfig};
 use crate::engine::traits::{LdaParams, Model, TrainResult};
@@ -100,6 +102,21 @@ pub struct RunOpts {
     /// φ̂ memory, bitwise-identical results. Ignored by the Gibbs/VB
     /// algorithms.
     pub storage: PhiStorageMode,
+    /// Fault tolerance for the POBP family (Contract 6): write a
+    /// crash-consistent checkpoint every this many completed
+    /// mini-batches (0 = never). With checkpointing or `resume` on, the
+    /// run goes through `coordinator::fit_resilient` — recovery from a
+    /// kill is bitwise identical to the uninterrupted run. Ignored by
+    /// the Gibbs/VB algorithms.
+    pub checkpoint_every: usize,
+    /// checkpoint directory (empty = default `pobp-checkpoints`)
+    pub checkpoint_dir: String,
+    /// kills absorbed before the run gives up
+    pub max_retries: usize,
+    /// straggler timeout factor (× the modeled per-iteration sync time)
+    pub straggler_timeout_factor: f64,
+    /// resume from the newest matching checkpoint in `checkpoint_dir`
+    pub resume: bool,
 }
 
 impl Default for RunOpts {
@@ -119,44 +136,89 @@ impl Default for RunOpts {
             snapshot_every: 0,
             overlap: false,
             storage: PhiStorageMode::Replicated,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
+            max_retries: 3,
+            straggler_timeout_factor: 4.0,
+            resume: false,
         }
     }
 }
 
-/// Run `algo` on `corpus` under the shared options.
-pub fn run_algo(algo: Algo, corpus: &Csr, params: &LdaParams, o: &RunOpts) -> TrainResult {
+impl RunOpts {
+    /// Whether the POBP family should run through the fault-tolerant
+    /// entry point (`coordinator::fit_resilient`).
+    pub fn wants_resilience(&self) -> bool {
+        self.checkpoint_every > 0 || self.resume
+    }
+
+    /// The resilience knobs these options describe.
+    pub fn resilience(&self) -> ResilienceConfig {
+        let dir = if self.checkpoint_dir.is_empty() {
+            "pobp-checkpoints"
+        } else {
+            &self.checkpoint_dir
+        };
+        ResilienceConfig {
+            checkpoint_every: self.checkpoint_every,
+            max_retries: self.max_retries,
+            straggler_timeout_factor: self.straggler_timeout_factor,
+            resume: self.resume,
+            ..ResilienceConfig::in_dir(dir)
+        }
+    }
+}
+
+/// The `PobpConfig` that `run_algo` hands the coordinator for a BP-family
+/// algorithm under the shared options.
+pub fn pobp_config(algo: Algo, params: &LdaParams, o: &RunOpts) -> PobpConfig {
     // clamp the per-word power-topic count to K
     let power = PowerParams {
         lambda_w: o.power.lambda_w,
         lambda_k_times_k: o.power.lambda_k_times_k.min(params.k),
     };
+    PobpConfig {
+        n_workers: match algo {
+            Algo::Obp | Algo::BatchBp => 1,
+            _ => o.n_workers,
+        },
+        max_threads: o.max_threads,
+        nnz_budget: if algo == Algo::BatchBp { usize::MAX } else { o.nnz_budget },
+        power: match algo {
+            Algo::Pobp => power,
+            _ => PowerParams::full(),
+        },
+        max_iters: o.max_batch_iters,
+        min_iters: 5,
+        converge_thresh: 0.1,
+        converge_rel: 0.01,
+        net: o.net,
+        seed: o.seed,
+        snapshot_every: o.snapshot_every,
+        // default false: the paper charges POBP the serialized
+        // BSP cost (Fig. 1); the overlap ablation flips this to
+        // compare pipelined POBP against the overlapped YLDA
+        overlap: o.overlap,
+        storage: o.storage,
+    }
+}
+
+/// Run `algo` on `corpus` under the shared options, surfacing invalid
+/// configurations and terminal faults as typed errors instead of panics.
+pub fn run_algo_checked(
+    algo: Algo,
+    corpus: &Csr,
+    params: &LdaParams,
+    o: &RunOpts,
+) -> Result<TrainResult, TrainError> {
     match algo {
         Algo::Pobp | Algo::PobpFull | Algo::Obp | Algo::BatchBp => {
-            let cfg = PobpConfig {
-                n_workers: match algo {
-                    Algo::Obp | Algo::BatchBp => 1,
-                    _ => o.n_workers,
-                },
-                max_threads: o.max_threads,
-                nnz_budget: if algo == Algo::BatchBp { usize::MAX } else { o.nnz_budget },
-                power: match algo {
-                    Algo::Pobp => power,
-                    _ => PowerParams::full(),
-                },
-                max_iters: o.max_batch_iters,
-                min_iters: 5,
-                converge_thresh: 0.1,
-                converge_rel: 0.01,
-                net: o.net,
-                seed: o.seed,
-                snapshot_every: o.snapshot_every,
-                // default false: the paper charges POBP the serialized
-                // BSP cost (Fig. 1); the overlap ablation flips this to
-                // compare pipelined POBP against the overlapped YLDA
-                overlap: o.overlap,
-                storage: o.storage,
-            };
-            fit_pobp(corpus, params, &cfg)
+            let cfg = pobp_config(algo, params, o);
+            if o.wants_resilience() {
+                fit_resilient(corpus, params, &cfg, &o.resilience(), None)
+            } else {
+                fit_checked(corpus, params, &cfg)
+            }
         }
         Algo::Pgs | Algo::Pfgs | Algo::Psgs | Algo::Ylda => {
             let cfg = MpaConfig {
@@ -173,7 +235,7 @@ pub fn run_algo(algo: Algo, corpus: &Csr, params: &LdaParams, o: &RunOpts) -> Tr
                 Algo::Psgs => GsVariant::Sparse,
                 _ => GsVariant::Ylda,
             };
-            fit_gibbs(corpus, params, &cfg, variant)
+            Ok(fit_gibbs(corpus, params, &cfg, variant))
         }
         Algo::Pvb => {
             let cfg = MpaConfig {
@@ -187,8 +249,18 @@ pub fn run_algo(algo: Algo, corpus: &Csr, params: &LdaParams, o: &RunOpts) -> Tr
                 seed: o.seed,
                 snapshot_every: o.snapshot_every,
             };
-            fit_vb(corpus, params, &cfg)
+            Ok(fit_vb(corpus, params, &cfg))
         }
+    }
+}
+
+/// Run `algo` on `corpus` under the shared options. Panics on an invalid
+/// configuration or a terminal fault; [`run_algo_checked`] is the typed
+/// variant.
+pub fn run_algo(algo: Algo, corpus: &Csr, params: &LdaParams, o: &RunOpts) -> TrainResult {
+    match run_algo_checked(algo, corpus, params, o) {
+        Ok(r) => r,
+        Err(e) => panic!("{e}"),
     }
 }
 
@@ -274,6 +346,42 @@ mod tests {
         assert_eq!(ser.ledger.payload_bytes_total(), ov.ledger.payload_bytes_total());
         assert_eq!(ser.ledger.overlap_saved_secs, 0.0);
         assert!(ov.ledger.overlap_saved_secs > 0.0, "pipeline hid no communication");
+    }
+
+    #[test]
+    fn resilient_opts_match_plain_run_bitwise() {
+        // checkpoint_every routes the POBP family through
+        // fit_resilient; a healthy run must stay bitwise identical and
+        // only pick up side-accumulator checkpoint charges.
+        let dir = std::env::temp_dir()
+            .join(format!("pobp-repro-res-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = dataset("tiny", 1, 8, 3);
+        let params = LdaParams::paper(8);
+        let o = RunOpts {
+            n_workers: 2,
+            max_batch_iters: 8,
+            nnz_budget: 500,
+            ..Default::default()
+        };
+        let plain = run_algo(Algo::Pobp, &c, &params, &o);
+        let resilient = run_algo(
+            Algo::Pobp,
+            &c,
+            &params,
+            &RunOpts {
+                checkpoint_every: 1,
+                checkpoint_dir: dir.to_string_lossy().into_owned(),
+                ..o
+            },
+        );
+        assert_eq!(plain.model.phi_wk, resilient.model.phi_wk);
+        assert!(resilient.ledger.checkpoint_count >= 1);
+        assert_eq!(
+            plain.ledger.total_secs().to_bits(),
+            resilient.ledger.total_secs().to_bits()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,791 @@
+//! Crash-consistent checkpoint engine (Contract 6).
+//!
+//! A [`Checkpoint`] atomically serializes the full training state at a
+//! mini-batch boundary — the accumulated φ̂ in either
+//! [`PhiStorageMode`], the RNG stream position, the batch cursor, the
+//! ledger (every f64 accumulator bit-preserved) and the run's history
+//! and snapshots — into one file:
+//!
+//! ```text
+//! "POBPCKP1" | version u32 | n_sections u32
+//!   then per section:
+//! tag u32 | payload_len u64 | fnv1a64(payload) u64 | payload
+//! ```
+//!
+//! All integers little-endian; f64/f32 as raw IEEE bits. Sections:
+//! META (shapes + cursors), RNG, PHI (mode-tagged), TOTALS (k per-topic
+//! f64 sums of φ̂ plus the grand total, recomputed on load and compared
+//! **bitwise** as a semantic integrity check on top of the checksums),
+//! LEDGER ([`Ledger::serialize_into`]), HISTORY, SNAPSHOTS.
+//!
+//! # Crash consistency and corruption
+//!
+//! [`Checkpoint::write`] serializes to a buffer, writes a tmp file,
+//! `sync_all`s and renames — a crash mid-write leaves at most a stale
+//! tmp file, never a torn checkpoint. [`Checkpoint::load`] refuses the
+//! file on any defect (bad magic/version, truncated section, checksum
+//! mismatch, shape inconsistency, totals drift);
+//! [`Checkpoint::load_latest_good`] walks the directory newest-first
+//! and falls back past refused files to the previous good checkpoint
+//! (`rust/tests/fault_equiv.rs` pins the flip-one-byte case).
+//!
+//! # Determinism contract
+//!
+//! Everything a resumed run needs to reproduce the uninterrupted run
+//! bitwise is in here; everything that is *measured* (wall clock,
+//! per-worker compute seconds) is either carried verbatim (history) or
+//! re-measured and never compared. The wire format is deliberately
+//! self-contained and position-independent — it doubles as the future
+//! worker-join/state-transfer payload when the cluster crosses the
+//! process boundary (ROADMAP item 1).
+
+use std::fmt;
+use std::fs;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use crate::comm::Ledger;
+use crate::engine::traits::{IterStat, Model};
+use crate::storage::shard::{PhiShard, PhiStorageMode};
+
+/// File magic: "POBPCKP1".
+pub const MAGIC: &[u8; 8] = b"POBPCKP1";
+/// Wire-format version; bumped on any layout change.
+pub const VERSION: u32 = 1;
+/// Checkpoint file extension.
+pub const EXTENSION: &str = "pobpckpt";
+
+const SEC_META: u32 = 1;
+const SEC_RNG: u32 = 2;
+const SEC_PHI: u32 = 3;
+const SEC_TOTALS: u32 = 4;
+const SEC_LEDGER: u32 = 5;
+const SEC_HISTORY: u32 = 6;
+const SEC_SNAPSHOTS: u32 = 7;
+const N_SECTIONS: u32 = 7;
+
+/// Why a checkpoint file was refused.
+#[derive(Debug)]
+pub enum CkptError {
+    Io(io::Error),
+    /// not a checkpoint file
+    BadMagic,
+    /// a future (or garbage) wire-format version
+    BadVersion(u32),
+    /// a section or the header ended early
+    Truncated(&'static str),
+    /// a section's FNV-1a checksum did not match its payload
+    Checksum(u32),
+    /// internally inconsistent shapes (e.g. φ̂ length ≠ W·K)
+    Shape(String),
+    /// the recomputed f64 per-topic totals differ bitwise from the
+    /// TOTALS section — the payload decoded but does not mean what it
+    /// said it meant
+    TotalsMismatch,
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint I/O: {e}"),
+            CkptError::BadMagic => write!(f, "not a POBP checkpoint (bad magic)"),
+            CkptError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
+            CkptError::Truncated(what) => write!(f, "truncated checkpoint ({what})"),
+            CkptError::Checksum(tag) => {
+                write!(f, "checksum mismatch in checkpoint section {tag}")
+            }
+            CkptError::Shape(s) => write!(f, "inconsistent checkpoint shapes: {s}"),
+            CkptError::TotalsMismatch => {
+                write!(f, "checkpoint φ̂ totals do not match their section")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+impl From<io::Error> for CkptError {
+    fn from(e: io::Error) -> CkptError {
+        CkptError::Io(e)
+    }
+}
+
+/// What a loaded checkpoint must match to be usable for a given run
+/// configuration; mismatching files (another corpus, another seed,
+/// another worker count) are skipped by [`Checkpoint::load_latest_good`]
+/// rather than resumed into the wrong run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CkptExpect {
+    pub w: usize,
+    pub k: usize,
+    pub n_workers: usize,
+    pub seed: u64,
+    pub mode: PhiStorageMode,
+}
+
+/// The full training state at a mini-batch boundary.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// vocabulary size (φ̂ rows)
+    pub w: usize,
+    /// topics (φ̂ row width)
+    pub k: usize,
+    /// logical worker count the run was configured with
+    pub n_workers: usize,
+    /// the run's master seed (resume sanity check, not re-applied)
+    pub seed: u64,
+    /// index of the first batch the resumed run must train
+    pub next_batch: usize,
+    /// first document of that batch (the stream cursor)
+    pub next_doc: usize,
+    /// iteration-sync counter (snapshot cadence state)
+    pub iter_syncs: usize,
+    /// master RNG stream position, captured at the batch boundary
+    /// *before* the next batch's worker splits are drawn
+    pub rng_state: [u64; 4],
+    /// accumulated φ̂ in the run's storage mode
+    pub phi: PhiShard,
+    pub ledger: Ledger,
+    pub history: Vec<IterStat>,
+    pub snapshots: Vec<(f64, Model)>,
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(4 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn push_section(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+    out.extend_from_slice(&tag.to_le_bytes());
+    put_u64(out, payload.len() as u64);
+    put_u64(out, fnv1a64(payload));
+    out.extend_from_slice(payload);
+}
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8], what: &'static str) -> Rd<'a> {
+        Rd { b, pos: 0, what }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], CkptError> {
+        let s = self
+            .b
+            .get(self.pos..self.pos.checked_add(n).ok_or(CkptError::Truncated(self.what))?)
+            .ok_or(CkptError::Truncated(self.what))?;
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, CkptError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CkptError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize, CkptError> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn f64(&mut self) -> Result<f64, CkptError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, CkptError> {
+        let raw = self.bytes(4usize.checked_mul(n).ok_or(CkptError::Truncated(self.what))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn done(&self) -> Result<(), CkptError> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(CkptError::Truncated(self.what))
+        }
+    }
+}
+
+/// Per-topic f64 sums of φ̂ plus the grand total, in one fixed
+/// sequential order (dense row order — the sharded parts concatenate to
+/// exactly that order, Contract 5's row alignment). Recomputed on load
+/// and compared bitwise against the TOTALS section.
+fn phi_topic_totals(phi: &PhiShard, k: usize) -> Vec<f64> {
+    let mut tot = vec![0f64; k + 1];
+    let mut fold = |slice: &[f32]| {
+        for row in slice.chunks_exact(k) {
+            for (t, &v) in row.iter().enumerate() {
+                tot[t] += v as f64;
+            }
+        }
+    };
+    match phi {
+        PhiShard::Replicated(d) => fold(d),
+        PhiShard::Sharded { parts, .. } => {
+            for p in parts {
+                fold(p);
+            }
+        }
+    }
+    let grand: f64 = tot[..k].iter().sum();
+    tot[k] = grand;
+    tot
+}
+
+impl Checkpoint {
+    /// Serialize to the full wire format (header + all sections).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&N_SECTIONS.to_le_bytes());
+
+        let mut meta = Vec::new();
+        put_u64(&mut meta, self.w as u64);
+        put_u64(&mut meta, self.k as u64);
+        put_u64(&mut meta, self.n_workers as u64);
+        put_u64(&mut meta, self.seed);
+        put_u64(&mut meta, self.next_batch as u64);
+        put_u64(&mut meta, self.next_doc as u64);
+        put_u64(&mut meta, self.iter_syncs as u64);
+        put_u64(
+            &mut meta,
+            match self.phi.mode() {
+                PhiStorageMode::Replicated => 0,
+                PhiStorageMode::Sharded => 1,
+            },
+        );
+        push_section(&mut out, SEC_META, &meta);
+
+        let mut rng = Vec::new();
+        for s in self.rng_state {
+            put_u64(&mut rng, s);
+        }
+        push_section(&mut out, SEC_RNG, &rng);
+
+        let mut phi = Vec::new();
+        match &self.phi {
+            PhiShard::Replicated(d) => {
+                put_u64(&mut phi, 0);
+                put_u64(&mut phi, d.len() as u64);
+                put_f32s(&mut phi, d);
+            }
+            PhiShard::Sharded { parts, .. } => {
+                put_u64(&mut phi, 1);
+                put_u64(&mut phi, parts.len() as u64);
+                for p in parts {
+                    put_u64(&mut phi, p.len() as u64);
+                    put_f32s(&mut phi, p);
+                }
+            }
+        }
+        push_section(&mut out, SEC_PHI, &phi);
+
+        let mut totals = Vec::new();
+        for t in phi_topic_totals(&self.phi, self.k) {
+            put_f64(&mut totals, t);
+        }
+        push_section(&mut out, SEC_TOTALS, &totals);
+
+        let mut ledger = Vec::new();
+        self.ledger.serialize_into(&mut ledger);
+        push_section(&mut out, SEC_LEDGER, &ledger);
+
+        let mut hist = Vec::new();
+        put_u64(&mut hist, self.history.len() as u64);
+        for s in &self.history {
+            put_u64(&mut hist, s.batch as u64);
+            put_u64(&mut hist, s.iter as u64);
+            put_f64(&mut hist, s.residual_per_token);
+            put_u64(&mut hist, s.synced_pairs as u64);
+            put_f64(&mut hist, s.sim_elapsed);
+            put_f64(&mut hist, s.wall_elapsed);
+        }
+        push_section(&mut out, SEC_HISTORY, &hist);
+
+        let mut snaps = Vec::new();
+        put_u64(&mut snaps, self.snapshots.len() as u64);
+        for (t, m) in &self.snapshots {
+            put_f64(&mut snaps, *t);
+            put_u64(&mut snaps, m.w as u64);
+            put_u64(&mut snaps, m.k as u64);
+            put_f32s(&mut snaps, &m.phi_wk);
+        }
+        push_section(&mut out, SEC_SNAPSHOTS, &snaps);
+
+        out
+    }
+
+    /// Decode and fully validate a serialized checkpoint: header,
+    /// per-section checksums, shape consistency, and the bitwise
+    /// totals recomputation.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CkptError> {
+        let mut hdr = Rd::new(bytes, "header");
+        if hdr.bytes(8)? != MAGIC {
+            return Err(CkptError::BadMagic);
+        }
+        let version = hdr.u32()?;
+        if version != VERSION {
+            return Err(CkptError::BadVersion(version));
+        }
+        let n_sections = hdr.u32()?;
+        if n_sections != N_SECTIONS {
+            return Err(CkptError::Shape(format!(
+                "{n_sections} sections, expected {N_SECTIONS}"
+            )));
+        }
+        let mut sections: Vec<(u32, &[u8])> = Vec::with_capacity(n_sections as usize);
+        for _ in 0..n_sections {
+            let tag = hdr.u32()?;
+            let len = hdr.usize()?;
+            let sum = hdr.u64()?;
+            let payload = hdr.bytes(len)?;
+            if fnv1a64(payload) != sum {
+                return Err(CkptError::Checksum(tag));
+            }
+            sections.push((tag, payload));
+        }
+        hdr.done()?;
+        let section = |tag: u32, what: &'static str| -> Result<&[u8], CkptError> {
+            sections
+                .iter()
+                .find(|(t, _)| *t == tag)
+                .map(|(_, p)| *p)
+                .ok_or(CkptError::Truncated(what))
+        };
+
+        let mut meta = Rd::new(section(SEC_META, "meta")?, "meta");
+        let w = meta.usize()?;
+        let k = meta.usize()?;
+        let n_workers = meta.usize()?;
+        let seed = meta.u64()?;
+        let next_batch = meta.usize()?;
+        let next_doc = meta.usize()?;
+        let iter_syncs = meta.usize()?;
+        let mode_tag = meta.u64()?;
+        meta.done()?;
+        if k == 0 || n_workers == 0 {
+            return Err(CkptError::Shape(format!("k = {k}, n_workers = {n_workers}")));
+        }
+
+        let mut rng = Rd::new(section(SEC_RNG, "rng")?, "rng");
+        let rng_state = [rng.u64()?, rng.u64()?, rng.u64()?, rng.u64()?];
+        rng.done()?;
+
+        let mut pr = Rd::new(section(SEC_PHI, "phi")?, "phi");
+        let phi_tag = pr.u64()?;
+        if phi_tag != mode_tag {
+            return Err(CkptError::Shape(format!(
+                "φ̂ section mode {phi_tag} vs meta mode {mode_tag}"
+            )));
+        }
+        let phi = match phi_tag {
+            0 => {
+                let len = pr.usize()?;
+                if len != w * k {
+                    return Err(CkptError::Shape(format!(
+                        "dense φ̂ len {len} vs W·K = {}",
+                        w * k
+                    )));
+                }
+                PhiShard::Replicated(pr.f32s(len)?)
+            }
+            1 => {
+                // rebuild the canonical row-aligned partition and demand
+                // the stored parts match it exactly — owner boundaries
+                // are shape, not data
+                let mut shard = PhiShard::sharded(w, k, n_workers);
+                let n_parts = pr.usize()?;
+                if n_parts != shard.parts().len() {
+                    return Err(CkptError::Shape(format!(
+                        "{n_parts} φ̂ parts vs {} owners",
+                        shard.parts().len()
+                    )));
+                }
+                for (i, part) in shard.parts_mut().iter_mut().enumerate() {
+                    let len = pr.usize()?;
+                    if len != part.len() {
+                        return Err(CkptError::Shape(format!(
+                            "φ̂ part {i} len {len} vs owner slice {}",
+                            part.len()
+                        )));
+                    }
+                    part.copy_from_slice(&pr.f32s(len)?);
+                }
+                shard
+            }
+            other => {
+                return Err(CkptError::Shape(format!("unknown φ̂ mode tag {other}")))
+            }
+        };
+        pr.done()?;
+
+        let mut tr = Rd::new(section(SEC_TOTALS, "totals")?, "totals");
+        let stored: Vec<f64> =
+            (0..k + 1).map(|_| tr.f64()).collect::<Result<_, _>>()?;
+        tr.done()?;
+        let recomputed = phi_topic_totals(&phi, k);
+        if stored
+            .iter()
+            .zip(&recomputed)
+            .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(CkptError::TotalsMismatch);
+        }
+
+        let ledger = Ledger::deserialize(section(SEC_LEDGER, "ledger")?)
+            .ok_or(CkptError::Truncated("ledger"))?;
+
+        let mut hr = Rd::new(section(SEC_HISTORY, "history")?, "history");
+        let n_hist = hr.usize()?;
+        let mut history = Vec::with_capacity(n_hist.min(1 << 20));
+        for _ in 0..n_hist {
+            history.push(IterStat {
+                batch: hr.usize()?,
+                iter: hr.usize()?,
+                residual_per_token: hr.f64()?,
+                synced_pairs: hr.usize()?,
+                sim_elapsed: hr.f64()?,
+                wall_elapsed: hr.f64()?,
+            });
+        }
+        hr.done()?;
+
+        let mut sr = Rd::new(section(SEC_SNAPSHOTS, "snapshots")?, "snapshots");
+        let n_snaps = sr.usize()?;
+        let mut snapshots = Vec::with_capacity(n_snaps.min(1 << 12));
+        for _ in 0..n_snaps {
+            let t = sr.f64()?;
+            let mw = sr.usize()?;
+            let mk = sr.usize()?;
+            if mw != w || mk != k {
+                return Err(CkptError::Shape(format!(
+                    "snapshot model {mw}×{mk} vs run {w}×{k}"
+                )));
+            }
+            let phi_wk = sr.f32s(mw * mk)?;
+            snapshots.push((t, Model { k: mk, w: mw, phi_wk }));
+        }
+        sr.done()?;
+
+        Ok(Checkpoint {
+            w,
+            k,
+            n_workers,
+            seed,
+            next_batch,
+            next_doc,
+            iter_syncs,
+            rng_state,
+            phi,
+            ledger,
+            history,
+            snapshots,
+        })
+    }
+
+    /// The expectation signature of this checkpoint.
+    pub fn expectation(&self) -> CkptExpect {
+        CkptExpect {
+            w: self.w,
+            k: self.k,
+            n_workers: self.n_workers,
+            seed: self.seed,
+            mode: self.phi.mode(),
+        }
+    }
+
+    /// Atomically write the checkpoint into `dir` as
+    /// `ckpt-<next_batch>.pobpckpt` (tmp file + `sync_all` + rename),
+    /// then prune all but the newest `keep` checkpoints. Returns the
+    /// final path and the bytes written.
+    pub fn write(&self, dir: &Path, keep: usize) -> io::Result<(PathBuf, usize)> {
+        fs::create_dir_all(dir)?;
+        let bytes = self.encode();
+        let name = format!("ckpt-{:08}.{EXTENSION}", self.next_batch);
+        let final_path = dir.join(&name);
+        let tmp_path = dir.join(format!(".{name}.tmp"));
+        {
+            let mut f = fs::File::create(&tmp_path)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp_path, &final_path)?;
+        // retention: the name embeds the zero-padded batch index, so
+        // lexicographic order is batch order
+        let mut existing = list_checkpoints(dir)?;
+        while existing.len() > keep.max(1) {
+            let oldest = existing.remove(0);
+            if oldest != final_path {
+                let _ = fs::remove_file(&oldest);
+            }
+        }
+        Ok((final_path, bytes.len()))
+    }
+
+    /// Load and validate one checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
+        Checkpoint::decode(&fs::read(path)?)
+    }
+
+    /// The newest loadable checkpoint in `dir` that matches `expect`
+    /// (if given), skipping — not failing on — corrupt, truncated or
+    /// mismatching files: that is the fallback-to-previous-good
+    /// behavior Contract 6 requires. `None` when the directory has no
+    /// usable checkpoint.
+    pub fn load_latest_good(
+        dir: &Path,
+        expect: Option<&CkptExpect>,
+    ) -> Option<(Checkpoint, PathBuf)> {
+        let paths = list_checkpoints(dir).ok()?;
+        for path in paths.into_iter().rev() {
+            if let Ok(ck) = Checkpoint::load(&path) {
+                if expect.is_none_or(|e| *e == ck.expectation()) {
+                    return Some((ck, path));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// All checkpoint files in `dir`, sorted oldest-first (the zero-padded
+/// name embeds the batch index).
+pub fn list_checkpoints(dir: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e),
+    };
+    for entry in rd {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some(EXTENSION) {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pobp-ckpt-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(mode: PhiStorageMode) -> Checkpoint {
+        let (w, k, n) = (10, 4, 3);
+        let mut phi = match mode {
+            PhiStorageMode::Replicated => PhiShard::replicated(w, k),
+            PhiStorageMode::Sharded => PhiShard::sharded(w, k, n),
+        };
+        match &mut phi {
+            PhiShard::Replicated(d) => {
+                for (i, v) in d.iter_mut().enumerate() {
+                    *v = (i as f32).sin();
+                }
+            }
+            PhiShard::Sharded { parts, .. } => {
+                let mut i = 0;
+                for p in parts {
+                    for v in p.iter_mut() {
+                        *v = (i as f32).sin();
+                        i += 1;
+                    }
+                }
+            }
+        }
+        let mut ledger = Ledger::new(NetModel::infiniband_20gbps());
+        ledger.record_sync(0, 1, 1 << 12, n);
+        ledger.record_compute(&[0.1, 0.3, 0.2]);
+        Checkpoint {
+            w,
+            k,
+            n_workers: n,
+            seed: 99,
+            next_batch: 2,
+            next_doc: 17,
+            iter_syncs: 9,
+            rng_state: [1, 2, 3, u64::MAX],
+            phi,
+            ledger,
+            history: vec![IterStat {
+                batch: 1,
+                iter: 3,
+                residual_per_token: 0.25,
+                synced_pairs: 40,
+                sim_elapsed: 1.5,
+                wall_elapsed: 0.1,
+            }],
+            snapshots: vec![(1.25, Model { k, w, phi_wk: vec![0.5; w * k] })],
+        }
+    }
+
+    fn assert_equal(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.n_workers, b.n_workers);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.next_batch, b.next_batch);
+        assert_eq!(a.next_doc, b.next_doc);
+        assert_eq!(a.iter_syncs, b.iter_syncs);
+        assert_eq!(a.rng_state, b.rng_state);
+        assert_eq!(a.phi.mode(), b.phi.mode());
+        assert_eq!(a.phi.to_dense(), b.phi.to_dense());
+        assert_eq!(a.ledger.sync_count(), b.ledger.sync_count());
+        assert_eq!(
+            a.ledger.total_secs().to_bits(),
+            b.ledger.total_secs().to_bits()
+        );
+        assert_eq!(a.history.len(), b.history.len());
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.batch, y.batch);
+            assert_eq!(x.iter, y.iter);
+            assert_eq!(
+                x.residual_per_token.to_bits(),
+                y.residual_per_token.to_bits()
+            );
+            assert_eq!(x.synced_pairs, y.synced_pairs);
+        }
+        assert_eq!(a.snapshots.len(), b.snapshots.len());
+        for ((ta, ma), (tb, mb)) in a.snapshots.iter().zip(&b.snapshots) {
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            assert_eq!(ma.phi_wk, mb.phi_wk);
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_both_modes() {
+        for mode in [PhiStorageMode::Replicated, PhiStorageMode::Sharded] {
+            let ck = sample(mode);
+            let back = Checkpoint::decode(&ck.encode()).unwrap();
+            assert_equal(&ck, &back);
+            // encode is deterministic: same state, same bytes
+            assert_eq!(ck.encode(), back.encode());
+        }
+    }
+
+    #[test]
+    fn every_flipped_byte_is_refused_or_harmless() {
+        // flip each byte of the file in turn: the loader must never
+        // return state that differs from the original (it either
+        // refuses, or the flip was in a length/padding position whose
+        // decode still reproduces the exact state — which cannot happen
+        // with checksummed sections, so: always refused)
+        let ck = sample(PhiStorageMode::Sharded);
+        let bytes = ck.encode();
+        let stride = (bytes.len() / 97).max(1);
+        for i in (0..bytes.len()).step_by(stride) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                Checkpoint::decode(&bad).is_err(),
+                "flipped byte {i} was accepted"
+            );
+        }
+        // truncation at any prefix is refused too
+        for cut in [0, 7, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn write_load_and_retention() {
+        let dir = tempdir("retention");
+        let mut ck = sample(PhiStorageMode::Replicated);
+        for b in 1..=4 {
+            ck.next_batch = b;
+            ck.write(&dir, 2).unwrap();
+        }
+        let files = list_checkpoints(&dir).unwrap();
+        assert_eq!(files.len(), 2, "retention must keep the newest 2");
+        let (latest, path) = Checkpoint::load_latest_good(&dir, None).unwrap();
+        assert_eq!(latest.next_batch, 4);
+        assert!(path.to_string_lossy().contains("ckpt-00000004"));
+        // no stale tmp files
+        assert!(fs::read_dir(&dir)
+            .unwrap()
+            .all(|e| !e.unwrap().path().to_string_lossy().ends_with(".tmp")));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_previous_good() {
+        let dir = tempdir("fallback");
+        let mut ck = sample(PhiStorageMode::Replicated);
+        ck.next_batch = 1;
+        ck.write(&dir, 4).unwrap();
+        ck.next_batch = 2;
+        let (newest, _) = ck.write(&dir, 4).unwrap();
+        // flip one byte in the middle of the newest file
+        let mut raw = fs::read(&newest).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        fs::write(&newest, &raw).unwrap();
+        assert!(Checkpoint::load(&newest).is_err(), "corrupt load must refuse");
+        let (good, path) = Checkpoint::load_latest_good(&dir, None).unwrap();
+        assert_eq!(good.next_batch, 1, "must fall back past the corrupt file");
+        assert!(path.to_string_lossy().contains("ckpt-00000001"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn expectation_filter_skips_foreign_checkpoints() {
+        let dir = tempdir("expect");
+        let ck = sample(PhiStorageMode::Replicated);
+        ck.write(&dir, 2).unwrap();
+        let mut expect = ck.expectation();
+        assert!(Checkpoint::load_latest_good(&dir, Some(&expect)).is_some());
+        expect.seed ^= 1;
+        assert!(
+            Checkpoint::load_latest_good(&dir, Some(&expect)).is_none(),
+            "foreign seed must not resume"
+        );
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_or_missing_dir_is_no_checkpoint() {
+        let dir = tempdir("empty");
+        assert!(Checkpoint::load_latest_good(&dir, None).is_none());
+        fs::remove_dir_all(&dir).unwrap();
+        assert!(Checkpoint::load_latest_good(&dir, None).is_none());
+        assert!(list_checkpoints(&dir).unwrap().is_empty());
+    }
+}

@@ -16,8 +16,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+pub mod checkpoint;
 pub mod shard;
 
+pub use checkpoint::{Checkpoint, CkptError, CkptExpect};
 pub use shard::{PhiShard, PhiStorageMode};
 
 /// Rows per band. Bands are the spill granularity.

@@ -37,6 +37,20 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw 256-bit stream position. Together with [`Rng::from_state`]
+    /// this is the checkpoint/restore contract: a generator rebuilt from
+    /// a captured state produces the exact `u64` sequence the original
+    /// would have produced from that point on (Contract 6).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact stream position captured by
+    /// [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

@@ -1,0 +1,324 @@
+//! Contract 6 acceptance: fault-tolerant training recovers **bitwise**.
+//!
+//! A run that is killed at a chosen `(batch, iter, sync-phase)` point and
+//! recovered from the last crash-consistent checkpoint must end bitwise
+//! identical to an uninterrupted oracle — model bits, residual history,
+//! per-topic f64 totals, sync counts and payload bytes — at OS-thread
+//! budgets {1, 2, 8} and in both φ̂ storage modes. Only the ledger's side
+//! accumulators (checkpoint I/O, recovery replay, straggler wait) may
+//! record that the road was bumpy; `total_secs()` keeps fault-free bits.
+//!
+//! Also pinned here: a corrupted newest checkpoint is refused and the
+//! previous good one is used instead; a batch-0 kill (no checkpoint yet)
+//! recovers by replaying from scratch; injected straggler delays never
+//! change the numerics; `max_retries = 0` surfaces `RetriesExhausted`.
+
+use std::path::PathBuf;
+
+use pobp::coordinator::{
+    fit, fit_resilient, PobpConfig, ResilienceConfig, TrainError,
+};
+use pobp::engine::traits::{LdaParams, TrainResult};
+use pobp::fault::{FaultKind, FaultPlan, FaultSpec, SyncPhase};
+use pobp::storage::checkpoint::list_checkpoints;
+use pobp::storage::{Checkpoint, PhiStorageMode};
+use pobp::synth::{generate, SynthSpec};
+
+/// Pinned harness: N = 3 workers, per-processor budget 300 (global 900,
+/// several mini-batches on the tiny corpus), exactly 8 iterations per
+/// batch (`converge_thresh = 0` pins the count, so the fold boundary is
+/// always iteration 9).
+const MAX_ITERS: usize = 8;
+const FOLD_ITER: usize = MAX_ITERS + 1;
+
+fn cfg(threads: usize, storage: PhiStorageMode) -> PobpConfig {
+    PobpConfig {
+        n_workers: 3,
+        max_threads: threads,
+        nnz_budget: 300,
+        max_iters: MAX_ITERS,
+        converge_thresh: 0.0,
+        storage,
+        ..Default::default()
+    }
+}
+
+fn corpus() -> pobp::corpus::Csr {
+    generate(&SynthSpec::tiny(29)).corpus
+}
+
+/// Fresh scratch directory for one test case.
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("pobp-fault-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Sequential per-topic f64 sums over the dense row-major model — the
+/// same fold order the checkpoint's TOTALS section pins.
+fn topic_totals(r: &TrainResult) -> Vec<u64> {
+    let (w, k) = (r.model.w, r.model.k);
+    let mut tot = vec![0f64; k];
+    for wi in 0..w {
+        for t in 0..k {
+            tot[t] += r.model.phi_wk[wi * k + t] as f64;
+        }
+    }
+    tot.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The bitwise-recovery contract between a recovered run and its
+/// uninterrupted oracle.
+fn assert_bitwise_equal(got: &TrainResult, oracle: &TrainResult, ctx: &str) {
+    assert_eq!(got.model.phi_wk, oracle.model.phi_wk, "model diverged at {ctx}");
+    assert_eq!(topic_totals(got), topic_totals(oracle), "totals diverged at {ctx}");
+    assert_eq!(got.history.len(), oracle.history.len(), "history length at {ctx}");
+    for (a, b) in got.history.iter().zip(&oracle.history) {
+        assert_eq!(a.batch, b.batch, "{ctx}");
+        assert_eq!(a.iter, b.iter, "{ctx}");
+        assert_eq!(
+            a.residual_per_token.to_bits(),
+            b.residual_per_token.to_bits(),
+            "batch {} iter {} residual diverged at {ctx}",
+            a.batch,
+            a.iter
+        );
+        assert_eq!(a.synced_pairs, b.synced_pairs, "{ctx}");
+    }
+    assert_eq!(got.ledger.sync_count(), oracle.ledger.sync_count(), "{ctx}");
+    assert_eq!(
+        got.ledger.payload_bytes_total(),
+        oracle.ledger.payload_bytes_total(),
+        "{ctx}"
+    );
+    assert_eq!(got.ledger.wire_bytes, oracle.ledger.wire_bytes, "{ctx}");
+    assert_eq!(
+        got.ledger.total_secs().to_bits(),
+        oracle.ledger.total_secs().to_bits(),
+        "recovery leaked into total_secs at {ctx}"
+    );
+}
+
+/// Kill a run at one point, recover it, and pin the result against the
+/// uninterrupted oracle.
+fn kill_and_recover_case(
+    tag: &str,
+    threads: usize,
+    storage: PhiStorageMode,
+    batch: usize,
+    iter: usize,
+    phase: SyncPhase,
+) {
+    let c = corpus();
+    let params = LdaParams::paper(8);
+    let cfg = cfg(threads, storage);
+    let oracle = fit(&c, &params, &cfg);
+    let batches = oracle.history.iter().map(|s| s.batch).max().unwrap() + 1;
+    assert!(batches >= 2, "harness must be multi-batch, got {batches}");
+    assert!(batch < batches, "kill point past the run ({batch} >= {batches})");
+
+    let dir = tmpdir(tag);
+    let res = ResilienceConfig::in_dir(&dir);
+    let plan = FaultPlan::kill(batch, iter, phase, 1);
+    let got = fit_resilient(&c, &params, &cfg, &res, Some(&plan))
+        .unwrap_or_else(|e| panic!("{tag}: recovery failed: {e}"));
+    assert_eq!(plan.kills_remaining(), 0, "{tag}: the kill never fired");
+    assert!(got.ledger.recovery_count >= 1, "{tag}: no recovery recorded");
+    if batch > 0 {
+        // recovery resumed mid-stream, so the replay charge is bounded
+        // by the death clock minus the checkpoint clock
+        assert!(
+            got.ledger.recovery_replay_secs >= 0.0
+                && got.ledger.recovery_replay_secs <= got.ledger.total_secs(),
+            "{tag}: implausible replay charge {}",
+            got.ledger.recovery_replay_secs
+        );
+        assert!(got.ledger.checkpoint_count >= 1, "{tag}: nothing checkpointed");
+    }
+    let ctx = format!("{tag} (threads={threads}, {storage:?}, {phase:?})");
+    assert_bitwise_equal(&got, &oracle, &ctx);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance matrix: kill points at the start-of-iteration sweep,
+/// inside the allreduce boundary, and at the end-of-batch fold — each at
+/// thread budgets 1/2/8, in both storage modes.
+#[test]
+fn killed_runs_recover_bitwise_at_sweep() {
+    for &threads in &[1usize, 2, 8] {
+        for storage in [PhiStorageMode::Replicated, PhiStorageMode::Sharded] {
+            kill_and_recover_case(
+                &format!("sweep-{threads}-{storage:?}"),
+                threads,
+                storage,
+                1,
+                1,
+                SyncPhase::Sweep,
+            );
+        }
+    }
+}
+
+#[test]
+fn killed_runs_recover_bitwise_at_mid_reduce() {
+    for &threads in &[1usize, 2, 8] {
+        for storage in [PhiStorageMode::Replicated, PhiStorageMode::Sharded] {
+            kill_and_recover_case(
+                &format!("midreduce-{threads}-{storage:?}"),
+                threads,
+                storage,
+                1,
+                3,
+                SyncPhase::MidReduce,
+            );
+        }
+    }
+}
+
+#[test]
+fn killed_runs_recover_bitwise_at_fold() {
+    for &threads in &[1usize, 2, 8] {
+        for storage in [PhiStorageMode::Replicated, PhiStorageMode::Sharded] {
+            kill_and_recover_case(
+                &format!("fold-{threads}-{storage:?}"),
+                threads,
+                storage,
+                1,
+                FOLD_ITER,
+                SyncPhase::Fold,
+            );
+        }
+    }
+}
+
+/// A batch-0 kill happens before any checkpoint exists: recovery must
+/// replay from scratch and still land on the oracle's bits.
+#[test]
+fn batch_zero_kill_recovers_from_scratch() {
+    for storage in [PhiStorageMode::Replicated, PhiStorageMode::Sharded] {
+        kill_and_recover_case(
+            &format!("batch0-{storage:?}"),
+            0,
+            storage,
+            0,
+            2,
+            SyncPhase::Sweep,
+        );
+    }
+}
+
+/// The overlap pipeline goes through the same recovery protocol.
+#[test]
+fn overlap_mode_kill_recovers_bitwise() {
+    let c = corpus();
+    let params = LdaParams::paper(8);
+    let cfg = PobpConfig { overlap: true, ..cfg(0, PhiStorageMode::Replicated) };
+    let oracle = fit(&c, &params, &cfg);
+    let dir = tmpdir("overlap");
+    let res = ResilienceConfig::in_dir(&dir);
+    let plan = FaultPlan::kill(1, 2, SyncPhase::MidReduce, 0);
+    let got = fit_resilient(&c, &params, &cfg, &res, Some(&plan))
+        .expect("overlap recovery");
+    assert!(got.ledger.recovery_count >= 1);
+    assert_bitwise_equal(&got, &oracle, "overlap mid-reduce kill");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Flip one byte of the newest checkpoint: the load must refuse it and
+/// fall back to the previous good file, and the resumed run still ends
+/// on the oracle's bits.
+#[test]
+fn corrupt_checkpoint_falls_back_to_previous_good() {
+    let c = corpus();
+    let params = LdaParams::paper(8);
+    let cfg = cfg(2, PhiStorageMode::Replicated);
+    let oracle = fit(&c, &params, &cfg);
+
+    let dir = tmpdir("corrupt");
+    let mut res = ResilienceConfig::in_dir(&dir);
+    res.keep_checkpoints = 4;
+    // clean run that leaves a trail of checkpoints behind
+    let clean = fit_resilient(&c, &params, &cfg, &res, None).expect("clean run");
+    assert!(clean.ledger.checkpoint_count >= 2, "need ≥ 2 checkpoints on disk");
+    let files = list_checkpoints(&dir).expect("list checkpoints");
+    assert!(files.len() >= 2, "retention kept {} files", files.len());
+    let newest = files.last().unwrap().clone();
+
+    // flip a byte in the middle of the newest file
+    let mut bytes = std::fs::read(&newest).expect("read checkpoint");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&newest, &bytes).expect("write corruption");
+    assert!(
+        Checkpoint::load(&newest).is_err(),
+        "corrupted checkpoint must be refused"
+    );
+
+    // resume: the loader must skip the corrupt newest file, restore the
+    // previous good one, and the continuation must still be bitwise
+    res.resume = true;
+    let resumed = fit_resilient(&c, &params, &cfg, &res, None).expect("resumed run");
+    assert_bitwise_equal(&resumed, &oracle, "corrupt-fallback resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Straggler delays reorder nothing: the numerics stay bitwise, the wait
+/// shows up only in the ledger's side accumulators.
+#[test]
+fn straggler_delays_never_change_the_numerics() {
+    let c = corpus();
+    let params = LdaParams::paper(8);
+    let cfg = cfg(0, PhiStorageMode::Replicated);
+    let oracle = fit(&c, &params, &cfg);
+    let dir = tmpdir("delay");
+    let res = ResilienceConfig::in_dir(&dir);
+    let plan = FaultPlan::new(vec![
+        FaultSpec {
+            batch: 0,
+            iter: 2,
+            phase: SyncPhase::Sweep,
+            worker: 1,
+            kind: FaultKind::Delay { secs: 0.25 },
+        },
+        FaultSpec {
+            batch: 1,
+            iter: 4,
+            phase: SyncPhase::Sweep,
+            worker: 2,
+            kind: FaultKind::Delay { secs: 0.5 },
+        },
+    ]);
+    let got = fit_resilient(&c, &params, &cfg, &res, Some(&plan)).expect("delayed run");
+    assert!(
+        got.ledger.straggler_wait_secs > 0.0,
+        "delays charged no straggler wait"
+    );
+    assert!(got.ledger.straggler_polls >= 1);
+    assert_bitwise_equal(&got, &oracle, "straggler delays");
+    assert!(got.ledger.degraded_total_secs() > got.ledger.total_secs());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// With a zero retry budget the first kill is terminal.
+#[test]
+fn zero_retry_budget_surfaces_retries_exhausted() {
+    let c = corpus();
+    let params = LdaParams::paper(8);
+    let cfg = cfg(0, PhiStorageMode::Replicated);
+    let dir = tmpdir("exhausted");
+    let mut res = ResilienceConfig::in_dir(&dir);
+    res.max_retries = 0;
+    let plan = FaultPlan::kill(0, 1, SyncPhase::Sweep, 0);
+    match fit_resilient(&c, &params, &cfg, &res, Some(&plan)) {
+        Err(TrainError::RetriesExhausted { fault, retries }) => {
+            assert_eq!(retries, 0);
+            assert_eq!(fault.batch, 0);
+            assert_eq!(fault.iter, 1);
+            assert_eq!(fault.phase, SyncPhase::Sweep);
+        }
+        Err(other) => panic!("unexpected error: {other}"),
+        Ok(_) => panic!("a kill with zero retries must fail the run"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
