@@ -5,7 +5,11 @@
 //! reduce-scatter). These are the §Perf numbers in EXPERIMENTS.md;
 //! alongside the human table the run emits `BENCH_microbench.json`
 //! (name → items/s, plus the measured POBP overlap efficiency) so the
-//! perf trajectory is machine-trackable across PRs.
+//! perf trajectory is machine-trackable across PRs. The Contract 7 rows
+//! (scalar vs wide kernel, pinned vs floating pool, spawn-threshold
+//! grains) force each kernel via `simd::force_kernel` so the scalar
+//! baseline stays honest on a `--features simd` build, and report a
+//! median-over-min timing-variance column for the noise-sensitive pairs.
 //!
 //! `--smoke` (or `--test`) runs every row once on the same corpus
 //! without writing the JSON — the CI quick pass that keeps the bench
@@ -27,6 +31,7 @@ use pobp::comm::allreduce::{
 use pobp::comm::{Cluster, NetModel};
 use pobp::coordinator::{fit, fit_resilient, PobpConfig, ResilienceConfig};
 use pobp::engine::bp::{Selection, ShardBp};
+use pobp::engine::simd::{self, KernelKind};
 use pobp::fault::{FaultPlan, SyncPhase};
 use pobp::storage::checkpoint::list_checkpoints;
 use pobp::storage::{Checkpoint, PhiShard, PhiStorageMode};
@@ -41,20 +46,44 @@ use pobp::util::json::Json;
 use pobp::util::partial_sort::top_k_desc;
 use pobp::util::rng::Rng;
 
+/// One bench row: mean-based items/s (the recorded number, unchanged
+/// semantics) plus the per-iteration min and median so noise-sensitive
+/// rows can report a timing-variance column (median/min ≈ 1.0 on a quiet
+/// host; large values mean the row's ratio rows are untrustworthy).
+struct Row {
+    ips: f64,
+    min_secs: f64,
+    med_secs: f64,
+}
+
+impl Row {
+    /// median-over-min timing variance (1.0 = perfectly quiet).
+    fn variance(&self) -> f64 {
+        if self.min_secs > 0.0 {
+            self.med_secs / self.min_secs
+        } else {
+            0.0
+        }
+    }
+}
+
 fn bench<F: FnMut()>(
     recs: &mut Vec<(String, f64)>,
     name: &str,
     iters: usize,
     work_items: f64,
     mut f: F,
-) {
+) -> Row {
     // warmup
     f();
-    let t0 = Instant::now();
+    let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
+        let t0 = Instant::now();
         f();
+        times.push(t0.elapsed().as_secs_f64());
     }
-    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let per = times.iter().sum::<f64>() / iters as f64;
+    times.sort_by(f64::total_cmp);
     let ips = work_items / per;
     println!(
         "{name:42} {:>12}/iter   {:>14} items/s",
@@ -62,6 +91,7 @@ fn bench<F: FnMut()>(
         sig(ips)
     );
     recs.push((name.to_string(), ips));
+    Row { ips, min_secs: times[0], med_secs: times[times.len() / 2] }
 }
 
 fn main() {
@@ -103,12 +133,31 @@ fn main() {
         shard.clear_selected_residuals(&sel);
         shard.sweep_reference(&phi, &tot, &sel, &params, true);
     });
-    bench(&mut recs, "bp sweep (full, fused serial)", it(10), updates, || {
+    // Contract 7 kernel pair: force each kernel explicitly so a
+    // `--features simd` build still reports an honest scalar baseline.
+    // Both kernels are bitwise-equal (tests/kernel_equiv.rs), so the
+    // timed work is identical; on a scalar build the forced wide kernel
+    // resolves to scalar and the ratio reads ~1.0x.
+    simd::force_kernel(Some(KernelKind::Scalar));
+    let row_fus = bench(&mut recs, "bp sweep (full, fused serial)", it(10), updates, || {
         shard.clear_selected_residuals(&sel);
         shard.sweep(&phi, &tot, &sel, &params, true);
     });
+    simd::force_kernel(Some(KernelKind::Wide));
+    let row_wid = bench(&mut recs, "bp sweep (full, simd serial)", it(10), updates, || {
+        shard.clear_selected_residuals(&sel);
+        shard.sweep(&phi, &tot, &sel, &params, true);
+    });
+    simd::force_kernel(None);
     bench(&mut recs, "bp sweep (full, doc-parallel)", it(10), updates, || {
         shard.sweep_parallel(&pool, 0, &phi, &tot, &sel, &params, true);
+    });
+    // the same pool with best-effort core pinning (with_pinning): a pure
+    // performance hint — on refused affinity or few-core hosts this row
+    // reads ~1.0x vs floating, which is the honest answer
+    let pool_pinned = Cluster::new(1, 0).with_pinning(true);
+    bench(&mut recs, "bp sweep (full, doc-parallel pinned)", it(10), updates, || {
+        shard.sweep_parallel(&pool_pinned, 0, &phi, &tot, &sel, &params, true);
     });
 
     // power-subset sweep (same schedule the coordinator runs at t >= 2);
@@ -133,14 +182,24 @@ fn main() {
         "power subset: {} active entries, {} pair updates",
         active_entries, sub_updates
     );
-    bench(&mut recs, "bp sweep (power subset, doc-order)", it(10), sub_updates, || {
+    simd::force_kernel(Some(KernelKind::Scalar));
+    let row_sub = bench(&mut recs, "bp sweep (power subset, doc-order)", it(10), sub_updates, || {
         shard.clear_selected_residuals(&sel_p);
         shard.sweep(&phi, &tot, &sel_p, &params, true);
     });
-    bench(&mut recs, "bp sweep (power subset, inverted idx)", it(10), sub_updates, || {
+    let row_sub_sc = bench(&mut recs, "bp sweep (power subset, inverted idx)", it(10), sub_updates, || {
         shard.clear_selected_residuals(&sel_p);
         shard.sweep_selected(&phi, &tot, &sel_p, &params, true);
     });
+    // the packed-gather arm under the wide kernel (the subset path
+    // Contract 7 vectorizes); compared against the forced-scalar
+    // inverted-idx row above — same sweep, same plan, kernel-only delta
+    simd::force_kernel(Some(KernelKind::Wide));
+    let row_sub_wid = bench(&mut recs, "bp sweep (power subset, simd)", it(10), sub_updates, || {
+        shard.clear_selected_residuals(&sel_p);
+        shard.sweep_selected(&phi, &tot, &sel_p, &params, true);
+    });
+    simd::force_kernel(None);
     bench(&mut recs, "bp sweep (power subset, doc-parallel)", it(10), sub_updates, || {
         shard.sweep_parallel(&pool, 0, &phi, &tot, &sel_p, &params, true);
     });
@@ -284,6 +343,24 @@ fn main() {
     bench(&mut recs, "allreduce subset leader-pool (chunked)", it(100), sub_items, || {
         allreduce_step_pool(&cluster, &sub_plan, &phi_acc, &srcs, &mut st);
     });
+    // spawn-threshold sweep (Cluster::with_spawn_threshold): the same
+    // subset step at three chunking grains. The rows live in their own
+    // JSON object (not items_per_sec) so the trajectory keys stay stable.
+    let mut thr_ips = [0.0f64; 3];
+    for (i, thr) in [1024usize, 8192, 65536].into_iter().enumerate() {
+        let cl = Cluster::new(nw, 0).with_spawn_threshold(thr);
+        let row = bench(
+            &mut recs,
+            &format!("allreduce subset leader-pool (thr={thr})"),
+            it(100),
+            sub_items,
+            || {
+                allreduce_step_pool(&cl, &sub_plan, &phi_acc, &srcs, &mut st);
+            },
+        );
+        thr_ips[i] = row.ips;
+        let _ = recs.pop();
+    }
     bench(&mut recs, "allreduce subset owner-sliced (fused)", it(100), sub_items, || {
         allreduce_step(&cluster, &sub_plan, &phi_acc, &srcs, &mut st, &mut scratch);
     });
@@ -523,6 +600,24 @@ fn main() {
     let pub_incr = find(&recs, "phi publish (incremental, power subset)");
     let abp_iter_overhead_speedup =
         if pub_clone > 0.0 { pub_incr / pub_clone } else { 0.0 };
+    // Contract 7 kernel + pinning ratios (same keys as the C mirror in
+    // tools/sweep_mirror.c, so the cross-PR tooling reads one shape)
+    let simd_full =
+        if row_fus.ips > 0.0 { row_wid.ips / row_fus.ips } else { 0.0 };
+    let simd_sub = if row_sub_sc.ips > 0.0 {
+        row_sub_wid.ips / row_sub_sc.ips
+    } else {
+        0.0
+    };
+    let parp = find(&recs, "bp sweep (full, doc-parallel pinned)");
+    let pin_speedup = if par > 0.0 { parp / par } else { 0.0 };
+    let isa = if !simd::wide_compiled() {
+        "none"
+    } else if cfg!(target_arch = "x86_64") {
+        "sse2"
+    } else {
+        "neon"
+    };
     let results = Json::Obj(
         recs.into_iter().map(|(n, v)| (n, Json::Num(v))).collect(),
     );
@@ -542,6 +637,34 @@ fn main() {
         ("scheduled_sweep_speedup_vs_serial", Json::from(sched_speedup)),
         ("abp_iter_overhead_speedup", Json::from(abp_iter_overhead_speedup)),
         ("overlap_efficiency", Json::from(overlap_eff)),
+        ("kernel_simd", Json::obj(vec![
+            ("compiled", Json::from(simd::wide_compiled())),
+            ("isa", Json::from(isa)),
+            ("full_sweep_speedup_vs_scalar", Json::from(simd_full)),
+            ("subset_sweep_speedup_vs_scalar", Json::from(simd_sub)),
+            (
+                "validated",
+                Json::from(
+                    "bitwise vs scalar (tests/kernel_equiv.rs: full + packed \
+                     subset sweeps, all state + residuals)",
+                ),
+            ),
+        ])),
+        ("pinning", Json::obj(vec![(
+            "full_sweep_pinned_speedup_vs_floating",
+            Json::from(pin_speedup),
+        )])),
+        ("spawn_threshold_items_per_sec", Json::obj(vec![
+            ("1024", Json::from(thr_ips[0])),
+            ("8192", Json::from(thr_ips[1])),
+            ("65536", Json::from(thr_ips[2])),
+        ])),
+        ("timing_variance_median_over_min", Json::obj(vec![
+            ("bp sweep (full, fused serial)", Json::from(row_fus.variance())),
+            ("bp sweep (full, simd serial)", Json::from(row_wid.variance())),
+            ("bp sweep (power subset, doc-order)", Json::from(row_sub.variance())),
+            ("bp sweep (power subset, simd)", Json::from(row_sub_wid.variance())),
+        ])),
         ("resilience", Json::obj(vec![
             ("kill_recover_cases", Json::from(6usize)),
             ("recoveries", Json::from(recoveries)),
@@ -566,6 +689,10 @@ fn main() {
         ("items_per_sec", results),
     ]);
     println!("\nfull-sweep speedup vs serial reference: {speedup:.2}x");
+    println!(
+        "simd kernel speedup vs scalar ({isa}): full {simd_full:.2}x, \
+         subset {simd_sub:.2}x; pinned-vs-floating {pin_speedup:.2}x"
+    );
     println!("scheduled-sweep speedup vs serial sweep_docs: {sched_speedup:.2}x");
     println!(
         "abp iter-overhead speedup (snapshot vs clone+rebuild): \

@@ -1,0 +1,137 @@
+//! Best-effort core pinning for pool threads (`--pin-cores` /
+//! `[run] pin_cores`).
+//!
+//! Pinning is a pure performance hint: the [`Cluster`](super::Cluster)
+//! dispatches are deterministic by partition (module doc there), so
+//! where a thread runs can never change results — only how often it
+//! migrates between cores and re-warms its caches. Accordingly this
+//! module **never fails**: where the OS refuses affinity (restricted
+//! cgroups, non-Linux targets, seccomp), it logs one warning and the
+//! pool keeps running with floating threads.
+//!
+//! Implementation: raw `sched_getaffinity`/`sched_setaffinity` FFI on
+//! Linux (no crates; a 1024-bit CPU mask like glibc's `cpu_set_t`).
+//! The process's allowed-CPU list is read once and cached; thread slot
+//! `i` pins to `allowed[i % allowed.len()]`, so the mapping also works
+//! inside containers whose cgroup exposes a sparse CPU subset.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+#[cfg(target_os = "linux")]
+mod imp {
+    /// 1024-bit mask = 16 × u64: the glibc `cpu_set_t` default width.
+    const MASK_U64: usize = 16;
+
+    extern "C" {
+        fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+
+    /// CPUs the process may run on, ascending; empty when unreadable.
+    pub fn allowed_cpus() -> Vec<usize> {
+        let mut mask = [0u64; MASK_U64];
+        // SAFETY: pid 0 = calling thread; the mask buffer is MASK_U64*8
+        // bytes, exactly the cpusetsize passed.
+        let rc = unsafe { sched_getaffinity(0, MASK_U64 * 8, mask.as_mut_ptr()) };
+        if rc != 0 {
+            return Vec::new();
+        }
+        let mut cpus = Vec::new();
+        for (word, &bits) in mask.iter().enumerate() {
+            for bit in 0..64 {
+                if bits & (1u64 << bit) != 0 {
+                    cpus.push(word * 64 + bit);
+                }
+            }
+        }
+        cpus
+    }
+
+    /// Pin the calling thread to one CPU; false when the OS refuses.
+    pub fn pin_to(cpu: usize) -> bool {
+        if cpu >= MASK_U64 * 64 {
+            return false;
+        }
+        let mut mask = [0u64; MASK_U64];
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        // SAFETY: as above; a single-bit mask of the right width.
+        (unsafe { sched_setaffinity(0, MASK_U64 * 8, mask.as_ptr()) }) == 0
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp {
+    /// Non-Linux: no affinity API wired up — pinning degrades to a no-op.
+    pub fn allowed_cpus() -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn pin_to(_cpu: usize) -> bool {
+        false
+    }
+}
+
+static ALLOWED: OnceLock<Vec<usize>> = OnceLock::new();
+static WARNED: AtomicBool = AtomicBool::new(false);
+
+/// The process's allowed-CPU list (affinity mask at first call), cached.
+pub fn allowed_cpus() -> &'static [usize] {
+    ALLOWED.get_or_init(imp::allowed_cpus)
+}
+
+/// Pin the calling thread to the `slot`-th allowed CPU (round-robin over
+/// the mask). Returns whether the pin took; on the first failure one
+/// warning is logged (log, don't fail — satellite contract) and later
+/// failures stay silent.
+pub fn pin_current_thread(slot: usize) -> bool {
+    let cpus = allowed_cpus();
+    if cpus.is_empty() {
+        warn_once("no readable CPU affinity mask on this platform");
+        return false;
+    }
+    let ok = imp::pin_to(cpus[slot % cpus.len()]);
+    if !ok {
+        warn_once("sched_setaffinity refused");
+    }
+    ok
+}
+
+fn warn_once(why: &str) {
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!("pobp: core pinning unavailable ({why}); pool threads stay floating");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pinning must never panic and must report consistently with the
+    /// visible mask: with allowed CPUs the Linux pin should take; with
+    /// none it must return false (and only warn).
+    #[test]
+    fn pin_is_best_effort_everywhere() {
+        let cpus = allowed_cpus();
+        for slot in 0..4 {
+            let ok = pin_current_thread(slot);
+            if cpus.is_empty() {
+                assert!(!ok);
+            } else if cfg!(target_os = "linux") {
+                assert!(ok, "pin to slot {slot} of {} allowed CPUs failed", cpus.len());
+            }
+        }
+        // restore: leave the test thread free to float over the full mask
+        if cfg!(target_os = "linux") && !cpus.is_empty() {
+            for &c in cpus {
+                // re-pinning to each allowed CPU keeps the thread valid;
+                // the harness does not depend on a particular final CPU
+                let _ = imp_pin(c);
+            }
+        }
+    }
+
+    fn imp_pin(cpu: usize) -> bool {
+        super::imp::pin_to(cpu)
+    }
+}

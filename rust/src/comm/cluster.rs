@@ -34,6 +34,14 @@
 //! deterministic in *shape* (which tasks existed) even though the
 //! measured times themselves vary run to run.
 //!
+//! Two construction-time performance knobs ride on top of the contract
+//! without touching it: [`Cluster::with_pinning`] pins spawned pool
+//! threads to cores (best-effort, see [`affinity`](super::affinity)) and
+//! [`Cluster::with_spawn_threshold`] tunes the serial/parallel cutover
+//! of [`Cluster::run_on_chunks`]. Both affect only *where* and *whether*
+//! threads run — never the partition — so results stay bitwise identical
+//! with them on, off, or refused by the OS.
+//!
 //! ```
 //! use pobp::comm::Cluster;
 //! let pool = Cluster::new(2, 0);
@@ -56,6 +64,20 @@ pub struct Cluster {
     /// limited by the logical worker count — an N = 2 simulation on a
     /// 16-core host still reduces on 16 threads.
     pool_threads: usize,
+    /// When set, every spawned pool thread pins itself to an allowed CPU
+    /// (slot-round-robin over the process affinity mask) before claiming
+    /// work — see [`affinity`](super::affinity). Best-effort: where the
+    /// OS refuses, threads stay floating and results are unchanged
+    /// (pinning is purely a cache-warmth hint under the determinism
+    /// contract above).
+    pin_cores: bool,
+    /// Minimum elements per parallel chunk in [`Cluster::run_on_chunks`]
+    /// — below this the scoped-thread spawn overhead exceeds the work and
+    /// the call degenerates to a serial pass. Defaults to
+    /// [`MIN_PAR_CHUNK`]; construction-time tunable via
+    /// [`Cluster::with_spawn_threshold`] (benchmarked in
+    /// `benches/microbench.rs`).
+    min_par_chunk: usize,
 }
 
 impl Cluster {
@@ -67,7 +89,38 @@ impl Cluster {
             .map(|c| c.get())
             .unwrap_or(1);
         let cap = if max_threads == 0 { cores } else { max_threads.min(cores) };
-        Cluster { n, threads: cap.min(n), pool_threads: cap }
+        Cluster {
+            n,
+            threads: cap.min(n),
+            pool_threads: cap,
+            pin_cores: false,
+            min_par_chunk: MIN_PAR_CHUNK,
+        }
+    }
+
+    /// Builder: enable (or disable) best-effort core pinning of pool
+    /// threads. Off by default; a refused pin logs once and the pool
+    /// keeps running floating.
+    pub fn with_pinning(mut self, pin: bool) -> Cluster {
+        self.pin_cores = pin;
+        self
+    }
+
+    /// Builder: override the [`Cluster::run_on_chunks`] spawn threshold
+    /// (minimum elements per parallel chunk; clamped to ≥ 1).
+    pub fn with_spawn_threshold(mut self, nnz: usize) -> Cluster {
+        self.min_par_chunk = nnz.max(1);
+        self
+    }
+
+    /// Whether pool threads pin themselves to cores.
+    pub fn pinned(&self) -> bool {
+        self.pin_cores
+    }
+
+    /// The active [`Cluster::run_on_chunks`] spawn threshold.
+    pub fn spawn_threshold(&self) -> usize {
+        self.min_par_chunk
     }
 
     pub fn workers(&self) -> usize {
@@ -128,18 +181,24 @@ impl Cluster {
             let fref = &f;
             let cells_ref = &cells;
             let counter_ref = &counter;
+            let pin = self.pin_cores;
             std::thread::scope(|scope| {
-                for _ in 0..self.threads {
-                    scope.spawn(move || loop {
-                        let i = counter_ref.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
+                for ti in 0..self.threads {
+                    scope.spawn(move || {
+                        if pin {
+                            super::affinity::pin_current_thread(ti);
                         }
-                        let t0 = Instant::now();
-                        let r = fref(i);
-                        let mut guard = cells_ref[i].lock().unwrap();
-                        *guard.0 = Some(r);
-                        *guard.1 = t0.elapsed().as_secs_f64();
+                        loop {
+                            let i = counter_ref.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let t0 = Instant::now();
+                            let r = fref(i);
+                            let mut guard = cells_ref[i].lock().unwrap();
+                            *guard.0 = Some(r);
+                            *guard.1 = t0.elapsed().as_secs_f64();
+                        }
                     });
                 }
             });
@@ -152,10 +211,11 @@ impl Cluster {
     }
 }
 
-/// Minimum elements per parallel chunk in [`Cluster::run_on_chunks`]:
-/// below this the scoped-thread spawn overhead exceeds the work, so the
-/// call degenerates to a serial pass.
-const MIN_PAR_CHUNK: usize = 1 << 13;
+/// Default minimum elements per parallel chunk in
+/// [`Cluster::run_on_chunks`]: below this the scoped-thread spawn
+/// overhead exceeds the work, so the call degenerates to a serial pass.
+/// Per-pool override: [`Cluster::with_spawn_threshold`].
+pub const MIN_PAR_CHUNK: usize = 1 << 13;
 
 impl Cluster {
     /// Split `data` into chunks (up to the full OS-thread budget — the
@@ -172,16 +232,22 @@ impl Cluster {
         F: Fn(usize, &mut [f32]) + Sync,
     {
         let len = data.len();
-        let nchunks = self.pool_threads.min(len.div_ceil(MIN_PAR_CHUNK)).max(1);
+        let nchunks = self.pool_threads.min(len.div_ceil(self.min_par_chunk)).max(1);
         if nchunks <= 1 {
             f(0, data);
             return;
         }
         let chunk_len = len.div_ceil(nchunks);
+        let pin = self.pin_cores;
         std::thread::scope(|scope| {
             for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
                 let fref = &f;
-                scope.spawn(move || fref(ci * chunk_len, chunk));
+                scope.spawn(move || {
+                    if pin {
+                        super::affinity::pin_current_thread(ci);
+                    }
+                    fref(ci * chunk_len, chunk)
+                });
             }
         });
     }
@@ -235,17 +301,23 @@ impl Cluster {
         let fref = &f;
         let cells_ref = &cells;
         let counter_ref = &counter;
+        let pin = self.pin_cores;
         std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(move || loop {
-                    let i = counter_ref.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+            for ti in 0..threads {
+                scope.spawn(move || {
+                    if pin {
+                        super::affinity::pin_current_thread(ti);
                     }
-                    let mut guard = cells_ref[i].lock().unwrap();
-                    let t0 = Instant::now();
-                    fref(i, &mut *guard.0);
-                    *guard.1 = t0.elapsed().as_secs_f64();
+                    loop {
+                        let i = counter_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let mut guard = cells_ref[i].lock().unwrap();
+                        let t0 = Instant::now();
+                        fref(i, &mut *guard.0);
+                        *guard.1 = t0.elapsed().as_secs_f64();
+                    }
                 });
             }
         });
@@ -387,6 +459,49 @@ mod tests {
         assert_eq!(c.doc_threads_per_worker(), c.pool_threads());
         let c = Cluster::new(64, 2);
         assert_eq!(c.doc_threads_per_worker(), 1);
+    }
+
+    #[test]
+    fn spawn_threshold_is_tunable_and_preserves_coverage() {
+        let c = Cluster::new(4, 0);
+        assert_eq!(c.spawn_threshold(), MIN_PAR_CHUNK);
+        // a tiny threshold forces the parallel path even on small data; a
+        // huge one forces the serial path — coverage must be identical
+        for &thr in &[1usize, 64, usize::MAX] {
+            let c = c.with_spawn_threshold(thr);
+            assert_eq!(c.spawn_threshold(), thr.max(1));
+            let mut data = vec![0f32; 1000];
+            c.run_on_chunks(&mut data, |start, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v += (start + j) as f32;
+                }
+            });
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as f32, "thr={thr} slot {i}");
+            }
+        }
+        assert_eq!(c.with_spawn_threshold(0).spawn_threshold(), 1);
+    }
+
+    #[test]
+    fn pinned_pool_matches_floating_pool_bitwise() {
+        let floating = Cluster::new(8, 0);
+        let pinned = floating.with_pinning(true);
+        assert!(pinned.pinned() && !floating.pinned());
+        let work = |i: usize| ((i as u64).wrapping_mul(0x9E3779B97F4A7C15), i * i);
+        let (a, _) = floating.run(work);
+        let (b, _) = pinned.run(work);
+        assert_eq!(a, b);
+        let mut x = vec![1f32; (1 << 13) * 2 + 5];
+        let mut y = x.clone();
+        let scale = |start: usize, chunk: &mut [f32]| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v *= ((start + j) % 7) as f32 + 0.5;
+            }
+        };
+        floating.run_on_chunks(&mut x, scale);
+        pinned.run_on_chunks(&mut y, scale);
+        assert_eq!(x, y);
     }
 
     #[test]

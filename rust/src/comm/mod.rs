@@ -24,6 +24,7 @@
 //!   comm)` with the hidden share tracked in
 //!   [`Ledger::overlap_saved_secs`].
 
+pub mod affinity;
 pub mod allreduce;
 pub mod cluster;
 pub mod ledger;

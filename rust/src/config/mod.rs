@@ -121,6 +121,10 @@ impl Experiment {
         let opts = RunOpts {
             n_workers: cf.typed("run", "workers", defaults.n_workers)?,
             max_threads: cf.typed("run", "threads", defaults.max_threads)?,
+            // `pin_cores = true` pins pool threads to cores — a pure
+            // performance hint; where the OS refuses affinity the run
+            // logs once and continues with floating threads
+            pin_cores: cf.typed("run", "pin_cores", defaults.pin_cores)?,
             iters: cf.typed("run", "iters", defaults.iters)?,
             max_batch_iters: cf.typed("run", "batch_iters", defaults.max_batch_iters)?,
             nnz_budget: cf.typed("run", "nnz_budget", defaults.nnz_budget)?,

@@ -97,6 +97,11 @@ pub struct PobpConfig {
     pub n_workers: usize,
     /// OS-thread cap for the simulation (0 = all cores)
     pub max_threads: usize,
+    /// Pin pool threads to cores (best-effort, `comm::affinity`): a pure
+    /// performance hint — results are bitwise identical pinned or
+    /// floating, and where the OS refuses affinity the run logs once and
+    /// continues unpinned. CLI `--pin-cores`, TOML `[run] pin_cores`.
+    pub pin_cores: bool,
     /// non-zero entries **per processor** per mini-batch (paper §4:
     /// "NNZ ≈ 45,000 in each mini-batch ... fit into 2 GB memory of each
     /// processor"): the global mini-batch holds `nnz_budget × N` entries,
@@ -147,6 +152,7 @@ impl Default for PobpConfig {
         PobpConfig {
             n_workers: 4,
             max_threads: 0,
+            pin_cores: false,
             nnz_budget: 45_000,
             power: PowerParams::paper_default(),
             max_iters: 50,
@@ -556,7 +562,7 @@ fn fit_replicated(
     let RunCtx { res, faults, resume, replay_secs } = ctx;
     let mut wall = Stopwatch::new();
     let (w, k) = (corpus.w, params.k);
-    let cluster = Cluster::new(cfg.n_workers, cfg.max_threads);
+    let cluster = Cluster::new(cfg.n_workers, cfg.max_threads).with_pinning(cfg.pin_cores);
     let mut ledger = Ledger::new(cfg.net);
     let mut history = Vec::new();
     let mut snapshots: Vec<(f64, Model)> = Vec::new();
@@ -873,7 +879,7 @@ fn fit_sharded(
     let RunCtx { res, faults, resume, replay_secs } = ctx;
     let mut wall = Stopwatch::new();
     let (w, k) = (corpus.w, params.k);
-    let cluster = Cluster::new(cfg.n_workers, cfg.max_threads);
+    let cluster = Cluster::new(cfg.n_workers, cfg.max_threads).with_pinning(cfg.pin_cores);
     let mut ledger = Ledger::new(cfg.net);
     let mut history = Vec::new();
     let mut snapshots: Vec<(f64, Model)> = Vec::new();

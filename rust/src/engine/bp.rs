@@ -61,6 +61,7 @@ use std::time::Instant;
 use crate::comm::allreduce::ReduceSource;
 use crate::comm::Cluster;
 use crate::corpus::Csr;
+use crate::engine::simd::{self, AlignedF32};
 use crate::engine::traits::LdaParams;
 use crate::sched::{DocSchedule, PowerSet};
 use crate::util::rng::Rng;
@@ -203,6 +204,10 @@ struct SweepCtx<'a> {
     beta: f32,
     wbeta: f32,
     update_phi: bool,
+    /// run the explicit-SIMD lanes of [`fused_update`]? Resolved once per
+    /// sweep from [`simd::active_kernel`] (Contract 7: both kernels are
+    /// bitwise equal, so this flag can never change results).
+    wide: bool,
 }
 
 impl<'a> SweepCtx<'a> {
@@ -257,6 +262,7 @@ impl<'a> SweepCtx<'a> {
             beta: p.beta,
             wbeta: w as f32 * p.beta,
             update_phi,
+            wide: simd::active_kernel() == simd::KernelKind::Wide,
         }
     }
 }
@@ -291,9 +297,10 @@ struct SchedScratch {
     merge_cursor: Vec<u32>,
     /// merge-task word-range boundaries, balanced by scratch-row count
     merge_bounds: Vec<u32>,
-    /// per-block Δφ̂ / r accumulators (scratch-row-major), grown on demand
-    sdphi: Vec<f32>,
-    sr: Vec<f32>,
+    /// per-block Δφ̂ / r accumulators (scratch-row-major, `simd::kpad`
+    /// padded rows in 64-byte-aligned storage), grown on demand
+    sdphi: AlignedF32,
+    sr: AlignedF32,
     /// per-doc residuals of the sweep, sorted-schedule order
     resid_sorted: Vec<f64>,
     /// fixed-block reuse path ([`ShardBp::sweep_docs_parallel_fixed`]):
@@ -307,16 +314,23 @@ struct SchedScratch {
 }
 
 /// Per-traversal lane scratch: score lanes plus the packed μ/θ̂ gathers
-/// of the subset path. One per serial sweep, one per doc block.
+/// of the subset path. One per serial sweep, one per doc block. The
+/// buffers are 64-byte aligned and cache-line padded so two blocks'
+/// lane scratch never shares a line (they are written on every entry).
 struct LaneBuf {
-    scores: Vec<f32>,
-    gmu: Vec<f32>,
-    gth: Vec<f32>,
+    scores: AlignedF32,
+    gmu: AlignedF32,
+    gth: AlignedF32,
 }
 
 impl LaneBuf {
     fn new(k: usize) -> LaneBuf {
-        LaneBuf { scores: vec![0.0; k], gmu: vec![0.0; k], gth: vec![0.0; k] }
+        let n = simd::kpad(k);
+        LaneBuf {
+            scores: AlignedF32::zeroed(n),
+            gmu: AlignedF32::zeroed(n),
+            gth: AlignedF32::zeroed(n),
+        }
     }
 }
 
@@ -350,20 +364,29 @@ fn fused_update(
             let phi_row = ctx.phi.row(wi, k);
             let phi_tot = &ctx.phi_tot[..k];
             let scores = &mut lanes.scores[..k];
-            // score phase: pure elementwise lanes (vectorizable)
-            for ((((s, &m), &to), &ph), &pt) in scores
-                .iter_mut()
-                .zip(mu.iter())
-                .zip(th_old)
-                .zip(phi_row)
-                .zip(phi_tot)
-            {
-                let c = x * m;
-                let th_m = (to - c).max(0.0) + alpha;
-                let ph_m = (ph - c).max(0.0) + beta;
-                let den = (pt - c).max(0.0) + wbeta;
-                *s = th_m * ph_m / den.max(1e-30);
+            // score phase: pure elementwise lanes. The wide kernel
+            // (`--features simd`) produces identical bits per lane —
+            // Contract 7 — so the dispatch cannot change results.
+            if ctx.wide {
+                simd::score_phase(x, mu, th_old, phi_row, phi_tot, alpha, beta, wbeta, scores);
+            } else {
+                for ((((s, &m), &to), &ph), &pt) in scores
+                    .iter_mut()
+                    .zip(mu.iter())
+                    .zip(th_old)
+                    .zip(phi_row)
+                    .zip(phi_tot)
+                {
+                    let c = x * m;
+                    let th_m = (to - c).max(0.0) + alpha;
+                    let ph_m = (ph - c).max(0.0) + beta;
+                    let den = (pt - c).max(0.0) + wbeta;
+                    *s = th_m * ph_m / den.max(1e-30);
+                }
             }
+            // the horizontal mass/residual reductions stay scalar
+            // sequential left-folds over the stored lane buffers under
+            // *both* kernels — the fixed reduction order of Contract 7
             let mass_new: f32 = scores.iter().sum();
             let mass_old: f32 = mu.iter().sum();
             if mass_new <= 0.0 || mass_old <= 0.0 {
@@ -372,7 +395,9 @@ fn fused_update(
             let scale = mass_old / mass_new;
             // delta phase: the rr values land back in the score lanes so
             // the residual reduction stays out of the SIMD loop
-            if let Some(dp) = dphi_row {
+            if ctx.wide {
+                simd::delta_phase(x, scale, scores, mu, th, dphi_row, r_row);
+            } else if let Some(dp) = dphi_row {
                 let dp = &mut dp[..k];
                 for ((((s, m), t_), d_), r_) in scores
                     .iter_mut()
@@ -426,18 +451,25 @@ fn fused_update(
                 *h = th_old[t];
             }
             let scores = &mut lanes.scores[..m_lanes];
-            for ((((s, &gm), &gt), &ph), &pt) in scores
-                .iter_mut()
-                .zip(gmu.iter())
-                .zip(gth.iter())
-                .zip(pph)
-                .zip(ptot)
-            {
-                let c = x * gm;
-                let th_m = (gt - c).max(0.0) + alpha;
-                let ph_m = (ph - c).max(0.0) + beta;
-                let den = (pt - c).max(0.0) + wbeta;
-                *s = th_m * ph_m / den.max(1e-30);
+            // packed score phase: same wide lanes as the dense arm over
+            // the contiguous gathers (Contract 7 — identical bits); the
+            // scatter below stays scalar in ascending-`ts` order
+            if ctx.wide {
+                simd::score_phase(x, gmu, gth, pph, ptot, alpha, beta, wbeta, scores);
+            } else {
+                for ((((s, &gm), &gt), &ph), &pt) in scores
+                    .iter_mut()
+                    .zip(gmu.iter())
+                    .zip(gth.iter())
+                    .zip(pph)
+                    .zip(ptot)
+                {
+                    let c = x * gm;
+                    let th_m = (gt - c).max(0.0) + alpha;
+                    let ph_m = (ph - c).max(0.0) + beta;
+                    let den = (pt - c).max(0.0) + wbeta;
+                    *s = th_m * ph_m / den.max(1e-30);
+                }
             }
             let mass_new: f32 = scores.iter().sum();
             let mass_old: f32 = gmu.iter().sum();
@@ -560,10 +592,12 @@ pub struct ShardBp {
     /// merge-task word-range boundaries (≈ one range per block, balanced
     /// by scratch-row count), fixed at init
     merge_bounds: Vec<u32>,
-    /// per-block Δφ̂ / r accumulators (scratch-row-major, S × K), sized on
-    /// the first parallel sweep
-    scratch_dphi: Vec<f32>,
-    scratch_r: Vec<f32>,
+    /// per-block Δφ̂ / r accumulators (scratch-row-major, S × kpad(K) —
+    /// rows cache-line padded and 64-byte aligned so concurrent blocks
+    /// never share a line; `simd::kpad`), sized on the first parallel
+    /// sweep
+    scratch_dphi: AlignedF32,
+    scratch_r: AlignedF32,
     /// per-doc residuals of the last whole-shard parallel sweep
     resid_doc: Vec<f64>,
     /// reusable tables of the scheduled-parallel sweep (per-sweep build)
@@ -699,8 +733,8 @@ impl ShardBp {
             merge_ptr,
             merge_rows,
             merge_bounds,
-            scratch_dphi: Vec::new(),
-            scratch_r: Vec::new(),
+            scratch_dphi: AlignedF32::default(),
+            scratch_r: AlignedF32::default(),
             resid_doc: vec![0.0; docs],
             sched: SchedScratch::default(),
         };
@@ -859,10 +893,13 @@ impl ShardBp {
         if nblocks == 0 {
             return (0.0, SweepTiming::default());
         }
+        // scratch rows are strided to kpad(K) — each row starts on its
+        // own 64-byte line, so concurrent blocks never false-share
+        let kp = simd::kpad(k);
         let srows = *self.block_row_off.last().unwrap() as usize;
-        if self.scratch_dphi.len() != srows * k {
-            self.scratch_dphi = vec![0.0; srows * k];
-            self.scratch_r = vec![0.0; srows * k];
+        if self.scratch_dphi.len() != srows * kp {
+            self.scratch_dphi = AlignedF32::zeroed(srows * kp);
+            self.scratch_r = AlignedF32::zeroed(srows * kp);
         }
         let ctx = SweepCtx::new_view(self.data.w, k, view, phi_tot, sel, p, update_phi);
 
@@ -908,9 +945,9 @@ impl ShardBp {
                 tho_rest = rest;
                 let (rd_b, rest) = rd_rest.split_at_mut(d1 - d0);
                 rd_rest = rest;
-                let (sd_b, rest) = sd_rest.split_at_mut(rows * k);
+                let (sd_b, rest) = sd_rest.split_at_mut(rows * kp);
                 sd_rest = rest;
-                let (sr_b, rest) = sr_rest.split_at_mut(rows * k);
+                let (sr_b, rest) = sr_rest.split_at_mut(rows * kp);
                 sr_rest = rest;
                 let (w_b, rest) = words_rest.split_at(rows);
                 words_rest = rest;
@@ -943,16 +980,16 @@ impl ShardBp {
                 match ctx.sel.topics_of(wi) {
                     None => {
                         if ctx.update_phi {
-                            t.sdphi[lr * k..(lr + 1) * k].fill(0.0);
+                            t.sdphi[lr * kp..lr * kp + k].fill(0.0);
                         }
-                        t.sr[lr * k..(lr + 1) * k].fill(0.0);
+                        t.sr[lr * kp..lr * kp + k].fill(0.0);
                     }
                     Some(ts) => {
                         for &tt in ts {
                             if ctx.update_phi {
-                                t.sdphi[lr * k + tt as usize] = 0.0;
+                                t.sdphi[lr * kp + tt as usize] = 0.0;
                             }
-                            t.sr[lr * k + tt as usize] = 0.0;
+                            t.sr[lr * kp + tt as usize] = 0.0;
                         }
                     }
                 }
@@ -975,7 +1012,7 @@ impl ShardBp {
                     let lr = nnz_row[idx] as usize;
                     let li = idx - t.nnz0;
                     let dphi_row = if ctx.update_phi {
-                        Some(&mut t.sdphi[lr * k..(lr + 1) * k])
+                        Some(&mut t.sdphi[lr * kp..lr * kp + k])
                     } else {
                         None
                     };
@@ -987,7 +1024,7 @@ impl ShardBp {
                         &t.theta_old[ld * k..(ld + 1) * k],
                         &mut t.theta[ld * k..(ld + 1) * k],
                         dphi_row,
-                        &mut t.sr[lr * k..(lr + 1) * k],
+                        &mut t.sr[lr * kp..lr * kp + k],
                         &mut t.lanes,
                     );
                 }
@@ -1039,7 +1076,7 @@ impl ShardBp {
                         let rrow = &mut mt.r[ww * k..(ww + 1) * k];
                         rrow.fill(0.0);
                         for &srow in rows {
-                            let base = srow as usize * k;
+                            let base = srow as usize * kp;
                             let src = &sr[base..base + k];
                             for (o, &v) in rrow.iter_mut().zip(src) {
                                 *o += v;
@@ -1048,7 +1085,7 @@ impl ShardBp {
                         if ctx.update_phi {
                             let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
                             for &srow in rows {
-                                let base = srow as usize * k;
+                                let base = srow as usize * kp;
                                 let src = &sdphi[base..base + k];
                                 for (o, &v) in drow.iter_mut().zip(src) {
                                     *o += v;
@@ -1062,7 +1099,7 @@ impl ShardBp {
                             rrow[tt as usize] = 0.0;
                         }
                         for &srow in rows {
-                            let base = srow as usize * k;
+                            let base = srow as usize * kp;
                             for &tt in ts {
                                 rrow[tt as usize] += sr[base + tt as usize];
                             }
@@ -1070,7 +1107,7 @@ impl ShardBp {
                         if ctx.update_phi {
                             let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
                             for &srow in rows {
-                                let base = srow as usize * k;
+                                let base = srow as usize * kp;
                                 for &tt in ts {
                                     drow[tt as usize] += sdphi[base + tt as usize];
                                 }
@@ -1270,6 +1307,8 @@ impl ShardBp {
         update_phi: bool,
     ) -> (Vec<f64>, SweepTiming) {
         let k = self.k;
+        // cache-line-padded scratch stride (see sweep_parallel_view)
+        let kp = simd::kpad(k);
         let nblocks = sched.blocks();
         if nblocks == 0 {
             return (Vec::new(), SweepTiming::default());
@@ -1316,9 +1355,9 @@ impl ShardBp {
             scr.block_row_off.push(prev + count);
         }
         let srows = *scr.block_row_off.last().unwrap() as usize;
-        if scr.sdphi.len() < srows * k {
-            scr.sdphi.resize(srows * k, 0.0);
-            scr.sr.resize(srows * k, 0.0);
+        if scr.sdphi.len() < srows * kp {
+            scr.sdphi.resize_zeroed(srows * kp);
+            scr.sr.resize_zeroed(srows * kp);
         }
         // merge plan: counting sort of the scratch rows by word — per
         // word, ascending rows == ascending block order
@@ -1388,8 +1427,8 @@ impl ShardBp {
             let mut th_rest = &mut self.theta[..];
             let mut tho_rest = &mut self.theta_old[..];
             let mut rd_rest = &mut scr.resid_sorted[..];
-            let mut sd_rest = &mut scr.sdphi[..srows * k];
-            let mut sr_rest = &mut scr.sr[..srows * k];
+            let mut sd_rest = &mut scr.sdphi[..srows * kp];
+            let mut sr_rest = &mut scr.sr[..srows * kp];
             let mut words_rest = &scr.row_word[..];
             let mut doc_cut = 0usize;
             let mut nnz_cut = 0usize;
@@ -1412,9 +1451,9 @@ impl ShardBp {
                 tho_rest = rest;
                 let (rd_b, rest) = rd_rest.split_at_mut(docs_b.len());
                 rd_rest = rest;
-                let (sd_b, rest) = sd_rest.split_at_mut(rows * k);
+                let (sd_b, rest) = sd_rest.split_at_mut(rows * kp);
                 sd_rest = rest;
-                let (sr_b, rest) = sr_rest.split_at_mut(rows * k);
+                let (sr_b, rest) = sr_rest.split_at_mut(rows * kp);
                 sr_rest = rest;
                 let (w_b, rest) = words_rest.split_at(rows);
                 words_rest = rest;
@@ -1445,16 +1484,16 @@ impl ShardBp {
                 match ctx.sel.topics_of(wi) {
                     None => {
                         if ctx.update_phi {
-                            t.sdphi[lr * k..(lr + 1) * k].fill(0.0);
+                            t.sdphi[lr * kp..lr * kp + k].fill(0.0);
                         }
-                        t.sr[lr * k..(lr + 1) * k].fill(0.0);
+                        t.sr[lr * kp..lr * kp + k].fill(0.0);
                     }
                     Some(ts) => {
                         for &tt in ts {
                             if ctx.update_phi {
-                                t.sdphi[lr * k + tt as usize] = 0.0;
+                                t.sdphi[lr * kp + tt as usize] = 0.0;
                             }
-                            t.sr[lr * k + tt as usize] = 0.0;
+                            t.sr[lr * kp + tt as usize] = 0.0;
                         }
                     }
                 }
@@ -1475,7 +1514,7 @@ impl ShardBp {
                     let lr = entry_row[idx] as usize;
                     let li = idx - t.nnz0;
                     let dphi_row = if ctx.update_phi {
-                        Some(&mut t.sdphi[lr * k..(lr + 1) * k])
+                        Some(&mut t.sdphi[lr * kp..lr * kp + k])
                     } else {
                         None
                     };
@@ -1487,7 +1526,7 @@ impl ShardBp {
                         &t.theta_old[ld * k..(ld + 1) * k],
                         &mut t.theta[ld * k..(ld + 1) * k],
                         dphi_row,
-                        &mut t.sr[lr * k..(lr + 1) * k],
+                        &mut t.sr[lr * kp..lr * kp + k],
                         &mut t.lanes,
                     );
                 }
@@ -1539,7 +1578,7 @@ impl ShardBp {
                     None => {
                         let rrow = &mut mt.r[ww * k..(ww + 1) * k];
                         for &srow in rows {
-                            let base = srow as usize * k;
+                            let base = srow as usize * kp;
                             let src = &sr[base..base + k];
                             for (o, &v) in rrow.iter_mut().zip(src) {
                                 *o += v;
@@ -1548,7 +1587,7 @@ impl ShardBp {
                         if ctx.update_phi {
                             let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
                             for &srow in rows {
-                                let base = srow as usize * k;
+                                let base = srow as usize * kp;
                                 let src = &sdphi[base..base + k];
                                 for (o, &v) in drow.iter_mut().zip(src) {
                                     *o += v;
@@ -1559,7 +1598,7 @@ impl ShardBp {
                     Some(ts) => {
                         let rrow = &mut mt.r[ww * k..(ww + 1) * k];
                         for &srow in rows {
-                            let base = srow as usize * k;
+                            let base = srow as usize * kp;
                             for &tt in ts {
                                 rrow[tt as usize] += sr[base + tt as usize];
                             }
@@ -1567,7 +1606,7 @@ impl ShardBp {
                         if ctx.update_phi {
                             let drow = &mut mt.dphi[ww * k..(ww + 1) * k];
                             for &srow in rows {
-                                let base = srow as usize * k;
+                                let base = srow as usize * kp;
                                 for &tt in ts {
                                     drow[tt as usize] += sdphi[base + tt as usize];
                                 }
@@ -1633,14 +1672,16 @@ impl ShardBp {
         update_phi: bool,
     ) -> (Vec<f64>, SweepTiming) {
         let k = self.k;
+        // cache-line-padded scratch stride (see sweep_parallel_view)
+        let kp = simd::kpad(k);
         let nblocks = self.block_doc_off.len().saturating_sub(1);
         if nblocks == 0 || sched.is_empty() {
             return (vec![0.0; sched.len()], SweepTiming::default());
         }
         let srows = *self.block_row_off.last().unwrap() as usize;
-        if self.scratch_dphi.len() != srows * k {
-            self.scratch_dphi = vec![0.0; srows * k];
-            self.scratch_r = vec![0.0; srows * k];
+        if self.scratch_dphi.len() != srows * kp {
+            self.scratch_dphi = AlignedF32::zeroed(srows * kp);
+            self.scratch_r = AlignedF32::zeroed(srows * kp);
         }
         let ctx = SweepCtx::new(self.data.w, k, phi_wk, phi_tot, sel, p, update_phi);
         let mut scr = std::mem::take(&mut self.sched);
@@ -1736,11 +1777,11 @@ impl ShardBp {
                 tho_rest = rest;
                 let (rd_b, rest) = rd_rest.split_at_mut(hi - lo);
                 rd_rest = rest;
-                let (_, rest) = sd_rest.split_at_mut((row0 - row_cut) * k);
-                let (sd_b, rest) = rest.split_at_mut(rows * k);
+                let (_, rest) = sd_rest.split_at_mut((row0 - row_cut) * kp);
+                let (sd_b, rest) = rest.split_at_mut(rows * kp);
                 sd_rest = rest;
-                let (_, rest) = sr_rest.split_at_mut((row0 - row_cut) * k);
-                let (sr_b, rest) = rest.split_at_mut(rows * k);
+                let (_, rest) = sr_rest.split_at_mut((row0 - row_cut) * kp);
+                let (sr_b, rest) = rest.split_at_mut(rows * kp);
                 sr_rest = rest;
                 let (_, rest) = words_rest.split_at(row0 - row_cut);
                 let (w_b, rest) = rest.split_at(rows);
@@ -1775,16 +1816,16 @@ impl ShardBp {
                 match ctx.sel.topics_of(wi) {
                     None => {
                         if ctx.update_phi {
-                            t.sdphi[lr * k..(lr + 1) * k].fill(0.0);
+                            t.sdphi[lr * kp..lr * kp + k].fill(0.0);
                         }
-                        t.sr[lr * k..(lr + 1) * k].fill(0.0);
+                        t.sr[lr * kp..lr * kp + k].fill(0.0);
                     }
                     Some(ts) => {
                         for &tt in ts {
                             if ctx.update_phi {
-                                t.sdphi[lr * k + tt as usize] = 0.0;
+                                t.sdphi[lr * kp + tt as usize] = 0.0;
                             }
-                            t.sr[lr * k + tt as usize] = 0.0;
+                            t.sr[lr * kp + tt as usize] = 0.0;
                         }
                     }
                 }
@@ -1806,7 +1847,7 @@ impl ShardBp {
                     let lr = nnz_row[idx] as usize;
                     let li = idx - t.nnz0;
                     let dphi_row = if ctx.update_phi {
-                        Some(&mut t.sdphi[lr * k..(lr + 1) * k])
+                        Some(&mut t.sdphi[lr * kp..lr * kp + k])
                     } else {
                         None
                     };
@@ -1818,7 +1859,7 @@ impl ShardBp {
                         &t.theta_old[ld * k..(ld + 1) * k],
                         &mut t.theta[ld * k..(ld + 1) * k],
                         dphi_row,
-                        &mut t.sr[lr * k..(lr + 1) * k],
+                        &mut t.sr[lr * kp..lr * kp + k],
                         &mut t.lanes,
                     );
                 }
@@ -1873,7 +1914,7 @@ impl ShardBp {
                             if !row_live[srow as usize] {
                                 continue;
                             }
-                            let base = srow as usize * k;
+                            let base = srow as usize * kp;
                             let src = &sr[base..base + k];
                             for (o, &v) in rrow.iter_mut().zip(src) {
                                 *o += v;
@@ -1885,7 +1926,7 @@ impl ShardBp {
                                 if !row_live[srow as usize] {
                                     continue;
                                 }
-                                let base = srow as usize * k;
+                                let base = srow as usize * kp;
                                 let src = &sdphi[base..base + k];
                                 for (o, &v) in drow.iter_mut().zip(src) {
                                     *o += v;
@@ -1899,7 +1940,7 @@ impl ShardBp {
                             if !row_live[srow as usize] {
                                 continue;
                             }
-                            let base = srow as usize * k;
+                            let base = srow as usize * kp;
                             for &tt in ts {
                                 rrow[tt as usize] += sr[base + tt as usize];
                             }
@@ -1910,7 +1951,7 @@ impl ShardBp {
                                 if !row_live[srow as usize] {
                                     continue;
                                 }
-                                let base = srow as usize * k;
+                                let base = srow as usize * kp;
                                 for &tt in ts {
                                     drow[tt as usize] += sdphi[base + tt as usize];
                                 }

@@ -11,6 +11,7 @@ pub mod gibbs;
 pub mod mca;
 pub mod mpa;
 pub mod sgs;
+pub mod simd;
 pub mod snapshot;
 pub mod traits;
 pub mod vb;

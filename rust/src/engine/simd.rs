@@ -1,0 +1,616 @@
+//! Explicit-SIMD lanes of the fused BP kernel + cache-aligned scratch
+//! (Contract 7, `docs/ARCHITECTURE.md`).
+//!
+//! The per-entry kernel ([`fused_update`](super::bp)) runs three phases:
+//! an elementwise *score* phase, two horizontal *mass* reductions, and an
+//! elementwise *delta* phase. Only the elementwise phases are widened
+//! here (SSE2 on x86_64, NEON on aarch64 — both baseline features of
+//! their targets, so there is no runtime CPU detection to get wrong);
+//! the mass reductions and the per-entry residual stay **scalar
+//! sequential left-folds over the stored lane buffers**, which is both
+//! the fixed, documented horizontal-reduction order and the exact order
+//! of the scalar oracle. Per lane, the wide phases perform the same IEEE
+//! single-precision mul/sub/add/div in the same order as the scalar
+//! kernel — those operations are correctly rounded, so each lane's bits
+//! are identical — and the `K mod 4` tail runs the verbatim scalar
+//! expressions. Net: μ, θ̂, the per-doc residuals and the scratch Δφ̂/r
+//! rows produced under the wide kernel are **bitwise equal** to the
+//! scalar kernel's (pinned by `rust/tests/kernel_equiv.rs`).
+//!
+//! `max` lanes: the kernel only computes `v.max(c)` against constants
+//! (`0.0`, `1e-30`) and the constant rides in the second operand of
+//! `maxps`/`fmax`, matching `f32::max`'s NaN-returns-other semantics;
+//! a `-0.0` winner differs from `+0.0` only in the sign bit, which the
+//! immediately following `+ α`/`+ β`/`+ Wβ` add erases (`-0.0 + c ==
+//! +0.0 + c` bitwise). The kernel's statistics are finite and
+//! non-negative, so no NaN reaches the `max` lanes on any path.
+//!
+//! Without `--features simd` (the default build) the scalar kernel in
+//! `bp.rs` runs unchanged and nothing here is dispatched to; the
+//! fallbacks below keep the API compiling on every target.
+//!
+//! [`AlignedF32`] is the other half of the hardware-floor pass: per-block
+//! scratch rows (`LaneBuf`, the Δφ̂/r scratch tables) are padded to a
+//! 64-byte stride ([`kpad`]) inside 64-byte-aligned storage, so two pool
+//! threads never write the same cache line (false sharing).
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// f32 lanes per 64-byte cache line — the scratch-row alignment quantum.
+pub const LANE_F32: usize = 16;
+
+/// Scratch-row stride for `k` topic lanes: `k` rounded up to a whole
+/// cache line. The padding lanes are never zeroed, never written by the
+/// kernel and never read by the merge — they exist only so adjacent
+/// rows land on distinct lines.
+#[inline]
+pub fn kpad(k: usize) -> usize {
+    k.next_multiple_of(LANE_F32)
+}
+
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+struct CacheLine([f32; LANE_F32]);
+
+/// Growable `f32` buffer whose storage is 64-byte aligned (backed by
+/// whole [`CacheLine`]s). Derefs to `[f32]`, so call sites index it like
+/// the `Vec<f32>` it replaced; combined with a [`kpad`] stride every row
+/// starts on its own cache line.
+#[derive(Clone, Default)]
+pub struct AlignedF32 {
+    buf: Vec<CacheLine>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    pub fn zeroed(len: usize) -> AlignedF32 {
+        AlignedF32 {
+            buf: vec![CacheLine([0.0; LANE_F32]); len.div_ceil(LANE_F32)],
+            len,
+        }
+    }
+
+    /// Grow (or shrink) to `len` elements; any newly exposed elements
+    /// read as `0.0`, matching `Vec::resize(len, 0.0)`.
+    pub fn resize_zeroed(&mut self, len: usize) {
+        self.buf.resize(len.div_ceil(LANE_F32), CacheLine([0.0; LANE_F32]));
+        let old = self.len.min(len);
+        self.len = len;
+        let s: &mut [f32] = self;
+        s[old..].fill(0.0);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Deref for AlignedF32 {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        // SAFETY: `buf` is a contiguous `repr(C)` array of `[f32; 16]`
+        // lines holding at least `len` floats (zeroed at allocation).
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr().cast::<f32>(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedF32 {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as in `deref`; `&mut self` gives exclusive access.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.buf.as_mut_ptr().cast::<f32>(), self.len)
+        }
+    }
+}
+
+impl fmt::Debug for AlignedF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AlignedF32").field("len", &self.len).finish()
+    }
+}
+
+/// Which `fused_update` lane implementation a sweep runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelKind {
+    /// The verbatim scalar kernel — the default build and the oracle.
+    Scalar,
+    /// The explicit-SIMD lanes (`--features simd`, x86_64/aarch64 only).
+    Wide,
+}
+
+/// Whether a wide kernel is compiled into this binary at all.
+pub fn wide_compiled() -> bool {
+    cfg!(all(
+        feature = "simd",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))
+}
+
+// 0 = auto (wide when compiled), 1 = force scalar, 2 = force wide
+static KERNEL_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Test/bench hook: force the kernel choice (`None` = back to auto).
+/// Forcing [`KernelKind::Wide`] in a build without a wide kernel is a
+/// no-op — [`active_kernel`] still reports `Scalar`, so scalar-only
+/// builds run equivalence tests as scalar-vs-scalar (vacuously green).
+pub fn force_kernel(kind: Option<KernelKind>) {
+    let v = match kind {
+        None => 0,
+        Some(KernelKind::Scalar) => 1,
+        Some(KernelKind::Wide) => 2,
+    };
+    KERNEL_OVERRIDE.store(v, Ordering::SeqCst);
+}
+
+/// The kernel the next sweep will run. Resolved once per sweep into
+/// `SweepCtx` (not per entry), so a mid-sweep `force_kernel` cannot mix
+/// kernels within one sweep.
+pub fn active_kernel() -> KernelKind {
+    match KERNEL_OVERRIDE.load(Ordering::SeqCst) {
+        1 => KernelKind::Scalar,
+        2 | 0 if wide_compiled() => KernelKind::Wide,
+        _ => KernelKind::Scalar,
+    }
+}
+
+/// The scalar score phase — the oracle expressions, shared verbatim by
+/// the non-SIMD fallback and the wide kernels' `K mod 4` tails.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn score_scalar(
+    x: f32,
+    mu: &[f32],
+    th_old: &[f32],
+    phi_row: &[f32],
+    phi_tot: &[f32],
+    alpha: f32,
+    beta: f32,
+    wbeta: f32,
+    scores: &mut [f32],
+) {
+    for ((((s, &m), &to), &ph), &pt) in scores
+        .iter_mut()
+        .zip(mu.iter())
+        .zip(th_old.iter())
+        .zip(phi_row.iter())
+        .zip(phi_tot.iter())
+    {
+        let c = x * m;
+        let th_m = (to - c).max(0.0) + alpha;
+        let ph_m = (ph - c).max(0.0) + beta;
+        let den = (pt - c).max(0.0) + wbeta;
+        *s = th_m * ph_m / den.max(1e-30);
+    }
+}
+
+/// The scalar delta phase (oracle expressions; see [`score_scalar`]).
+#[inline]
+fn delta_scalar(
+    x: f32,
+    scale: f32,
+    scores: &mut [f32],
+    mu: &mut [f32],
+    th: &mut [f32],
+    dphi: Option<&mut [f32]>,
+    r: &mut [f32],
+) {
+    if let Some(dp) = dphi {
+        for ((((s, m), t_), d_), r_) in scores
+            .iter_mut()
+            .zip(mu.iter_mut())
+            .zip(th.iter_mut())
+            .zip(dp.iter_mut())
+            .zip(r.iter_mut())
+        {
+            let new = *s * scale;
+            let dm = new - *m;
+            *m = new;
+            *t_ += x * dm;
+            *d_ += x * dm;
+            let rr = x * dm.abs();
+            *r_ += rr;
+            *s = rr;
+        }
+    } else {
+        for (((s, m), t_), r_) in scores
+            .iter_mut()
+            .zip(mu.iter_mut())
+            .zip(th.iter_mut())
+            .zip(r.iter_mut())
+        {
+            let new = *s * scale;
+            let dm = new - *m;
+            *m = new;
+            *t_ += x * dm;
+            let rr = x * dm.abs();
+            *r_ += rr;
+            *s = rr;
+        }
+    }
+}
+
+/// Wide score phase: `scores[i] = ((th_old[i]-x·mu[i])⁺+α) ·
+/// ((phi_row[i]-x·mu[i])⁺+β) / max((phi_tot[i]-x·mu[i])⁺+Wβ, 1e-30)`,
+/// bitwise per lane equal to the scalar kernel. `scores.len()` governs;
+/// the input slices must be at least that long. Serves both the dense
+/// arm (μ/θ̂/φ̂ rows) and the packed subset arm (gathered gmu/gθ̂ and
+/// packed φ̂/φ̂_Σ) of `fused_update`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn score_phase(
+    x: f32,
+    mu: &[f32],
+    th_old: &[f32],
+    phi_row: &[f32],
+    phi_tot: &[f32],
+    alpha: f32,
+    beta: f32,
+    wbeta: f32,
+    scores: &mut [f32],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    return sse::score_phase(x, mu, th_old, phi_row, phi_tot, alpha, beta, wbeta, scores);
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    return neon::score_phase(x, mu, th_old, phi_row, phi_tot, alpha, beta, wbeta, scores);
+    #[cfg(not(all(
+        feature = "simd",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    score_scalar(x, mu, th_old, phi_row, phi_tot, alpha, beta, wbeta, scores)
+}
+
+/// Wide delta phase of the dense arm: rescale the score lanes into the
+/// new μ, accumulate `x·Δμ` into θ̂ (and Δφ̂ when given), and park the
+/// per-lane residual `x·|Δμ|` back in the score buffer (the caller's
+/// sequential `rsum` fold reads it from there — the fixed horizontal
+/// order). Bitwise per lane equal to the scalar kernel.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn delta_phase(
+    x: f32,
+    scale: f32,
+    scores: &mut [f32],
+    mu: &mut [f32],
+    th: &mut [f32],
+    dphi: Option<&mut [f32]>,
+    r: &mut [f32],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    return sse::delta_phase(x, scale, scores, mu, th, dphi, r);
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    return neon::delta_phase(x, scale, scores, mu, th, dphi, r);
+    #[cfg(not(all(
+        feature = "simd",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    delta_scalar(x, scale, scores, mu, th, dphi, r)
+}
+
+/// SSE2 lanes (baseline on every x86_64 target — no runtime detection).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod sse {
+    use std::arch::x86_64::*;
+
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub(super) fn score_phase(
+        x: f32,
+        mu: &[f32],
+        th_old: &[f32],
+        phi_row: &[f32],
+        phi_tot: &[f32],
+        alpha: f32,
+        beta: f32,
+        wbeta: f32,
+        scores: &mut [f32],
+    ) {
+        let n = scores.len();
+        debug_assert!(
+            mu.len() >= n && th_old.len() >= n && phi_row.len() >= n && phi_tot.len() >= n
+        );
+        let wide = n - n % 4;
+        // SAFETY: SSE2 is an x86_64 baseline feature; all loads/stores
+        // stay below `wide <= n` and every input slice holds >= n floats.
+        unsafe {
+            let xv = _mm_set1_ps(x);
+            let av = _mm_set1_ps(alpha);
+            let bv = _mm_set1_ps(beta);
+            let wv = _mm_set1_ps(wbeta);
+            let zero = _mm_setzero_ps();
+            let floor = _mm_set1_ps(1e-30);
+            let mut i = 0;
+            while i < wide {
+                let m = _mm_loadu_ps(mu.as_ptr().add(i));
+                let to = _mm_loadu_ps(th_old.as_ptr().add(i));
+                let ph = _mm_loadu_ps(phi_row.as_ptr().add(i));
+                let pt = _mm_loadu_ps(phi_tot.as_ptr().add(i));
+                let c = _mm_mul_ps(xv, m);
+                // constants ride in maxps's second operand — f32::max
+                // semantics for every kernel-reachable input (module doc)
+                let th_m = _mm_add_ps(_mm_max_ps(_mm_sub_ps(to, c), zero), av);
+                let ph_m = _mm_add_ps(_mm_max_ps(_mm_sub_ps(ph, c), zero), bv);
+                let den = _mm_add_ps(_mm_max_ps(_mm_sub_ps(pt, c), zero), wv);
+                let s = _mm_div_ps(_mm_mul_ps(th_m, ph_m), _mm_max_ps(den, floor));
+                _mm_storeu_ps(scores.as_mut_ptr().add(i), s);
+                i += 4;
+            }
+        }
+        super::score_scalar(
+            x,
+            &mu[wide..n],
+            &th_old[wide..n],
+            &phi_row[wide..n],
+            &phi_tot[wide..n],
+            alpha,
+            beta,
+            wbeta,
+            &mut scores[wide..n],
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub(super) fn delta_phase(
+        x: f32,
+        scale: f32,
+        scores: &mut [f32],
+        mu: &mut [f32],
+        th: &mut [f32],
+        mut dphi: Option<&mut [f32]>,
+        r: &mut [f32],
+    ) {
+        let n = scores.len();
+        debug_assert!(mu.len() >= n && th.len() >= n && r.len() >= n);
+        debug_assert!(dphi.as_ref().map_or(true, |d| d.len() >= n));
+        let wide = n - n % 4;
+        let dp_ptr: Option<*mut f32> = dphi.as_mut().map(|d| d.as_mut_ptr());
+        // SAFETY: as in `score_phase`; `scores`/`mu`/`th`/`dphi`/`r` are
+        // distinct `&mut` slices, so the raw-pointer read/modify/write
+        // per array never aliases another.
+        unsafe {
+            let xv = _mm_set1_ps(x);
+            let sv = _mm_set1_ps(scale);
+            let abs_mask = _mm_castsi128_ps(_mm_set1_epi32(0x7fff_ffff));
+            let mut i = 0;
+            while i < wide {
+                let s = _mm_loadu_ps(scores.as_ptr().add(i));
+                let m = _mm_loadu_ps(mu.as_ptr().add(i));
+                let new = _mm_mul_ps(s, sv);
+                let dm = _mm_sub_ps(new, m);
+                _mm_storeu_ps(mu.as_mut_ptr().add(i), new);
+                let xdm = _mm_mul_ps(xv, dm);
+                let t = _mm_loadu_ps(th.as_ptr().add(i));
+                _mm_storeu_ps(th.as_mut_ptr().add(i), _mm_add_ps(t, xdm));
+                if let Some(dp) = dp_ptr {
+                    let d = _mm_loadu_ps(dp.add(i));
+                    _mm_storeu_ps(dp.add(i), _mm_add_ps(d, xdm));
+                }
+                // |dm| by clearing the sign bit — exactly f32::abs
+                let rr = _mm_mul_ps(xv, _mm_and_ps(dm, abs_mask));
+                let rv = _mm_loadu_ps(r.as_ptr().add(i));
+                _mm_storeu_ps(r.as_mut_ptr().add(i), _mm_add_ps(rv, rr));
+                _mm_storeu_ps(scores.as_mut_ptr().add(i), rr);
+                i += 4;
+            }
+        }
+        super::delta_scalar(
+            x,
+            scale,
+            &mut scores[wide..n],
+            &mut mu[wide..n],
+            &mut th[wide..n],
+            dphi.map(|d| &mut d[wide..n]),
+            &mut r[wide..n],
+        );
+    }
+}
+
+/// NEON lanes (baseline on every aarch64 target). `fmax`/`fabs`/`fdiv`
+/// are IEEE-exact on aarch64; the kernel's operands are finite (module
+/// doc), so `vmaxq_f32` agrees with `f32::max` on every reachable lane.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub(super) fn score_phase(
+        x: f32,
+        mu: &[f32],
+        th_old: &[f32],
+        phi_row: &[f32],
+        phi_tot: &[f32],
+        alpha: f32,
+        beta: f32,
+        wbeta: f32,
+        scores: &mut [f32],
+    ) {
+        let n = scores.len();
+        debug_assert!(
+            mu.len() >= n && th_old.len() >= n && phi_row.len() >= n && phi_tot.len() >= n
+        );
+        let wide = n - n % 4;
+        // SAFETY: NEON is an aarch64 baseline feature; bounds as in the
+        // SSE2 arm.
+        unsafe {
+            let xv = vdupq_n_f32(x);
+            let av = vdupq_n_f32(alpha);
+            let bv = vdupq_n_f32(beta);
+            let wv = vdupq_n_f32(wbeta);
+            let zero = vdupq_n_f32(0.0);
+            let floor = vdupq_n_f32(1e-30);
+            let mut i = 0;
+            while i < wide {
+                let m = vld1q_f32(mu.as_ptr().add(i));
+                let to = vld1q_f32(th_old.as_ptr().add(i));
+                let ph = vld1q_f32(phi_row.as_ptr().add(i));
+                let pt = vld1q_f32(phi_tot.as_ptr().add(i));
+                let c = vmulq_f32(xv, m);
+                let th_m = vaddq_f32(vmaxq_f32(vsubq_f32(to, c), zero), av);
+                let ph_m = vaddq_f32(vmaxq_f32(vsubq_f32(ph, c), zero), bv);
+                let den = vaddq_f32(vmaxq_f32(vsubq_f32(pt, c), zero), wv);
+                let s = vdivq_f32(vmulq_f32(th_m, ph_m), vmaxq_f32(den, floor));
+                vst1q_f32(scores.as_mut_ptr().add(i), s);
+                i += 4;
+            }
+        }
+        super::score_scalar(
+            x,
+            &mu[wide..n],
+            &th_old[wide..n],
+            &phi_row[wide..n],
+            &phi_tot[wide..n],
+            alpha,
+            beta,
+            wbeta,
+            &mut scores[wide..n],
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub(super) fn delta_phase(
+        x: f32,
+        scale: f32,
+        scores: &mut [f32],
+        mu: &mut [f32],
+        th: &mut [f32],
+        mut dphi: Option<&mut [f32]>,
+        r: &mut [f32],
+    ) {
+        let n = scores.len();
+        debug_assert!(mu.len() >= n && th.len() >= n && r.len() >= n);
+        debug_assert!(dphi.as_ref().map_or(true, |d| d.len() >= n));
+        let wide = n - n % 4;
+        let dp_ptr: Option<*mut f32> = dphi.as_mut().map(|d| d.as_mut_ptr());
+        // SAFETY: as in `score_phase`; the `&mut` slices are disjoint.
+        unsafe {
+            let xv = vdupq_n_f32(x);
+            let sv = vdupq_n_f32(scale);
+            let mut i = 0;
+            while i < wide {
+                let s = vld1q_f32(scores.as_ptr().add(i));
+                let m = vld1q_f32(mu.as_ptr().add(i));
+                let new = vmulq_f32(s, sv);
+                let dm = vsubq_f32(new, m);
+                vst1q_f32(mu.as_mut_ptr().add(i), new);
+                let xdm = vmulq_f32(xv, dm);
+                let t = vld1q_f32(th.as_ptr().add(i));
+                vst1q_f32(th.as_mut_ptr().add(i), vaddq_f32(t, xdm));
+                if let Some(dp) = dp_ptr {
+                    let d = vld1q_f32(dp.add(i));
+                    vst1q_f32(dp.add(i), vaddq_f32(d, xdm));
+                }
+                let rr = vmulq_f32(xv, vabsq_f32(dm));
+                let rv = vld1q_f32(r.as_ptr().add(i));
+                vst1q_f32(r.as_mut_ptr().add(i), vaddq_f32(rv, rr));
+                vst1q_f32(scores.as_mut_ptr().add(i), rr);
+                i += 4;
+            }
+        }
+        super::delta_scalar(
+            x,
+            scale,
+            &mut scores[wide..n],
+            &mut mu[wide..n],
+            &mut th[wide..n],
+            dphi.map(|d| &mut d[wide..n]),
+            &mut r[wide..n],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kpad_rounds_to_cache_lines() {
+        assert_eq!(kpad(1), 16);
+        assert_eq!(kpad(16), 16);
+        assert_eq!(kpad(17), 32);
+        assert_eq!(kpad(50), 64);
+    }
+
+    #[test]
+    fn aligned_buffer_is_64b_aligned_and_zeroed() {
+        let mut a = AlignedF32::zeroed(50);
+        assert_eq!(a.len(), 50);
+        assert_eq!(a.as_ptr() as usize % 64, 0);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a[49] = 1.5;
+        a.resize_zeroed(130);
+        assert_eq!(a.len(), 130);
+        assert_eq!(a[49], 1.5);
+        assert!(a[50..].iter().all(|&v| v == 0.0));
+        a.resize_zeroed(8);
+        a.resize_zeroed(50);
+        assert!(a[8..].iter().all(|&v| v == 0.0), "shrink-grow must re-zero");
+    }
+
+    #[test]
+    fn kernel_override_round_trips() {
+        assert_eq!(
+            active_kernel(),
+            if wide_compiled() { KernelKind::Wide } else { KernelKind::Scalar }
+        );
+        force_kernel(Some(KernelKind::Scalar));
+        assert_eq!(active_kernel(), KernelKind::Scalar);
+        force_kernel(Some(KernelKind::Wide));
+        assert_eq!(
+            active_kernel(),
+            if wide_compiled() { KernelKind::Wide } else { KernelKind::Scalar }
+        );
+        force_kernel(None);
+    }
+
+    /// The public phases must match the scalar oracle bitwise on every
+    /// build (scalar builds trivially; SIMD builds because the lanes are
+    /// bit-exact) — including lengths that exercise the `n mod 4` tail.
+    #[test]
+    fn wide_phases_match_scalar_bitwise() {
+        for n in [1usize, 3, 4, 7, 8, 13, 50] {
+            let x = 3.0f32;
+            let mu: Vec<f32> = (0..n).map(|i| 0.01 + i as f32 * 0.37).collect();
+            let th: Vec<f32> = (0..n).map(|i| 0.5 + i as f32 * 1.13).collect();
+            let ph: Vec<f32> = (0..n).map(|i| 0.2 + i as f32 * 0.71).collect();
+            let pt: Vec<f32> = (0..n).map(|i| 40.0 + i as f32 * 2.9).collect();
+            let mut s_ref = vec![0f32; n];
+            let mut s_got = vec![0f32; n];
+            score_scalar(x, &mu, &th, &ph, &pt, 1.0, 0.01, 20.0, &mut s_ref);
+            score_phase(x, &mu, &th, &ph, &pt, 1.0, 0.01, 20.0, &mut s_got);
+            assert_eq!(
+                s_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                s_got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "score lanes diverged at n={n}"
+            );
+            let scale = 0.731f32;
+            let (mut mu_a, mut mu_b) = (mu.clone(), mu.clone());
+            let (mut th_a, mut th_b) = (th.clone(), th.clone());
+            let (mut dp_a, mut dp_b) = (ph.clone(), ph.clone());
+            let (mut r_a, mut r_b) = (pt.clone(), pt.clone());
+            let (mut sa, mut sb) = (s_ref.clone(), s_got.clone());
+            delta_scalar(x, scale, &mut sa, &mut mu_a, &mut th_a, Some(&mut dp_a), &mut r_a);
+            delta_phase(x, scale, &mut sb, &mut mu_b, &mut th_b, Some(&mut dp_b), &mut r_b);
+            for (name, a, b) in [
+                ("scores", &sa, &sb),
+                ("mu", &mu_a, &mu_b),
+                ("theta", &th_a, &th_b),
+                ("dphi", &dp_a, &dp_b),
+                ("r", &r_a, &r_b),
+            ] {
+                assert_eq!(
+                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "delta {name} lanes diverged at n={n}"
+                );
+            }
+        }
+    }
+}

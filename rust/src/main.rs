@@ -6,7 +6,7 @@
 //!                 [--lambda-kk 50] [--nnz-budget 45000] [--seed S]
 //!                 [--engine native|xla] [--save model.bin] [--topics 5]
 //!                 [--checkpoint-every M] [--checkpoint-dir DIR]
-//!                 [--retries R] [--resume]
+//!                 [--retries R] [--resume] [--pin-cores]
 //! pobp gen-data   --dataset pubmed --scale 2000 --out data/
 //! pobp topics     --model model.bin [--top 10]
 //! pobp perplexity --model model.bin --dataset enron --scale 400 --k 50
@@ -52,7 +52,8 @@ pobp — communication-efficient parallel online belief propagation for LDA
 subcommands:
   train       train a model on a (synthetic Table-3) dataset
               (--checkpoint-every M --checkpoint-dir DIR for fault-tolerant
-               runs; --resume continues from the newest good checkpoint)
+               runs; --resume continues from the newest good checkpoint;
+               --pin-cores pins pool threads to cores, best-effort)
   run         train from a config file (see configs/*.conf)
   gen-data    write a synthetic corpus in UCI bag-of-words format
   topics      print top words per topic of a saved model
@@ -89,6 +90,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_dir: args.get_str("checkpoint-dir", ""),
         max_retries: args.get("retries", 3)?,
         resume: args.switch("resume"),
+        // best-effort core pinning of pool threads; where the OS refuses
+        // affinity the run logs once and continues floating
+        pin_cores: args.switch("pin-cores"),
         ..Default::default()
     };
     let engine = args.get_str("engine", "native");

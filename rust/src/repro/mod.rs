@@ -75,6 +75,10 @@ impl Algo {
 pub struct RunOpts {
     pub n_workers: usize,
     pub max_threads: usize,
+    /// Pin pool threads to cores (`PobpConfig::pin_cores`): best-effort
+    /// cache-warmth hint, bitwise-identical results pinned or floating.
+    /// Honored by the POBP family; the Gibbs/VB baselines ignore it.
+    pub pin_cores: bool,
     /// batch iterations for the batch algorithms (paper: 500)
     pub iters: usize,
     /// per-mini-batch iteration cap for the online algorithms
@@ -124,6 +128,7 @@ impl Default for RunOpts {
         RunOpts {
             n_workers: 4,
             max_threads: 0,
+            pin_cores: false,
             iters: 100,
             // power-subset iterations are ~λ_W·λ_K cheap, so the BP family
             // gets a deep budget (the paper's T ≈ 200); the residual
@@ -183,6 +188,7 @@ pub fn pobp_config(algo: Algo, params: &LdaParams, o: &RunOpts) -> PobpConfig {
             _ => o.n_workers,
         },
         max_threads: o.max_threads,
+        pin_cores: o.pin_cores,
         nnz_budget: if algo == Algo::BatchBp { usize::MAX } else { o.nnz_budget },
         power: match algo {
             Algo::Pobp => power,

@@ -1,0 +1,284 @@
+//! Contract 7 (kernel lanes): the explicit-SIMD `fused_update` behind
+//! `--features simd` must be **bitwise** indistinguishable from the
+//! scalar oracle kernel — μ/θ̂ lanes, per-doc residuals, and (because the
+//! block partition and merge order are kernel-independent) the whole
+//! merged Δφ̂/r state at every thread budget.
+//!
+//! Every test here forces one kernel per run via
+//! `simd::force_kernel` and compares against the other. Without the
+//! `simd` feature the forced "wide" kernel resolves to scalar, so the
+//! suite degenerates to scalar-vs-scalar and stays green — the CI
+//! `--features simd` leg is where the comparison is real.
+//!
+//! K is deliberately **not** a multiple of the 4-float SIMD width (7 and
+//! 13) so the vector main loop and the scalar tail are both exercised,
+//! and the packed-gather tests use a per-word topic budget of 3 so the
+//! subset path runs entirely in tail lanes on some words.
+
+use pobp::comm::Cluster;
+use pobp::engine::bp::{Selection, ShardBp};
+use pobp::engine::simd::{self, KernelKind};
+use pobp::engine::traits::LdaParams;
+use pobp::sched::{select_power, DocSchedule, PowerParams};
+use pobp::synth::{generate, SynthSpec};
+use pobp::util::rng::Rng;
+use std::sync::{Mutex, OnceLock};
+
+/// The kernel override is process-global; the test harness runs tests on
+/// several threads, so every forced-kernel region takes this lock.
+fn kernel_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Run `f` with the kernel forced to `kind`, restoring auto-dispatch
+/// after (and tolerating a poisoned lock from an earlier test failure).
+fn with_kernel<T>(kind: KernelKind, f: impl FnOnce() -> T) -> T {
+    let _g = kernel_lock().lock().unwrap_or_else(|e| e.into_inner());
+    simd::force_kernel(Some(kind));
+    let out = f();
+    simd::force_kernel(None);
+    out
+}
+
+fn fresh_shard(seed: u64, k: usize) -> ShardBp {
+    let spec = SynthSpec { docs: 300, ..SynthSpec::tiny(seed) };
+    let corpus = generate(&spec).corpus;
+    let mut rng = Rng::new(seed);
+    ShardBp::init(corpus, k, &mut rng)
+}
+
+fn phi_of(shard: &ShardBp) -> (Vec<f32>, Vec<f32>) {
+    let phi = shard.dphi.clone();
+    let mut tot = vec![0f32; shard.k];
+    for row in phi.chunks_exact(shard.k) {
+        for (t, &v) in row.iter().enumerate() {
+            tot[t] += v;
+        }
+    }
+    (phi, tot)
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}[{i}]: {x} vs {y} (bitwise)"
+        );
+    }
+}
+
+fn assert_shard_bitwise(a: &ShardBp, b: &ShardBp, what: &str) {
+    assert_bitwise(&a.mu, &b.mu, &format!("{what}: mu"));
+    assert_bitwise(&a.theta, &b.theta, &format!("{what}: theta"));
+    assert_bitwise(&a.dphi, &b.dphi, &format!("{what}: dphi"));
+    assert_bitwise(&a.r, &b.r, &format!("{what}: r"));
+}
+
+/// Serial full-selection sweeps, several rounds, one forced kernel;
+/// returns the final shard and every round's residual.
+fn run_serial_rounds(kind: KernelKind, seed: u64, k: usize, rounds: usize) -> (ShardBp, Vec<f64>) {
+    with_kernel(kind, || {
+        let p = LdaParams::paper(k);
+        let mut s = fresh_shard(seed, k);
+        let sel = Selection::full(s.data.w);
+        let mut resids = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            let (phi, tot) = phi_of(&s);
+            s.clear_selected_residuals(&sel);
+            resids.push(s.sweep(&phi, &tot, &sel, &p, true));
+        }
+        (s, resids)
+    })
+}
+
+/// The dense kernel at K = 7 and K = 13 (vector body + scalar tail, and
+/// at 7 a tail-heavy row): wide vs scalar bitwise on all state and on
+/// every round's residual.
+#[test]
+fn wide_serial_full_sweep_matches_scalar_bitwise() {
+    for &k in &[7usize, 13] {
+        let (sa, ra) = run_serial_rounds(KernelKind::Scalar, 101, k, 4);
+        let (sb, rb) = run_serial_rounds(KernelKind::Wide, 101, k, 4);
+        for (round, (x, y)) in ra.iter().zip(&rb).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "K={k} round {round}: residual {x} vs {y}"
+            );
+        }
+        assert_shard_bitwise(&sa, &sb, &format!("K={k} serial"));
+    }
+}
+
+/// The packed-gather subset arm: a power selection with a 3-topic
+/// per-word budget (pure tail lanes) driven for several rounds with the
+/// selection re-derived from the evolving residuals, wide vs scalar
+/// bitwise throughout.
+#[test]
+fn wide_packed_subset_path_matches_scalar_bitwise() {
+    let k = 13usize;
+    let run = |kind: KernelKind| -> (ShardBp, Vec<f64>) {
+        with_kernel(kind, || {
+            let p = LdaParams::paper(k);
+            let mut s = fresh_shard(103, k);
+            let w = s.data.w;
+            // warm with one full sweep so the residual table is non-trivial
+            let mut sel = Selection::full(w);
+            let mut resids = Vec::new();
+            for _ in 0..4 {
+                let (phi, tot) = phi_of(&s);
+                s.clear_selected_residuals(&sel);
+                resids.push(s.sweep(&phi, &tot, &sel, &p, true));
+                let ps = select_power(
+                    &s.r,
+                    w,
+                    k,
+                    &PowerParams { lambda_w: 0.25, lambda_k_times_k: 3 },
+                );
+                sel = Selection::from_power(&ps, w);
+            }
+            (s, resids)
+        })
+    };
+    let (sa, ra) = run(KernelKind::Scalar);
+    let (sb, rb) = run(KernelKind::Wide);
+    for (round, (x, y)) in ra.iter().zip(&rb).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "round {round}: residual {x} vs {y}"
+        );
+    }
+    assert_shard_bitwise(&sa, &sb, "packed subset");
+}
+
+/// Zero-mass rows take the early return identically under both kernels:
+/// entries whose μ row is all-zero have mass_old = 0, so the kernel must
+/// leave them untouched — the mass folds are scalar under both kernels,
+/// so the branch itself cannot diverge.
+#[test]
+fn zero_mass_rows_early_return_identically() {
+    let k = 7usize;
+    let run = |kind: KernelKind| -> ShardBp {
+        with_kernel(kind, || {
+            let p = LdaParams::paper(k);
+            let mut s = fresh_shard(107, k);
+            // kill the messages of the first 5 entries: mass_old = 0
+            for v in s.mu[..5 * k].iter_mut() {
+                *v = 0.0;
+            }
+            let sel = Selection::full(s.data.w);
+            let (phi, tot) = phi_of(&s);
+            s.clear_selected_residuals(&sel);
+            s.sweep(&phi, &tot, &sel, &p, true);
+            s
+        })
+    };
+    let sa = run(KernelKind::Scalar);
+    let sb = run(KernelKind::Wide);
+    assert_shard_bitwise(&sa, &sb, "zero-mass");
+    // the zeroed rows really did take the early return (stayed zero)
+    assert!(sa.mu[..5 * k].iter().all(|&v| v == 0.0), "zero-mass row was rewritten");
+}
+
+/// Thread budgets {1, 2, 8}: at a fixed budget the block partition and
+/// merge order are kernel-independent, so the *whole* parallel result —
+/// merged Δφ̂/r included — must be bitwise identical between kernels.
+#[test]
+fn wide_parallel_matches_scalar_parallel_bitwise_across_budgets() {
+    let k = 13usize;
+    for &budget in &[1usize, 2, 8] {
+        let run = |kind: KernelKind| -> (ShardBp, f64) {
+            with_kernel(kind, || {
+                let p = LdaParams::paper(k);
+                let pool = Cluster::new(1, 0);
+                let mut s = fresh_shard(109, k);
+                let sel = Selection::full(s.data.w);
+                let mut resid = 0.0;
+                for _ in 0..3 {
+                    let (phi, tot) = phi_of(&s);
+                    s.clear_selected_residuals(&sel);
+                    let (r, _) = s.sweep_parallel(&pool, budget, &phi, &tot, &sel, &p, true);
+                    resid = r;
+                }
+                (s, resid)
+            })
+        };
+        let (sa, ra) = run(KernelKind::Scalar);
+        let (sb, rb) = run(KernelKind::Wide);
+        assert!(
+            ra.to_bits() == rb.to_bits(),
+            "budget {budget}: residual {ra} vs {rb}"
+        );
+        assert_shard_bitwise(&sa, &sb, &format!("budget {budget}"));
+    }
+}
+
+/// The scheduled-parallel path (ABP's inner sweep) under both kernels:
+/// per-doc residuals in schedule order and all state bitwise at budgets
+/// {1, 2, 8}, with a power selection so the packed subset arm runs
+/// inside the parallel blocks too.
+#[test]
+fn wide_scheduled_parallel_matches_scalar_bitwise() {
+    let k = 7usize;
+    for &budget in &[1usize, 2, 8] {
+        let run = |kind: KernelKind| -> (ShardBp, Vec<f64>) {
+            with_kernel(kind, || {
+                let p = LdaParams::paper(k);
+                let pool = Cluster::new(1, 0);
+                let mut s = fresh_shard(113, k);
+                let w = s.data.w;
+                // warm one full parallel sweep, then a 40% schedule
+                let sel = Selection::full(w);
+                let (phi, tot) = phi_of(&s);
+                s.sweep_parallel(&pool, budget, &phi, &tot, &sel, &p, true);
+                let sched: Vec<u32> =
+                    (0..s.data.docs() as u32).filter(|d| d % 5 < 2).collect();
+                let ps = select_power(
+                    &s.r,
+                    w,
+                    k,
+                    &PowerParams { lambda_w: 0.3, lambda_k_times_k: 3 },
+                );
+                let sel = Selection::from_power(&ps, w);
+                let (phi, tot) = phi_of(&s);
+                s.clear_selected_residuals(&sel);
+                let ds = DocSchedule::build(&sched, |d| s.data.row_range(d).len());
+                let (resids, _) =
+                    s.sweep_docs_parallel(&pool, budget, &ds, &phi, &tot, &sel, &p, true);
+                (s, resids)
+            })
+        };
+        let (sa, ra) = run(KernelKind::Scalar);
+        let (sb, rb) = run(KernelKind::Wide);
+        assert_eq!(ra.len(), rb.len());
+        for (i, (x, y)) in ra.iter().zip(&rb).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "budget {budget} sched slot {i}: residual {x} vs {y}"
+            );
+        }
+        assert_shard_bitwise(&sa, &sb, &format!("scheduled budget {budget}"));
+    }
+}
+
+/// Dispatch sanity: auto mode resolves to the wide kernel exactly when
+/// the feature (and a supported arch) compiled it in; the scalar build
+/// never runs wide lanes even when forced.
+#[test]
+fn kernel_dispatch_tracks_feature_flag() {
+    let _g = kernel_lock().lock().unwrap_or_else(|e| e.into_inner());
+    simd::force_kernel(None);
+    let auto = simd::active_kernel();
+    if simd::wide_compiled() {
+        assert_eq!(auto, KernelKind::Wide);
+    } else {
+        assert_eq!(auto, KernelKind::Scalar);
+        simd::force_kernel(Some(KernelKind::Wide));
+        assert_eq!(simd::active_kernel(), KernelKind::Scalar, "scalar build must stay scalar");
+    }
+    simd::force_kernel(Some(KernelKind::Scalar));
+    assert_eq!(simd::active_kernel(), KernelKind::Scalar);
+    simd::force_kernel(None);
+    assert_eq!(simd::active_kernel(), auto);
+}
