@@ -20,6 +20,8 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -584,6 +586,51 @@ fn main() {
     });
     let _ = std::fs::remove_dir_all(&ck_root);
 
+    // --- tcp loopback calibration (Contract 8): push the subset
+    //     gather-sized payload through a real 127.0.0.1 round-trip and
+    //     score the α–β estimate against the measured seconds with the
+    //     same rule the distributed ledger applies to every recorded
+    //     segment (NetModel::calibration_error_secs). Loopback is not
+    //     gige, so a large error here is the *expected* honest answer —
+    //     the row exists so the measured/modeled pair is in the JSON
+    //     trajectory, not to flatter the model. ---
+    let seg_bytes = idx.len() * 4;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let echo_addr = listener.local_addr().expect("loopback addr");
+    let echo = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("echo accept");
+        let mut buf = vec![0u8; 64 * 1024];
+        loop {
+            let n = s.read(&mut buf).expect("echo read");
+            if n == 0 {
+                break;
+            }
+            s.write_all(&buf[..n]).expect("echo write");
+        }
+    });
+    let mut stream = TcpStream::connect(echo_addr).expect("connect loopback");
+    stream.set_nodelay(true).ok();
+    let seg = vec![0x5au8; seg_bytes];
+    let mut back = vec![0u8; seg_bytes];
+    let mut best_rtt = f64::INFINITY;
+    for _ in 0..it(20).max(3) {
+        let t0 = Instant::now();
+        stream.write_all(&seg).expect("loopback write");
+        stream.read_exact(&mut back).expect("loopback read");
+        best_rtt = best_rtt.min(t0.elapsed().as_secs_f64());
+    }
+    drop(stream);
+    echo.join().expect("echo thread");
+    let wire_measured = best_rtt / 2.0; // one-way segment time
+    let wire_model = NetModel::gige();
+    let wire_cal_err = wire_model.calibration_error_secs(seg_bytes, 2, wire_measured);
+    println!(
+        "\ntcp loopback calibration: {seg_bytes} B segment, measured {:.3}ms one-way, \
+         gige reduce-scatter model off by {:+.3}ms",
+        wire_measured * 1e3,
+        wire_cal_err * 1e3
+    );
+
     // --- machine-readable record for the cross-PR perf trajectory ---
     let find = |recs: &[(String, f64)], name: &str| {
         recs.iter().find(|(n, _)| n == name).map(|&(_, v)| v).unwrap_or(0.0)
@@ -674,6 +721,12 @@ fn main() {
                 "recovery_overhead_frac",
                 Json::from(if oracle_secs > 0.0 { replay_secs / oracle_secs } else { 0.0 }),
             ),
+        ])),
+        ("tcp_loopback_calibration", Json::obj(vec![
+            ("segment_bytes", Json::from(seg_bytes)),
+            ("measured_one_way_secs", Json::from(wire_measured)),
+            ("modeled_gige_reduce_scatter_secs", Json::from(wire_measured - wire_cal_err)),
+            ("calibration_error_secs", Json::from(wire_cal_err)),
         ])),
         ("phi_mem_modes", Json::obj(vec![
             ("n_workers", Json::from(store_n)),

@@ -1,0 +1,163 @@
+//! `pobp-master` — the distributed training leader (Contract 8).
+//!
+//! ```text
+//! pobp-master --dataset enron --scale 40 --k 8 --workers 2 --spawn
+//! pobp-master --dataset enron --scale 40 --k 8 --workers 2 \
+//!             --listen 0.0.0.0:7070   # then start pobp-worker processes
+//! ```
+//!
+//! Runs [`pobp::coordinator::fit_dist`] over a TCP
+//! [`TcpTransport`]: `--spawn` launches loopback `pobp-worker`
+//! processes next to this executable; `--listen` waits for externally
+//! started workers to join. `--assert-oracle` re-runs the same
+//! configuration in-process afterwards and exits non-zero unless the
+//! distributed result is bitwise identical — the CI smoke leg.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use pobp::cli::Args;
+use pobp::comm::transport::{TcpSpawnSpec, TcpTransport, Transport};
+use pobp::coordinator::{fit_checked, fit_dist, PobpConfig};
+use pobp::engine::traits::LdaParams;
+use pobp::repro::dataset;
+use pobp::sched::PowerParams;
+use pobp::storage::PhiStorageMode;
+use pobp::util::timer::fmt_secs;
+
+const USAGE: &str = "\
+pobp-master — POBP distributed training leader
+  pobp-master --dataset D --scale S --k K --workers N (--spawn | --listen ADDR)
+              [--storage replicated|sharded] [--iters T] [--nnz-budget B]
+              [--lambda-w R] [--lambda-kk KK] [--seed S] [--threads T]
+              [--timeout SECS] [--assert-oracle]
+
+  --spawn          launch N loopback pobp-worker processes (sibling binary)
+  --listen ADDR    bind ADDR and wait for N externally started workers
+  --storage        phi storage layout (default replicated)
+  --threads        sweep threads per worker (default 1)
+  --timeout        socket deadline in seconds (default 120)
+  --assert-oracle  re-run in-process and demand bitwise equality
+";
+
+fn main() -> Result<()> {
+    // Args::parse treats the first token as a subcommand; inject a
+    // synthetic one ahead of the real flags (same trick as pobp-worker).
+    let args = Args::parse(
+        std::iter::once("master".to_string()).chain(std::env::args().skip(1)),
+    )?;
+    if args.switch("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let name = args.get_str("dataset", "enron");
+    let scale = args.get::<usize>("scale", 40)?;
+    let k = args.get::<usize>("k", 8)?;
+    let workers = args.get::<usize>("workers", 2)?;
+    let storage_s = args.get_str("storage", "replicated");
+    let storage = match storage_s.as_str() {
+        "replicated" => PhiStorageMode::Replicated,
+        "sharded" => PhiStorageMode::Sharded,
+        other => bail!("unknown --storage {other} (replicated|sharded)"),
+    };
+    let max_iters = args.get::<usize>("iters", 10)?;
+    let nnz_budget = args.get::<usize>("nnz-budget", 2_000)?;
+    let lambda_w = args.get::<f64>("lambda-w", 0.1)?;
+    let lambda_kk = args.get::<usize>("lambda-kk", 50)?;
+    let seed = args.get::<u64>("seed", 42)?;
+    let threads = args.get::<usize>("threads", 1)?;
+    let listen = args.get_str("listen", "");
+    let spawn = args.switch("spawn");
+    let timeout = args.get::<u64>("timeout", 120)?;
+    let assert_oracle = args.switch("assert-oracle");
+    args.reject_unknown()?;
+
+    let corpus = dataset(&name, scale, k, seed);
+    let params = LdaParams::paper(k);
+    let cfg = PobpConfig {
+        n_workers: workers,
+        max_threads: threads,
+        nnz_budget,
+        power: PowerParams { lambda_w, lambda_k_times_k: lambda_kk },
+        max_iters,
+        seed,
+        storage,
+        ..Default::default()
+    };
+    println!(
+        "corpus: D={} W={} NNZ={} tokens={}",
+        corpus.docs(),
+        corpus.w,
+        corpus.nnz(),
+        corpus.tokens()
+    );
+
+    let mut tp = if spawn {
+        let exe = std::env::current_exe().context("locating pobp-master")?;
+        let worker = exe.with_file_name(if cfg!(windows) {
+            "pobp-worker.exe"
+        } else {
+            "pobp-worker"
+        });
+        TcpTransport::spawn(workers, TcpSpawnSpec { exe: worker, threads })?
+            .with_io_timeout(Duration::from_secs(timeout))
+    } else if !listen.is_empty() {
+        let mut t = TcpTransport::listen(listen.as_str(), workers)?
+            .with_io_timeout(Duration::from_secs(timeout));
+        println!(
+            "listening on {}; waiting for {workers} workers to join",
+            t.local_addr()?
+        );
+        t.accept_workers()?;
+        t
+    } else {
+        bail!("pass --spawn (loopback workers) or --listen HOST:PORT (external workers)");
+    };
+    println!("cluster up: {workers} tcp workers, {threads} sweep threads each");
+
+    let result = fit_dist(&corpus, &params, &cfg, &mut tp)?;
+    let l = &result.ledger;
+    println!(
+        "pobp-dist [tcp/{storage_s}]: wall {}, simulated {} (compute {} + comm {}), \
+         syncs {}, wire {} MB",
+        fmt_secs(result.wall_secs),
+        fmt_secs(result.sim_secs()),
+        fmt_secs(l.compute_secs),
+        fmt_secs(l.comm_secs),
+        l.sync_count(),
+        l.wire_bytes / 1_000_000,
+    );
+    // measured wire seconds beside the α–β estimate (Contract 8: the
+    // model is calibrated against the real interconnect, not trusted)
+    println!(
+        "measured wire: reduce {} + gather {} over {} segments (modeled comm {})",
+        fmt_secs(l.measured_reduce_secs),
+        fmt_secs(l.measured_gather_secs),
+        l.measured.len(),
+        fmt_secs(l.comm_secs),
+    );
+
+    if assert_oracle {
+        let oracle = fit_checked(&corpus, &params, &cfg)?;
+        let history_ok = result.history.len() == oracle.history.len()
+            && result.history.iter().zip(&oracle.history).all(|(a, b)| {
+                a.batch == b.batch
+                    && a.iter == b.iter
+                    && a.residual_per_token.to_bits() == b.residual_per_token.to_bits()
+                    && a.synced_pairs == b.synced_pairs
+            });
+        let ok = result.model.phi_wk == oracle.model.phi_wk
+            && history_ok
+            && l.sync_count() == oracle.ledger.sync_count()
+            && l.payload_bytes_total() == oracle.ledger.payload_bytes_total()
+            && l.wire_bytes == oracle.ledger.wire_bytes;
+        if !ok {
+            let _ = tp.shutdown();
+            bail!("distributed run diverged from the in-process oracle");
+        }
+        println!("oracle check: distributed run bitwise-equal to in-process fit");
+    }
+    tp.shutdown()?;
+    Ok(())
+}

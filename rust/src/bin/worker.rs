@@ -1,0 +1,51 @@
+//! `pobp-worker` — one distributed worker process (Contract 8).
+//!
+//! ```text
+//! pobp-worker --connect HOST:PORT --slot N [--threads T] [--timeout SECS]
+//! ```
+//!
+//! Connects back to a `pobp-master` listener, handshakes its slot, and
+//! serves Batch/Sweep/Fold frames until the master sends Shutdown (or
+//! the socket deadline expires — `--timeout 0` waits forever). All
+//! training state arrives over the wire; the worker needs no corpus,
+//! config file, or checkpoint directory of its own.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use pobp::cli::Args;
+use pobp::comm::transport::serve_worker;
+
+const USAGE: &str = "\
+pobp-worker — POBP distributed worker process
+  pobp-worker --connect HOST:PORT --slot N [--threads T] [--timeout SECS]
+
+  --connect   the pobp-master listen address to join
+  --slot      this worker's slot index (0-based, < n_workers)
+  --threads   OS threads for the shard sweep (default 1)
+  --timeout   socket deadline in seconds, 0 = wait forever (default 600)
+";
+
+fn main() -> Result<()> {
+    // Args::parse treats the first token as a subcommand; this binary
+    // has none, so inject a synthetic one ahead of the real flags.
+    let args = Args::parse(
+        std::iter::once("worker".to_string()).chain(std::env::args().skip(1)),
+    )?;
+    if args.switch("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let connect: String = args.require("connect")?;
+    let slot = args.require::<usize>("slot")?;
+    let threads = args.get::<usize>("threads", 1)?;
+    let timeout = args.get::<u64>("timeout", 600)?;
+    args.reject_unknown()?;
+
+    let deadline =
+        if timeout == 0 { None } else { Some(Duration::from_secs(timeout)) };
+    serve_worker(connect.as_str(), slot, threads, deadline)
+        .with_context(|| format!("worker slot {slot} serving {connect}"))?;
+    Ok(())
+}

@@ -63,6 +63,27 @@ pub struct SyncEvent {
     pub allgather_secs: f64,
 }
 
+/// One synchronization's *measured* wire seconds next to the α–β
+/// estimate it would replace — the calibration record the distributed
+/// transport emits (Contract 8). The modeled fields are copied from the
+/// paired [`SyncEvent`] so the bench JSON can report model error per
+/// segment without re-joining the two lists.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasuredSeg {
+    pub batch: usize,
+    pub iter: usize,
+    /// α–β estimate of the reduce-scatter segment
+    pub modeled_reduce_secs: f64,
+    /// α–β estimate of the allgather segment
+    pub modeled_gather_secs: f64,
+    /// measured wall seconds collecting the gather buffers (the real
+    /// reduce-scatter wire segment, worker compute excluded)
+    pub measured_reduce_secs: f64,
+    /// measured wall seconds publishing the working set (the real
+    /// allgather wire segment)
+    pub measured_gather_secs: f64,
+}
+
 /// Accumulates the simulated cost decomposition of a training run.
 #[derive(Clone, Debug)]
 pub struct Ledger {
@@ -105,6 +126,16 @@ pub struct Ledger {
     pub recovery_replay_secs: f64,
     /// recoveries performed (restore-and-replay cycles)
     pub recovery_count: u64,
+    /// measured-vs-modeled wire seconds per sync, recorded by the
+    /// distributed transport (empty on simulated runs). Measured wall
+    /// time: excluded from [`Ledger::total_secs`] *and* from
+    /// checkpoint serialization — like per-worker compute seconds, it
+    /// is re-measured and never compared bitwise
+    pub measured: Vec<MeasuredSeg>,
+    /// Σ measured reduce-scatter (gather-collect) wire seconds
+    pub measured_reduce_secs: f64,
+    /// Σ measured allgather (publish) wire seconds
+    pub measured_gather_secs: f64,
 }
 
 impl Ledger {
@@ -124,6 +155,9 @@ impl Ledger {
             checkpoint_count: 0,
             recovery_replay_secs: 0.0,
             recovery_count: 0,
+            measured: Vec::new(),
+            measured_reduce_secs: 0.0,
+            measured_gather_secs: 0.0,
         }
     }
 
@@ -301,6 +335,30 @@ impl Ledger {
         self.checkpoint_secs += secs;
     }
 
+    /// Record the *measured* wire seconds of the most recent sync next
+    /// to its α–β estimate — what the distributed transport calls right
+    /// after `record_sync`/`record_sync_split` with the wall time of
+    /// its publish and collect passes ([`MeasuredSeg`] pairs the two so
+    /// [`NetModel::calibration_error_secs`](crate::comm::NetModel::calibration_error_secs)
+    /// can score the model). No-op before the first sync. Measured time
+    /// never enters [`Ledger::total_secs`].
+    pub fn record_measured(&mut self, reduce_secs: f64, gather_secs: f64) {
+        let ev = match self.events.last() {
+            Some(ev) => ev,
+            None => return,
+        };
+        self.measured.push(MeasuredSeg {
+            batch: ev.batch,
+            iter: ev.iter,
+            modeled_reduce_secs: ev.reduce_scatter_secs,
+            modeled_gather_secs: ev.allgather_secs,
+            measured_reduce_secs: reduce_secs,
+            measured_gather_secs: gather_secs,
+        });
+        self.measured_reduce_secs += reduce_secs;
+        self.measured_gather_secs += gather_secs;
+    }
+
     /// Record one recovery's replay cost: the simulated seconds the
     /// killed attempt had progressed past the checkpoint the new
     /// attempt restores from — training work paid twice. Degraded-run
@@ -389,6 +447,9 @@ impl Ledger {
         self.checkpoint_count += other.checkpoint_count;
         self.recovery_replay_secs += other.recovery_replay_secs;
         self.recovery_count += other.recovery_count;
+        self.measured.extend_from_slice(&other.measured);
+        self.measured_reduce_secs += other.measured_reduce_secs;
+        self.measured_gather_secs += other.measured_gather_secs;
     }
 
     /// Append the ledger's full state — the [`NetModel`], every
@@ -398,7 +459,10 @@ impl Ledger {
     /// (`storage::checkpoint`, Contract 6): a restored ledger resumes
     /// accumulating from bitwise-identical f64 sums, which is what
     /// makes a recovered run's cost accounting equal an uninterrupted
-    /// run's.
+    /// run's. The measured-segment calibration records are deliberately
+    /// *not* serialized — they are wall-clock measurements, re-measured
+    /// after a resume and never compared (same rule as per-worker
+    /// compute seconds).
     pub fn serialize_into(&self, out: &mut Vec<u8>) {
         fn pu(out: &mut Vec<u8>, v: u64) {
             out.extend_from_slice(&v.to_le_bytes());

@@ -4,7 +4,14 @@
 //! preserves the paper's measured quantities (bytes moved and sync counts
 //! are exact; time follows the published link parameters).
 //!
-//! The subsystem's three standing contracts — written down per module
+//! Since the transport PR the cluster is no longer necessarily
+//! simulated: [`transport`] puts real worker processes behind the same
+//! coordinator loop ([`wire`] frames over TCP, Contract 8), with the
+//! in-process pool as the degenerate single-host backend — and the
+//! ledger records *measured* wire seconds next to the α–β estimate so
+//! the model is calibrated rather than trusted.
+//!
+//! The subsystem's standing contracts — written down per module
 //! and cross-referenced in `docs/ARCHITECTURE.md`:
 //!
 //! * **Determinism** ([`cluster`]): every dispatch executes
@@ -29,6 +36,8 @@ pub mod allreduce;
 pub mod cluster;
 pub mod ledger;
 pub mod net;
+pub mod transport;
+pub mod wire;
 
 pub use allreduce::{
     allreduce_step, allreduce_step_overlap, allreduce_step_overlap_rounds,
@@ -37,5 +46,9 @@ pub use allreduce::{
     ReduceSource, ShardedState, SyncScratch,
 };
 pub use cluster::Cluster;
-pub use ledger::{Ledger, SyncEvent};
+pub use ledger::{Ledger, MeasuredSeg, SyncEvent};
 pub use net::NetModel;
+pub use transport::{
+    InProcessTransport, TcpSpawnSpec, TcpTransport, Transport, TransportError, TransportKind,
+};
+pub use wire::WireError;

@@ -133,6 +133,19 @@ impl NetModel {
             2 * bytes * (n - 1)
         }
     }
+
+    /// Signed calibration error of one allreduce segment: measured
+    /// minus modeled seconds for a `bytes`-payload segment across `n`
+    /// (positive = the α–β model is optimistic for this link). The
+    /// distributed transport records measured wire seconds next to
+    /// every estimate
+    /// ([`Ledger::record_measured`](crate::comm::Ledger::record_measured));
+    /// this is the scoring rule that turns those pairs into a model
+    /// correction, so the α–β parameters can be *calibrated* against
+    /// the real interconnect instead of trusted.
+    pub fn calibration_error_secs(&self, bytes: usize, n: usize, measured_secs: f64) -> f64 {
+        measured_secs - self.reduce_scatter_secs(bytes, n)
+    }
 }
 
 #[cfg(test)]
@@ -216,6 +229,15 @@ mod tests {
         );
         // n = 1 has a free allreduce; the timeout floors at one latency
         assert_eq!(m.straggler_timeout_secs(1 << 20, 1, 4.0), m.latency_s);
+    }
+
+    #[test]
+    fn calibration_error_is_signed_measured_minus_modeled() {
+        let m = NetModel::infiniband_20gbps();
+        let modeled = m.reduce_scatter_secs(1 << 20, 8);
+        assert_eq!(m.calibration_error_secs(1 << 20, 8, modeled), 0.0);
+        assert!(m.calibration_error_secs(1 << 20, 8, 2.0 * modeled) > 0.0);
+        assert!(m.calibration_error_secs(1 << 20, 8, 0.5 * modeled) < 0.0);
     }
 
     #[test]

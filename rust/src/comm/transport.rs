@@ -1,0 +1,1082 @@
+//! The transport boundary (Contract 8): one worker-side protocol
+//! implementation behind two carriers — the in-process pool (the
+//! degenerate single-host case) and real TCP worker processes
+//! (`bin/master` + `bin/worker`).
+//!
+//! # Protocol
+//!
+//! Every message is one `comm::wire` frame. Per mini-batch:
+//!
+//! ```text
+//! master                                  worker n (of N)
+//!   Batch  ── checkpoint + doc shard ──▶    ShardBp::init(shard, k, rng_n)
+//!   per iteration t:
+//!   Sweep  ── φ̂_eff, totals, power ────▶    sweep_parallel(...)
+//!          ◀── Gather: plan-order Δφ̂/r ──   (+ measured sweep seconds)
+//!   at the batch boundary:
+//!   Fold   ─────────────────────────────▶
+//!          ◀── FoldPart: dense Δφ̂ ──────
+//! ```
+//!
+//! The [`FrameKind::Batch`] payload *is* a `POBPCKP1` checkpoint (plus
+//! the worker's document shard and the LDA params): the worker-join and
+//! the state-transfer message are the same bytes a resumed run loads
+//! from disk, checksummed and totals-verified by [`Checkpoint::decode`].
+//! A worker therefore rejoins after a crash exactly the way a killed
+//! run resumes.
+//!
+//! # Distributed determinism
+//!
+//! The master draws the same per-worker RNG splits, document ranges and
+//! reduce plans as the in-process coordinator and performs the
+//! owner-sliced reduction itself over [`PartSource`] mirrors of the
+//! workers' gather buffers; workers contribute only [`ShardBp`] sweep
+//! results, which are thread-budget-independent (Contract 1). A
+//! loopback distributed run is therefore bitwise identical to the
+//! in-process run in both storage modes — `rust/tests/dist_equiv.rs`
+//! pins it. Wall-clock quantities (sweep seconds, measured wire
+//! seconds) are measured, recorded, and never compared.
+
+use std::fmt;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::comm::allreduce::{GatherBuf, ReduceSource};
+use crate::comm::wire::{
+    self, read_frame, write_frame, FrameKind, PayloadRd, WireError, PROTO_VERSION,
+};
+use crate::comm::Cluster;
+use crate::corpus::Csr;
+use crate::engine::bp::{Selection, ShardBp};
+use crate::engine::traits::LdaParams;
+use crate::sched::PowerSet;
+use crate::storage::Checkpoint;
+use crate::util::rng::Rng;
+
+/// Which transport a run uses (`[run] transport = inprocess|tcp`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// logical workers on the in-process pool (the historical behavior)
+    #[default]
+    InProcess,
+    /// real worker processes over TCP (`bin/master` + `bin/worker`)
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "inprocess" | "in-process" => Some(TransportKind::InProcess),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "inprocess",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Why a transport operation failed.
+#[derive(Debug)]
+pub enum TransportError {
+    /// a frame was refused (corrupt, truncated, wrong layout)
+    Wire(WireError),
+    Io(io::Error),
+    /// the peer spoke wrongly (unexpected frame kind, bad slot, shape
+    /// mismatch, protocol-version mismatch)
+    Protocol(String),
+    /// a socket deadline expired — the hung-socket guard
+    Timeout(&'static str),
+    /// a specific worker's connection or process is gone
+    WorkerDead { slot: usize, msg: String },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Wire(e) => write!(f, "transport wire error: {e}"),
+            TransportError::Io(e) => write!(f, "transport I/O: {e}"),
+            TransportError::Protocol(s) => write!(f, "transport protocol violation: {s}"),
+            TransportError::Timeout(what) => write!(f, "transport timeout ({what})"),
+            TransportError::WorkerDead { slot, msg } => {
+                write!(f, "worker {slot} unreachable: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<WireError> for TransportError {
+    fn from(e: WireError) -> TransportError {
+        TransportError::Wire(e)
+    }
+}
+
+impl From<io::Error> for TransportError {
+    fn from(e: io::Error) -> TransportError {
+        TransportError::Io(e)
+    }
+}
+
+// ---- protocol payloads (wire-format conventions of the checkpoint) ----
+
+fn hello_payload(slot: usize) -> Vec<u8> {
+    let mut p = Vec::new();
+    wire::put_u32(&mut p, PROTO_VERSION);
+    wire::put_u64(&mut p, slot as u64);
+    wire::put_u64(&mut p, std::process::id() as u64);
+    p
+}
+
+fn decode_hello(payload: &[u8]) -> Result<(u32, usize, u32), WireError> {
+    let mut rd = PayloadRd::new(payload, "hello");
+    let version = rd.u32()?;
+    let slot = rd.usize()?;
+    let pid = rd.u64()? as u32;
+    rd.done()?;
+    Ok((version, slot, pid))
+}
+
+fn welcome_payload(slot: usize, n_workers: usize) -> Vec<u8> {
+    let mut p = Vec::new();
+    wire::put_u64(&mut p, slot as u64);
+    wire::put_u64(&mut p, n_workers as u64);
+    p
+}
+
+fn decode_welcome(payload: &[u8]) -> Result<(usize, usize), WireError> {
+    let mut rd = PayloadRd::new(payload, "welcome");
+    let slot = rd.usize()?;
+    let n = rd.usize()?;
+    rd.done()?;
+    Ok((slot, n))
+}
+
+/// Build a [`FrameKind::Batch`] payload: the `POBPCKP1` join/state
+/// checkpoint, the LDA smoothing params, and the worker's document
+/// shard (a re-based CSR slice).
+pub fn batch_payload(ck: &Checkpoint, shard: &Csr, params: &LdaParams) -> Vec<u8> {
+    let ck_bytes = ck.encode();
+    let mut p = Vec::with_capacity(ck_bytes.len() + 64 + 4 * (shard.row_ptr.len() + 2 * shard.col.len()));
+    wire::put_u64(&mut p, ck_bytes.len() as u64);
+    p.extend_from_slice(&ck_bytes);
+    wire::put_u32(&mut p, params.alpha.to_bits());
+    wire::put_u32(&mut p, params.beta.to_bits());
+    wire::put_u64(&mut p, shard.w as u64);
+    wire::put_u64(&mut p, shard.row_ptr.len() as u64);
+    wire::put_u32s(&mut p, &shard.row_ptr);
+    wire::put_u64(&mut p, shard.col.len() as u64);
+    wire::put_u32s(&mut p, &shard.col);
+    wire::put_f32s(&mut p, &shard.val);
+    p
+}
+
+/// Decode a Batch payload. The embedded checkpoint goes through
+/// [`Checkpoint::decode`] — per-section checksums plus the bitwise
+/// totals check — so a worker refuses a torn state transfer the same
+/// way a resuming run refuses a torn checkpoint file.
+pub fn decode_batch(payload: &[u8]) -> Result<(Checkpoint, Csr, LdaParams), WireError> {
+    let mut rd = PayloadRd::new(payload, "batch");
+    let ck_len = rd.usize()?;
+    let ck = Checkpoint::decode(rd.bytes(ck_len)?)
+        .map_err(|e| WireError::Malformed(format!("join checkpoint refused: {e}")))?;
+    let alpha = f32::from_bits(rd.u32()?);
+    let beta = f32::from_bits(rd.u32()?);
+    let w = rd.usize()?;
+    let rows = rd.usize()?;
+    if rows == 0 {
+        return Err(WireError::Malformed("empty CSR row table".into()));
+    }
+    let row_ptr = rd.u32s(rows)?;
+    let nnz = rd.usize()?;
+    let col = rd.u32s(nnz)?;
+    let val = rd.f32s(nnz)?;
+    rd.done()?;
+    if w != ck.w {
+        return Err(WireError::Malformed(format!(
+            "shard vocabulary {w} != checkpoint vocabulary {}",
+            ck.w
+        )));
+    }
+    if row_ptr.first() != Some(&0) || *row_ptr.last().unwrap() as usize != nnz {
+        return Err(WireError::Malformed("inconsistent CSR row pointers".into()));
+    }
+    let params = LdaParams { k: ck.k, alpha, beta };
+    Ok((ck, Csr { w, row_ptr, col, val }, params))
+}
+
+/// Build a [`FrameKind::Sweep`] payload: iteration index, the dense
+/// φ̂_eff working set, the k per-topic totals, and the power set (absent
+/// on full-schedule iterations).
+pub fn sweep_payload(iter: usize, phi: &[f32], tot: &[f32], power: Option<&PowerSet>) -> Vec<u8> {
+    let mut p = Vec::with_capacity(32 + 4 * (phi.len() + tot.len()));
+    wire::put_u64(&mut p, iter as u64);
+    wire::put_u64(&mut p, phi.len() as u64);
+    wire::put_f32s(&mut p, phi);
+    wire::put_u64(&mut p, tot.len() as u64);
+    wire::put_f32s(&mut p, tot);
+    match power {
+        None => wire::put_u32(&mut p, 0),
+        Some(ps) => {
+            wire::put_u32(&mut p, 1);
+            wire::put_u64(&mut p, ps.words.len() as u64);
+            wire::put_u32s(&mut p, &ps.words);
+            for topics in &ps.topics {
+                wire::put_u64(&mut p, topics.len() as u64);
+                wire::put_u32s(&mut p, topics);
+            }
+        }
+    }
+    p
+}
+
+/// Decode a Sweep payload into `(iter, φ̂, totals, power set)`.
+pub fn decode_sweep(
+    payload: &[u8],
+) -> Result<(usize, Vec<f32>, Vec<f32>, Option<PowerSet>), WireError> {
+    let mut rd = PayloadRd::new(payload, "sweep");
+    let iter = rd.usize()?;
+    let phi_len = rd.usize()?;
+    let phi = rd.f32s(phi_len)?;
+    let k = rd.usize()?;
+    let tot = rd.f32s(k)?;
+    let power = match rd.u32()? {
+        0 => None,
+        1 => {
+            let n_words = rd.usize()?;
+            let words = rd.u32s(n_words)?;
+            let mut topics = Vec::with_capacity(n_words);
+            for _ in 0..n_words {
+                let len = rd.usize()?;
+                topics.push(rd.u32s(len)?);
+            }
+            Some(PowerSet { words, topics })
+        }
+        other => {
+            return Err(WireError::Malformed(format!("bad power-set tag {other}")));
+        }
+    };
+    rd.done()?;
+    Ok((iter, phi, tot, power))
+}
+
+/// A worker's reply to one Sweep: the plan-order gather buffer plus the
+/// measured sweep seconds (used for the ledger's compute attribution,
+/// never for bits).
+#[derive(Clone, Debug)]
+pub struct GatherReply {
+    pub iter: usize,
+    pub dphi: Vec<f32>,
+    pub r: Vec<f32>,
+    pub sweep_secs: f64,
+}
+
+fn gather_payload(iter: usize, dphi: &[f32], r: &[f32], sweep_secs: f64) -> Vec<u8> {
+    debug_assert_eq!(dphi.len(), r.len());
+    let mut p = Vec::with_capacity(24 + 8 * dphi.len());
+    wire::put_u64(&mut p, iter as u64);
+    wire::put_u64(&mut p, dphi.len() as u64);
+    wire::put_f32s(&mut p, dphi);
+    wire::put_f32s(&mut p, r);
+    wire::put_f64(&mut p, sweep_secs);
+    p
+}
+
+fn decode_gather(payload: &[u8]) -> Result<GatherReply, WireError> {
+    let mut rd = PayloadRd::new(payload, "gather");
+    let iter = rd.usize()?;
+    let pairs = rd.usize()?;
+    let dphi = rd.f32s(pairs)?;
+    let r = rd.f32s(pairs)?;
+    let sweep_secs = rd.f64()?;
+    rd.done()?;
+    Ok(GatherReply { iter, dphi, r, sweep_secs })
+}
+
+fn fold_part_payload(dphi: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + 4 * dphi.len());
+    wire::put_u64(&mut p, dphi.len() as u64);
+    wire::put_f32s(&mut p, dphi);
+    p
+}
+
+fn decode_fold_part(payload: &[u8]) -> Result<Vec<f32>, WireError> {
+    let mut rd = PayloadRd::new(payload, "fold part");
+    let len = rd.usize()?;
+    let dphi = rd.f32s(len)?;
+    rd.done()?;
+    Ok(dphi)
+}
+
+// ---- the worker-side protocol (one implementation, two carriers) ----
+
+/// A worker's whole protocol state: its document shard's [`ShardBp`]
+/// plus the decode/sweep/export handlers. The TCP worker binary wraps
+/// this in a socket loop ([`serve_worker`]); [`InProcessTransport`]
+/// calls it directly with the *same encoded payloads*, so the two
+/// carriers cannot diverge semantically.
+pub struct WorkerState {
+    cluster: Cluster,
+    w: usize,
+    k: usize,
+    params: LdaParams,
+    shard: Option<ShardBp>,
+    flat_buf: Vec<u32>,
+    gather: GatherBuf,
+}
+
+impl WorkerState {
+    /// A fresh worker with a local `max_threads`-thread sweep pool
+    /// (thread budgets never change bits — Contract 1).
+    pub fn new(max_threads: usize) -> WorkerState {
+        WorkerState {
+            cluster: Cluster::new(1, max_threads),
+            w: 0,
+            k: 0,
+            params: LdaParams::paper(1),
+            shard: None,
+            flat_buf: Vec::new(),
+            gather: GatherBuf::default(),
+        }
+    }
+
+    /// Handle a Batch frame: adopt the join/state checkpoint and build
+    /// this worker's shard from its document slice, seeding from the
+    /// master-drawn RNG split carried in the checkpoint — the same
+    /// `ShardBp::init` call, on the same bits, the in-process
+    /// coordinator makes.
+    pub fn on_batch(&mut self, payload: &[u8]) -> Result<(), TransportError> {
+        let (ck, shard_csr, params) = decode_batch(payload)?;
+        self.w = ck.w;
+        self.k = ck.k;
+        self.params = params;
+        let mut rng = Rng::from_state(ck.rng_state);
+        self.shard = Some(ShardBp::init(shard_csr, ck.k, &mut rng));
+        Ok(())
+    }
+
+    /// Handle a Sweep frame: run the doc-parallel sweep against the
+    /// published φ̂/totals under the published power schedule, and
+    /// return the Gather payload — the plan-order gather buffer plus
+    /// measured sweep seconds.
+    pub fn on_sweep(&mut self, payload: &[u8]) -> Result<Vec<u8>, TransportError> {
+        let (iter, phi, tot, power) = decode_sweep(payload)?;
+        let shard = self
+            .shard
+            .as_mut()
+            .ok_or_else(|| TransportError::Protocol("sweep before batch".into()))?;
+        if phi.len() != self.w * self.k || tot.len() != self.k {
+            return Err(TransportError::Protocol(format!(
+                "sweep shapes {}/{} do not match W·K = {}·{}",
+                phi.len(),
+                tot.len(),
+                self.w,
+                self.k
+            )));
+        }
+        let selection = match &power {
+            Some(ps) => Selection::from_power(ps, self.w),
+            None => Selection::full(self.w),
+        };
+        let budget = self.cluster.doc_threads_per_worker();
+        let (_resid, timing) = shard.sweep_parallel(
+            &self.cluster,
+            budget,
+            &phi,
+            &tot,
+            &selection,
+            &self.params,
+            true,
+        );
+        // the same critical-path attribution the in-process coordinator
+        // records — measured, never compared bitwise
+        let sweep_secs = timing.critical_path_secs(budget);
+        let payload = match &power {
+            None => {
+                let (dphi, r) = shard.dense_parts();
+                gather_payload(iter, dphi, r, sweep_secs)
+            }
+            Some(ps) => {
+                ps.flat_indices_into(self.k, &mut self.flat_buf);
+                shard.export_selected_into(&self.flat_buf, &mut self.gather);
+                gather_payload(iter, &self.gather.dphi, &self.gather.r, sweep_secs)
+            }
+        };
+        Ok(payload)
+    }
+
+    /// Handle a Fold frame: export the dense end-of-batch Δφ̂.
+    pub fn on_fold(&mut self) -> Result<Vec<u8>, TransportError> {
+        let shard = self
+            .shard
+            .as_ref()
+            .ok_or_else(|| TransportError::Protocol("fold before batch".into()))?;
+        let (dphi, _r) = shard.dense_parts();
+        Ok(fold_part_payload(dphi))
+    }
+}
+
+// ---- the master-side stand-in for a remote shard ----
+
+/// A dense W·K mirror of a remote worker's gather buffers. The master
+/// scatters each [`GatherReply`] into it and passes it — through the
+/// *unchanged* `allreduce_step`/`allreduce_step_sharded` — wherever the
+/// in-process coordinator passes the worker's [`ShardBp`]: the reduce
+/// plan only ever reads the plan positions, and those carry exactly the
+/// bits the remote shard exported, so the reduction is bitwise
+/// identical to the in-process one.
+pub struct PartSource {
+    dphi: Vec<f32>,
+    r: Vec<f32>,
+}
+
+impl PartSource {
+    pub fn new(len: usize) -> PartSource {
+        PartSource { dphi: vec![0.0; len], r: vec![0.0; len] }
+    }
+
+    /// Scatter a plan-order reply: dense replies replace the mirrors,
+    /// subset replies land at the plan indices. Length mismatches are
+    /// protocol violations, not panics.
+    pub fn load(
+        &mut self,
+        indices: Option<&[u32]>,
+        reply: &GatherReply,
+    ) -> Result<(), TransportError> {
+        let expect = indices.map_or(self.dphi.len(), |idx| idx.len());
+        if reply.dphi.len() != expect || reply.r.len() != expect {
+            return Err(TransportError::Protocol(format!(
+                "gather reply carries {} pairs, plan has {expect}",
+                reply.dphi.len()
+            )));
+        }
+        match indices {
+            None => {
+                self.dphi.copy_from_slice(&reply.dphi);
+                self.r.copy_from_slice(&reply.r);
+            }
+            Some(idx) => {
+                for (s, &i) in idx.iter().enumerate() {
+                    let i = i as usize;
+                    if i >= self.dphi.len() {
+                        return Err(TransportError::Protocol(format!(
+                            "plan index {i} outside W·K = {}",
+                            self.dphi.len()
+                        )));
+                    }
+                    self.dphi[i] = reply.dphi[s];
+                    self.r[i] = reply.r[s];
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ReduceSource for PartSource {
+    fn dense_parts(&self) -> (&[f32], &[f32]) {
+        (&self.dphi, &self.r)
+    }
+}
+
+// ---- the transport trait and its two backends ----
+
+/// One sweep round-trip across all workers: the replies in slot order
+/// plus the measured publish/collect wall seconds (the real allgather /
+/// reduce-scatter wire segments).
+pub struct SweepExchange {
+    pub replies: Vec<GatherReply>,
+    pub publish_secs: f64,
+    pub collect_secs: f64,
+}
+
+/// One end-of-batch fold collection: dense Δφ̂ parts in slot order plus
+/// the measured collect wall seconds.
+pub struct FoldExchange {
+    pub parts: Vec<Vec<f32>>,
+    pub collect_secs: f64,
+}
+
+/// What the distributed coordinator (`coordinator::dist`) needs from a
+/// cluster of workers. Object-safe so backends are runtime-selectable.
+pub trait Transport {
+    fn n_workers(&self) -> usize;
+
+    /// Ship each worker its batch/state-transfer frame (slot order).
+    fn start_batch(&mut self, payloads: &[Vec<u8>]) -> Result<(), TransportError>;
+
+    /// Publish per-worker Sweep frames and collect the Gather replies.
+    fn sweep_exchange(&mut self, payloads: &[Vec<u8>]) -> Result<SweepExchange, TransportError>;
+
+    /// Collect every worker's dense end-of-batch Δφ̂.
+    fn collect_fold(&mut self) -> Result<FoldExchange, TransportError>;
+
+    /// Hard-kill worker `slot`'s process (real SIGKILL on the TCP
+    /// backend; a no-op for in-process logical workers, whose "death"
+    /// is the fault plan's simulation).
+    fn kill_worker(&mut self, slot: usize) -> Result<(), TransportError>;
+
+    /// Tear down and re-establish every worker — the crash-recovery
+    /// path between a kill and a checkpoint resume.
+    fn reset(&mut self) -> Result<(), TransportError>;
+
+    /// Clean shutdown of all workers.
+    fn shutdown(&mut self) -> Result<(), TransportError>;
+}
+
+/// The degenerate single-host backend: [`WorkerState`]s called
+/// directly, but through the frame codec — every payload is encoded and
+/// decoded exactly as it would be on a socket, so the in-process path
+/// exercises the wire format on every exchange.
+pub struct InProcessTransport {
+    workers: Vec<WorkerState>,
+}
+
+impl InProcessTransport {
+    pub fn new(n_workers: usize, max_threads: usize) -> InProcessTransport {
+        InProcessTransport {
+            workers: (0..n_workers).map(|_| WorkerState::new(max_threads)).collect(),
+        }
+    }
+
+    fn through_codec(kind: FrameKind, payload: &[u8]) -> Result<Vec<u8>, TransportError> {
+        let frame = wire::decode_frame(&wire::encode_frame(kind, payload))?;
+        Ok(frame.payload)
+    }
+}
+
+impl Transport for InProcessTransport {
+    fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn start_batch(&mut self, payloads: &[Vec<u8>]) -> Result<(), TransportError> {
+        debug_assert_eq!(payloads.len(), self.workers.len());
+        for (ws, p) in self.workers.iter_mut().zip(payloads) {
+            let p = Self::through_codec(FrameKind::Batch, p)?;
+            ws.on_batch(&p)?;
+        }
+        Ok(())
+    }
+
+    fn sweep_exchange(&mut self, payloads: &[Vec<u8>]) -> Result<SweepExchange, TransportError> {
+        debug_assert_eq!(payloads.len(), self.workers.len());
+        let t0 = Instant::now();
+        let mut replies = Vec::with_capacity(self.workers.len());
+        for (ws, p) in self.workers.iter_mut().zip(payloads) {
+            let p = Self::through_codec(FrameKind::Sweep, p)?;
+            let reply = ws.on_sweep(&p)?;
+            let reply = Self::through_codec(FrameKind::Gather, &reply)?;
+            replies.push(decode_gather(&reply)?);
+        }
+        // in-process, publish and collect are the same synchronous pass;
+        // charge it all to the collect side
+        Ok(SweepExchange { replies, publish_secs: 0.0, collect_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    fn collect_fold(&mut self) -> Result<FoldExchange, TransportError> {
+        let t0 = Instant::now();
+        let mut parts = Vec::with_capacity(self.workers.len());
+        for ws in &mut self.workers {
+            let p = ws.on_fold()?;
+            let p = Self::through_codec(FrameKind::FoldPart, &p)?;
+            parts.push(decode_fold_part(&p)?);
+        }
+        Ok(FoldExchange { parts, collect_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    fn kill_worker(&mut self, _slot: usize) -> Result<(), TransportError> {
+        Ok(())
+    }
+
+    fn reset(&mut self) -> Result<(), TransportError> {
+        // nothing to rebuild: the next start_batch re-ships full state
+        Ok(())
+    }
+
+    fn shutdown(&mut self) -> Result<(), TransportError> {
+        Ok(())
+    }
+}
+
+/// How a [`TcpTransport`] (re)spawns its worker processes.
+#[derive(Clone, Debug)]
+pub struct TcpSpawnSpec {
+    /// the `pobp-worker` executable
+    pub exe: PathBuf,
+    /// sweep threads per worker (`--threads`)
+    pub threads: usize,
+}
+
+/// The real-process backend: slot-ordered TCP connections to `pobp-worker`
+/// processes, every exchange length-prefixed and checksummed, every
+/// socket under a read/write deadline so a hung peer fails fast with
+/// [`TransportError::Timeout`] instead of wedging the run.
+pub struct TcpTransport {
+    listener: TcpListener,
+    conns: Vec<Option<TcpStream>>,
+    children: Vec<Option<Child>>,
+    spawn: Option<TcpSpawnSpec>,
+    n: usize,
+    io_timeout: Duration,
+}
+
+impl TcpTransport {
+    /// Default socket deadline (join, reply and write waits).
+    pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+    /// Bind a listener and spawn `n` loopback `pobp-worker` processes
+    /// that connect back to it (the `--spawn` path and the test-suite
+    /// path).
+    pub fn spawn(n: usize, spec: TcpSpawnSpec) -> Result<TcpTransport, TransportError> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let mut t = TcpTransport {
+            listener,
+            conns: (0..n).map(|_| None).collect(),
+            children: (0..n).map(|_| None).collect(),
+            spawn: Some(spec),
+            n,
+            io_timeout: Self::DEFAULT_IO_TIMEOUT,
+        };
+        t.spawn_children()?;
+        t.accept_workers()?;
+        Ok(t)
+    }
+
+    /// Bind `addr` and wait for `n` externally launched workers to
+    /// join (the `bin/master` path without `--spawn`). Call
+    /// [`TcpTransport::accept_workers`] once they are started.
+    pub fn listen(addr: impl ToSocketAddrs, n: usize) -> Result<TcpTransport, TransportError> {
+        Ok(TcpTransport {
+            listener: TcpListener::bind(addr)?,
+            conns: (0..n).map(|_| None).collect(),
+            children: (0..n).map(|_| None).collect(),
+            spawn: None,
+            n,
+            io_timeout: Self::DEFAULT_IO_TIMEOUT,
+        })
+    }
+
+    /// Override the hung-socket deadline.
+    pub fn with_io_timeout(mut self, t: Duration) -> TcpTransport {
+        self.io_timeout = t;
+        self
+    }
+
+    /// The bound listen address (what workers `--connect` to).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    fn spawn_children(&mut self) -> Result<(), TransportError> {
+        let spec = self
+            .spawn
+            .clone()
+            .ok_or_else(|| TransportError::Protocol("no spawn spec for this transport".into()))?;
+        let addr = self.listener.local_addr()?;
+        for slot in 0..self.n {
+            let child = Command::new(&spec.exe)
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--slot")
+                .arg(slot.to_string())
+                .arg("--threads")
+                .arg(spec.threads.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .map_err(|e| TransportError::WorkerDead {
+                    slot,
+                    msg: format!("spawn {}: {e}", spec.exe.display()),
+                })?;
+            self.children[slot] = Some(child);
+        }
+        Ok(())
+    }
+
+    /// Accept and handshake all `n` workers: each sends Hello
+    /// (version, slot, pid), the master validates and replies Welcome.
+    /// Connections are stored slot-ordered, so arrival order never
+    /// matters. Deadlined end to end.
+    pub fn accept_workers(&mut self) -> Result<(), TransportError> {
+        let deadline = Instant::now() + self.io_timeout;
+        let mut joined = 0usize;
+        while joined < self.n {
+            let stream = self.accept_one(deadline)?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(self.io_timeout))?;
+            stream.set_write_timeout(Some(self.io_timeout))?;
+            let mut stream = stream;
+            let hello = read_frame(&mut stream).map_err(io_to_timeout("worker hello"))?;
+            if hello.kind != FrameKind::Hello {
+                return Err(TransportError::Protocol(format!(
+                    "expected Hello, got {:?}",
+                    hello.kind
+                )));
+            }
+            let (version, slot, _pid) = decode_hello(&hello.payload)?;
+            if version != PROTO_VERSION {
+                return Err(TransportError::Protocol(format!(
+                    "worker speaks protocol v{version}, master v{PROTO_VERSION}"
+                )));
+            }
+            if slot >= self.n {
+                return Err(TransportError::Protocol(format!(
+                    "worker slot {slot} outside 0..{}",
+                    self.n
+                )));
+            }
+            if self.conns[slot].is_some() {
+                return Err(TransportError::Protocol(format!("duplicate worker slot {slot}")));
+            }
+            write_frame(&mut stream, FrameKind::Welcome, &welcome_payload(slot, self.n))
+                .map_err(io_to_timeout("worker welcome"))?;
+            self.conns[slot] = Some(stream);
+            joined += 1;
+        }
+        Ok(())
+    }
+
+    fn accept_one(&self, deadline: Instant) -> Result<TcpStream, TransportError> {
+        self.listener.set_nonblocking(true)?;
+        let out = loop {
+            match self.listener.accept() {
+                Ok((s, _)) => break Ok(s),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        break Err(TransportError::Timeout("worker join"));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => break Err(e.into()),
+            }
+        };
+        self.listener.set_nonblocking(false)?;
+        let s = out?;
+        s.set_nonblocking(false)?;
+        Ok(s)
+    }
+
+    fn conn(&mut self, slot: usize) -> Result<&mut TcpStream, TransportError> {
+        self.conns[slot].as_mut().ok_or(TransportError::WorkerDead {
+            slot,
+            msg: "no connection".into(),
+        })
+    }
+
+    fn send(&mut self, slot: usize, kind: FrameKind, payload: &[u8]) -> Result<(), TransportError> {
+        let stream = self.conn(slot)?;
+        write_frame(stream, kind, payload).map_err(|e| wire_to_dead(slot, "send", e))
+    }
+
+    fn recv_expect(&mut self, slot: usize, kind: FrameKind) -> Result<Vec<u8>, TransportError> {
+        let stream = self.conn(slot)?;
+        let frame = read_frame(stream).map_err(|e| wire_to_dead(slot, "reply", e))?;
+        if frame.kind != kind {
+            return Err(TransportError::Protocol(format!(
+                "worker {slot}: expected {kind:?}, got {:?}",
+                frame.kind
+            )));
+        }
+        Ok(frame.payload)
+    }
+}
+
+fn io_to_timeout(what: &'static str) -> impl Fn(WireError) -> TransportError {
+    move |e| match e {
+        WireError::Io(ref io) if is_timeout(io) => TransportError::Timeout(what),
+        other => TransportError::Wire(other),
+    }
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+fn wire_to_dead(slot: usize, what: &str, e: WireError) -> TransportError {
+    match e {
+        WireError::Io(ref io) if is_timeout(io) => TransportError::WorkerDead {
+            slot,
+            msg: format!("{what} timed out (hung socket)"),
+        },
+        WireError::Io(io) => TransportError::WorkerDead { slot, msg: format!("{what}: {io}") },
+        WireError::Truncated(t) => TransportError::WorkerDead {
+            slot,
+            msg: format!("{what}: connection closed ({t})"),
+        },
+        other => TransportError::Wire(other),
+    }
+}
+
+impl Transport for TcpTransport {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn start_batch(&mut self, payloads: &[Vec<u8>]) -> Result<(), TransportError> {
+        debug_assert_eq!(payloads.len(), self.n);
+        for (slot, p) in payloads.iter().enumerate() {
+            self.send(slot, FrameKind::Batch, p)?;
+        }
+        Ok(())
+    }
+
+    fn sweep_exchange(&mut self, payloads: &[Vec<u8>]) -> Result<SweepExchange, TransportError> {
+        debug_assert_eq!(payloads.len(), self.n);
+        let t0 = Instant::now();
+        for (slot, p) in payloads.iter().enumerate() {
+            self.send(slot, FrameKind::Sweep, p)?;
+        }
+        let publish_secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let mut replies = Vec::with_capacity(self.n);
+        for slot in 0..self.n {
+            let payload = self.recv_expect(slot, FrameKind::Gather)?;
+            replies.push(decode_gather(&payload)?);
+        }
+        Ok(SweepExchange { replies, publish_secs, collect_secs: t1.elapsed().as_secs_f64() })
+    }
+
+    fn collect_fold(&mut self) -> Result<FoldExchange, TransportError> {
+        let t0 = Instant::now();
+        for slot in 0..self.n {
+            self.send(slot, FrameKind::Fold, &[])?;
+        }
+        let mut parts = Vec::with_capacity(self.n);
+        for slot in 0..self.n {
+            let payload = self.recv_expect(slot, FrameKind::FoldPart)?;
+            parts.push(decode_fold_part(&payload)?);
+        }
+        Ok(FoldExchange { parts, collect_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    fn kill_worker(&mut self, slot: usize) -> Result<(), TransportError> {
+        self.conns[slot] = None;
+        match self.children[slot].as_mut() {
+            Some(child) => {
+                crate::fault::sigkill(child).map_err(|e| TransportError::WorkerDead {
+                    slot,
+                    msg: format!("sigkill: {e}"),
+                })?;
+                self.children[slot] = None;
+                Ok(())
+            }
+            None => Err(TransportError::Protocol(format!(
+                "worker {slot} was not spawned by this master; cannot kill it"
+            ))),
+        }
+    }
+
+    fn reset(&mut self) -> Result<(), TransportError> {
+        for slot in 0..self.n {
+            self.conns[slot] = None;
+            if let Some(child) = self.children[slot].as_mut() {
+                let _ = crate::fault::sigkill(child);
+            }
+            self.children[slot] = None;
+        }
+        self.spawn_children()?;
+        self.accept_workers()
+    }
+
+    fn shutdown(&mut self) -> Result<(), TransportError> {
+        for slot in 0..self.n {
+            if self.conns[slot].is_some() {
+                let _ = self.send(slot, FrameKind::Shutdown, &[]);
+            }
+            self.conns[slot] = None;
+            if let Some(child) = self.children[slot].as_mut() {
+                // workers exit on Shutdown (or on the socket closing);
+                // wait() reaps them either way
+                let _ = child.wait();
+            }
+            self.children[slot] = None;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        for child in self.children.iter_mut().flatten() {
+            let _ = crate::fault::sigkill(child);
+        }
+    }
+}
+
+/// The `pobp-worker` event loop: connect, handshake, then serve
+/// Batch/Sweep/Fold frames until Shutdown. `io_timeout = None` blocks
+/// indefinitely between frames (the master controls pacing); a `Some`
+/// deadline makes an abandoned worker exit instead of lingering.
+pub fn serve_worker(
+    addr: impl ToSocketAddrs,
+    slot: usize,
+    max_threads: usize,
+    io_timeout: Option<Duration>,
+) -> Result<(), TransportError> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(io_timeout)?;
+    stream.set_write_timeout(io_timeout)?;
+    write_frame(&mut stream, FrameKind::Hello, &hello_payload(slot))?;
+    let welcome = read_frame(&mut stream).map_err(io_to_timeout("welcome"))?;
+    if welcome.kind != FrameKind::Welcome {
+        return Err(TransportError::Protocol(format!(
+            "expected Welcome, got {:?}",
+            welcome.kind
+        )));
+    }
+    let (ack_slot, _n) = decode_welcome(&welcome.payload)?;
+    if ack_slot != slot {
+        return Err(TransportError::Protocol(format!(
+            "master acknowledged slot {ack_slot}, we are slot {slot}"
+        )));
+    }
+    let mut ws = WorkerState::new(max_threads);
+    loop {
+        let frame = read_frame(&mut stream).map_err(io_to_timeout("next frame"))?;
+        match frame.kind {
+            FrameKind::Batch => ws.on_batch(&frame.payload)?,
+            FrameKind::Sweep => {
+                let reply = ws.on_sweep(&frame.payload)?;
+                write_frame(&mut stream, FrameKind::Gather, &reply)?;
+            }
+            FrameKind::Fold => {
+                let reply = ws.on_fold()?;
+                write_frame(&mut stream, FrameKind::FoldPart, &reply)?;
+            }
+            FrameKind::Shutdown => return Ok(()),
+            other => {
+                return Err(TransportError::Protocol(format!(
+                    "unexpected frame {other:?} in worker loop"
+                )));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::PhiShard;
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("inprocess"), Some(TransportKind::InProcess));
+        assert_eq!(TransportKind::parse("in-process"), Some(TransportKind::InProcess));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        assert_eq!(TransportKind::default().name(), "inprocess");
+    }
+
+    #[test]
+    fn handshake_payloads_roundtrip() {
+        let (v, slot, pid) = decode_hello(&hello_payload(3)).unwrap();
+        assert_eq!((v, slot), (PROTO_VERSION, 3));
+        assert_eq!(pid, std::process::id());
+        assert_eq!(decode_welcome(&welcome_payload(3, 8)).unwrap(), (3, 8));
+        assert!(decode_hello(&welcome_payload(3, 8)[..7]).is_err());
+    }
+
+    #[test]
+    fn sweep_payload_roundtrips_with_and_without_power() {
+        let phi = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let tot = vec![9.0f32, 12.0];
+        let (iter, p2, t2, pow) = decode_sweep(&sweep_payload(4, &phi, &tot, None)).unwrap();
+        assert_eq!((iter, p2, t2), (4, phi.clone(), tot.clone()));
+        assert!(pow.is_none());
+        let ps = PowerSet { words: vec![0, 2], topics: vec![vec![1], vec![0, 1]] };
+        let (_, _, _, pow) = decode_sweep(&sweep_payload(5, &phi, &tot, Some(&ps))).unwrap();
+        let pow = pow.unwrap();
+        assert_eq!(pow.words, ps.words);
+        assert_eq!(pow.topics, ps.topics);
+        // a bad power tag is a typed error
+        let mut bad = sweep_payload(4, &phi, &tot, None);
+        let tag_off = bad.len() - 4;
+        bad[tag_off] = 7;
+        assert!(matches!(decode_sweep(&bad), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn gather_and_fold_payloads_roundtrip() {
+        let g = decode_gather(&gather_payload(2, &[1.5, -2.0], &[0.5, 0.25], 0.125)).unwrap();
+        assert_eq!((g.iter, g.sweep_secs), (2, 0.125));
+        assert_eq!(g.dphi, vec![1.5, -2.0]);
+        assert_eq!(g.r, vec![0.5, 0.25]);
+        assert_eq!(decode_fold_part(&fold_part_payload(&[7.0, 8.0])).unwrap(), vec![7.0, 8.0]);
+        assert!(decode_fold_part(&gather_payload(2, &[1.0], &[1.0], 0.0)).is_err());
+    }
+
+    #[test]
+    fn batch_payload_roundtrips_and_validates() {
+        let (w, k) = (4usize, 2usize);
+        let ck = Checkpoint {
+            w,
+            k,
+            n_workers: 2,
+            seed: 42,
+            next_batch: 1,
+            next_doc: 8,
+            iter_syncs: 3,
+            rng_state: [1, 2, 3, 4],
+            phi: PhiShard::Replicated(vec![0.5; w * k]),
+            ledger: crate::comm::Ledger::new(crate::comm::NetModel::infiniband_20gbps()),
+            history: Vec::new(),
+            snapshots: Vec::new(),
+        };
+        let shard = Csr {
+            w,
+            row_ptr: vec![0, 2, 3],
+            col: vec![0, 3, 1],
+            val: vec![1.0, 2.0, 3.0],
+        };
+        let params = LdaParams::paper(k);
+        let payload = batch_payload(&ck, &shard, &params);
+        let (ck2, shard2, params2) = decode_batch(&payload).unwrap();
+        assert_eq!((ck2.w, ck2.k, ck2.rng_state), (w, k, [1, 2, 3, 4]));
+        assert_eq!(shard2.row_ptr, shard.row_ptr);
+        assert_eq!(shard2.col, shard.col);
+        assert_eq!(shard2.val, shard.val);
+        assert_eq!((params2.alpha, params2.beta), (params.alpha, params.beta));
+        // a corrupted embedded checkpoint is refused with the typed error
+        let mut bad = payload.clone();
+        bad[8 + 40] ^= 1; // inside the checkpoint bytes
+        assert!(matches!(decode_batch(&bad), Err(WireError::Malformed(_))));
+        // truncated CSR tail is refused
+        assert!(decode_batch(&payload[..payload.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn part_source_scatters_plan_order_replies() {
+        let mut src = PartSource::new(6);
+        let dense = GatherReply {
+            iter: 1,
+            dphi: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            r: vec![6.0, 5.0, 4.0, 3.0, 2.0, 1.0],
+            sweep_secs: 0.0,
+        };
+        src.load(None, &dense).unwrap();
+        assert_eq!(src.dense_parts().0, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let subset = GatherReply {
+            iter: 2,
+            dphi: vec![10.0, 20.0],
+            r: vec![0.5, 0.25],
+            sweep_secs: 0.0,
+        };
+        src.load(Some(&[1, 4]), &subset).unwrap();
+        let (d, r) = src.dense_parts();
+        assert_eq!(d, &[1.0, 10.0, 3.0, 4.0, 20.0, 6.0]);
+        assert_eq!(r, &[6.0, 0.5, 4.0, 3.0, 0.25, 1.0]);
+        // mismatched and out-of-range replies are protocol errors
+        assert!(src.load(Some(&[1]), &subset).is_err());
+        assert!(src.load(Some(&[1, 99]), &subset).is_err());
+    }
+}

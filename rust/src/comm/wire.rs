@@ -1,0 +1,468 @@
+//! Length-prefixed, checksummed frame codec for the distributed
+//! transport (Contract 8).
+//!
+//! One frame on the socket:
+//!
+//! ```text
+//! "POBPWIR1" | kind u32 | payload_len u64 | fnv1a64(kind|len|payload) u64 | payload
+//! ```
+//!
+//! All integers little-endian; f64/f32 payload fields as raw IEEE bits —
+//! the same conventions as the `POBPCKP1` checkpoint format
+//! (`storage::checkpoint`), whose FNV-1a-64 checksum this module reuses.
+//! The checksum covers the `kind` and `len` header fields *and* the
+//! payload, so every single-bit corruption of a frame is refused: a
+//! magic flip fails [`WireError::BadMagic`], a kind/len/payload/checksum
+//! flip fails [`WireError::BadKind`], [`WireError::Oversized`],
+//! [`WireError::Truncated`] or [`WireError::Checksum`]
+//! (`mod tests` pins the full corruption matrix, mirroring the
+//! checkpoint suite's style).
+//!
+//! Frames are deliberately dumb: framing and integrity only. What the
+//! payload *means* per [`FrameKind`] is the transport protocol
+//! (`comm::transport`); decoding those payloads uses [`PayloadRd`],
+//! which surfaces shape defects as typed [`WireError`]s too.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::storage::checkpoint::fnv1a64;
+
+/// Frame magic: "POBPWIR1" (POBP wire format, version 1).
+pub const MAGIC: &[u8; 8] = b"POBPWIR1";
+/// Protocol version carried in Hello/Welcome payloads; bumped on any
+/// frame- or payload-layout change.
+pub const PROTO_VERSION: u32 = 1;
+/// Frame header bytes: magic + kind + len + checksum.
+pub const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+/// Largest accepted payload (1 GiB) — refuses absurd length fields
+/// before any allocation happens.
+pub const MAX_FRAME: u64 = 1 << 30;
+
+/// What a frame carries; the transport protocol's message vocabulary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// worker → master: join handshake (proto version, slot, pid)
+    Hello = 1,
+    /// master → worker: handshake accept (slot, cluster size)
+    Welcome = 2,
+    /// master → worker: batch/state transfer — a full `POBPCKP1`
+    /// checkpoint plus the worker's document shard and LDA params
+    Batch = 3,
+    /// master → worker: publish φ̂_eff + totals + power set; sweep
+    Sweep = 4,
+    /// worker → master: plan-order gather buffer + measured sweep secs
+    Gather = 5,
+    /// master → worker: request the end-of-batch dense Δφ̂
+    Fold = 6,
+    /// worker → master: the dense Δφ̂ part
+    FoldPart = 7,
+    /// master → worker: clean exit
+    Shutdown = 8,
+}
+
+impl FrameKind {
+    fn from_u32(v: u32) -> Option<FrameKind> {
+        Some(match v {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Welcome,
+            3 => FrameKind::Batch,
+            4 => FrameKind::Sweep,
+            5 => FrameKind::Gather,
+            6 => FrameKind::Fold,
+            7 => FrameKind::FoldPart,
+            8 => FrameKind::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// Why a frame (or a payload field) was refused.
+#[derive(Debug)]
+pub enum WireError {
+    Io(io::Error),
+    /// not a POBP wire frame
+    BadMagic,
+    /// an unknown frame kind tag
+    BadKind(u32),
+    /// length field beyond [`MAX_FRAME`]
+    Oversized {
+        len: u64,
+    },
+    /// the header, payload or a payload field ended early (or a buffer
+    /// carried trailing garbage)
+    Truncated(&'static str),
+    /// header+payload checksum mismatch
+    Checksum,
+    /// the payload decoded but is internally inconsistent (bad shape,
+    /// bad enum tag, refused sub-payload)
+    Malformed(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire I/O: {e}"),
+            WireError::BadMagic => write!(f, "not a POBP wire frame (bad magic)"),
+            WireError::BadKind(v) => write!(f, "unknown frame kind {v}"),
+            WireError::Oversized { len } => {
+                write!(f, "frame payload of {len} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            WireError::Truncated(what) => write!(f, "truncated frame ({what})"),
+            WireError::Checksum => write!(f, "frame checksum mismatch"),
+            WireError::Malformed(s) => write!(f, "malformed payload: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// A decoded frame: kind plus raw payload bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+/// The checksum input: the mutable header fields then the payload, so a
+/// flipped bit anywhere outside the magic lands in the digest.
+fn frame_digest(kind: u32, len: u64, payload: &[u8]) -> u64 {
+    let mut head = [0u8; 12];
+    head[..4].copy_from_slice(&kind.to_le_bytes());
+    head[4..].copy_from_slice(&len.to_le_bytes());
+    let mut h = fnv1a64(&head);
+    // continue the same FNV-1a stream over the payload
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Encode one frame into a fresh buffer.
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    let len = payload.len() as u64;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(kind as u32).to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&frame_digest(kind as u32, len, payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode exactly one frame from a complete buffer; trailing bytes are
+/// refused (a socket reader uses [`read_frame`] instead).
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame, WireError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(WireError::Truncated("frame header"));
+    }
+    if &bytes[..8] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    let kind_raw = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let sum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(WireError::Oversized { len });
+    }
+    let payload = &bytes[HEADER_LEN..];
+    if payload.len() as u64 != len {
+        return Err(WireError::Truncated("frame payload"));
+    }
+    if frame_digest(kind_raw, len, payload) != sum {
+        return Err(WireError::Checksum);
+    }
+    let kind = FrameKind::from_u32(kind_raw).ok_or(WireError::BadKind(kind_raw))?;
+    Ok(Frame { kind, payload: payload.to_vec() })
+}
+
+/// Write one frame to a stream (single `write_all` — one syscall per
+/// frame on an unbuffered socket).
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, payload: &[u8]) -> Result<(), WireError> {
+    w.write_all(&encode_frame(kind, payload))?;
+    Ok(())
+}
+
+/// Read exactly one frame from a stream, validating magic, kind, length
+/// cap and checksum before returning. An EOF inside the header or
+/// payload surfaces as [`WireError::Truncated`] so a half-closed socket
+/// is distinguishable from ordinary I/O failure.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
+    let mut head = [0u8; HEADER_LEN];
+    read_exact_or(r, &mut head, "frame header")?;
+    if &head[..8] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    let kind_raw = u32::from_le_bytes(head[8..12].try_into().unwrap());
+    let len = u64::from_le_bytes(head[12..20].try_into().unwrap());
+    let sum = u64::from_le_bytes(head[20..28].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(WireError::Oversized { len });
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or(r, &mut payload, "frame payload")?;
+    if frame_digest(kind_raw, len, &payload) != sum {
+        return Err(WireError::Checksum);
+    }
+    let kind = FrameKind::from_u32(kind_raw).ok_or(WireError::BadKind(kind_raw))?;
+    Ok(Frame { kind, payload })
+}
+
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &'static str) -> Result<(), WireError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            WireError::Truncated(what)
+        } else {
+            WireError::Io(e)
+        }
+    })
+}
+
+// ---- payload field helpers (checkpoint-format conventions) ----
+
+/// Append a little-endian u64.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian u32.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an f64 as raw IEEE bits.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+/// Append f32s as raw IEEE bits.
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(4 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Append u32s.
+pub fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    out.reserve(4 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Sequential payload reader with typed truncation errors — the wire
+/// twin of the checkpoint decoder's section reader.
+pub struct PayloadRd<'a> {
+    b: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> PayloadRd<'a> {
+    pub fn new(b: &'a [u8], what: &'static str) -> PayloadRd<'a> {
+        PayloadRd { b, pos: 0, what }
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated(self.what))?;
+        let s = self.b.get(self.pos..end).ok_or(WireError::Truncated(self.what))?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, WireError> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let raw = self.bytes(4usize.checked_mul(n).ok_or(WireError::Truncated(self.what))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    pub fn u32s(&mut self, n: usize) -> Result<Vec<u32>, WireError> {
+        let raw = self.bytes(4usize.checked_mul(n).ok_or(WireError::Truncated(self.what))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn done(&self) -> Result<(), WireError> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(WireError::Truncated(self.what))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 7);
+        put_f64(&mut payload, 0.25);
+        put_f32s(&mut payload, &[1.0, -2.5, 3e-7]);
+        put_u32s(&mut payload, &[0, 9, 4096]);
+        encode_frame(FrameKind::Gather, &payload)
+    }
+
+    #[test]
+    fn roundtrip_encode_decode_reencode() {
+        let bytes = sample();
+        let frame = decode_frame(&bytes).unwrap();
+        assert_eq!(frame.kind, FrameKind::Gather);
+        assert_eq!(encode_frame(frame.kind, &frame.payload), bytes);
+        // the stream reader agrees with the buffer decoder
+        let mut cursor = io::Cursor::new(bytes.clone());
+        assert_eq!(read_frame(&mut cursor).unwrap(), frame);
+        // empty payloads roundtrip too
+        let empty = encode_frame(FrameKind::Fold, &[]);
+        let f = decode_frame(&empty).unwrap();
+        assert_eq!((f.kind, f.payload.len()), (FrameKind::Fold, 0));
+    }
+
+    #[test]
+    fn every_single_bit_corruption_is_refused() {
+        // the corruption matrix, mirroring the checkpoint suite: flip
+        // each bit of the encoded frame in turn; every flip must be
+        // refused with a typed error, and the error class must match
+        // the corrupted region
+        let clean = sample();
+        for byte in 0..clean.len() {
+            for bit in 0..8 {
+                let mut bad = clean.clone();
+                bad[byte] ^= 1 << bit;
+                let err = decode_frame(&bad)
+                    .expect_err(&format!("bit {bit} of byte {byte} accepted"));
+                match byte {
+                    0..=7 => assert!(
+                        matches!(err, WireError::BadMagic),
+                        "magic byte {byte}: {err}"
+                    ),
+                    8..=11 => assert!(
+                        matches!(err, WireError::Checksum | WireError::BadKind(_)),
+                        "kind byte {byte}: {err}"
+                    ),
+                    12..=19 => assert!(
+                        matches!(
+                            err,
+                            WireError::Checksum
+                                | WireError::Oversized { .. }
+                                | WireError::Truncated(_)
+                        ),
+                        "len byte {byte}: {err}"
+                    ),
+                    _ => assert!(
+                        matches!(err, WireError::Checksum),
+                        "checksum/payload byte {byte}: {err}"
+                    ),
+                }
+                // the stream path refuses the same flip (any typed error)
+                assert!(read_frame(&mut io::Cursor::new(bad)).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_refused_at_every_cut() {
+        let clean = sample();
+        for cut in 0..clean.len() {
+            let err = decode_frame(&clean[..cut]).expect_err("truncation accepted");
+            assert!(
+                matches!(err, WireError::Truncated(_)),
+                "cut {cut}: {err}"
+            );
+            let err = read_frame(&mut io::Cursor::new(clean[..cut].to_vec()))
+                .expect_err("stream truncation accepted");
+            assert!(
+                matches!(err, WireError::Truncated(_)),
+                "stream cut {cut}: {err}"
+            );
+        }
+        // trailing garbage after a complete frame is refused by the
+        // buffer decoder (the stream reader leaves it for the next read)
+        let mut extra = clean.clone();
+        extra.push(0);
+        assert!(matches!(decode_frame(&extra), Err(WireError::Truncated(_))));
+    }
+
+    #[test]
+    fn foreign_and_oversized_frames_refused() {
+        // a checkpoint file is not a wire frame
+        let mut foreign = sample();
+        foreign[..8].copy_from_slice(b"POBPCKP1");
+        assert!(matches!(decode_frame(&foreign), Err(WireError::BadMagic)));
+        // an unknown kind tag is refused even with a valid checksum
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1);
+        let mut bad_kind = Vec::new();
+        bad_kind.extend_from_slice(MAGIC);
+        put_u32(&mut bad_kind, 99);
+        put_u64(&mut bad_kind, payload.len() as u64);
+        put_u64(&mut bad_kind, frame_digest(99, payload.len() as u64, &payload));
+        bad_kind.extend_from_slice(&payload);
+        assert!(matches!(decode_frame(&bad_kind), Err(WireError::BadKind(99))));
+        // a length field past the cap is refused before allocation,
+        // regardless of checksum validity
+        let mut huge = Vec::new();
+        huge.extend_from_slice(MAGIC);
+        put_u32(&mut huge, FrameKind::Batch as u32);
+        put_u64(&mut huge, MAX_FRAME + 1);
+        put_u64(&mut huge, frame_digest(FrameKind::Batch as u32, MAX_FRAME + 1, &[]));
+        assert!(matches!(
+            decode_frame(&huge),
+            Err(WireError::Oversized { len }) if len == MAX_FRAME + 1
+        ));
+        assert!(matches!(
+            read_frame(&mut io::Cursor::new(huge)),
+            Err(WireError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn payload_reader_types_and_truncation() {
+        let mut p = Vec::new();
+        put_u64(&mut p, 42);
+        put_f64(&mut p, -1.5);
+        put_f32s(&mut p, &[7.0, 8.0]);
+        put_u32s(&mut p, &[3]);
+        let mut rd = PayloadRd::new(&p, "test payload");
+        assert_eq!(rd.u64().unwrap(), 42);
+        assert_eq!(rd.f64().unwrap(), -1.5);
+        assert_eq!(rd.f32s(2).unwrap(), vec![7.0, 8.0]);
+        assert_eq!(rd.u32s(1).unwrap(), vec![3]);
+        rd.done().unwrap();
+        // over-read and under-consume both surface as Truncated
+        let mut rd = PayloadRd::new(&p, "test payload");
+        assert!(matches!(rd.f32s(1 << 20), Err(WireError::Truncated(_))));
+        let mut rd = PayloadRd::new(&p, "test payload");
+        let _ = rd.u64().unwrap();
+        assert!(matches!(rd.done(), Err(WireError::Truncated(_))));
+    }
+}

@@ -27,7 +27,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::comm::NetModel;
+use crate::comm::{NetModel, TransportKind};
 use crate::engine::traits::LdaParams;
 use crate::repro::{Algo, RunOpts};
 use crate::sched::PowerParams;
@@ -167,6 +167,15 @@ impl Experiment {
                 defaults.straggler_timeout_factor,
             )?,
             resume: cf.typed("run", "resume", defaults.resume)?,
+            // `transport = tcp` marks the config for the real
+            // master/worker cluster (Contract 8); `pobp run` itself only
+            // drives the in-process carrier, so the CLI rejects the tcp
+            // value with a pointer at pobp-master / pobp-worker
+            transport: {
+                let s = cf.get("run", "transport").unwrap_or("inprocess");
+                TransportKind::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("[run] transport = {s}: inprocess|tcp"))?
+            },
         };
         // invalid [run] combinations fail here with the typed message,
         // not as a panic mid-run (e.g. overlap + sharded storage)
@@ -263,6 +272,18 @@ network = gige
         let cf = ConfigFile::parse("[run]\ncheckpoint_every = 1\nstraggler_timeout = 0\n")
             .unwrap();
         assert!(Experiment::from_config(&cf).is_err());
+    }
+
+    #[test]
+    fn transport_key_resolves() {
+        let e = Experiment::from_config(&ConfigFile::parse("[run]\n").unwrap()).unwrap();
+        assert_eq!(e.opts.transport, TransportKind::InProcess);
+        let cf = ConfigFile::parse("[run]\ntransport = tcp\n").unwrap();
+        let e = Experiment::from_config(&cf).unwrap();
+        assert_eq!(e.opts.transport, TransportKind::Tcp);
+        let cf = ConfigFile::parse("[run]\ntransport = rdma\n").unwrap();
+        let err = Experiment::from_config(&cf).unwrap_err();
+        assert!(err.to_string().contains("transport"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,794 @@
+//! The distributed coordinator: [`fit`](super::fit)'s two training
+//! loops driven through a [`Transport`] instead of direct calls into
+//! leader-owned [`ShardBp`](crate::engine::bp::ShardBp)s (Contract 8,
+//! docs/ARCHITECTURE.md).
+//!
+//! The remote worker contributes to training through exactly three
+//! channels, and each one crosses the wire as a typed frame:
+//!
+//! * **shard construction** — the Batch frame carries a `POBPCKP1`
+//!   checkpoint (the worker's RNG split drawn from the leader's stream
+//!   at the same position `build_shards` draws it) plus the worker's
+//!   re-based CSR doc slice and the LDA priors; the worker rebuilds the
+//!   same `ShardBp::init` the in-process loops build. Because the frame
+//!   is a full state transfer, worker (re)join after a crash is the
+//!   same message as a normal batch start.
+//! * **sweeps** — the Sweep frame publishes φ̂_eff, the topic totals and
+//!   the power schedule; the Gather reply returns the plan-order
+//!   (Δφ̂, r) export. Sweeps are bitwise budget-independent (Contract 1)
+//!   and dense-vs-sliced-view independent (Contract 5), so a remote
+//!   worker sweeping a dense render of sharded φ̂ produces the bits the
+//!   in-process `PhiView::Slices` sweep produces.
+//! * **the end-of-batch fold** — the FoldPart reply ships the dense
+//!   Δφ̂ accumulated over the batch (Eq. 11's per-worker term).
+//!
+//! Leader-side, each reply lands in a [`PartSource`] — a dense mirror of
+//! the worker's (Δφ̂, r) — and the **unchanged** `allreduce_step` /
+//! `allreduce_step_sharded` run on top of those mirrors: the same
+//! per-element left folds in the same owner order, hence bitwise
+//! equality with [`fit`](super::fit) (`rust/tests/dist_equiv.rs` pins
+//! it across worker counts, storage modes, thread budgets, and real
+//! TCP worker processes).
+//!
+//! Time accounting: the modeled α–β charges are recorded exactly as
+//! in-process ([`Ledger::record_sync`] / `record_sync_split`), and the
+//! *measured* wire seconds of every exchange land next to them through
+//! [`Ledger::record_measured`] — the publish pass is the (all)gather
+//! leg, the collect pass minus the slowest worker's sweep is the
+//! reduce leg. Measured seconds never enter `total_secs()`; they exist
+//! to calibrate the model ([`NetModel::calibration_error_secs`]).
+//!
+//! [`Ledger::record_sync`]: crate::comm::Ledger::record_sync
+//! [`Ledger::record_measured`]: crate::comm::Ledger::record_measured
+//! [`NetModel::calibration_error_secs`]: crate::comm::NetModel::calibration_error_secs
+
+use std::sync::Mutex;
+
+use crate::comm::allreduce::{
+    allreduce_step, allreduce_step_injected, allreduce_step_sharded,
+    allreduce_step_sharded_injected, reduce_chunked, GlobalState, ReducePlan,
+    ShardedState, SyncScratch,
+};
+use crate::comm::transport::{
+    batch_payload, sweep_payload, PartSource, SweepExchange, Transport, TransportError,
+};
+use crate::comm::{Cluster, Ledger};
+use crate::corpus::{shard_ranges, Csr, MiniBatch, MiniBatchStream};
+use crate::engine::traits::{IterStat, LdaParams, Model, TrainResult};
+use crate::fault::{FaultPlan, SyncPhase};
+use crate::sched::{select_power, select_power_sharded, PowerSet};
+use crate::storage::{Checkpoint, CkptExpect, PhiShard, PhiStorageMode};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::{
+    check_resume, write_checkpoint, ConfigError, PobpConfig, ResilienceConfig,
+    RunCtx, TrainError,
+};
+
+fn transport_err(e: TransportError) -> TrainError {
+    TrainError::Transport(e.to_string())
+}
+
+/// Front-door checks shared by [`fit_dist`] and [`fit_dist_resilient`]:
+/// the usual config validation, the unsupported overlap pipeline, and
+/// the transport actually holding `n_workers` workers.
+fn validate_dist(cfg: &PobpConfig, transport: &dyn Transport) -> Result<(), TrainError> {
+    cfg.validate()?;
+    if cfg.overlap {
+        return Err(ConfigError::OverlapDistUnsupported.into());
+    }
+    if transport.n_workers() != cfg.n_workers {
+        return Err(TrainError::Transport(format!(
+            "transport holds {} workers, config wants n_workers = {}",
+            transport.n_workers(),
+            cfg.n_workers
+        )));
+    }
+    Ok(())
+}
+
+/// Build one mini-batch's Batch frames, slot order — the distributed
+/// twin of [`build_shards`](super::build_shards): the same
+/// `shard_ranges` partition and the same `rng.split(n)` draws at the
+/// same stream position, so the worker's `Rng::from_state` rebuild is
+/// the RNG `build_shards` hands `ShardBp::init`. The embedded
+/// checkpoint's φ̂ is a zeroed placeholder (the decoder demands the
+/// W·K shape; workers never read it — φ̂ arrives with every Sweep).
+fn batch_payloads(
+    mb: &MiniBatch,
+    w: usize,
+    k: usize,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+    rng: &mut Rng,
+) -> Vec<Vec<u8>> {
+    let ranges = shard_ranges(mb.data.docs(), cfg.n_workers);
+    ranges
+        .iter()
+        .enumerate()
+        .map(|(n, rg)| {
+            let wrng = rng.split(n as u64);
+            let slice = mb.data.slice_docs(rg.start, rg.end);
+            let ck = Checkpoint {
+                w,
+                k,
+                n_workers: cfg.n_workers,
+                seed: cfg.seed,
+                next_batch: mb.index,
+                next_doc: mb.doc_range.start,
+                iter_syncs: 0,
+                rng_state: wrng.state(),
+                phi: PhiShard::Replicated(vec![0.0; w * k]),
+                ledger: Ledger::new(cfg.net),
+                history: Vec::new(),
+                snapshots: Vec::new(),
+            };
+            batch_payload(&ck, &slice, params)
+        })
+        .collect()
+}
+
+/// Protocol sanity on a sweep round-trip: one reply per worker, every
+/// reply echoing the published iteration.
+fn check_replies(ex: &SweepExchange, t: usize, n: usize) -> Result<(), TrainError> {
+    if ex.replies.len() != n {
+        return Err(TrainError::Transport(format!(
+            "{} gather replies for {n} workers",
+            ex.replies.len()
+        )));
+    }
+    for (slot, r) in ex.replies.iter().enumerate() {
+        if r.iter != t {
+            return Err(TrainError::Transport(format!(
+                "worker {slot} answered iteration {} during iteration {t}",
+                r.iter
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Shape-check the end-of-batch fold parts (dense `W·K` each, slot
+/// order) before they touch the accumulator.
+fn check_fold_parts(parts: &[Vec<f32>], n: usize, len: usize) -> Result<(), TrainError> {
+    if parts.len() != n {
+        return Err(TrainError::Transport(format!(
+            "{} fold parts for {n} workers",
+            parts.len()
+        )));
+    }
+    for (slot, p) in parts.iter().enumerate() {
+        if p.len() != len {
+            return Err(TrainError::Transport(format!(
+                "fold part {slot} carries {} elements, want W·K = {len}",
+                p.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// [`fit_checked`](super::fit_checked) through a [`Transport`]:
+/// the same training program, with sweeps and gathers crossing the
+/// transport as wire frames. Bitwise-equal to the in-process fit in
+/// both storage modes (Contract 8, `rust/tests/dist_equiv.rs`).
+///
+/// The caller owns the transport's lifecycle — workers stay connected
+/// after the run so several fits can share one cluster; call
+/// [`Transport::shutdown`] when done.
+pub fn fit_dist(
+    corpus: &Csr,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+    transport: &mut dyn Transport,
+) -> Result<TrainResult, TrainError> {
+    validate_dist(cfg, transport)?;
+    match cfg.storage {
+        PhiStorageMode::Replicated => {
+            dist_replicated(corpus, params, cfg, RunCtx::bare(), transport)
+        }
+        PhiStorageMode::Sharded => {
+            dist_sharded(corpus, params, cfg, RunCtx::bare(), transport)
+        }
+    }
+}
+
+/// [`fit_resilient`](super::fit_resilient) through a [`Transport`]
+/// (Contracts 6 + 8): same checkpoint cadence and retry loop, except
+/// that a planned kill now SIGKILLs the real worker process
+/// ([`Transport::kill_worker`]) and each retry re-establishes the whole
+/// cluster ([`Transport::reset`]) before resuming from the newest good
+/// checkpoint. The recovered result is bitwise identical to an
+/// uninterrupted run (`rust/tests/dist_equiv.rs`).
+pub fn fit_dist_resilient(
+    corpus: &Csr,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+    res: &ResilienceConfig,
+    faults: Option<&FaultPlan>,
+    transport: &mut dyn Transport,
+) -> Result<TrainResult, TrainError> {
+    validate_dist(cfg, transport)?;
+    res.validate()?;
+    let expect = CkptExpect {
+        w: corpus.w,
+        k: params.k,
+        n_workers: cfg.n_workers,
+        seed: cfg.seed,
+        mode: cfg.storage,
+    };
+    let mut allow_resume = res.resume;
+    let mut last_death: Option<f64> = None;
+    let mut retries = 0usize;
+    let mut need_reset = false;
+    loop {
+        if need_reset {
+            // a kill left a worker dead (and, on TCP, a real corpse):
+            // tear the cluster down and respawn/reaccept everyone —
+            // the next attempt's Batch frames re-ship all worker state
+            transport.reset().map_err(transport_err)?;
+            need_reset = false;
+        }
+        let resume = if allow_resume {
+            Checkpoint::load_latest_good(&res.checkpoint_dir, Some(&expect))
+                .map(|(ck, _)| ck)
+        } else {
+            None
+        };
+        let resumed_secs = resume.as_ref().map_or(0.0, |ck| ck.ledger.total_secs());
+        let replay_secs = last_death.map_or(0.0, |d| (d - resumed_secs).max(0.0));
+        let ctx = RunCtx { res: Some(res), faults, resume, replay_secs };
+        let attempt = match cfg.storage {
+            PhiStorageMode::Replicated => {
+                dist_replicated(corpus, params, cfg, ctx, transport)
+            }
+            PhiStorageMode::Sharded => dist_sharded(corpus, params, cfg, ctx, transport),
+        };
+        match attempt {
+            Err(TrainError::Killed { fault, sim_secs_at_death }) => {
+                retries += 1;
+                if retries > res.max_retries {
+                    return Err(TrainError::RetriesExhausted {
+                        fault,
+                        retries: res.max_retries,
+                    });
+                }
+                last_death = Some(sim_secs_at_death);
+                allow_resume = true;
+                need_reset = true;
+            }
+            other => return other,
+        }
+    }
+}
+
+/// [`fit_replicated`](super::fit) over a transport. The loop body
+/// mirrors the in-process one statement for statement; the differences
+/// are exactly the three wire exchanges and the [`PartSource`] mirrors
+/// the allreduce reads instead of leader-owned shards.
+fn dist_replicated(
+    corpus: &Csr,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+    ctx: RunCtx<'_>,
+    transport: &mut dyn Transport,
+) -> Result<TrainResult, TrainError> {
+    let RunCtx { res, faults, resume, replay_secs } = ctx;
+    let mut wall = Stopwatch::new();
+    let (w, k) = (corpus.w, params.k);
+    let cluster = Cluster::new(cfg.n_workers, cfg.max_threads).with_pinning(cfg.pin_cores);
+    let mut ledger = Ledger::new(cfg.net);
+    let mut history = Vec::new();
+    let mut snapshots: Vec<(f64, Model)> = Vec::new();
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut phi_acc = vec![0f32; w * k];
+    let mut iter_syncs = 0usize;
+    let mut cursor: Option<(usize, usize)> = None;
+    if let Some(ck) = resume {
+        // Contract 6 restore — identical to the in-process path; the
+        // workers need no restore of their own because the next Batch
+        // frame re-ships their entire state.
+        check_resume(&ck, w, k, cfg)?;
+        phi_acc = ck.phi.to_dense();
+        rng = Rng::from_state(ck.rng_state);
+        iter_syncs = ck.iter_syncs;
+        ledger = ck.ledger;
+        history = ck.history;
+        snapshots = ck.snapshots;
+        cursor = Some((ck.next_doc, ck.next_batch));
+    }
+    ledger.record_recovery_replay(replay_secs);
+    let mut scratch = SyncScratch::default();
+    let mut flat_buf: Vec<u32> = Vec::new();
+
+    let global_budget = cfg.nnz_budget.saturating_mul(cfg.n_workers);
+    let mut stream = match cursor {
+        Some((doc, batch)) => {
+            MiniBatchStream::resume(corpus, global_budget, doc, batch)
+        }
+        None => MiniBatchStream::new(corpus, global_budget),
+    };
+    let mut pending = stream.next();
+    while let Some(mb) = pending.take() {
+        let tokens = mb.data.tokens().max(1.0);
+
+        // Fig. 4 lines 3-5 over the wire: each worker receives its doc
+        // slice + RNG split and rebuilds its shard remotely. The RNG
+        // draws happen at the same stream position as build_shards'.
+        let payloads = batch_payloads(&mb, w, k, params, cfg, &mut rng);
+        transport.start_batch(&payloads).map_err(transport_err)?;
+        // Leader-side dense mirrors of each worker's (Δφ̂, r): gather
+        // replies scatter into these, and the unchanged allreduce pulls
+        // from them exactly as it pulls from in-process shards.
+        let sources: Vec<Mutex<PartSource>> = (0..cfg.n_workers)
+            .map(|_| Mutex::new(PartSource::new(w * k)))
+            .collect();
+
+        let mut state = GlobalState::new(&phi_acc, k);
+        let mut power: Option<PowerSet> = None;
+        let mut prev_resid = f64::INFINITY;
+        let mut first_resid = f64::INFINITY;
+        let mut iters_run = 0;
+
+        for t in 1..=cfg.max_iters {
+            iters_run = t;
+            // --- fault injection (Contract 6): a planned sweep-phase
+            //     kill SIGKILLs the real worker before any work ---
+            if let Some(f) = faults {
+                if let Err(e) = f.trip(mb.index, t, SyncPhase::Sweep) {
+                    let _ = transport.kill_worker(e.worker);
+                    return Err(TrainError::killed(e, &ledger));
+                }
+            }
+            // --- remote sweep (lines 6-8 / 15-20): publish φ̂ + totals
+            //     + the power schedule, collect plan-order exports ---
+            let sweep = sweep_payload(t, &state.phi_eff, state.phi_tot(), power.as_ref());
+            let frames: Vec<Vec<u8>> = vec![sweep; cfg.n_workers];
+            let ex = transport.sweep_exchange(&frames).map_err(transport_err)?;
+            check_replies(&ex, t, cfg.n_workers)?;
+            let secs: Vec<f64> = ex.replies.iter().map(|r| r.sweep_secs).collect();
+
+            // --- synchronize on the scheduled pairs (lines 9-10 /
+            //     23-24): scatter the replies into the mirrors, then
+            //     the same owner-sliced reduce as in-process ---
+            let plan = match &power {
+                None => ReducePlan::Dense { len: w * k },
+                Some(ps) => {
+                    ps.flat_indices_into(k, &mut flat_buf);
+                    ReducePlan::Subset { indices: &flat_buf }
+                }
+            };
+            let indices = match &plan {
+                ReducePlan::Dense { .. } => None,
+                ReducePlan::Subset { indices } => Some(*indices),
+            };
+            for (src, reply) in sources.iter().zip(&ex.replies) {
+                src.lock().unwrap().load(indices, reply).map_err(transport_err)?;
+            }
+            let pairs = match faults {
+                None => allreduce_step(
+                    &cluster, &plan, &phi_acc, &sources, &mut state, &mut scratch,
+                ),
+                Some(f) => match allreduce_step_injected(
+                    &cluster, &plan, &phi_acc, &sources, &mut state, &mut scratch, f,
+                    mb.index, t,
+                ) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        let _ = transport.kill_worker(e.worker);
+                        return Err(TrainError::killed(e, &ledger));
+                    }
+                },
+            };
+            let payload = 2 * 4 * pairs;
+            ledger.record_compute(&secs);
+            ledger.record_sync(mb.index, t, payload, cfg.n_workers);
+            // measured wire seconds beside the α–β estimate: publish
+            // is the gather leg; collect minus the slowest worker's
+            // sweep is the reduce leg (never part of total_secs)
+            let sweep_max = secs.iter().cloned().fold(0.0, f64::max);
+            ledger.record_measured((ex.collect_secs - sweep_max).max(0.0), ex.publish_secs);
+            if let Some(delays) =
+                faults.and_then(|f| f.delays_at(mb.index, t, cfg.n_workers))
+            {
+                let factor = res.map_or(4.0, |r| r.straggler_timeout_factor);
+                let timeout =
+                    cfg.net.straggler_timeout_secs(payload, cfg.n_workers, factor);
+                ledger.record_straggler(&secs, &delays, timeout);
+            }
+
+            iter_syncs += 1;
+            let resid_per_token = state.r_total() / tokens;
+            if cfg.snapshot_every > 0 && iter_syncs % cfg.snapshot_every == 0 {
+                snapshots.push((
+                    ledger.total_secs(),
+                    Model { k, w, phi_wk: state.phi_eff.clone() },
+                ));
+            }
+            history.push(IterStat {
+                batch: mb.index,
+                iter: t,
+                residual_per_token: resid_per_token,
+                synced_pairs: pairs,
+                sim_elapsed: ledger.total_secs(),
+                wall_elapsed: wall.total_secs(),
+            });
+
+            // --- convergence check (line 26), verbatim in-process ---
+            if t == 1 {
+                first_resid = resid_per_token.max(1e-12);
+            }
+            if t >= cfg.min_iters
+                && resid_per_token <= cfg.converge_thresh
+                && resid_per_token <= cfg.converge_rel * first_resid
+                && resid_per_token <= prev_resid
+            {
+                break;
+            }
+            prev_resid = resid_per_token;
+
+            // --- dynamic power selection (lines 12-13 / 27-28): the
+            //     schedule travels to the workers in the next Sweep ---
+            if cfg.power.lambda_w < 1.0 || cfg.power.lambda_k_times_k < k {
+                power = Some(select_power(&state.r_global, w, k, &cfg.power));
+            }
+        }
+
+        // --- fold the batch gradient into the global model (Eq. 11):
+        //     collect every worker's dense Δφ̂ and run the in-process
+        //     fold reduction over the received parts ---
+        let next_mb = stream.next();
+        // Contract 6: the batch-boundary RNG position — this batch's
+        // splits drawn, the next batch's not yet (drawn at the next
+        // loop top, the same stream position the in-process prebuild
+        // draws them at).
+        let rng_boundary = rng.state();
+        if let Some(f) = faults {
+            if let Err(e) = f.trip(mb.index, iters_run + 1, SyncPhase::Fold) {
+                let _ = transport.kill_worker(e.worker);
+                return Err(TrainError::killed(e, &ledger));
+            }
+        }
+        {
+            let fx = transport.collect_fold().map_err(transport_err)?;
+            check_fold_parts(&fx.parts, cfg.n_workers, w * k)?;
+            let dphi_parts: Vec<&[f32]> =
+                fx.parts.iter().map(|p| p.as_slice()).collect();
+            reduce_chunked(&cluster, Some(&phi_acc), &dphi_parts, &mut state.phi_eff);
+            phi_acc.copy_from_slice(&state.phi_eff);
+            ledger.record_sync(mb.index, iters_run + 1, 4 * w * k, cfg.n_workers);
+            ledger.record_measured(fx.collect_secs, 0.0);
+        }
+        // --- checkpoint cadence (Contract 6), verbatim in-process ---
+        if let (Some(r), Some(nmb)) = (res, next_mb.as_ref()) {
+            if r.checkpoint_every > 0 && (mb.index + 1) % r.checkpoint_every == 0 {
+                let ck = Checkpoint {
+                    w,
+                    k,
+                    n_workers: cfg.n_workers,
+                    seed: cfg.seed,
+                    next_batch: nmb.index,
+                    next_doc: nmb.doc_range.start,
+                    iter_syncs,
+                    rng_state: rng_boundary,
+                    phi: PhiShard::Replicated(phi_acc.clone()),
+                    ledger: ledger.clone(),
+                    history: history.clone(),
+                    snapshots: snapshots.clone(),
+                };
+                write_checkpoint(r, &ck, &mut ledger)?;
+            }
+        }
+        pending = next_mb;
+        let _ = wall.lap_secs();
+    }
+
+    Ok(TrainResult {
+        model: Model { k, w, phi_wk: phi_acc },
+        history,
+        ledger,
+        wall_secs: wall.total_secs(),
+        snapshots,
+    })
+}
+
+/// [`fit_sharded`](super::fit) over a transport: the leader keeps only
+/// the row-aligned owner slices; workers sweep a dense render of them
+/// (bit-equal to the sliced view, Contract 5) and the sharded allreduce
+/// folds the mirrored replies into the stored slices.
+fn dist_sharded(
+    corpus: &Csr,
+    params: &LdaParams,
+    cfg: &PobpConfig,
+    ctx: RunCtx<'_>,
+    transport: &mut dyn Transport,
+) -> Result<TrainResult, TrainError> {
+    let RunCtx { res, faults, resume, replay_secs } = ctx;
+    let mut wall = Stopwatch::new();
+    let (w, k) = (corpus.w, params.k);
+    let cluster = Cluster::new(cfg.n_workers, cfg.max_threads).with_pinning(cfg.pin_cores);
+    let mut ledger = Ledger::new(cfg.net);
+    let mut history = Vec::new();
+    let mut snapshots: Vec<(f64, Model)> = Vec::new();
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut phi_acc = PhiShard::sharded(w, k, cfg.n_workers);
+    let mut iter_syncs = 0usize;
+    let mut cursor: Option<(usize, usize)> = None;
+    if let Some(ck) = resume {
+        check_resume(&ck, w, k, cfg)?;
+        phi_acc = ck.phi;
+        rng = Rng::from_state(ck.rng_state);
+        iter_syncs = ck.iter_syncs;
+        ledger = ck.ledger;
+        history = ck.history;
+        snapshots = ck.snapshots;
+        cursor = Some((ck.next_doc, ck.next_batch));
+    }
+    ledger.record_recovery_replay(replay_secs);
+    let os = phi_acc.owner_slices();
+    let rows_per = phi_acc.rows_per();
+    let mut scratch = SyncScratch::default();
+    let mut flat_buf: Vec<u32> = Vec::new();
+
+    let global_budget = cfg.nnz_budget.saturating_mul(cfg.n_workers);
+    let mut stream = match cursor {
+        Some((doc, batch)) => {
+            MiniBatchStream::resume(corpus, global_budget, doc, batch)
+        }
+        None => MiniBatchStream::new(corpus, global_budget),
+    };
+    let mut pending = stream.next();
+    while let Some(mb) = pending.take() {
+        let tokens = mb.data.tokens().max(1.0);
+        let payloads = batch_payloads(&mb, w, k, params, cfg, &mut rng);
+        transport.start_batch(&payloads).map_err(transport_err)?;
+        let sources: Vec<Mutex<PartSource>> = (0..cfg.n_workers)
+            .map(|_| Mutex::new(PartSource::new(w * k)))
+            .collect();
+
+        let mut state = ShardedState::new(phi_acc.parts(), k, os);
+        let mut power: Option<PowerSet> = None;
+        let mut prev_resid = f64::INFINITY;
+        let mut first_resid = f64::INFINITY;
+        let mut iters_run = 0;
+
+        for t in 1..=cfg.max_iters {
+            iters_run = t;
+            if let Some(f) = faults {
+                if let Err(e) = f.trip(mb.index, t, SyncPhase::Sweep) {
+                    let _ = transport.kill_worker(e.worker);
+                    return Err(TrainError::killed(e, &ledger));
+                }
+            }
+            // --- remote sweep over a dense render of the owner slices
+            //     (the wire format ships one contiguous φ̂; Contract 5
+            //     makes the dense sweep bit-equal to the sliced one) ---
+            let phi_dense = state.render_dense();
+            let sweep = sweep_payload(t, &phi_dense, state.phi_tot(), power.as_ref());
+            let frames: Vec<Vec<u8>> = vec![sweep; cfg.n_workers];
+            let ex = transport.sweep_exchange(&frames).map_err(transport_err)?;
+            check_replies(&ex, t, cfg.n_workers)?;
+            let secs: Vec<f64> = ex.replies.iter().map(|r| r.sweep_secs).collect();
+
+            // --- owner-sliced reduce-scatter into the stored slices ---
+            let plan = match &power {
+                None => ReducePlan::Dense { len: w * k },
+                Some(ps) => {
+                    ps.flat_indices_into(k, &mut flat_buf);
+                    ReducePlan::Subset { indices: &flat_buf }
+                }
+            };
+            let indices = match &plan {
+                ReducePlan::Dense { .. } => None,
+                ReducePlan::Subset { indices } => Some(*indices),
+            };
+            for (src, reply) in sources.iter().zip(&ex.replies) {
+                src.lock().unwrap().load(indices, reply).map_err(transport_err)?;
+            }
+            let pairs = match faults {
+                None => allreduce_step_sharded(
+                    &cluster, &plan, phi_acc.parts(), &sources, &mut state, &mut scratch,
+                ),
+                Some(f) => match allreduce_step_sharded_injected(
+                    &cluster, &plan, phi_acc.parts(), &sources, &mut state,
+                    &mut scratch, f, mb.index, t,
+                ) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        let _ = transport.kill_worker(e.worker);
+                        return Err(TrainError::killed(e, &ledger));
+                    }
+                },
+            };
+
+            // --- convergence decision first, so the gather half can
+            //     charge exactly the next sweep's working set (verbatim
+            //     the in-process sharded accounting) ---
+            let resid_per_token = state.r_total() / tokens;
+            if t == 1 {
+                first_resid = resid_per_token.max(1e-12);
+            }
+            let converged = t >= cfg.min_iters
+                && resid_per_token <= cfg.converge_thresh
+                && resid_per_token <= cfg.converge_rel * first_resid
+                && resid_per_token <= prev_resid;
+            let stopping = converged || t == cfg.max_iters;
+
+            let next: Option<PowerSet> = if !stopping
+                && (cfg.power.lambda_w < 1.0 || cfg.power.lambda_k_times_k < k)
+            {
+                Some(select_power_sharded(&state.r_parts(), rows_per, w, k, &cfg.power))
+            } else {
+                None
+            };
+
+            let reduce_bytes = 2 * 4 * pairs;
+            let gather_bytes = if stopping {
+                0
+            } else {
+                4 * next.as_ref().map_or(w * k, |ps| ps.pairs())
+            };
+            ledger.record_compute(&secs);
+            ledger.record_sync_split(mb.index, t, reduce_bytes, gather_bytes, cfg.n_workers);
+            let sweep_max = secs.iter().cloned().fold(0.0, f64::max);
+            ledger.record_measured((ex.collect_secs - sweep_max).max(0.0), ex.publish_secs);
+            if let Some(delays) =
+                faults.and_then(|f| f.delays_at(mb.index, t, cfg.n_workers))
+            {
+                let factor = res.map_or(4.0, |r| r.straggler_timeout_factor);
+                let timeout = cfg.net.straggler_timeout_secs(
+                    reduce_bytes + gather_bytes,
+                    cfg.n_workers,
+                    factor,
+                );
+                ledger.record_straggler(&secs, &delays, timeout);
+            }
+
+            iter_syncs += 1;
+            if cfg.snapshot_every > 0 && iter_syncs % cfg.snapshot_every == 0 {
+                snapshots.push((
+                    ledger.total_secs(),
+                    Model { k, w, phi_wk: state.render_dense() },
+                ));
+            }
+            history.push(IterStat {
+                batch: mb.index,
+                iter: t,
+                residual_per_token: resid_per_token,
+                synced_pairs: pairs,
+                sim_elapsed: ledger.total_secs(),
+                wall_elapsed: wall.total_secs(),
+            });
+
+            if converged {
+                break;
+            }
+            prev_resid = resid_per_token;
+            if let Some(ps) = next {
+                power = Some(ps);
+            }
+        }
+
+        // --- fold into the sharded accumulator (Eq. 11): each owner
+        //     folds every received dense Δφ̂ over its own slice ---
+        let next_mb = stream.next();
+        let rng_boundary = rng.state();
+        if let Some(f) = faults {
+            if let Err(e) = f.trip(mb.index, iters_run + 1, SyncPhase::Fold) {
+                let _ = transport.kill_worker(e.worker);
+                return Err(TrainError::killed(e, &ledger));
+            }
+        }
+        {
+            let fx = transport.collect_fold().map_err(transport_err)?;
+            check_fold_parts(&fx.parts, cfg.n_workers, w * k)?;
+            let dphi_parts: Vec<&[f32]> =
+                fx.parts.iter().map(|p| p.as_slice()).collect();
+            state.fold_batch(&cluster, phi_acc.parts_mut(), &dphi_parts);
+            ledger.record_sync_split(
+                mb.index,
+                iters_run + 1,
+                4 * w * k,
+                4 * w * k,
+                cfg.n_workers,
+            );
+            ledger.record_measured(fx.collect_secs, 0.0);
+        }
+        if let (Some(r), Some(nmb)) = (res, next_mb.as_ref()) {
+            if r.checkpoint_every > 0 && (mb.index + 1) % r.checkpoint_every == 0 {
+                let ck = Checkpoint {
+                    w,
+                    k,
+                    n_workers: cfg.n_workers,
+                    seed: cfg.seed,
+                    next_batch: nmb.index,
+                    next_doc: nmb.doc_range.start,
+                    iter_syncs,
+                    rng_state: rng_boundary,
+                    phi: phi_acc.clone(),
+                    ledger: ledger.clone(),
+                    history: history.clone(),
+                    snapshots: snapshots.clone(),
+                };
+                write_checkpoint(r, &ck, &mut ledger)?;
+            }
+        }
+        pending = next_mb;
+        let _ = wall.lap_secs();
+    }
+
+    Ok(TrainResult {
+        model: Model { k, w, phi_wk: phi_acc.to_dense() },
+        history,
+        ledger,
+        wall_secs: wall.total_secs(),
+        snapshots,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::InProcessTransport;
+    use crate::coordinator::fit;
+    use crate::synth::{generate, SynthSpec};
+
+    // The deep pins — worker counts × storage modes × thread budgets,
+    // real TCP processes, SIGKILL + rejoin — live in
+    // rust/tests/dist_equiv.rs; these are the smoke-level contracts.
+
+    #[test]
+    fn inprocess_transport_matches_fit_oracle() {
+        let c = generate(&SynthSpec::tiny(17)).corpus;
+        let params = LdaParams::paper(8);
+        let cfg = PobpConfig {
+            n_workers: 2,
+            nnz_budget: 700,
+            max_iters: 8,
+            ..Default::default()
+        };
+        let oracle = fit(&c, &params, &cfg);
+        let mut tp = InProcessTransport::new(cfg.n_workers, cfg.max_threads);
+        let r = fit_dist(&c, &params, &cfg, &mut tp).expect("dist fit");
+        assert_eq!(r.model.phi_wk, oracle.model.phi_wk);
+        assert_eq!(r.history.len(), oracle.history.len());
+        for (a, b) in r.history.iter().zip(&oracle.history) {
+            assert_eq!(
+                a.residual_per_token.to_bits(),
+                b.residual_per_token.to_bits()
+            );
+            assert_eq!(a.synced_pairs, b.synced_pairs);
+        }
+        assert_eq!(r.ledger.sync_count(), oracle.ledger.sync_count());
+        assert_eq!(
+            r.ledger.payload_bytes_total(),
+            oracle.ledger.payload_bytes_total()
+        );
+        // every sync recorded a measured wire segment beside the model
+        assert_eq!(r.ledger.measured.len(), r.ledger.sync_count());
+    }
+
+    #[test]
+    fn dist_rejects_overlap_and_mismatched_transport() {
+        let c = generate(&SynthSpec::tiny(3)).corpus;
+        let params = LdaParams::paper(4);
+        let mut tp = InProcessTransport::new(2, 1);
+        let cfg = PobpConfig { n_workers: 2, overlap: true, ..Default::default() };
+        match fit_dist(&c, &params, &cfg, &mut tp) {
+            Err(TrainError::Config(ConfigError::OverlapDistUnsupported)) => {}
+            Err(other) => panic!("unexpected error: {other}"),
+            Ok(_) => panic!("overlap over a transport must be rejected"),
+        }
+        let cfg = PobpConfig { n_workers: 3, ..Default::default() };
+        match fit_dist(&c, &params, &cfg, &mut tp) {
+            Err(TrainError::Transport(msg)) => {
+                assert!(msg.contains("workers"), "odd message: {msg}")
+            }
+            Err(other) => panic!("unexpected error: {other}"),
+            Ok(_) => panic!("worker-count mismatch must be rejected"),
+        }
+    }
+}

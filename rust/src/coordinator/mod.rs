@@ -69,6 +69,14 @@
 //! per shard; communication time comes from the byte-exact ledger +
 //! network model. Numerical results are *identical* to a real N-process
 //! deployment because the allreduce is a deterministic leader-side sum.
+//!
+//! # Distributed transport (`coordinator::dist`)
+//!
+//! Since the transport PR that identity claim is *tested*, not argued:
+//! [`dist::fit_dist`] runs the same two loops against workers behind a
+//! [`crate::comm::Transport`] — real processes over TCP or the
+//! in-process degenerate backend — bitwise-equal to [`fit`] in both
+//! storage modes (Contract 8, `rust/tests/dist_equiv.rs`).
 
 use std::fmt;
 use std::path::PathBuf;
@@ -89,6 +97,10 @@ use crate::sched::{select_power, select_power_sharded, PowerParams, PowerSet};
 use crate::storage::{Checkpoint, CkptExpect, PhiShard, PhiStorageMode};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
+
+pub mod dist;
+
+pub use dist::{fit_dist, fit_dist_resilient};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -216,6 +228,9 @@ pub enum ConfigError {
     /// `storage = sharded` with `overlap = true`: the overlap pipeline
     /// is not wired through sharded storage yet.
     OverlapShardedUnsupported,
+    /// `overlap = true` through a distributed transport: the pipelined
+    /// allreduce is not wired through the wire protocol yet.
+    OverlapDistUnsupported,
     /// `n_workers == 0`
     ZeroWorkers,
     /// `max_iters == 0`
@@ -239,6 +254,11 @@ impl fmt::Display for ConfigError {
                 f,
                 "sharded storage does not support the overlap pipeline yet \
                  (set overlap = false or storage = replicated)"
+            ),
+            ConfigError::OverlapDistUnsupported => write!(
+                f,
+                "the overlap pipeline does not run over a distributed \
+                 transport yet (set overlap = false or fit in-process)"
             ),
             ConfigError::ZeroWorkers => write!(f, "n_workers must be at least 1"),
             ConfigError::ZeroMaxIters => write!(f, "max_iters must be at least 1"),
@@ -272,6 +292,10 @@ pub enum TrainError {
     RetriesExhausted { fault: FaultEvent, retries: usize },
     /// checkpoint I/O or state-restore failure
     Checkpoint(String),
+    /// distributed transport failure: a worker connection died, a frame
+    /// was refused, or a peer broke protocol
+    /// ([`crate::comm::TransportError`])
+    Transport(String),
 }
 
 impl TrainError {
@@ -292,6 +316,7 @@ impl fmt::Display for TrainError {
                 "gave up after {retries} retries; last fault: {fault}"
             ),
             TrainError::Checkpoint(msg) => write!(f, "checkpoint failure: {msg}"),
+            TrainError::Transport(msg) => write!(f, "transport failure: {msg}"),
         }
     }
 }

@@ -39,10 +39,36 @@
 //! therefore the recovered run — bitwise identical to an uninterrupted
 //! run (`rust/tests/fault_equiv.rs`).
 
+//! # Real process kills (Contract 8)
+//!
+//! With the TCP transport, [`FaultKind::Kill`] generalizes from a
+//! simulated abort to an actual process death: when a kill trips in the
+//! distributed coordinator (`coordinator::dist`), the master
+//! [`sigkill`]s the targeted `pobp-worker` process before surfacing
+//! `TrainError::Killed`, and recovery respawns the worker and rejoins
+//! it through the checkpoint-carrying batch frame. Determinism is
+//! unchanged — the plan still decides *where* the death happens — so a
+//! SIGKILLed-and-rejoined distributed run ends bitwise identical to an
+//! uninterrupted one (`rust/tests/dist_equiv.rs`).
+
 use std::fmt;
+use std::io;
+use std::process::{Child, ExitStatus};
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::util::rng::Rng;
+
+/// SIGKILL a real worker process — the process-boundary form of
+/// [`FaultKind::Kill`]. `Child::kill` delivers SIGKILL on Unix; the
+/// `wait` reaps the zombie so a respawned worker can reuse the slot.
+/// Racing an already-exited child is fine: its status is returned.
+pub fn sigkill(child: &mut Child) -> io::Result<ExitStatus> {
+    if let Some(status) = child.try_wait()? {
+        return Ok(status);
+    }
+    child.kill()?;
+    child.wait()
+}
 
 /// Where in an iteration's sync cycle a fault fires.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

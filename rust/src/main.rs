@@ -54,7 +54,9 @@ subcommands:
               (--checkpoint-every M --checkpoint-dir DIR for fault-tolerant
                runs; --resume continues from the newest good checkpoint;
                --pin-cores pins pool threads to cores, best-effort)
-  run         train from a config file (see configs/*.conf)
+  run         train from a config file (see configs/*.conf); configs with
+              [run] transport = tcp belong to the pobp-master/pobp-worker
+              cluster binaries instead
   gen-data    write a synthetic corpus in UCI bag-of-words format
   topics      print top words per topic of a saved model
   perplexity  evaluate a saved model (Eq. 20 protocol)
@@ -193,6 +195,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     args.reject_unknown()?;
     let cf = pobp::config::ConfigFile::load(&PathBuf::from(&path))?;
     let exp = pobp::config::Experiment::from_config(&cf)?;
+    if exp.opts.transport == pobp::comm::TransportKind::Tcp {
+        // `pobp run` is single-process by design; the real cluster has
+        // its own leader binary so worker lifecycle stays out of here
+        bail!(
+            "[run] transport = tcp runs under the cluster binaries: start \
+             `pobp-master --spawn` (loopback) or `pobp-master --listen HOST:PORT` \
+             plus `pobp-worker --connect HOST:PORT --slot I` processes \
+             (`pobp run` drives the in-process transport only)"
+        );
+    }
     println!(
         "experiment: dataset={} scale={} K={} algo={} N={}",
         exp.dataset, exp.scale, exp.params.k, exp.algo.name(), exp.opts.n_workers

@@ -3,7 +3,7 @@
 //! `benches/` target. One function per concept so each bench file maps
 //! 1:1 onto a paper table/figure (DESIGN.md §5).
 
-use crate::comm::NetModel;
+use crate::comm::{NetModel, TransportKind};
 use crate::coordinator::{
     fit_checked, fit_resilient, PobpConfig, ResilienceConfig, TrainError,
 };
@@ -121,6 +121,15 @@ pub struct RunOpts {
     pub straggler_timeout_factor: f64,
     /// resume from the newest matching checkpoint in `checkpoint_dir`
     pub resume: bool,
+    /// Synchronization carrier for the POBP family (Contract 8):
+    /// `InProcess` (default) runs logical workers on the in-process
+    /// pool inside this process; `Tcp` is the real master/worker
+    /// cluster, which runs under the dedicated `pobp-master` /
+    /// `pobp-worker` binaries — `run_algo` itself never opens sockets,
+    /// so resolving a `transport = tcp` config here is a typed error at
+    /// the CLI layer, not a silent fallback. Ignored by the Gibbs/VB
+    /// algorithms.
+    pub transport: TransportKind,
 }
 
 impl Default for RunOpts {
@@ -146,6 +155,7 @@ impl Default for RunOpts {
             max_retries: 3,
             straggler_timeout_factor: 4.0,
             resume: false,
+            transport: TransportKind::InProcess,
         }
     }
 }

@@ -35,9 +35,11 @@
 //! bitwise is in here; everything that is *measured* (wall clock,
 //! per-worker compute seconds) is either carried verbatim (history) or
 //! re-measured and never compared. The wire format is deliberately
-//! self-contained and position-independent — it doubles as the future
-//! worker-join/state-transfer payload when the cluster crosses the
-//! process boundary (ROADMAP item 1).
+//! self-contained and position-independent — it doubles as the
+//! worker-join/state-transfer payload of the distributed transport
+//! (Contract 8): `comm::transport` ships a [`Checkpoint`] inside every
+//! batch frame, so a worker joins — or *re*joins after a crash — by
+//! decoding exactly the state a resumed run would load from disk.
 
 use std::fmt;
 use std::fs;
@@ -150,7 +152,10 @@ pub struct Checkpoint {
     pub snapshots: Vec<(f64, Model)>,
 }
 
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// FNV-1a-64 — the per-section checksum of this file format, shared with
+/// the transport's frame format (`comm::wire`), which reuses the
+/// `POBPCKP1` sectioned-format conventions on the socket.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;
