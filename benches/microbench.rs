@@ -30,11 +30,12 @@ use pobp::comm::allreduce::{
     allreduce_step_pool, allreduce_step_sharded, serial_reference_step, GlobalState,
     OwnerSlices, ReducePlan, ReduceSource, SerialState, ShardedState, SyncScratch,
 };
+use pobp::comm::transport::InProcessTransport;
 use pobp::comm::{Cluster, NetModel};
-use pobp::coordinator::{fit, fit_resilient, PobpConfig, ResilienceConfig};
+use pobp::coordinator::{fit, fit_dist, fit_resilient, PobpConfig, ResilienceConfig};
 use pobp::engine::bp::{Selection, ShardBp};
 use pobp::engine::simd::{self, KernelKind};
-use pobp::fault::{FaultPlan, SyncPhase};
+use pobp::fault::{ChaosPlan, FaultPlan, SyncPhase};
 use pobp::storage::checkpoint::list_checkpoints;
 use pobp::storage::{Checkpoint, PhiShard, PhiStorageMode};
 use pobp::util::mem::MemModel;
@@ -631,6 +632,71 @@ fn main() {
         wire_cal_err * 1e3
     );
 
+    // --- wire recovery (Contract 9): the coordinator through the
+    //     in-process codec carrier, clean vs under a seeded chaos
+    //     schedule (bit-flips, truncations, drops, resets, duplicates,
+    //     delays on ~30% of frame transmissions). Runs in --smoke too,
+    //     so every CI pass recovers injected wire faults and asserts
+    //     the chaotic fit lands on the clean run's exact bits; the
+    //     recorded ratio is the retry/reconnect overhead of the
+    //     supervision layer. ---
+    let wr_permille = 300u32;
+    let wr_cfg = PobpConfig {
+        n_workers: 2,
+        nnz_budget: 8_000,
+        max_iters: if smoke { 3 } else { 6 },
+        converge_thresh: 0.0,
+        net: NetModel::infiniband_for_scale(k, corpus.w),
+        ..Default::default()
+    };
+    let clean = {
+        let mut tp = InProcessTransport::new(wr_cfg.n_workers, wr_cfg.max_threads);
+        fit_dist(&corpus, &params, &wr_cfg, &mut tp).expect("clean dist fit")
+    };
+    let chaotic = {
+        let mut tp = InProcessTransport::new(wr_cfg.n_workers, wr_cfg.max_threads)
+            .with_chaos(ChaosPlan::seeded(4242, wr_permille));
+        fit_dist(&corpus, &params, &wr_cfg, &mut tp).expect("chaotic dist fit")
+    };
+    assert_eq!(
+        chaotic.model.phi_wk, clean.model.phi_wk,
+        "chaotic fit diverged from the clean run (Contract 9)"
+    );
+    assert_eq!(
+        chaotic.ledger.wire_bytes, clean.ledger.wire_bytes,
+        "retransmissions leaked into the modeled wire bytes"
+    );
+    assert!(chaotic.ledger.chaos_faults > 0, "seeded chaos drew no faults");
+    // the supervised wire's useful throughput: modeled payload traffic
+    // over wall time, so the chaos row pays for every retransmission
+    // without getting credit for it
+    let wr_bytes = clean.ledger.wire_bytes as f64;
+    let row_clean = bench(&mut recs, "dist fit (inprocess codec, clean)", it(3), wr_bytes, || {
+        let mut tp = InProcessTransport::new(wr_cfg.n_workers, wr_cfg.max_threads);
+        std::hint::black_box(
+            fit_dist(&corpus, &params, &wr_cfg, &mut tp).expect("clean dist fit"),
+        );
+    });
+    let row_chaos =
+        bench(&mut recs, "dist fit (inprocess codec, seeded chaos)", it(3), wr_bytes, || {
+            let mut tp = InProcessTransport::new(wr_cfg.n_workers, wr_cfg.max_threads)
+                .with_chaos(ChaosPlan::seeded(4242, wr_permille));
+            std::hint::black_box(
+                fit_dist(&corpus, &params, &wr_cfg, &mut tp).expect("chaotic dist fit"),
+            );
+        });
+    let retry_overhead =
+        if row_chaos.ips > 0.0 { row_clean.ips / row_chaos.ips } else { 0.0 };
+    println!(
+        "\nwire recovery (permille {wr_permille}): {} faults injected, {} frames \
+         retransmitted ({} B), {} reconnects; chaotic fit bitwise == clean; \
+         retry overhead {retry_overhead:.2}x",
+        chaotic.ledger.chaos_faults,
+        chaotic.ledger.retrans_frames,
+        chaotic.ledger.retrans_bytes,
+        chaotic.ledger.reconnects
+    );
+
     // --- machine-readable record for the cross-PR perf trajectory ---
     let find = |recs: &[(String, f64)], name: &str| {
         recs.iter().find(|(n, _)| n == name).map(|&(_, v)| v).unwrap_or(0.0)
@@ -727,6 +793,22 @@ fn main() {
             ("measured_one_way_secs", Json::from(wire_measured)),
             ("modeled_gige_reduce_scatter_secs", Json::from(wire_measured - wire_cal_err)),
             ("calibration_error_secs", Json::from(wire_cal_err)),
+        ])),
+        ("wire_recovery", Json::obj(vec![
+            ("chaos_permille", Json::from(wr_permille as usize)),
+            ("chaos_faults", Json::from(chaotic.ledger.chaos_faults as usize)),
+            ("retrans_frames", Json::from(chaotic.ledger.retrans_frames as usize)),
+            ("retrans_bytes", Json::from(chaotic.ledger.retrans_bytes as usize)),
+            ("reconnects", Json::from(chaotic.ledger.reconnects as usize)),
+            ("backoff_wait_secs", Json::from(chaotic.ledger.backoff_wait_secs)),
+            ("retry_overhead_time_ratio", Json::from(retry_overhead)),
+            (
+                "validated",
+                Json::from(
+                    "chaotic fit bitwise == clean dist fit (Contract 9; the full \
+                     fault matrix incl. real sockets is tests/chaos_equiv.rs)",
+                ),
+            ),
         ])),
         ("phi_mem_modes", Json::obj(vec![
             ("n_workers", Json::from(store_n)),

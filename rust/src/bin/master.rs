@@ -21,6 +21,7 @@ use pobp::cli::Args;
 use pobp::comm::transport::{TcpSpawnSpec, TcpTransport, Transport};
 use pobp::coordinator::{fit_checked, fit_dist, PobpConfig};
 use pobp::engine::traits::LdaParams;
+use pobp::fault::ChaosPlan;
 use pobp::repro::dataset;
 use pobp::sched::PowerParams;
 use pobp::storage::PhiStorageMode;
@@ -32,13 +33,18 @@ pobp-master — POBP distributed training leader
               [--storage replicated|sharded] [--iters T] [--nnz-budget B]
               [--lambda-w R] [--lambda-kk KK] [--seed S] [--threads T]
               [--timeout SECS] [--assert-oracle]
+              [--chaos-permille P] [--chaos-seed S] [--frame-retries R]
 
-  --spawn          launch N loopback pobp-worker processes (sibling binary)
-  --listen ADDR    bind ADDR and wait for N externally started workers
-  --storage        phi storage layout (default replicated)
-  --threads        sweep threads per worker (default 1)
-  --timeout        socket deadline in seconds (default 120)
-  --assert-oracle  re-run in-process and demand bitwise equality
+  --spawn           launch N loopback pobp-worker processes (sibling binary)
+  --listen ADDR     bind ADDR and wait for N externally started workers
+  --storage         phi storage layout (default replicated)
+  --threads         sweep threads per worker (default 1)
+  --timeout         socket deadline in seconds (default 120)
+  --assert-oracle   re-run in-process and demand bitwise equality
+  --chaos-permille  per-frame wire-fault probability out of 1000
+                    (default 0 = chaos off; Contract 9)
+  --chaos-seed      seed of the chaos schedule (default 42)
+  --frame-retries   supervised retry budget per frame exchange (default 5)
 ";
 
 fn main() -> Result<()> {
@@ -71,7 +77,13 @@ fn main() -> Result<()> {
     let spawn = args.switch("spawn");
     let timeout = args.get::<u64>("timeout", 120)?;
     let assert_oracle = args.switch("assert-oracle");
+    let chaos_permille = args.get::<u32>("chaos-permille", 0)?;
+    let chaos_seed = args.get::<u64>("chaos-seed", 42)?;
+    let frame_retries = args.get::<usize>("frame-retries", 5)?;
     args.reject_unknown()?;
+    if chaos_permille > 1000 {
+        bail!("--chaos-permille {chaos_permille} out of range (0..=1000)");
+    }
 
     let corpus = dataset(&name, scale, k, seed);
     let params = LdaParams::paper(k);
@@ -114,6 +126,14 @@ fn main() -> Result<()> {
     } else {
         bail!("pass --spawn (loopback workers) or --listen HOST:PORT (external workers)");
     };
+    tp = tp.with_frame_retries(frame_retries);
+    if chaos_permille > 0 {
+        tp = tp.with_chaos(ChaosPlan::seeded(chaos_seed, chaos_permille));
+        println!(
+            "chaos on: permille {chaos_permille}, seed {chaos_seed}, \
+             frame retry budget {frame_retries}"
+        );
+    }
     println!("cluster up: {workers} tcp workers, {threads} sweep threads each");
 
     let result = fit_dist(&corpus, &params, &cfg, &mut tp)?;
@@ -136,6 +156,16 @@ fn main() -> Result<()> {
         fmt_secs(l.measured_gather_secs),
         l.measured.len(),
         fmt_secs(l.comm_secs),
+    );
+    // Contract 9 side accumulators: recovery effort, never in total_secs
+    println!(
+        "wire supervision: {} faults injected, {} frames retransmitted \
+         ({} bytes), {} reconnects, backoff wait {}",
+        l.chaos_faults,
+        l.retrans_frames,
+        l.retrans_bytes,
+        l.reconnects,
+        fmt_secs(l.backoff_wait_secs),
     );
 
     if assert_oracle {

@@ -2,29 +2,36 @@
 //!
 //! ```text
 //! pobp-worker --connect HOST:PORT --slot N [--threads T] [--timeout SECS]
+//!             [--connect-retries R] [--connect-backoff-ms MS]
 //! ```
 //!
 //! Connects back to a `pobp-master` listener, handshakes its slot, and
 //! serves Batch/Sweep/Fold frames until the master sends Shutdown (or
 //! the socket deadline expires — `--timeout 0` waits forever). All
 //! training state arrives over the wire; the worker needs no corpus,
-//! config file, or checkpoint directory of its own.
+//! config file, or checkpoint directory of its own. Startup races the
+//! master's listener safely: the initial connect retries with capped
+//! exponential backoff (Contract 9), so spawn order does not matter.
 
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use pobp::cli::Args;
-use pobp::comm::transport::serve_worker;
+use pobp::comm::transport::{serve_worker, ConnectCfg};
 
 const USAGE: &str = "\
 pobp-worker — POBP distributed worker process
   pobp-worker --connect HOST:PORT --slot N [--threads T] [--timeout SECS]
+              [--connect-retries R] [--connect-backoff-ms MS]
 
-  --connect   the pobp-master listen address to join
-  --slot      this worker's slot index (0-based, < n_workers)
-  --threads   OS threads for the shard sweep (default 1)
-  --timeout   socket deadline in seconds, 0 = wait forever (default 600)
+  --connect             the pobp-master listen address to join
+  --slot                this worker's slot index (0-based, < n_workers)
+  --threads             OS threads for the shard sweep (default 1)
+  --timeout             socket deadline in seconds, 0 = wait forever (default 600)
+  --connect-retries     extra connect attempts after the first (default 10)
+  --connect-backoff-ms  initial retry backoff, doubling per attempt,
+                        capped at 2 s (default 50)
 ";
 
 fn main() -> Result<()> {
@@ -41,11 +48,14 @@ fn main() -> Result<()> {
     let slot = args.require::<usize>("slot")?;
     let threads = args.get::<usize>("threads", 1)?;
     let timeout = args.get::<u64>("timeout", 600)?;
+    let retries = args.get::<usize>("connect-retries", 10)?;
+    let backoff_ms = args.get::<u64>("connect-backoff-ms", 50)?;
     args.reject_unknown()?;
 
     let deadline =
         if timeout == 0 { None } else { Some(Duration::from_secs(timeout)) };
-    serve_worker(connect.as_str(), slot, threads, deadline)
+    let connect_cfg = ConnectCfg { retries, backoff_ms };
+    serve_worker(connect.as_str(), slot, threads, deadline, connect_cfg)
         .with_context(|| format!("worker slot {slot} serving {connect}"))?;
     Ok(())
 }

@@ -43,6 +43,7 @@
 //!   communication an overlapped algorithm could not hide.
 
 use crate::comm::net::NetModel;
+use crate::comm::transport::WireStats;
 
 /// One synchronization event.
 #[derive(Clone, Copy, Debug)]
@@ -136,6 +137,20 @@ pub struct Ledger {
     pub measured_reduce_secs: f64,
     /// Σ measured allgather (publish) wire seconds
     pub measured_gather_secs: f64,
+    /// frames the supervised transport retransmitted after a wire fault
+    /// (Contract 9). Like the `measured_*` fields these are recovery
+    /// *effort* accumulators — they never enter [`Ledger::total_secs`]
+    /// and are never serialized into checkpoints (re-measured on
+    /// resume, never compared bitwise)
+    pub retrans_frames: u64,
+    /// bytes of retransmitted frames (header + payload, per resend)
+    pub retrans_bytes: u64,
+    /// worker connections re-established mid-run (rejoin handshakes)
+    pub reconnects: u64,
+    /// measured wall seconds slept in reconnect backoff
+    pub backoff_wait_secs: f64,
+    /// wire faults the chaos plan injected (0 on chaos-free runs)
+    pub chaos_faults: u64,
 }
 
 impl Ledger {
@@ -158,6 +173,11 @@ impl Ledger {
             measured: Vec::new(),
             measured_reduce_secs: 0.0,
             measured_gather_secs: 0.0,
+            retrans_frames: 0,
+            retrans_bytes: 0,
+            reconnects: 0,
+            backoff_wait_secs: 0.0,
+            chaos_faults: 0,
         }
     }
 
@@ -359,6 +379,21 @@ impl Ledger {
         self.measured_gather_secs += gather_secs;
     }
 
+    /// Fold the supervised transport's drained [`WireStats`] into the
+    /// Contract 9 side accumulators — retransmitted frames/bytes,
+    /// reconnect handshakes, backoff sleep, injected faults. Recovery
+    /// effort, like the `measured_*` seconds: it never enters
+    /// [`Ledger::total_secs`] and is never serialized into checkpoints,
+    /// so a chaos run's cost model stays bitwise equal to the fault-free
+    /// oracle's while the recovery work remains observable.
+    pub fn record_wire_faults(&mut self, s: &WireStats) {
+        self.retrans_frames += s.retrans_frames;
+        self.retrans_bytes += s.retrans_bytes;
+        self.reconnects += s.reconnects;
+        self.backoff_wait_secs += s.backoff_wait_secs;
+        self.chaos_faults += s.chaos_faults;
+    }
+
     /// Record one recovery's replay cost: the simulated seconds the
     /// killed attempt had progressed past the checkpoint the new
     /// attempt restores from — training work paid twice. Degraded-run
@@ -450,6 +485,11 @@ impl Ledger {
         self.measured.extend_from_slice(&other.measured);
         self.measured_reduce_secs += other.measured_reduce_secs;
         self.measured_gather_secs += other.measured_gather_secs;
+        self.retrans_frames += other.retrans_frames;
+        self.retrans_bytes += other.retrans_bytes;
+        self.reconnects += other.reconnects;
+        self.backoff_wait_secs += other.backoff_wait_secs;
+        self.chaos_faults += other.chaos_faults;
     }
 
     /// Append the ledger's full state — the [`NetModel`], every
@@ -817,6 +857,42 @@ mod tests {
         let mut longer = buf.clone();
         longer.push(0);
         assert!(Ledger::deserialize(&longer).is_none());
+    }
+
+    #[test]
+    fn wire_fault_accumulators_stay_out_of_total_and_checkpoints() {
+        let mut l = Ledger::new(NetModel::infiniband_20gbps());
+        l.record_sync(0, 1, 1 << 16, 8);
+        l.record_compute(&[0.25]);
+        let healthy = l.total_secs();
+        let mut clean = Vec::new();
+        l.serialize_into(&mut clean);
+        l.record_wire_faults(&WireStats {
+            retrans_frames: 3,
+            retrans_bytes: 4096,
+            reconnects: 1,
+            backoff_wait_secs: 0.05,
+            chaos_faults: 4,
+        });
+        l.record_wire_faults(&WireStats::default()); // no-op fold
+        assert_eq!(l.retrans_frames, 3);
+        assert_eq!(l.retrans_bytes, 4096);
+        assert_eq!(l.reconnects, 1);
+        assert_eq!(l.chaos_faults, 4);
+        assert!((l.backoff_wait_secs - 0.05).abs() < 1e-15);
+        // never in the simulated total, never in degraded attribution
+        assert_eq!(l.total_secs().to_bits(), healthy.to_bits());
+        assert_eq!(l.degraded_total_secs().to_bits(), healthy.to_bits());
+        // never serialized: the checkpoint payload is byte-identical
+        let mut after = Vec::new();
+        l.serialize_into(&mut after);
+        assert_eq!(clean, after);
+        // merge carries the side accumulators
+        let mut m = Ledger::new(NetModel::infiniband_20gbps());
+        m.merge(&l);
+        assert_eq!(m.retrans_frames, 3);
+        assert_eq!(m.reconnects, 1);
+        assert_eq!(m.chaos_faults, 4);
     }
 
     #[test]

@@ -49,6 +49,7 @@ pub use cluster::Cluster;
 pub use ledger::{Ledger, MeasuredSeg, SyncEvent};
 pub use net::NetModel;
 pub use transport::{
-    InProcessTransport, TcpSpawnSpec, TcpTransport, Transport, TransportError, TransportKind,
+    classify, ConnectCfg, FaultClass, FrameCtx, InProcessTransport, TcpSpawnSpec, TcpTransport,
+    Transport, TransportError, TransportKind, WireStats,
 };
 pub use wire::WireError;

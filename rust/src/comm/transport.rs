@@ -36,6 +36,24 @@
 //! in-process run in both storage modes — `rust/tests/dist_equiv.rs`
 //! pins it. Wall-clock quantities (sweep seconds, measured wire
 //! seconds) are measured, recorded, and never compared.
+//!
+//! # Supervision over flaky links (Contract 9)
+//!
+//! Since the chaos PR every master↔worker exchange is *supervised*:
+//! requests carry a per-slot monotone sequence number (wire v2), the
+//! master classifies failures into transient vs reconnect vs fatal
+//! ([`classify`]), retries transient faults in place, and bridges a
+//! dead connection by letting the worker rejoin — shard state retained
+//! worker-side — then resending under the *same* sequence number. The
+//! worker's dedup ([`serve_worker`]) never re-applies a seq it has
+//! already folded; it re-serves the cached reply instead, so
+//! retransmission is idempotent and any fault schedule that eventually
+//! lets frames through ends bitwise identical to the fault-free run —
+//! `rust/tests/chaos_equiv.rs` pins it under a deterministic
+//! [`ChaosPlan`](crate::fault::ChaosPlan). Retry/reconnect costs land
+//! in [`WireStats`] side accumulators (drained into the ledger, never
+//! into `total_secs()`); only an exhausted retry budget escalates to
+//! [`TransportError::WorkerDead`] and the Contract 6 checkpoint replay.
 
 use std::fmt;
 use std::io;
@@ -52,6 +70,7 @@ use crate::comm::Cluster;
 use crate::corpus::Csr;
 use crate::engine::bp::{Selection, ShardBp};
 use crate::engine::traits::LdaParams;
+use crate::fault::{chaos, ChaosFault, ChaosPlan};
 use crate::sched::PowerSet;
 use crate::storage::Checkpoint;
 use crate::util::rng::Rng;
@@ -84,18 +103,46 @@ impl TransportKind {
     }
 }
 
+/// Peer/frame context attached to supervised-transport failures
+/// (Contract 9): which peer, slot, frame kind and sequence number was
+/// in flight when the wire died, so a failed chaos run names the exact
+/// frame instead of a bare `&'static str`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FrameCtx {
+    /// remote address (empty when unknown, e.g. before any handshake)
+    pub peer: String,
+    pub slot: usize,
+    /// [`FrameKind::name`] of the frame in flight (empty when none was)
+    pub kind: &'static str,
+    /// sequence number of the exchange (0 for handshake frames)
+    pub seq: u64,
+}
+
+impl fmt::Display for FrameCtx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let peer = if self.peer.is_empty() { "?" } else { &self.peer };
+        let kind = if self.kind.is_empty() { "?" } else { self.kind };
+        write!(f, "slot {} ({peer}) frame {kind} seq {}", self.slot, self.seq)
+    }
+}
+
 /// Why a transport operation failed.
 #[derive(Debug)]
 pub enum TransportError {
-    /// a frame was refused (corrupt, truncated, wrong layout)
+    /// a frame was refused (corrupt, truncated, wrong layout) with no
+    /// peer attribution — the worker-side / payload-decode form
     Wire(WireError),
+    /// a frame from a known peer was refused — the attributed form of
+    /// `Wire` the supervised master raises (Contract 9)
+    Refused { ctx: FrameCtx, err: WireError },
     Io(io::Error),
     /// the peer spoke wrongly (unexpected frame kind, bad slot, shape
     /// mismatch, protocol-version mismatch)
     Protocol(String),
     /// a socket deadline expired — the hung-socket guard
-    Timeout(&'static str),
-    /// a specific worker's connection or process is gone
+    Timeout { what: &'static str, ctx: FrameCtx },
+    /// a specific worker's connection or process is gone (or its retry
+    /// budget is exhausted — the escalation point to checkpoint replay)
     WorkerDead { slot: usize, msg: String },
 }
 
@@ -103,9 +150,14 @@ impl fmt::Display for TransportError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             TransportError::Wire(e) => write!(f, "transport wire error: {e}"),
+            TransportError::Refused { ctx, err } => {
+                write!(f, "frame refused [{ctx}]: {err}")
+            }
             TransportError::Io(e) => write!(f, "transport I/O: {e}"),
             TransportError::Protocol(s) => write!(f, "transport protocol violation: {s}"),
-            TransportError::Timeout(what) => write!(f, "transport timeout ({what})"),
+            TransportError::Timeout { what, ctx } => {
+                write!(f, "transport timeout ({what}) [{ctx}]")
+            }
             TransportError::WorkerDead { slot, msg } => {
                 write!(f, "worker {slot} unreachable: {msg}")
             }
@@ -114,6 +166,108 @@ impl fmt::Display for TransportError {
 }
 
 impl std::error::Error for TransportError {}
+
+/// Transient-vs-fatal taxonomy of transport failures (Contract 9): what
+/// the supervising master does next with a failed exchange.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    /// the stream is still usable; resend the request on the same
+    /// connection (a clean reply-deadline expiry: frame lost in flight)
+    Transient,
+    /// the byte stream can no longer be trusted (corrupt frame, reset,
+    /// torn read): drop the connection, let the worker rejoin, resend
+    /// under the same sequence number
+    Reconnect,
+    /// a logic/protocol defect no retry can fix; escalate immediately
+    Fatal,
+}
+
+/// Classify a transport failure. Any *wire-level* refusal demands a
+/// reconnect rather than a same-stream retry: a corrupted length field
+/// desynchronizes the byte stream, so the connection — not the frame —
+/// is the unit of recovery. Only a clean reply deadline (stream
+/// aligned, frame absent) is retried in place; shape and protocol
+/// violations are beyond retry.
+pub fn classify(e: &TransportError) -> FaultClass {
+    match e {
+        TransportError::Timeout { .. } => FaultClass::Transient,
+        TransportError::Wire(err) | TransportError::Refused { err, .. } => match err {
+            WireError::Io(io) if is_timeout(io) => FaultClass::Transient,
+            WireError::Malformed(_) => FaultClass::Fatal,
+            _ => FaultClass::Reconnect,
+        },
+        TransportError::Io(io) if is_timeout(io) => FaultClass::Transient,
+        TransportError::Io(_) => FaultClass::Reconnect,
+        TransportError::WorkerDead { .. } => FaultClass::Reconnect,
+        TransportError::Protocol(_) => FaultClass::Fatal,
+    }
+}
+
+/// Retry/reconnect side counters (Contract 9). Drained into the
+/// [`Ledger`](crate::comm::Ledger)'s side accumulators via
+/// [`Transport::take_wire_stats`]; they never enter `total_secs()` or
+/// the serialized checkpoint bytes, mirroring the `measured_*` fields.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireStats {
+    /// frames transmitted beyond the first attempt (resends and chaos
+    /// duplicates)
+    pub retrans_frames: u64,
+    /// encoded bytes of those extra transmissions
+    pub retrans_bytes: u64,
+    /// worker rejoin cycles after a dropped connection
+    pub reconnects: u64,
+    /// wall seconds slept in capped-exponential rejoin backoff
+    pub backoff_wait_secs: f64,
+    /// chaos verdicts that fired ([`ChaosPlan`] injections)
+    pub chaos_faults: u64,
+}
+
+impl WireStats {
+    /// Fold another stats bundle into this one.
+    pub fn merge(&mut self, o: &WireStats) {
+        self.retrans_frames += o.retrans_frames;
+        self.retrans_bytes += o.retrans_bytes;
+        self.reconnects += o.reconnects;
+        self.backoff_wait_secs += o.backoff_wait_secs;
+        self.chaos_faults += o.chaos_faults;
+    }
+
+    /// Drain: return the accumulated counters, resetting to zero.
+    pub fn take(&mut self) -> WireStats {
+        std::mem::take(self)
+    }
+}
+
+/// Worker-side connect/reconnect policy (Contract 9): bounded
+/// capped-exponential backoff, used both for the initial join — so a
+/// worker that races the master's listener waits instead of dying and
+/// spawn order no longer matters — and for every mid-run reconnect
+/// after a wire fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConnectCfg {
+    /// extra connect attempts after the first (0 = a single try)
+    pub retries: usize,
+    /// initial backoff; doubles per attempt up to [`ConnectCfg::BACKOFF_CAP`]
+    pub backoff_ms: u64,
+}
+
+impl ConnectCfg {
+    /// Ceiling of the exponential backoff growth.
+    pub const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+    /// The wait before retry `attempt` (0-based): `backoff_ms << attempt`,
+    /// capped.
+    pub fn backoff(&self, attempt: usize) -> Duration {
+        let ms = self.backoff_ms.saturating_mul(1u64 << attempt.min(6) as u32);
+        Duration::from_millis(ms).min(Self::BACKOFF_CAP)
+    }
+}
+
+impl Default for ConnectCfg {
+    fn default() -> ConnectCfg {
+        ConnectCfg { retries: 10, backoff_ms: 50 }
+    }
+}
 
 impl From<WireError> for TransportError {
     fn from(e: WireError) -> TransportError {
@@ -520,6 +674,18 @@ pub trait Transport {
     /// Collect every worker's dense end-of-batch Δφ̂.
     fn collect_fold(&mut self) -> Result<FoldExchange, TransportError>;
 
+    /// Advance the wire-chaos epoch to `(batch, iter)` (Contract 9):
+    /// subsequent exchanges key their deterministic fault draws to this
+    /// point. A no-op for transports without an attached
+    /// [`ChaosPlan`].
+    fn chaos_epoch(&mut self, _batch: usize, _iter: usize) {}
+
+    /// Drain the retry/reconnect/chaos side counters accumulated since
+    /// the previous call (the ledger's Contract 9 side accumulators).
+    fn take_wire_stats(&mut self) -> WireStats {
+        WireStats::default()
+    }
+
     /// Hard-kill worker `slot`'s process (real SIGKILL on the TCP
     /// backend; a no-op for in-process logical workers, whose "death"
     /// is the fault plan's simulation).
@@ -539,18 +705,98 @@ pub trait Transport {
 /// exercises the wire format on every exchange.
 pub struct InProcessTransport {
     workers: Vec<WorkerState>,
+    chaos: Option<ChaosPlan>,
+    epoch: (usize, usize),
+    seqs: Vec<u64>,
+    stats: WireStats,
 }
 
 impl InProcessTransport {
     pub fn new(n_workers: usize, max_threads: usize) -> InProcessTransport {
         InProcessTransport {
             workers: (0..n_workers).map(|_| WorkerState::new(max_threads)).collect(),
+            chaos: None,
+            epoch: (0, 0),
+            seqs: vec![0; n_workers],
+            stats: WireStats::default(),
         }
     }
 
-    fn through_codec(kind: FrameKind, payload: &[u8]) -> Result<Vec<u8>, TransportError> {
-        let frame = wire::decode_frame(&wire::encode_frame(kind, payload))?;
-        Ok(frame.payload)
+    /// Attach a deterministic chaos plan (Contract 9): faults are
+    /// applied to the encoded bytes between encode and decode,
+    /// exercising the same refusal/retransmit/dedup accounting as the
+    /// TCP carrier, minus the sockets.
+    pub fn with_chaos(mut self, plan: ChaosPlan) -> InProcessTransport {
+        self.chaos = Some(plan);
+        self
+    }
+
+    fn next_seq(&mut self, slot: usize) -> u64 {
+        self.seqs[slot] += 1;
+        self.seqs[slot]
+    }
+
+    /// Push one frame through the codec, applying any chaos verdict for
+    /// `(epoch, slot, kind, attempt)` to the encoded bytes. A mangled
+    /// transmission is refused by `decode_frame` and retransmitted; the
+    /// loop terminates because [`ChaosPlan::decide`] passes every
+    /// attempt from its `max_attempts` on.
+    fn through_codec(
+        &mut self,
+        slot: usize,
+        kind: FrameKind,
+        seq: u64,
+        payload: &[u8],
+    ) -> Result<Vec<u8>, TransportError> {
+        let (batch, iter) = self.epoch;
+        let mut attempt = 0usize;
+        loop {
+            let mut bytes = wire::encode_frame(kind, seq, payload);
+            let fault = match &self.chaos {
+                Some(plan) => plan.decide(batch, iter, slot, kind, attempt),
+                None => None,
+            };
+            let Some(fault) = fault else {
+                return Ok(wire::decode_frame(&bytes)?.payload);
+            };
+            self.stats.chaos_faults += 1;
+            let frame_len = bytes.len() as u64;
+            match fault {
+                ChaosFault::Delay { .. } => {
+                    // pure latency: in-process there is no wall clock
+                    // to charge, the frame still arrives intact
+                    return Ok(wire::decode_frame(&bytes)?.payload);
+                }
+                ChaosFault::Duplicate => {
+                    // the second copy carries the same seq and is
+                    // discarded by dedup; apply exactly one
+                    let first = wire::decode_frame(&bytes)?.payload;
+                    self.stats.retrans_frames += 1;
+                    self.stats.retrans_bytes += frame_len;
+                    return Ok(first);
+                }
+                ChaosFault::FlipBit => {
+                    chaos::flip_bit(&mut bytes, seq ^ attempt as u64);
+                    debug_assert!(wire::decode_frame(&bytes).is_err());
+                }
+                ChaosFault::Truncate => {
+                    let cut = chaos::cut_len(bytes.len(), seq ^ attempt as u64);
+                    bytes.truncate(cut);
+                    debug_assert!(wire::decode_frame(&bytes).is_err());
+                }
+                ChaosFault::Drop | ChaosFault::Reset => {
+                    // the frame never arrives; the retransmission below
+                    // is the whole recovery
+                    if matches!(fault, ChaosFault::Reset) {
+                        self.stats.reconnects += 1;
+                    }
+                }
+            }
+            // the mangled/lost transmission forces a retransmission
+            self.stats.retrans_frames += 1;
+            self.stats.retrans_bytes += frame_len;
+            attempt += 1;
+        }
     }
 }
 
@@ -561,9 +807,13 @@ impl Transport for InProcessTransport {
 
     fn start_batch(&mut self, payloads: &[Vec<u8>]) -> Result<(), TransportError> {
         debug_assert_eq!(payloads.len(), self.workers.len());
-        for (ws, p) in self.workers.iter_mut().zip(payloads) {
-            let p = Self::through_codec(FrameKind::Batch, p)?;
-            ws.on_batch(&p)?;
+        for slot in 0..self.workers.len() {
+            let seq = self.next_seq(slot);
+            let p = self.through_codec(slot, FrameKind::Batch, seq, &payloads[slot])?;
+            self.workers[slot].on_batch(&p)?;
+            // the BatchAck leg of the supervised protocol, through the
+            // codec too so its chaos points exist on this carrier
+            let _ = self.through_codec(slot, FrameKind::BatchAck, seq, &[])?;
         }
         Ok(())
     }
@@ -572,10 +822,11 @@ impl Transport for InProcessTransport {
         debug_assert_eq!(payloads.len(), self.workers.len());
         let t0 = Instant::now();
         let mut replies = Vec::with_capacity(self.workers.len());
-        for (ws, p) in self.workers.iter_mut().zip(payloads) {
-            let p = Self::through_codec(FrameKind::Sweep, p)?;
-            let reply = ws.on_sweep(&p)?;
-            let reply = Self::through_codec(FrameKind::Gather, &reply)?;
+        for slot in 0..self.workers.len() {
+            let seq = self.next_seq(slot);
+            let p = self.through_codec(slot, FrameKind::Sweep, seq, &payloads[slot])?;
+            let reply = self.workers[slot].on_sweep(&p)?;
+            let reply = self.through_codec(slot, FrameKind::Gather, seq, &reply)?;
             replies.push(decode_gather(&reply)?);
         }
         // in-process, publish and collect are the same synchronous pass;
@@ -586,12 +837,24 @@ impl Transport for InProcessTransport {
     fn collect_fold(&mut self) -> Result<FoldExchange, TransportError> {
         let t0 = Instant::now();
         let mut parts = Vec::with_capacity(self.workers.len());
-        for ws in &mut self.workers {
-            let p = ws.on_fold()?;
-            let p = Self::through_codec(FrameKind::FoldPart, &p)?;
+        for slot in 0..self.workers.len() {
+            let seq = self.next_seq(slot);
+            // the (empty) Fold request leg, so its chaos points exist
+            // on this carrier too
+            let _ = self.through_codec(slot, FrameKind::Fold, seq, &[])?;
+            let p = self.workers[slot].on_fold()?;
+            let p = self.through_codec(slot, FrameKind::FoldPart, seq, &p)?;
             parts.push(decode_fold_part(&p)?);
         }
         Ok(FoldExchange { parts, collect_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    fn chaos_epoch(&mut self, batch: usize, iter: usize) {
+        self.epoch = (batch, iter);
+    }
+
+    fn take_wire_stats(&mut self) -> WireStats {
+        self.stats.take()
     }
 
     fn kill_worker(&mut self, _slot: usize) -> Result<(), TransportError> {
@@ -618,35 +881,44 @@ pub struct TcpSpawnSpec {
 }
 
 /// The real-process backend: slot-ordered TCP connections to `pobp-worker`
-/// processes, every exchange length-prefixed and checksummed, every
-/// socket under a read/write deadline so a hung peer fails fast with
-/// [`TransportError::Timeout`] instead of wedging the run.
+/// processes, every exchange length-prefixed, checksummed and
+/// sequence-numbered, every socket under a read/write deadline so a
+/// hung peer fails fast instead of wedging the run. Exchanges are
+/// supervised (Contract 9): transient faults are retried in place,
+/// connection faults ride a rejoin-and-resend cycle, and only an
+/// exhausted retry budget surfaces [`TransportError::WorkerDead`].
 pub struct TcpTransport {
     listener: TcpListener,
     conns: Vec<Option<TcpStream>>,
+    /// peer address per slot, for [`FrameCtx`] attribution
+    peers: Vec<String>,
     children: Vec<Option<Child>>,
     spawn: Option<TcpSpawnSpec>,
     n: usize,
     io_timeout: Duration,
+    /// per-slot monotone request sequence numbers (never reset across
+    /// reconnects, so a rejoined worker's dedup stays sound)
+    seqs: Vec<u64>,
+    epoch: (usize, usize),
+    chaos: Option<ChaosPlan>,
+    stats: WireStats,
+    max_frame_retries: usize,
+    rejoin_backoff: ConnectCfg,
 }
 
 impl TcpTransport {
     /// Default socket deadline (join, reply and write waits).
     pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(120);
 
+    /// Default per-exchange retry budget before escalation.
+    pub const DEFAULT_FRAME_RETRIES: usize = 5;
+
     /// Bind a listener and spawn `n` loopback `pobp-worker` processes
     /// that connect back to it (the `--spawn` path and the test-suite
     /// path).
     pub fn spawn(n: usize, spec: TcpSpawnSpec) -> Result<TcpTransport, TransportError> {
         let listener = TcpListener::bind(("127.0.0.1", 0))?;
-        let mut t = TcpTransport {
-            listener,
-            conns: (0..n).map(|_| None).collect(),
-            children: (0..n).map(|_| None).collect(),
-            spawn: Some(spec),
-            n,
-            io_timeout: Self::DEFAULT_IO_TIMEOUT,
-        };
+        let mut t = Self::from_listener(listener, n, Some(spec));
         t.spawn_children()?;
         t.accept_workers()?;
         Ok(t)
@@ -656,19 +928,43 @@ impl TcpTransport {
     /// join (the `bin/master` path without `--spawn`). Call
     /// [`TcpTransport::accept_workers`] once they are started.
     pub fn listen(addr: impl ToSocketAddrs, n: usize) -> Result<TcpTransport, TransportError> {
-        Ok(TcpTransport {
-            listener: TcpListener::bind(addr)?,
+        Ok(Self::from_listener(TcpListener::bind(addr)?, n, None))
+    }
+
+    fn from_listener(listener: TcpListener, n: usize, spawn: Option<TcpSpawnSpec>) -> TcpTransport {
+        TcpTransport {
+            listener,
             conns: (0..n).map(|_| None).collect(),
+            peers: vec![String::new(); n],
             children: (0..n).map(|_| None).collect(),
-            spawn: None,
+            spawn,
             n,
             io_timeout: Self::DEFAULT_IO_TIMEOUT,
-        })
+            seqs: vec![0; n],
+            epoch: (0, 0),
+            chaos: None,
+            stats: WireStats::default(),
+            max_frame_retries: Self::DEFAULT_FRAME_RETRIES,
+            rejoin_backoff: ConnectCfg::default(),
+        }
     }
 
     /// Override the hung-socket deadline.
     pub fn with_io_timeout(mut self, t: Duration) -> TcpTransport {
         self.io_timeout = t;
+        self
+    }
+
+    /// Attach a deterministic chaos plan (Contract 9): frames to and
+    /// from workers are faulted at the master's socket edge.
+    pub fn with_chaos(mut self, plan: ChaosPlan) -> TcpTransport {
+        self.chaos = Some(plan);
+        self
+    }
+
+    /// Override the per-exchange retry budget.
+    pub fn with_frame_retries(mut self, retries: usize) -> TcpTransport {
+        self.max_frame_retries = retries;
         self
     }
 
@@ -710,39 +1006,52 @@ impl TcpTransport {
         let deadline = Instant::now() + self.io_timeout;
         let mut joined = 0usize;
         while joined < self.n {
-            let stream = self.accept_one(deadline)?;
-            stream.set_nodelay(true)?;
-            stream.set_read_timeout(Some(self.io_timeout))?;
-            stream.set_write_timeout(Some(self.io_timeout))?;
-            let mut stream = stream;
-            let hello = read_frame(&mut stream).map_err(io_to_timeout("worker hello"))?;
-            if hello.kind != FrameKind::Hello {
-                return Err(TransportError::Protocol(format!(
-                    "expected Hello, got {:?}",
-                    hello.kind
-                )));
-            }
-            let (version, slot, _pid) = decode_hello(&hello.payload)?;
-            if version != PROTO_VERSION {
-                return Err(TransportError::Protocol(format!(
-                    "worker speaks protocol v{version}, master v{PROTO_VERSION}"
-                )));
-            }
-            if slot >= self.n {
-                return Err(TransportError::Protocol(format!(
-                    "worker slot {slot} outside 0..{}",
-                    self.n
-                )));
-            }
-            if self.conns[slot].is_some() {
-                return Err(TransportError::Protocol(format!("duplicate worker slot {slot}")));
-            }
-            write_frame(&mut stream, FrameKind::Welcome, &welcome_payload(slot, self.n))
-                .map_err(io_to_timeout("worker welcome"))?;
-            self.conns[slot] = Some(stream);
+            self.accept_and_handshake(deadline, true)?;
             joined += 1;
         }
         Ok(())
+    }
+
+    /// Accept one worker and run the Hello/Welcome handshake, storing
+    /// the connection at the worker's *declared* slot. `initial` joins
+    /// refuse duplicate slots; rejoins replace the dead connection.
+    fn accept_and_handshake(
+        &mut self,
+        deadline: Instant,
+        initial: bool,
+    ) -> Result<usize, TransportError> {
+        let mut stream = self.accept_one(deadline)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(self.io_timeout))?;
+        stream.set_write_timeout(Some(self.io_timeout))?;
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+        let hello = read_frame(&mut stream).map_err(io_to_timeout("worker hello"))?;
+        if hello.kind != FrameKind::Hello {
+            return Err(TransportError::Protocol(format!(
+                "expected Hello, got {:?}",
+                hello.kind
+            )));
+        }
+        let (version, slot, _pid) = decode_hello(&hello.payload)?;
+        if version != PROTO_VERSION {
+            return Err(TransportError::Protocol(format!(
+                "worker speaks protocol v{version}, master v{PROTO_VERSION}"
+            )));
+        }
+        if slot >= self.n {
+            return Err(TransportError::Protocol(format!(
+                "worker slot {slot} outside 0..{}",
+                self.n
+            )));
+        }
+        if initial && self.conns[slot].is_some() {
+            return Err(TransportError::Protocol(format!("duplicate worker slot {slot}")));
+        }
+        write_frame(&mut stream, FrameKind::Welcome, 0, &welcome_payload(slot, self.n))
+            .map_err(io_to_timeout("worker welcome"))?;
+        self.conns[slot] = Some(stream);
+        self.peers[slot] = peer;
+        Ok(slot)
     }
 
     fn accept_one(&self, deadline: Instant) -> Result<TcpStream, TransportError> {
@@ -752,7 +1061,10 @@ impl TcpTransport {
                 Ok((s, _)) => break Ok(s),
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                     if Instant::now() >= deadline {
-                        break Err(TransportError::Timeout("worker join"));
+                        break Err(TransportError::Timeout {
+                            what: "worker join",
+                            ctx: FrameCtx::default(),
+                        });
                     }
                     std::thread::sleep(Duration::from_millis(5));
                 }
@@ -765,34 +1077,285 @@ impl TcpTransport {
         Ok(s)
     }
 
-    fn conn(&mut self, slot: usize) -> Result<&mut TcpStream, TransportError> {
-        self.conns[slot].as_mut().ok_or(TransportError::WorkerDead {
+    fn next_seq(&mut self, slot: usize) -> u64 {
+        self.seqs[slot] += 1;
+        self.seqs[slot]
+    }
+
+    fn ctx(&self, slot: usize, kind: FrameKind, seq: u64) -> FrameCtx {
+        FrameCtx { peer: self.peers[slot].clone(), slot, kind: kind.name(), seq }
+    }
+
+    /// Write raw bytes to `slot`'s connection, attributing failures to
+    /// the frame in flight.
+    fn send_raw(&mut self, slot: usize, bytes: &[u8], ctx: FrameCtx) -> Result<(), TransportError> {
+        use io::Write;
+        let stream = match self.conns[slot].as_mut() {
+            Some(s) => s,
+            None => {
+                return Err(TransportError::WorkerDead { slot, msg: "no connection".into() });
+            }
+        };
+        stream.write_all(bytes).map_err(|e| refusal(ctx, WireError::Io(e)))
+    }
+
+    /// Write one request frame, applying the chaos verdict for
+    /// `(epoch, slot, kind, attempt)` at the socket edge (Contract 9).
+    fn chaos_send(
+        &mut self,
+        slot: usize,
+        kind: FrameKind,
+        seq: u64,
+        payload: &[u8],
+        attempt: usize,
+    ) -> Result<(), TransportError> {
+        let (batch, iter) = self.epoch;
+        let fault = match &self.chaos {
+            Some(plan) => plan.decide(batch, iter, slot, kind, attempt),
+            None => None,
+        };
+        let bytes = wire::encode_frame(kind, seq, payload);
+        let ctx = self.ctx(slot, kind, seq);
+        let Some(fault) = fault else {
+            return self.send_raw(slot, &bytes, ctx);
+        };
+        self.stats.chaos_faults += 1;
+        match fault {
+            ChaosFault::Delay { ms } => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.send_raw(slot, &bytes, ctx)
+            }
+            ChaosFault::Duplicate => {
+                // two identical transmissions: the worker's seq dedup
+                // must apply exactly one and re-serve the cached reply
+                self.send_raw(slot, &bytes, ctx.clone())?;
+                self.stats.retrans_frames += 1;
+                self.stats.retrans_bytes += bytes.len() as u64;
+                self.send_raw(slot, &bytes, ctx)
+            }
+            ChaosFault::FlipBit => {
+                // the worker refuses the mangled frame and reconnects;
+                // this side notices at the reply read
+                let mut bad = bytes.clone();
+                chaos::flip_bit(&mut bad, seq ^ attempt as u64);
+                self.send_raw(slot, &bad, ctx)
+            }
+            ChaosFault::Truncate => {
+                // mid-frame reset: a strict prefix of the frame, then
+                // the connection dies under the worker's read
+                let cut = chaos::cut_len(bytes.len(), seq ^ attempt as u64);
+                let res = self.send_raw(slot, &bytes[..cut], ctx);
+                self.conns[slot] = None;
+                res
+            }
+            ChaosFault::Reset => {
+                // the connection dies before anything is written
+                self.conns[slot] = None;
+                Ok(())
+            }
+            ChaosFault::Drop => {
+                // half-open hang: the link stays up, the frame never
+                // arrives; recovered by the reply deadline
+                Ok(())
+            }
+        }
+    }
+
+    /// Best-effort pipelined publish of one request (the broadcast
+    /// phase). Returns whether the frame is believed in flight; a
+    /// failed write just marks the connection down — the supervised
+    /// collect phase recovers.
+    fn try_send(&mut self, slot: usize, kind: FrameKind, seq: u64, payload: &[u8]) -> bool {
+        match self.chaos_send(slot, kind, seq, payload, 0) {
+            Ok(()) => self.conns[slot].is_some(),
+            Err(_) => {
+                self.conns[slot] = None;
+                false
+            }
+        }
+    }
+
+    /// Read the reply to `(reply_kind, seq)`, discarding stale
+    /// duplicates of earlier exchanges (a chaos Duplicate's second
+    /// reply) and applying any recv-direction chaos verdict to the
+    /// freshly read frame.
+    fn read_reply(
+        &mut self,
+        slot: usize,
+        reply_kind: FrameKind,
+        seq: u64,
+        attempt: usize,
+    ) -> Result<Vec<u8>, TransportError> {
+        loop {
+            let ctx = self.ctx(slot, reply_kind, seq);
+            let frame = match self.conns[slot].as_mut() {
+                None => {
+                    return Err(TransportError::WorkerDead {
+                        slot,
+                        msg: "no connection".into(),
+                    });
+                }
+                Some(stream) => match read_frame(stream) {
+                    Ok(f) => f,
+                    Err(e) => return Err(refusal(ctx, e)),
+                },
+            };
+            if frame.seq < seq {
+                // a stale duplicate from an earlier retransmission:
+                // discard without applying, keep reading
+                continue;
+            }
+            if frame.seq > seq || frame.kind != reply_kind {
+                return Err(TransportError::Protocol(format!(
+                    "worker {slot}: expected {} seq {seq}, got {:?} seq {}",
+                    reply_kind.name(),
+                    frame.kind,
+                    frame.seq
+                )));
+            }
+            let (batch, iter) = self.epoch;
+            let fault = match &self.chaos {
+                Some(plan) => plan.decide(batch, iter, slot, reply_kind, attempt),
+                None => None,
+            };
+            let Some(fault) = fault else { return Ok(frame.payload) };
+            self.stats.chaos_faults += 1;
+            match fault {
+                ChaosFault::Delay { ms } => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    return Ok(frame.payload);
+                }
+                ChaosFault::Duplicate => {
+                    // an edge-duplicated reply: the dedup above discards
+                    // the replay; accept the first copy and account it
+                    self.stats.retrans_frames += 1;
+                    self.stats.retrans_bytes += (wire::HEADER_LEN + frame.payload.len()) as u64;
+                    return Ok(frame.payload);
+                }
+                ChaosFault::FlipBit => {
+                    // the reply arrived corrupt: a checksum refusal
+                    return Err(refusal(ctx, WireError::Checksum));
+                }
+                ChaosFault::Drop => {
+                    // the reply never arrived: a clean deadline expiry
+                    return Err(TransportError::Timeout { what: "reply (chaos drop)", ctx });
+                }
+                ChaosFault::Truncate | ChaosFault::Reset => {
+                    // the reply died mid-frame / the connection reset
+                    self.conns[slot] = None;
+                    return Err(refusal(ctx, WireError::Truncated("chaos reset")));
+                }
+            }
+        }
+    }
+
+    /// Wait for worker `slot` to reconnect after its connection died
+    /// (Contract 9): capped-exponential backoff, then accept arrivals —
+    /// each stored at its *declared* slot, so concurrently rejoining
+    /// workers cannot steal each other's place — until `slot` is back.
+    fn rejoin(&mut self, slot: usize, attempt: usize) -> Result<(), TransportError> {
+        let wait = self.rejoin_backoff.backoff(attempt);
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+            self.stats.backoff_wait_secs += wait.as_secs_f64();
+        }
+        let deadline = Instant::now() + self.io_timeout;
+        while self.conns[slot].is_none() {
+            self.accept_and_handshake(deadline, false)?;
+        }
+        self.stats.reconnects += 1;
+        Ok(())
+    }
+
+    /// One supervised request/reply exchange (Contract 9): retry
+    /// transient faults in place, bridge connection faults with a
+    /// rejoin, resend under the same sequence number — the worker's
+    /// dedup makes resends idempotent — and escalate to `WorkerDead`
+    /// (and from there to checkpoint replay) once the retry budget is
+    /// spent.
+    fn exchange(
+        &mut self,
+        slot: usize,
+        req_kind: FrameKind,
+        reply_kind: FrameKind,
+        seq: u64,
+        payload: &[u8],
+        already_sent: bool,
+    ) -> Result<Vec<u8>, TransportError> {
+        let mut need_send = !already_sent;
+        let mut transmissions = usize::from(already_sent);
+        let mut attempt = 0usize;
+        let mut last = String::new();
+        while attempt <= self.max_frame_retries {
+            let step = self.exchange_once(
+                slot,
+                req_kind,
+                reply_kind,
+                seq,
+                payload,
+                attempt,
+                need_send,
+                &mut transmissions,
+            );
+            let err = match step {
+                Ok(reply) => return Ok(reply),
+                Err(e) => e,
+            };
+            match classify(&err) {
+                FaultClass::Fatal => return Err(err),
+                FaultClass::Transient => need_send = true,
+                FaultClass::Reconnect => {
+                    self.conns[slot] = None;
+                    need_send = true;
+                }
+            }
+            last = err.to_string();
+            attempt += 1;
+        }
+        Err(TransportError::WorkerDead {
             slot,
-            msg: "no connection".into(),
+            msg: format!(
+                "retry budget ({}) exhausted on {} seq {seq}: {last}",
+                self.max_frame_retries,
+                req_kind.name()
+            ),
         })
     }
 
-    fn send(&mut self, slot: usize, kind: FrameKind, payload: &[u8]) -> Result<(), TransportError> {
-        let stream = self.conn(slot)?;
-        write_frame(stream, kind, payload).map_err(|e| wire_to_dead(slot, "send", e))
-    }
-
-    fn recv_expect(&mut self, slot: usize, kind: FrameKind) -> Result<Vec<u8>, TransportError> {
-        let stream = self.conn(slot)?;
-        let frame = read_frame(stream).map_err(|e| wire_to_dead(slot, "reply", e))?;
-        if frame.kind != kind {
-            return Err(TransportError::Protocol(format!(
-                "worker {slot}: expected {kind:?}, got {:?}",
-                frame.kind
-            )));
+    #[allow(clippy::too_many_arguments)]
+    fn exchange_once(
+        &mut self,
+        slot: usize,
+        req_kind: FrameKind,
+        reply_kind: FrameKind,
+        seq: u64,
+        payload: &[u8],
+        attempt: usize,
+        need_send: bool,
+        transmissions: &mut usize,
+    ) -> Result<Vec<u8>, TransportError> {
+        let mut send = need_send;
+        if self.conns[slot].is_none() {
+            self.rejoin(slot, attempt)?;
+            send = true;
         }
-        Ok(frame.payload)
+        if send {
+            if *transmissions > 0 {
+                self.stats.retrans_frames += 1;
+                self.stats.retrans_bytes += (wire::HEADER_LEN + payload.len()) as u64;
+            }
+            *transmissions += 1;
+            self.chaos_send(slot, req_kind, seq, payload, attempt)?;
+        }
+        self.read_reply(slot, reply_kind, seq, attempt)
     }
 }
 
 fn io_to_timeout(what: &'static str) -> impl Fn(WireError) -> TransportError {
     move |e| match e {
-        WireError::Io(ref io) if is_timeout(io) => TransportError::Timeout(what),
+        WireError::Io(ref io) if is_timeout(io) => {
+            TransportError::Timeout { what, ctx: FrameCtx::default() }
+        }
         other => TransportError::Wire(other),
     }
 }
@@ -801,18 +1364,15 @@ fn is_timeout(e: &io::Error) -> bool {
     matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
 }
 
-fn wire_to_dead(slot: usize, what: &str, e: WireError) -> TransportError {
+/// Attribute a wire-level failure to the frame exchange it killed:
+/// deadline expiries become [`TransportError::Timeout`], everything
+/// else the attributed [`TransportError::Refused`].
+fn refusal(ctx: FrameCtx, e: WireError) -> TransportError {
     match e {
-        WireError::Io(ref io) if is_timeout(io) => TransportError::WorkerDead {
-            slot,
-            msg: format!("{what} timed out (hung socket)"),
-        },
-        WireError::Io(io) => TransportError::WorkerDead { slot, msg: format!("{what}: {io}") },
-        WireError::Truncated(t) => TransportError::WorkerDead {
-            slot,
-            msg: format!("{what}: connection closed ({t})"),
-        },
-        other => TransportError::Wire(other),
+        WireError::Io(ref io) if is_timeout(io) => {
+            TransportError::Timeout { what: "frame exchange", ctx }
+        }
+        other => TransportError::Refused { ctx, err: other },
     }
 }
 
@@ -823,39 +1383,67 @@ impl Transport for TcpTransport {
 
     fn start_batch(&mut self, payloads: &[Vec<u8>]) -> Result<(), TransportError> {
         debug_assert_eq!(payloads.len(), self.n);
+        let n = self.n;
+        let seqs: Vec<u64> = (0..n).map(|s| self.next_seq(s)).collect();
+        let mut sent = vec![false; n];
         for (slot, p) in payloads.iter().enumerate() {
-            self.send(slot, FrameKind::Batch, p)?;
+            sent[slot] = self.try_send(slot, FrameKind::Batch, seqs[slot], p);
+        }
+        for (slot, p) in payloads.iter().enumerate() {
+            self.exchange(slot, FrameKind::Batch, FrameKind::BatchAck, seqs[slot], p, sent[slot])?;
         }
         Ok(())
     }
 
     fn sweep_exchange(&mut self, payloads: &[Vec<u8>]) -> Result<SweepExchange, TransportError> {
         debug_assert_eq!(payloads.len(), self.n);
+        let n = self.n;
         let t0 = Instant::now();
+        let seqs: Vec<u64> = (0..n).map(|s| self.next_seq(s)).collect();
+        let mut sent = vec![false; n];
         for (slot, p) in payloads.iter().enumerate() {
-            self.send(slot, FrameKind::Sweep, p)?;
+            sent[slot] = self.try_send(slot, FrameKind::Sweep, seqs[slot], p);
         }
         let publish_secs = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
-        let mut replies = Vec::with_capacity(self.n);
-        for slot in 0..self.n {
-            let payload = self.recv_expect(slot, FrameKind::Gather)?;
+        let mut replies = Vec::with_capacity(n);
+        for (slot, p) in payloads.iter().enumerate() {
+            let payload =
+                self.exchange(slot, FrameKind::Sweep, FrameKind::Gather, seqs[slot], p, sent[slot])?;
             replies.push(decode_gather(&payload)?);
         }
         Ok(SweepExchange { replies, publish_secs, collect_secs: t1.elapsed().as_secs_f64() })
     }
 
     fn collect_fold(&mut self) -> Result<FoldExchange, TransportError> {
+        let n = self.n;
         let t0 = Instant::now();
-        for slot in 0..self.n {
-            self.send(slot, FrameKind::Fold, &[])?;
+        let seqs: Vec<u64> = (0..n).map(|s| self.next_seq(s)).collect();
+        let mut sent = vec![false; n];
+        for (slot, seq) in seqs.iter().enumerate() {
+            sent[slot] = self.try_send(slot, FrameKind::Fold, *seq, &[]);
         }
-        let mut parts = Vec::with_capacity(self.n);
-        for slot in 0..self.n {
-            let payload = self.recv_expect(slot, FrameKind::FoldPart)?;
+        let mut parts = Vec::with_capacity(n);
+        for slot in 0..n {
+            let payload = self.exchange(
+                slot,
+                FrameKind::Fold,
+                FrameKind::FoldPart,
+                seqs[slot],
+                &[],
+                sent[slot],
+            )?;
             parts.push(decode_fold_part(&payload)?);
         }
         Ok(FoldExchange { parts, collect_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    fn chaos_epoch(&mut self, batch: usize, iter: usize) {
+        self.epoch = (batch, iter);
+    }
+
+    fn take_wire_stats(&mut self) -> WireStats {
+        self.stats.take()
     }
 
     fn kill_worker(&mut self, slot: usize) -> Result<(), TransportError> {
@@ -890,7 +1478,9 @@ impl Transport for TcpTransport {
     fn shutdown(&mut self) -> Result<(), TransportError> {
         for slot in 0..self.n {
             if self.conns[slot].is_some() {
-                let _ = self.send(slot, FrameKind::Shutdown, &[]);
+                let ctx = self.ctx(slot, FrameKind::Shutdown, 0);
+                let bytes = wire::encode_frame(FrameKind::Shutdown, 0, &[]);
+                let _ = self.send_raw(slot, &bytes, ctx);
             }
             self.conns[slot] = None;
             if let Some(child) = self.children[slot].as_mut() {
@@ -912,21 +1502,77 @@ impl Drop for TcpTransport {
     }
 }
 
-/// The `pobp-worker` event loop: connect, handshake, then serve
-/// Batch/Sweep/Fold frames until Shutdown. `io_timeout = None` blocks
-/// indefinitely between frames (the master controls pacing); a `Some`
-/// deadline makes an abandoned worker exit instead of lingering.
+/// The `pobp-worker` event loop (supervised, Contract 9): connect with
+/// bounded backoff — so racing the master's listener waits instead of
+/// dying and spawn order no longer matters — handshake, then serve
+/// Batch/Sweep/Fold frames until Shutdown.
+///
+/// Recoverable wire faults (a corrupt frame, a reset socket, a torn
+/// read) drop the *session* and reconnect with the worker's shard
+/// state **retained**: `ShardBp` accumulates Δφ̂ within a batch, so a
+/// mid-batch reconnect must resume exactly where the wire died, and the
+/// master's same-seq resends bridge the gap. Requests whose sequence
+/// number was already applied are never re-applied — the cached reply
+/// is re-served — which is what makes retransmission idempotent and the
+/// recovered run bitwise identical (`chaos_equiv.rs`).
+///
+/// `io_timeout = None` blocks indefinitely between frames (the master
+/// controls pacing); a `Some` deadline makes an abandoned worker exit
+/// instead of lingering.
 pub fn serve_worker(
     addr: impl ToSocketAddrs,
     slot: usize,
     max_threads: usize,
     io_timeout: Option<Duration>,
+    connect: ConnectCfg,
 ) -> Result<(), TransportError> {
+    let mut ws = WorkerState::new(max_threads);
+    let mut last_applied = 0u64;
+    let mut reply_cache: Option<(u64, FrameKind, Vec<u8>)> = None;
+    loop {
+        let mut stream = connect_with_backoff(&addr, slot, io_timeout, connect)?;
+        match serve_session(&mut stream, &mut ws, &mut last_applied, &mut reply_cache) {
+            Ok(()) => return Ok(()),
+            Err(e) if session_recoverable(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Dial the master with capped-exponential backoff and run the
+/// Hello/Welcome handshake — the initial join and every mid-run
+/// reconnect go through here. Protocol violations (version/slot
+/// mismatch) abort immediately; liveness failures burn a retry.
+fn connect_with_backoff(
+    addr: &impl ToSocketAddrs,
+    slot: usize,
+    io_timeout: Option<Duration>,
+    cfg: ConnectCfg,
+) -> Result<TcpStream, TransportError> {
+    let mut last: Option<TransportError> = None;
+    for attempt in 0..=cfg.retries {
+        if attempt > 0 {
+            std::thread::sleep(cfg.backoff(attempt - 1));
+        }
+        match try_connect(addr, slot, io_timeout) {
+            Ok(stream) => return Ok(stream),
+            Err(e) if matches!(classify(&e), FaultClass::Fatal) => return Err(e),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| TransportError::Protocol("no connect attempts made".into())))
+}
+
+fn try_connect(
+    addr: &impl ToSocketAddrs,
+    slot: usize,
+    io_timeout: Option<Duration>,
+) -> Result<TcpStream, TransportError> {
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(io_timeout)?;
     stream.set_write_timeout(io_timeout)?;
-    write_frame(&mut stream, FrameKind::Hello, &hello_payload(slot))?;
+    write_frame(&mut stream, FrameKind::Hello, 0, &hello_payload(slot))?;
     let welcome = read_frame(&mut stream).map_err(io_to_timeout("welcome"))?;
     if welcome.kind != FrameKind::Welcome {
         return Err(TransportError::Protocol(format!(
@@ -940,18 +1586,41 @@ pub fn serve_worker(
             "master acknowledged slot {ack_slot}, we are slot {slot}"
         )));
     }
-    let mut ws = WorkerState::new(max_threads);
+    Ok(stream)
+}
+
+/// One connected session: serve frames until Shutdown or a wire fault.
+/// Duplicate requests (`seq <= last_applied`) are never re-applied —
+/// the cached reply is re-served when the seq matches — so the
+/// master's retransmissions are idempotent (Contract 9).
+fn serve_session(
+    stream: &mut TcpStream,
+    ws: &mut WorkerState,
+    last_applied: &mut u64,
+    reply_cache: &mut Option<(u64, FrameKind, Vec<u8>)>,
+) -> Result<(), TransportError> {
     loop {
-        let frame = read_frame(&mut stream).map_err(io_to_timeout("next frame"))?;
+        let frame = read_frame(stream).map_err(io_to_timeout("next frame"))?;
+        if frame.seq != 0 && frame.seq <= *last_applied {
+            if let Some((seq, kind, payload)) = reply_cache.as_ref() {
+                if *seq == frame.seq {
+                    write_frame(stream, *kind, *seq, payload)?;
+                }
+            }
+            continue;
+        }
         match frame.kind {
-            FrameKind::Batch => ws.on_batch(&frame.payload)?,
+            FrameKind::Batch => {
+                ws.on_batch(&frame.payload)?;
+                send_reply(stream, last_applied, reply_cache, frame.seq, FrameKind::BatchAck, Vec::new())?;
+            }
             FrameKind::Sweep => {
                 let reply = ws.on_sweep(&frame.payload)?;
-                write_frame(&mut stream, FrameKind::Gather, &reply)?;
+                send_reply(stream, last_applied, reply_cache, frame.seq, FrameKind::Gather, reply)?;
             }
             FrameKind::Fold => {
                 let reply = ws.on_fold()?;
-                write_frame(&mut stream, FrameKind::FoldPart, &reply)?;
+                send_reply(stream, last_applied, reply_cache, frame.seq, FrameKind::FoldPart, reply)?;
             }
             FrameKind::Shutdown => return Ok(()),
             other => {
@@ -960,6 +1629,57 @@ pub fn serve_worker(
                 )));
             }
         }
+    }
+}
+
+/// Apply-and-reply: record the seq as applied and cache the reply
+/// *before* writing it, so a reply lost to a dying socket is re-served
+/// — not recomputed, never re-applied — when the master resends.
+fn send_reply(
+    stream: &mut TcpStream,
+    last_applied: &mut u64,
+    reply_cache: &mut Option<(u64, FrameKind, Vec<u8>)>,
+    seq: u64,
+    kind: FrameKind,
+    payload: Vec<u8>,
+) -> Result<(), TransportError> {
+    if seq != 0 {
+        *last_applied = seq;
+    }
+    *reply_cache = Some((seq, kind, payload));
+    let (s, k, p) = reply_cache.as_ref().expect("reply cache just filled");
+    write_frame(stream, *k, *s, p)?;
+    Ok(())
+}
+
+/// Which session errors reconnect instead of exiting: every wire-level
+/// corruption class (a corrupted length field desynchronizes the byte
+/// stream, so the connection is the recovery unit) and every
+/// liveness-class socket error. Deadline expiries exit — that is the
+/// abandoned-worker guard — and protocol violations are fatal.
+fn session_recoverable(e: &TransportError) -> bool {
+    fn recoverable_io(k: io::ErrorKind) -> bool {
+        matches!(
+            k,
+            io::ErrorKind::ConnectionReset
+                | io::ErrorKind::ConnectionAborted
+                | io::ErrorKind::BrokenPipe
+                | io::ErrorKind::UnexpectedEof
+                | io::ErrorKind::NotConnected
+        )
+    }
+    match e {
+        TransportError::Wire(WireError::Io(io)) | TransportError::Io(io) => {
+            recoverable_io(io.kind())
+        }
+        TransportError::Wire(
+            WireError::BadMagic
+            | WireError::BadKind(_)
+            | WireError::Checksum
+            | WireError::Oversized { .. }
+            | WireError::Truncated(_),
+        ) => true,
+        _ => false,
     }
 }
 
@@ -1052,6 +1772,107 @@ mod tests {
         assert!(matches!(decode_batch(&bad), Err(WireError::Malformed(_))));
         // truncated CSR tail is refused
         assert!(decode_batch(&payload[..payload.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn fault_taxonomy_classifies_each_error() {
+        use io::ErrorKind;
+        let ctx = FrameCtx { peer: "127.0.0.1:9".into(), slot: 1, kind: "Sweep", seq: 3 };
+        // a clean reply-deadline expiry retries in place
+        assert_eq!(
+            classify(&TransportError::Timeout { what: "reply", ctx: ctx.clone() }),
+            FaultClass::Transient
+        );
+        // every wire refusal demands a reconnect: the stream may be
+        // desynchronized past the corrupt frame
+        for err in [
+            WireError::Checksum,
+            WireError::BadMagic,
+            WireError::BadKind(99),
+            WireError::Oversized { len: 1 << 40 },
+            WireError::Truncated("eof"),
+        ] {
+            assert_eq!(
+                classify(&TransportError::Refused { ctx: ctx.clone(), err }),
+                FaultClass::Reconnect
+            );
+        }
+        assert_eq!(
+            classify(&TransportError::Io(io::Error::from(ErrorKind::ConnectionReset))),
+            FaultClass::Reconnect
+        );
+        assert_eq!(
+            classify(&TransportError::Io(io::Error::from(ErrorKind::TimedOut))),
+            FaultClass::Transient
+        );
+        assert_eq!(
+            classify(&TransportError::WorkerDead { slot: 0, msg: "gone".into() }),
+            FaultClass::Reconnect
+        );
+        // shape/protocol defects are beyond retry
+        assert_eq!(classify(&TransportError::Protocol("bad slot".into())), FaultClass::Fatal);
+        assert_eq!(
+            classify(&TransportError::Wire(WireError::Malformed("shape".into()))),
+            FaultClass::Fatal
+        );
+        // the attached context names the exact frame that died
+        let msg = TransportError::Timeout { what: "reply", ctx }.to_string();
+        assert!(msg.contains("slot 1"), "{msg}");
+        assert!(msg.contains("Sweep"), "{msg}");
+        assert!(msg.contains("seq 3"), "{msg}");
+        assert!(msg.contains("127.0.0.1:9"), "{msg}");
+    }
+
+    #[test]
+    fn connect_backoff_doubles_and_caps() {
+        let cfg = ConnectCfg { retries: 8, backoff_ms: 50 };
+        assert_eq!(cfg.backoff(0), Duration::from_millis(50));
+        assert_eq!(cfg.backoff(2), Duration::from_millis(200));
+        assert_eq!(cfg.backoff(20), ConnectCfg::BACKOFF_CAP);
+        assert_eq!(ConnectCfg::default(), ConnectCfg { retries: 10, backoff_ms: 50 });
+    }
+
+    #[test]
+    fn wire_stats_merge_and_take() {
+        let mut a = WireStats {
+            retrans_frames: 2,
+            retrans_bytes: 100,
+            reconnects: 1,
+            backoff_wait_secs: 0.5,
+            chaos_faults: 3,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.retrans_frames, 4);
+        assert_eq!(a.retrans_bytes, 200);
+        assert_eq!(a.reconnects, 2);
+        assert_eq!(a.chaos_faults, 6);
+        assert!((a.backoff_wait_secs - 1.0).abs() < 1e-12);
+        let drained = a.take();
+        assert_eq!(drained.retrans_frames, 4);
+        assert_eq!(a, WireStats::default());
+    }
+
+    #[test]
+    fn session_recoverability_matches_the_taxonomy() {
+        // corruption classes reconnect (the stream is the recovery unit)
+        assert!(session_recoverable(&TransportError::Wire(WireError::Checksum)));
+        assert!(session_recoverable(&TransportError::Wire(WireError::BadMagic)));
+        assert!(session_recoverable(&TransportError::Wire(WireError::Truncated("t"))));
+        assert!(session_recoverable(&TransportError::Io(io::Error::from(
+            io::ErrorKind::ConnectionReset
+        ))));
+        assert!(session_recoverable(&TransportError::Wire(WireError::Io(io::Error::from(
+            io::ErrorKind::UnexpectedEof
+        )))));
+        // deadline expiries exit (abandoned-worker guard), protocol
+        // violations and payload-shape defects are fatal
+        assert!(!session_recoverable(&TransportError::Timeout {
+            what: "next frame",
+            ctx: FrameCtx::default(),
+        }));
+        assert!(!session_recoverable(&TransportError::Protocol("nope".into())));
+        assert!(!session_recoverable(&TransportError::Wire(WireError::Malformed("m".into()))));
     }
 
     #[test]

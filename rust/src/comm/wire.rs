@@ -4,7 +4,7 @@
 //! One frame on the socket:
 //!
 //! ```text
-//! "POBPWIR1" | kind u32 | payload_len u64 | fnv1a64(kind|len|payload) u64 | payload
+//! "POBPWIR1" | kind u32 | payload_len u64 | seq u64 | fnv1a64(kind|len|seq|payload) u64 | payload
 //! ```
 //!
 //! All integers little-endian; f64/f32 payload fields as raw IEEE bits —
@@ -31,10 +31,11 @@ use crate::storage::checkpoint::fnv1a64;
 /// Frame magic: "POBPWIR1" (POBP wire format, version 1).
 pub const MAGIC: &[u8; 8] = b"POBPWIR1";
 /// Protocol version carried in Hello/Welcome payloads; bumped on any
-/// frame- or payload-layout change.
-pub const PROTO_VERSION: u32 = 1;
-/// Frame header bytes: magic + kind + len + checksum.
-pub const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+/// frame- or payload-layout change (v2 added the per-frame sequence
+/// number for idempotent retransmission, Contract 9).
+pub const PROTO_VERSION: u32 = 2;
+/// Frame header bytes: magic + kind + len + seq + checksum.
+pub const HEADER_LEN: usize = 8 + 4 + 8 + 8 + 8;
 /// Largest accepted payload (1 GiB) — refuses absurd length fields
 /// before any allocation happens.
 pub const MAX_FRAME: u64 = 1 << 30;
@@ -59,6 +60,11 @@ pub enum FrameKind {
     FoldPart = 7,
     /// master → worker: clean exit
     Shutdown = 8,
+    /// worker → master: the batch/state transfer was applied (empty
+    /// payload; the header's sequence number echoes the Batch request).
+    /// Gives the Batch exchange a reply so the retry/reconnect
+    /// supervision (Contract 9) covers it like Sweep and Fold.
+    BatchAck = 9,
 }
 
 impl FrameKind {
@@ -72,8 +78,24 @@ impl FrameKind {
             6 => FrameKind::Fold,
             7 => FrameKind::FoldPart,
             8 => FrameKind::Shutdown,
+            9 => FrameKind::BatchAck,
             _ => return None,
         })
+    }
+
+    /// Human-readable name — the frame-context label error reports use.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameKind::Hello => "Hello",
+            FrameKind::Welcome => "Welcome",
+            FrameKind::Batch => "Batch",
+            FrameKind::Sweep => "Sweep",
+            FrameKind::Gather => "Gather",
+            FrameKind::Fold => "Fold",
+            FrameKind::FoldPart => "FoldPart",
+            FrameKind::Shutdown => "Shutdown",
+            FrameKind::BatchAck => "BatchAck",
+        }
     }
 }
 
@@ -123,19 +145,27 @@ impl From<io::Error> for WireError {
     }
 }
 
-/// A decoded frame: kind plus raw payload bytes.
+/// A decoded frame: kind, sequence number, and raw payload bytes.
+///
+/// The sequence number (v2) makes retransmission idempotent: the master
+/// stamps every request with a per-slot monotone counter, replies echo
+/// it, and a worker that already applied `seq` re-serves its cached
+/// reply instead of re-applying the fold (Contract 9). Handshake and
+/// Shutdown frames use `seq = 0`, which is never deduplicated.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Frame {
     pub kind: FrameKind,
+    pub seq: u64,
     pub payload: Vec<u8>,
 }
 
 /// The checksum input: the mutable header fields then the payload, so a
 /// flipped bit anywhere outside the magic lands in the digest.
-fn frame_digest(kind: u32, len: u64, payload: &[u8]) -> u64 {
-    let mut head = [0u8; 12];
+fn frame_digest(kind: u32, len: u64, seq: u64, payload: &[u8]) -> u64 {
+    let mut head = [0u8; 20];
     head[..4].copy_from_slice(&kind.to_le_bytes());
-    head[4..].copy_from_slice(&len.to_le_bytes());
+    head[4..12].copy_from_slice(&len.to_le_bytes());
+    head[12..].copy_from_slice(&seq.to_le_bytes());
     let mut h = fnv1a64(&head);
     // continue the same FNV-1a stream over the payload
     for &b in payload {
@@ -146,13 +176,14 @@ fn frame_digest(kind: u32, len: u64, payload: &[u8]) -> u64 {
 }
 
 /// Encode one frame into a fresh buffer.
-pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+pub fn encode_frame(kind: FrameKind, seq: u64, payload: &[u8]) -> Vec<u8> {
     let len = payload.len() as u64;
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&(kind as u32).to_le_bytes());
     out.extend_from_slice(&len.to_le_bytes());
-    out.extend_from_slice(&frame_digest(kind as u32, len, payload).to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&frame_digest(kind as u32, len, seq, payload).to_le_bytes());
     out.extend_from_slice(payload);
     out
 }
@@ -168,7 +199,8 @@ pub fn decode_frame(bytes: &[u8]) -> Result<Frame, WireError> {
     }
     let kind_raw = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
     let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
-    let sum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    let seq = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    let sum = u64::from_le_bytes(bytes[28..36].try_into().unwrap());
     if len > MAX_FRAME {
         return Err(WireError::Oversized { len });
     }
@@ -176,17 +208,22 @@ pub fn decode_frame(bytes: &[u8]) -> Result<Frame, WireError> {
     if payload.len() as u64 != len {
         return Err(WireError::Truncated("frame payload"));
     }
-    if frame_digest(kind_raw, len, payload) != sum {
+    if frame_digest(kind_raw, len, seq, payload) != sum {
         return Err(WireError::Checksum);
     }
     let kind = FrameKind::from_u32(kind_raw).ok_or(WireError::BadKind(kind_raw))?;
-    Ok(Frame { kind, payload: payload.to_vec() })
+    Ok(Frame { kind, seq, payload: payload.to_vec() })
 }
 
 /// Write one frame to a stream (single `write_all` — one syscall per
 /// frame on an unbuffered socket).
-pub fn write_frame(w: &mut impl Write, kind: FrameKind, payload: &[u8]) -> Result<(), WireError> {
-    w.write_all(&encode_frame(kind, payload))?;
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: FrameKind,
+    seq: u64,
+    payload: &[u8],
+) -> Result<(), WireError> {
+    w.write_all(&encode_frame(kind, seq, payload))?;
     Ok(())
 }
 
@@ -202,17 +239,18 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
     }
     let kind_raw = u32::from_le_bytes(head[8..12].try_into().unwrap());
     let len = u64::from_le_bytes(head[12..20].try_into().unwrap());
-    let sum = u64::from_le_bytes(head[20..28].try_into().unwrap());
+    let seq = u64::from_le_bytes(head[20..28].try_into().unwrap());
+    let sum = u64::from_le_bytes(head[28..36].try_into().unwrap());
     if len > MAX_FRAME {
         return Err(WireError::Oversized { len });
     }
     let mut payload = vec![0u8; len as usize];
     read_exact_or(r, &mut payload, "frame payload")?;
-    if frame_digest(kind_raw, len, &payload) != sum {
+    if frame_digest(kind_raw, len, seq, &payload) != sum {
         return Err(WireError::Checksum);
     }
     let kind = FrameKind::from_u32(kind_raw).ok_or(WireError::BadKind(kind_raw))?;
-    Ok(Frame { kind, payload })
+    Ok(Frame { kind, seq, payload })
 }
 
 fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &'static str) -> Result<(), WireError> {
@@ -329,22 +367,22 @@ mod tests {
         put_f64(&mut payload, 0.25);
         put_f32s(&mut payload, &[1.0, -2.5, 3e-7]);
         put_u32s(&mut payload, &[0, 9, 4096]);
-        encode_frame(FrameKind::Gather, &payload)
+        encode_frame(FrameKind::Gather, 7, &payload)
     }
 
     #[test]
     fn roundtrip_encode_decode_reencode() {
         let bytes = sample();
         let frame = decode_frame(&bytes).unwrap();
-        assert_eq!(frame.kind, FrameKind::Gather);
-        assert_eq!(encode_frame(frame.kind, &frame.payload), bytes);
+        assert_eq!((frame.kind, frame.seq), (FrameKind::Gather, 7));
+        assert_eq!(encode_frame(frame.kind, frame.seq, &frame.payload), bytes);
         // the stream reader agrees with the buffer decoder
         let mut cursor = io::Cursor::new(bytes.clone());
         assert_eq!(read_frame(&mut cursor).unwrap(), frame);
-        // empty payloads roundtrip too
-        let empty = encode_frame(FrameKind::Fold, &[]);
+        // empty payloads roundtrip too, and seq 0 is representable
+        let empty = encode_frame(FrameKind::Fold, 0, &[]);
         let f = decode_frame(&empty).unwrap();
-        assert_eq!((f.kind, f.payload.len()), (FrameKind::Fold, 0));
+        assert_eq!((f.kind, f.seq, f.payload.len()), (FrameKind::Fold, 0, 0));
     }
 
     #[test]
@@ -377,6 +415,12 @@ mod tests {
                                 | WireError::Truncated(_)
                         ),
                         "len byte {byte}: {err}"
+                    ),
+                    // the sequence-number field is covered by the digest
+                    // alone: any flip there is a checksum refusal
+                    20..=27 => assert!(
+                        matches!(err, WireError::Checksum),
+                        "seq byte {byte}: {err}"
                     ),
                     _ => assert!(
                         matches!(err, WireError::Checksum),
@@ -425,7 +469,8 @@ mod tests {
         bad_kind.extend_from_slice(MAGIC);
         put_u32(&mut bad_kind, 99);
         put_u64(&mut bad_kind, payload.len() as u64);
-        put_u64(&mut bad_kind, frame_digest(99, payload.len() as u64, &payload));
+        put_u64(&mut bad_kind, 5);
+        put_u64(&mut bad_kind, frame_digest(99, payload.len() as u64, 5, &payload));
         bad_kind.extend_from_slice(&payload);
         assert!(matches!(decode_frame(&bad_kind), Err(WireError::BadKind(99))));
         // a length field past the cap is refused before allocation,
@@ -434,7 +479,8 @@ mod tests {
         huge.extend_from_slice(MAGIC);
         put_u32(&mut huge, FrameKind::Batch as u32);
         put_u64(&mut huge, MAX_FRAME + 1);
-        put_u64(&mut huge, frame_digest(FrameKind::Batch as u32, MAX_FRAME + 1, &[]));
+        put_u64(&mut huge, 0);
+        put_u64(&mut huge, frame_digest(FrameKind::Batch as u32, MAX_FRAME + 1, 0, &[]));
         assert!(matches!(
             decode_frame(&huge),
             Err(WireError::Oversized { len }) if len == MAX_FRAME + 1

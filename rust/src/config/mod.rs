@@ -176,7 +176,24 @@ impl Experiment {
                 TransportKind::parse(s)
                     .ok_or_else(|| anyhow::anyhow!("[run] transport = {s}: inprocess|tcp"))?
             },
+            // wire supervision / chaos (Contract 9): worker startup
+            // connect retries with capped exponential backoff, and the
+            // deterministic seeded wire-fault schedule
+            connect_retries: cf.typed("run", "connect_retries", defaults.connect_retries)?,
+            connect_backoff_ms: cf.typed(
+                "run",
+                "connect_backoff_ms",
+                defaults.connect_backoff_ms,
+            )?,
+            chaos_seed: cf.typed("run", "chaos_seed", defaults.chaos_seed)?,
+            chaos_permille: cf.typed("run", "chaos_permille", defaults.chaos_permille)?,
         };
+        if opts.chaos_permille > 1000 {
+            bail!(
+                "[run] chaos_permille = {}: at most 1000 (a probability out of 1000)",
+                opts.chaos_permille
+            );
+        }
         // invalid [run] combinations fail here with the typed message,
         // not as a panic mid-run (e.g. overlap + sharded storage)
         if matches!(algo, Algo::Pobp | Algo::PobpFull | Algo::Obp | Algo::BatchBp) {
@@ -284,6 +301,28 @@ network = gige
         let cf = ConfigFile::parse("[run]\ntransport = rdma\n").unwrap();
         let err = Experiment::from_config(&cf).unwrap_err();
         assert!(err.to_string().contains("transport"), "{err}");
+    }
+
+    #[test]
+    fn chaos_and_connect_keys_resolve() {
+        let e = Experiment::from_config(&ConfigFile::parse("[run]\n").unwrap()).unwrap();
+        assert_eq!(e.opts.connect_retries, 10);
+        assert_eq!(e.opts.connect_backoff_ms, 50);
+        assert_eq!(e.opts.chaos_permille, 0);
+        let cf = ConfigFile::parse(
+            "[run]\nconnect_retries = 4\nconnect_backoff_ms = 25\n\
+             chaos_seed = 7\nchaos_permille = 300\n",
+        )
+        .unwrap();
+        let e = Experiment::from_config(&cf).unwrap();
+        assert_eq!(e.opts.connect_retries, 4);
+        assert_eq!(e.opts.connect_backoff_ms, 25);
+        assert_eq!(e.opts.chaos_seed, 7);
+        assert_eq!(e.opts.chaos_permille, 300);
+        // permille is a probability out of 1000
+        let cf = ConfigFile::parse("[run]\nchaos_permille = 1001\n").unwrap();
+        let err = Experiment::from_config(&cf).unwrap_err();
+        assert!(err.to_string().contains("chaos_permille"), "{err}");
     }
 
     #[test]

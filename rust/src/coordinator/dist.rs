@@ -318,7 +318,13 @@ fn dist_replicated(
         // slice + RNG split and rebuilds its shard remotely. The RNG
         // draws happen at the same stream position as build_shards'.
         let payloads = batch_payloads(&mb, w, k, params, cfg, &mut rng);
+        // Contract 9: key the chaos schedule on (batch, iter) — Batch
+        // frames are iteration 0 — and fold the transport's recovery
+        // effort (retransmits, reconnects, backoff) into the ledger's
+        // side accumulators after every exchange.
+        transport.chaos_epoch(mb.index, 0);
         transport.start_batch(&payloads).map_err(transport_err)?;
+        ledger.record_wire_faults(&transport.take_wire_stats());
         // Leader-side dense mirrors of each worker's (Δφ̂, r): gather
         // replies scatter into these, and the unchanged allreduce pulls
         // from them exactly as it pulls from in-process shards.
@@ -346,7 +352,9 @@ fn dist_replicated(
             //     + the power schedule, collect plan-order exports ---
             let sweep = sweep_payload(t, &state.phi_eff, state.phi_tot(), power.as_ref());
             let frames: Vec<Vec<u8>> = vec![sweep; cfg.n_workers];
+            transport.chaos_epoch(mb.index, t);
             let ex = transport.sweep_exchange(&frames).map_err(transport_err)?;
+            ledger.record_wire_faults(&transport.take_wire_stats());
             check_replies(&ex, t, cfg.n_workers)?;
             let secs: Vec<f64> = ex.replies.iter().map(|r| r.sweep_secs).collect();
 
@@ -452,7 +460,9 @@ fn dist_replicated(
             }
         }
         {
+            transport.chaos_epoch(mb.index, iters_run + 1);
             let fx = transport.collect_fold().map_err(transport_err)?;
+            ledger.record_wire_faults(&transport.take_wire_stats());
             check_fold_parts(&fx.parts, cfg.n_workers, w * k)?;
             let dphi_parts: Vec<&[f32]> =
                 fx.parts.iter().map(|p| p.as_slice()).collect();
@@ -544,7 +554,11 @@ fn dist_sharded(
     while let Some(mb) = pending.take() {
         let tokens = mb.data.tokens().max(1.0);
         let payloads = batch_payloads(&mb, w, k, params, cfg, &mut rng);
+        // Contract 9: same chaos keying and recovery-effort accounting
+        // as the replicated loop
+        transport.chaos_epoch(mb.index, 0);
         transport.start_batch(&payloads).map_err(transport_err)?;
+        ledger.record_wire_faults(&transport.take_wire_stats());
         let sources: Vec<Mutex<PartSource>> = (0..cfg.n_workers)
             .map(|_| Mutex::new(PartSource::new(w * k)))
             .collect();
@@ -569,7 +583,9 @@ fn dist_sharded(
             let phi_dense = state.render_dense();
             let sweep = sweep_payload(t, &phi_dense, state.phi_tot(), power.as_ref());
             let frames: Vec<Vec<u8>> = vec![sweep; cfg.n_workers];
+            transport.chaos_epoch(mb.index, t);
             let ex = transport.sweep_exchange(&frames).map_err(transport_err)?;
+            ledger.record_wire_faults(&transport.take_wire_stats());
             check_replies(&ex, t, cfg.n_workers)?;
             let secs: Vec<f64> = ex.replies.iter().map(|r| r.sweep_secs).collect();
 
@@ -683,7 +699,9 @@ fn dist_sharded(
             }
         }
         {
+            transport.chaos_epoch(mb.index, iters_run + 1);
             let fx = transport.collect_fold().map_err(transport_err)?;
+            ledger.record_wire_faults(&transport.take_wire_stats());
             check_fold_parts(&fx.parts, cfg.n_workers, w * k)?;
             let dphi_parts: Vec<&[f32]> =
                 fx.parts.iter().map(|p| p.as_slice()).collect();

@@ -1,0 +1,265 @@
+//! Deterministic wire-fault injection (Contract 9): seeded chaos at
+//! frame granularity for the distributed transport.
+//!
+//! A [`ChaosPlan`] decides, for every frame exchange the master performs,
+//! whether that frame suffers a fault — a payload bit-flip, a mid-frame
+//! truncation, a dropped frame (the half-open-hang model: the link stays
+//! up but the frame never arrives, recovered by the reply deadline), a
+//! connection reset, a duplicated frame, or a per-frame delay. Decisions
+//! are **stateless**, keyed on `(seed, batch, iter, slot, frame kind,
+//! attempt)` exactly like [`FaultPlan`](crate::fault::FaultPlan)'s
+//! straggler draws: the plan owns no mutable state, never touches the
+//! training RNG, and the same key always yields the same verdict — so a
+//! chaos schedule is reproducible from a single `u64` and a recovery
+//! replay of an exchange re-encounters exactly the faults its key
+//! selects.
+//!
+//! # Termination
+//!
+//! The `attempt` component of the key is what makes every chaos schedule
+//! *eventually let frames through* (the Contract 9 precondition):
+//!
+//! * pinned plans ([`ChaosPlan::pinned`]) fire a spec only at
+//!   `attempt == 0` — the first transmission of the keyed frame is
+//!   faulted, every retransmission is clean;
+//! * seeded plans ([`ChaosPlan::seeded`]) may draw faults for the first
+//!   [`ChaosPlan::max_attempts`] attempts and pass unconditionally from
+//!   then on.
+//!
+//! The transport's retry budget exceeds `max_attempts`, so a supervised
+//! exchange always converges and — by the idempotent-resend protocol
+//! (`comm::transport`) — converges to the fault-free bits.
+
+use crate::comm::wire::FrameKind;
+use crate::util::rng::Rng;
+
+/// What happens to one frame transmission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosFault {
+    /// flip one bit of the encoded frame outside the magic — refused by
+    /// the receiver's checksum (or kind/len validation)
+    FlipBit,
+    /// cut the frame mid-byte-stream and close the connection — the
+    /// mid-frame reset: the receiver sees a truncated frame then EOF
+    Truncate,
+    /// the frame silently never arrives; the link stays up (the
+    /// half-open hang, recovered by the reply deadline)
+    Drop,
+    /// close the connection before the frame is written
+    Reset,
+    /// the frame arrives twice; the receiver must apply it once
+    Duplicate,
+    /// the frame arrives late by `ms` wall milliseconds
+    Delay {
+        ms: u64,
+    },
+}
+
+/// One pinned fault at a `(batch, iter, slot, frame-kind)` exchange
+/// point — the chaos twin of [`FaultSpec`](crate::fault::FaultSpec).
+/// `iter` follows the coordinator's numbering: Batch/BatchAck exchanges
+/// are iteration 0, Sweep/Gather exchanges use the iteration index t,
+/// Fold/FoldPart exchanges use the fold index `iters + 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub batch: usize,
+    pub iter: usize,
+    pub slot: usize,
+    pub kind: FrameKind,
+    pub fault: ChaosFault,
+}
+
+/// A deterministic, stateless wire-fault schedule.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosPlan {
+    specs: Vec<ChaosSpec>,
+    /// `(seed, permille)` for the seeded mode: each `(batch, iter, slot,
+    /// kind, attempt)` key under `max_attempts` suffers a fault with
+    /// probability `permille / 1000`
+    seeded: Option<(u64, u32)>,
+    /// attempts `>= max_attempts` always pass — the termination bound
+    max_attempts: usize,
+}
+
+/// Stateless per-key mixer (splitmix64-style finalizer folded over the
+/// key fields) — the only randomness source of the seeded mode, fully
+/// separate from the training RNG stream.
+fn chaos_key(seed: u64, batch: u64, iter: u64, slot: u64, kind: u32, attempt: u64) -> u64 {
+    let mut h = seed ^ 0xC8A0_5FA0_17BA_D5EE;
+    for v in [batch, iter, slot, kind as u64, attempt] {
+        h ^= v.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= h >> 31;
+    }
+    h
+}
+
+impl ChaosPlan {
+    /// A plan from explicit fault points. Each spec fires on the *first*
+    /// transmission (`attempt == 0`) of its keyed exchange only — the
+    /// pinned-point constructor `chaos_equiv.rs` uses.
+    pub fn pinned(specs: Vec<ChaosSpec>) -> ChaosPlan {
+        ChaosPlan { specs, seeded: None, max_attempts: 1 }
+    }
+
+    /// A seeded plan: every exchange key suffers a uniformly drawn fault
+    /// with probability `permille / 1000` (clamped to 1000) on each of
+    /// its first two attempts, and passes from attempt 2 on.
+    pub fn seeded(seed: u64, permille: u32) -> ChaosPlan {
+        ChaosPlan { specs: Vec::new(), seeded: Some((seed, permille.min(1000))), max_attempts: 2 }
+    }
+
+    /// The attempt index from which every transmission passes.
+    pub fn max_attempts(&self) -> usize {
+        self.max_attempts
+    }
+
+    /// The pinned schedule (empty for seeded plans).
+    pub fn specs(&self) -> &[ChaosSpec] {
+        &self.specs
+    }
+
+    /// Decide the fate of one frame transmission. Stateless: the same
+    /// key always returns the same verdict; nothing is recorded.
+    pub fn decide(
+        &self,
+        batch: usize,
+        iter: usize,
+        slot: usize,
+        kind: FrameKind,
+        attempt: usize,
+    ) -> Option<ChaosFault> {
+        if attempt >= self.max_attempts {
+            return None;
+        }
+        for s in &self.specs {
+            if s.batch == batch && s.iter == iter && s.slot == slot && s.kind == kind {
+                return Some(s.fault);
+            }
+        }
+        let (seed, permille) = self.seeded?;
+        let mut rng = Rng::new(chaos_key(
+            seed,
+            batch as u64,
+            iter as u64,
+            slot as u64,
+            kind as u32,
+            attempt as u64,
+        ));
+        if (rng.below(1000) as u32) < permille {
+            Some(match rng.below(6) {
+                0 => ChaosFault::FlipBit,
+                1 => ChaosFault::Truncate,
+                2 => ChaosFault::Drop,
+                3 => ChaosFault::Reset,
+                4 => ChaosFault::Duplicate,
+                _ => ChaosFault::Delay { ms: 1 + rng.below(25) as u64 },
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// Flip one deterministic bit of an encoded frame, skipping the 8 magic
+/// bytes *and* the 8 length bytes (offsets 12..20): every remaining
+/// position — kind, seq, digest, payload — is digest-covered, so the
+/// receiver reads exactly the framed byte count and then refuses the
+/// frame (checksum or kind defect). A flip in the length field instead
+/// could inflate `len` and stall the receiver waiting for bytes that
+/// never arrive, which is the half-open hang — modeled separately as
+/// [`ChaosFault::Drop`], not as corruption.
+pub fn flip_bit(bytes: &mut [u8], salt: u64) {
+    if bytes.len() > 20 {
+        // eligible positions: [8..12) ∪ [20..len)
+        let idx = salt as usize % (bytes.len() - 16);
+        let i = if idx < 4 { 8 + idx } else { 16 + idx };
+        bytes[i] ^= 1 << (salt % 8);
+    } else if let Some(b) = bytes.first_mut() {
+        *b ^= 1;
+    }
+}
+
+/// Deterministic mid-frame cut point: strictly less than `len`, so a
+/// truncated write is always an incomplete frame.
+pub fn cut_len(len: usize, salt: u64) -> usize {
+    if len == 0 {
+        0
+    } else {
+        salt as usize % len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::wire;
+
+    #[test]
+    fn pinned_specs_fire_on_first_attempt_only() {
+        let plan = ChaosPlan::pinned(vec![ChaosSpec {
+            batch: 1,
+            iter: 2,
+            slot: 0,
+            kind: FrameKind::Sweep,
+            fault: ChaosFault::Reset,
+        }]);
+        assert_eq!(plan.decide(1, 2, 0, FrameKind::Sweep, 0), Some(ChaosFault::Reset));
+        // statelessness: the same key keeps answering the same thing
+        assert_eq!(plan.decide(1, 2, 0, FrameKind::Sweep, 0), Some(ChaosFault::Reset));
+        // every retransmission passes
+        assert_eq!(plan.decide(1, 2, 0, FrameKind::Sweep, 1), None);
+        // off-key exchanges pass untouched
+        assert_eq!(plan.decide(1, 2, 1, FrameKind::Sweep, 0), None);
+        assert_eq!(plan.decide(1, 3, 0, FrameKind::Sweep, 0), None);
+        assert_eq!(plan.decide(1, 2, 0, FrameKind::Gather, 0), None);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_bounded() {
+        let a = ChaosPlan::seeded(99, 500);
+        let b = ChaosPlan::seeded(99, 500);
+        let mut fired = 0usize;
+        for batch in 0..4 {
+            for iter in 0..6 {
+                for slot in 0..3 {
+                    for attempt in 0..4 {
+                        let va = a.decide(batch, iter, slot, FrameKind::Sweep, attempt);
+                        let vb = b.decide(batch, iter, slot, FrameKind::Sweep, attempt);
+                        assert_eq!(va, vb, "seeded draw not deterministic");
+                        if attempt >= a.max_attempts() {
+                            assert_eq!(va, None, "attempt cap violated");
+                        }
+                        fired += va.is_some() as usize;
+                    }
+                }
+            }
+        }
+        // permille 500 over 144 eligible keys: faults certainly fire,
+        // and certainly not everywhere
+        assert!(fired > 10 && fired < 144, "fired {fired}");
+        // a different seed draws a different schedule
+        let c = ChaosPlan::seeded(100, 500);
+        let diff = (0..40).any(|i| {
+            c.decide(i, 1, 0, FrameKind::Sweep, 0) != a.decide(i, 1, 0, FrameKind::Sweep, 0)
+        });
+        assert!(diff, "seed 99 and 100 drew identical schedules");
+        // permille 0 never fires
+        let z = ChaosPlan::seeded(99, 0);
+        assert_eq!(z.decide(0, 1, 0, FrameKind::Sweep, 0), None);
+    }
+
+    #[test]
+    fn mangled_frames_are_always_refused() {
+        let clean = wire::encode_frame(FrameKind::Gather, 7, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        for salt in 0..64u64 {
+            let mut flipped = clean.clone();
+            flip_bit(&mut flipped, salt);
+            assert!(wire::decode_frame(&flipped).is_err(), "flip salt {salt} accepted");
+            let cut = cut_len(clean.len(), salt);
+            assert!(cut < clean.len());
+            assert!(wire::decode_frame(&clean[..cut]).is_err(), "cut salt {salt} accepted");
+        }
+    }
+}

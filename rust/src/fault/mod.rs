@@ -58,6 +58,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::util::rng::Rng;
 
+pub mod chaos;
+
+pub use chaos::{ChaosFault, ChaosPlan, ChaosSpec};
+
 /// SIGKILL a real worker process — the process-boundary form of
 /// [`FaultKind::Kill`]. `Child::kill` delivers SIGKILL on Unix; the
 /// `wait` reaps the zombie so a respawned worker can reuse the slot.

@@ -130,6 +130,23 @@ pub struct RunOpts {
     /// the CLI layer, not a silent fallback. Ignored by the Gibbs/VB
     /// algorithms.
     pub transport: TransportKind,
+    /// Worker startup connect attempts after the first (Contract 9):
+    /// `pobp-worker` retries its initial connect this many times with
+    /// capped exponential backoff, so spawn order against the master's
+    /// listener does not matter. Mirrored by the worker binary's
+    /// `--connect-retries` flag.
+    pub connect_retries: usize,
+    /// Initial connect/rejoin backoff in milliseconds, doubling per
+    /// attempt and capped at 2 s (`--connect-backoff-ms`).
+    pub connect_backoff_ms: u64,
+    /// Seed of the deterministic wire-fault schedule (Contract 9);
+    /// meaningful only when `chaos_permille > 0`.
+    pub chaos_seed: u64,
+    /// Per-frame wire-fault probability out of 1000 (0 = chaos off,
+    /// the default; at most 1000). Faults are injected at the master's
+    /// TCP edge and recovered by the supervised retry/reconnect layer —
+    /// results stay bitwise identical to the fault-free run.
+    pub chaos_permille: u32,
 }
 
 impl Default for RunOpts {
@@ -156,6 +173,10 @@ impl Default for RunOpts {
             straggler_timeout_factor: 4.0,
             resume: false,
             transport: TransportKind::InProcess,
+            connect_retries: 10,
+            connect_backoff_ms: 50,
+            chaos_seed: 0,
+            chaos_permille: 0,
         }
     }
 }
